@@ -1,0 +1,125 @@
+"""Shared benchmark infrastructure.
+
+* `timeit` — wall-clock with block_until_ready, warmup, median-of-k;
+* dataset registry — paper Table 1 graphs reproduced in *shape* at CPU scale
+  (R-MAT, same skew; see repro.data.graphs);
+* `naive_pagerank` — the paper's "idiomatic Spark dataflow" baseline
+  (Fig. 7c/d): pure collection ops, two shuffled joins + a shuffled
+  aggregation per iteration, no graph structure reuse.  This is the
+  data-parallel system GraphX is measured against.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import Col, Graph, algorithms as alg
+from repro.data import rmat, symmetrize, table1
+
+
+def timeit(fn, *args, iters: int = 3, warmup: int = 1, **kw):
+    """Median wall seconds of fn(*args) with device sync."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args, **kw))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args, **kw))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def datasets(quick: bool = True):
+    """name -> GraphData, paper Table 1 at reduced scale.
+
+    quick sizes are tuned for a 1-core CI box (the naive-dataflow baseline
+    is deliberately expensive — that is the point of Fig. 7)."""
+    if quick:
+        return {
+            "livejournal-sim": rmat(10, 6, seed=0),
+            "wikipedia-sim": rmat(10, 8, seed=1),
+            "twitter-sim": rmat(11, 12, seed=2),
+        }
+    return {name: table1(name) for name in
+            ("livejournal-sim", "wikipedia-sim", "twitter-sim")}
+
+
+# ---------------------------------------------------------------------------
+# Naive dataflow PageRank (the Fig. 7 Spark baseline)
+# ---------------------------------------------------------------------------
+def naive_pagerank(gd, num_iters: int = 10, p: int = 4,
+                   reset: float = 0.15) -> tuple[np.ndarray, np.ndarray]:
+    """PageRank with ONLY collection operators: every iteration re-joins the
+    full rank table to the full edge table by key hash and re-aggregates —
+    exactly what a dataflow engine without a graph view must do.  Returns
+    (vids, pr)."""
+    src = gd.src.astype(np.int32)
+    dst = gd.dst.astype(np.int32)
+    vids = np.unique(np.concatenate([src, dst]))
+
+    edges = Col.from_numpy(src, {"dst": dst.astype(np.int32)}, p=p)
+    deg = np.maximum(np.bincount(src, minlength=int(vids.max()) + 1), 1)
+    ranks = Col.from_numpy(
+        vids, {"pr": np.ones(len(vids), np.float32),
+               "deg": deg[vids].astype(np.float32)}, p=p)
+
+    rank_width = 2 * ranks.keys.shape[1]   # fixed footprint across iters
+
+    @jax.jit
+    def one_iter(ek, ev, em, rk, rv, rm):
+        edges_ = Col(ek, ev, em, edges.ex)
+        ranks_ = Col(rk, rv, rm, ranks.ex)
+        joined, o1 = edges_.left_join(ranks_)       # shuffle BOTH relations
+        contribs = joined.map(lambda k, v: (
+            v[0]["dst"],
+            jnp.where(v[2], v[1]["pr"] / v[1]["deg"], 0.0)))
+        sums, o2 = contribs.reduce_by_key("sum")    # shuffled aggregation
+        upd, o3 = ranks_.left_join(sums)            # shuffle again
+        new_ranks = upd.map(lambda k, v: (k, {
+            "pr": reset + (1 - reset) * jnp.where(v[2], v[1], 0.0),
+            "deg": v[0]["deg"]}))
+        # coalesce: shuffle outputs are P*capacity wide; without this the
+        # relation width compounds ~Px per iteration (a real dataflow
+        # engine's post-shuffle compaction)
+        new_ranks, dropped = new_ranks.compact(rank_width)
+        return (new_ranks.keys, new_ranks.values, new_ranks.mask,
+                o1 + o2 + o3 + dropped)
+
+    rk, rv, rm = ranks.keys, ranks.values, ranks.mask
+    for _ in range(num_iters):
+        rk, rv, rm, ovf = one_iter(edges.keys, edges.values, edges.mask,
+                                   rk, rv, rm)
+        assert int(ovf) == 0, "benchmark shuffle capacity overflow/drop"
+    out = Col(rk, rv, rm, ranks.ex)
+    k, v = out.to_numpy()
+    return k, v["pr"]
+
+
+def engine_pagerank_seconds(gd, num_iters: int = 10, p: int = 4,
+                            iters: int = 3) -> tuple[float, object]:
+    g = Graph.from_edges(gd.src, gd.dst, num_partitions=p)
+
+    def run():
+        return alg.pagerank(g, num_iters=num_iters).graph.vdata["pr"]
+
+    sec = timeit(run, iters=iters, warmup=1)
+    return sec, g
+
+
+def naive_pagerank_seconds(gd, num_iters: int = 10, p: int = 4,
+                           iters: int = 3) -> float:
+    def run():
+        return naive_pagerank(gd, num_iters=num_iters, p=p)[1]
+
+    return timeit(run, iters=iters, warmup=1)
+
+
+def fmt_bytes(n: float) -> str:
+    for unit in ("B", "KiB", "MiB", "GiB"):
+        if abs(n) < 1024:
+            return f"{n:.1f}{unit}"
+        n /= 1024
+    return f"{n:.1f}TiB"

@@ -1,0 +1,163 @@
+"""Fig. 10 — end-to-end pipeline: unified GraphX vs composed systems.
+
+Paper result: even though GraphLab wins the graph-parallel stage, GraphX
+wins END-TO-END because composed pipelines pay serialisation + replication
++ disk I/O at every system boundary (HDFS between the parser, the graph
+engine, and the post-processing joins).
+
+We reproduce the three-stage Wikipedia pipeline (parse -> PageRank -> top-k
+join) two ways over identical data:
+  unified   — everything stays in device arrays inside one framework;
+  composed  — stage boundaries round-trip through the filesystem (edge list
+              + rank table written/parsed as text, like an HDFS handoff),
+              with the graph stage using the specialised engine.
+"""
+from __future__ import annotations
+
+import os
+import tempfile
+import time
+
+import numpy as np
+
+from repro.core import Graph, algorithms as alg
+
+from .common import datasets
+
+
+def _parse(lines):
+    src, dst = [], []
+    titles = {}
+    for line in lines:
+        t, ls = line.split("|")
+        aid = int(t.split("_")[1])
+        titles[aid] = t.split(":")[1]
+        for tgt in ls.split(":")[1].split(","):
+            if tgt and int(tgt) != aid:
+                src.append(aid)
+                dst.append(int(tgt))
+    return np.asarray(src, np.int64), np.asarray(dst, np.int64), titles
+
+
+def _corpus_from_graph(gd):
+    by_src: dict[int, list[int]] = {}
+    for s, d in zip(gd.src.tolist(), gd.dst.tolist()):
+        by_src.setdefault(s, []).append(d)
+    return [f"title:Article_{s}|links:" + ",".join(map(str, ds))
+            for s, ds in by_src.items()]
+
+
+def run(quick: bool = True) -> list[dict]:
+    # The composed-systems penalty is serialisation/parse at stage
+    # boundaries, which needs enough DATA to register — use a larger graph
+    # than the compute figures do (the paper's Wikipedia dump is 10s of GB).
+    from repro.data import rmat
+    gd = rmat(14, 14, seed=1) if quick else rmat(16, 12, seed=1)
+    lines = _corpus_from_graph(gd)
+    pr_iters = 10
+    rows = []
+
+    # jit warmup (untimed, identical shapes): both variants then measure
+    # steady-state compute + their own stage-boundary costs — otherwise
+    # whichever runs first pays all compiles and the comparison inverts
+    wsrc, wdst, _ = _parse(lines)
+    alg.pagerank(Graph.from_edges(wsrc, wdst, num_partitions=4),
+                 num_iters=pr_iters)
+
+    # ---------------- unified (GraphX) --------------------------------------
+    t0 = time.perf_counter()
+    src, dst, titles = _parse(lines)
+    g = Graph.from_edges(src, dst, num_partitions=4)
+    t_parse = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    res = alg.pagerank(g, num_iters=pr_iters)
+    vids, vals = res.graph.vertices_to_numpy()
+    t_pr = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    order = np.argsort(-vals["pr"])[:20]
+    top_unified = [(titles.get(int(vids[i]), "?"), float(vals["pr"][i]))
+                   for i in order]
+    t_join = time.perf_counter() - t0
+    unified_total = t_parse + t_pr + t_join
+    rows.append({"benchmark": "fig10_pipeline", "variant": "unified",
+                 "parse_s": round(t_parse, 3), "graph_s": round(t_pr, 3),
+                 "postjoin_s": round(t_join, 3),
+                 "total_s": round(unified_total, 3)})
+
+    # ---------------- composed (file handoffs between systems) --------------
+    with tempfile.TemporaryDirectory() as tmp:
+        t0 = time.perf_counter()
+        src, dst, titles = _parse(lines)
+        edge_path = os.path.join(tmp, "edges.tsv")
+        # HDFS semantics at the stage boundary: the block is written with
+        # replication factor 3 (the paper's pipelines hand off via HDFS)
+        for rep in range(3):
+            with open(edge_path + (f".rep{rep}" if rep else ""), "w") as f:
+                for s, d in zip(src.tolist(), dst.tolist()):
+                    f.write(f"{s}\t{d}\n")
+        title_path = os.path.join(tmp, "titles.tsv")
+        with open(title_path, "w") as f:
+            for k, v in titles.items():
+                f.write(f"{k}\t{v}\n")
+        t_stage1 = time.perf_counter() - t0
+
+        # "graph system": must re-parse the edge list from storage
+        t0 = time.perf_counter()
+        e = np.loadtxt(edge_path, dtype=np.int64).reshape(-1, 2)
+        g2 = Graph.from_edges(e[:, 0], e[:, 1], num_partitions=4)
+        res2 = alg.pagerank(g2, num_iters=pr_iters)
+        vids2, vals2 = res2.graph.vertices_to_numpy()
+        rank_path = os.path.join(tmp, "ranks.tsv")
+        for rep in range(3):
+            with open(rank_path + (f".rep{rep}" if rep else ""), "w") as f:
+                for v, p in zip(vids2.tolist(), vals2["pr"].tolist()):
+                    f.write(f"{v}\t{p}\n")
+        t_stage2 = time.perf_counter() - t0
+
+        # "post-processing system": re-parse ranks + titles, join, top-k
+        t0 = time.perf_counter()
+        ranks = {}
+        with open(rank_path) as f:
+            for line in f:
+                k, p = line.split()
+                ranks[int(k)] = float(p)
+        titles2 = {}
+        with open(title_path) as f:
+            for line in f:
+                k, t = line.split("\t")
+                titles2[int(k)] = t.strip()
+        top = sorted(ranks.items(), key=lambda kv: -kv[1])[:20]
+        top_composed = [(titles2.get(k, "?"), p) for k, p in top]
+        t_stage3 = time.perf_counter() - t0
+
+    composed_total = t_stage1 + t_stage2 + t_stage3
+    rows.append({"benchmark": "fig10_pipeline", "variant": "composed",
+                 "parse_s": round(t_stage1, 3), "graph_s": round(t_stage2, 3),
+                 "postjoin_s": round(t_stage3, 3),
+                 "total_s": round(composed_total, 3)})
+    # boundary components only (graph-stage compute is identical work in
+    # both variants; comparing totals would measure its jitter instead)
+    overhead = (t_stage1 + t_stage3) - (t_parse + t_join)
+    rows.append({"benchmark": "fig10_pipeline", "variant": "SUMMARY",
+                 "unified_speedup_x": round(composed_total / unified_total, 2),
+                 "boundary_overhead_s": round(overhead, 3),
+                 "boundary_overhead_pct": round(100 * overhead
+                                                / composed_total, 1),
+                 "paper_claim": "unified wins end-to-end despite equal or "
+                                "slower graph stage",
+                 "note": "overhead = pure serialisation/replication/reparse "
+                         "cost the unified pipeline eliminates; the paper's "
+                         "2x ratio comes from stage weights at 10s-of-GB "
+                         "scale (XML parse ~ PageRank), not from a slower "
+                         "graph engine"})
+    assert overhead > 0, "composed must pay a boundary cost"
+    # same answer both ways
+    assert {t for t, _ in top_unified} == {t for t, _ in top_composed}
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

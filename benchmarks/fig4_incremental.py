@@ -1,0 +1,50 @@
+"""Fig. 4 — incremental view maintenance: communication falls as vertices
+converge.
+
+Paper result: for PageRank and CC on Twitter, per-iteration communication
+decreases over time because only CHANGED vertices are re-shipped into the
+replicated vertex view (§4.5.1).
+
+We run delta-PageRank (tol > 0, the convergence-tracked formulation GraphX
+uses) with incremental maintenance ON and report per-superstep
+effective bytes (what was actually shipped) vs the static wire bytes a
+non-incremental engine would move every superstep.
+"""
+from __future__ import annotations
+
+from repro.core import Graph, algorithms as alg
+
+from .common import datasets
+
+
+def run(quick: bool = True) -> list[dict]:
+    gd = datasets(quick)["twitter-sim"]
+    g = Graph.from_edges(gd.src, gd.dst, num_partitions=4)
+    res = alg.pagerank(g, num_iters=25, tol=1e-3, incremental=True,
+                       track_metrics=True)
+
+    rows = []
+    static_bytes = None
+    for i, m in enumerate(res.metrics):
+        eff = float(m["fwd"].effective_bytes)
+        if static_bytes is None:
+            static_bytes = eff   # superstep 0 ships everything
+        rows.append({"benchmark": "fig4_incremental", "superstep": i,
+                     "shipped_bytes": int(eff),
+                     "static_bytes": int(static_bytes),
+                     "live_edges": int(m["live_edges"])})
+    total_inc = sum(r["shipped_bytes"] for r in rows)
+    total_static = static_bytes * len(rows)
+    rows.append({"benchmark": "fig4_incremental", "superstep": "TOTAL",
+                 "shipped_bytes": int(total_inc),
+                 "static_bytes": int(total_static),
+                 "comm_reduction_x": round(total_static / max(total_inc, 1), 2),
+                 "supersteps": res.supersteps})
+    # paper behaviour: communication decreases as vertices converge
+    assert rows[-2]["shipped_bytes"] < rows[0]["shipped_bytes"]
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

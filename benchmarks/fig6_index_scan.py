@@ -1,0 +1,84 @@
+"""Fig. 6 — sequential scan vs index scan as the active set shrinks.
+
+Paper result: CC on Twitter benefits greatly from switching to an index
+scan after iteration ~4 (few active vertices); PageRank only slightly (most
+vertices stay active through iteration 15).
+
+TPU translation (§4.6 of DESIGN.md): per-element branching is replaced by
+(a) skipStale edge masking and (b) block-level skipping inside the Pallas
+segment-sum kernel (whole [Eb] tiles whose sources are all stale are never
+touched).  We report, per superstep, the live-edge fraction — the fraction
+of the edge table the predicated kernel actually processes — for CC
+(shrinks fast) vs static PageRank (stays ~1.0), plus wall time with
+skipStale on/off.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import Graph, algorithms as alg
+from repro.data import symmetrize
+
+from .common import datasets, timeit
+
+
+def run(quick: bool = True) -> list[dict]:
+    gd = datasets(quick)["twitter-sim"]
+    rows = []
+
+    # --- CC: active set collapses -> index scan pays (paper: big win) ------
+    sgd = symmetrize(gd)
+    sg = Graph.from_edges(sgd.src, sgd.dst, num_partitions=4)
+    res = alg.connected_components(sg, max_supersteps=50, track_metrics=True)
+    n_edges = float(sg.s.num_edges)
+    for i, m in enumerate(res.metrics):
+        rows.append({"benchmark": "fig6_index_scan", "algo": "cc",
+                     "superstep": i,
+                     "live_edge_fraction": round(
+                         float(m["live_edges"]) / n_edges, 4)})
+
+    cc_skip = timeit(lambda: alg.connected_components(
+        sg, max_supersteps=50).supersteps, iters=1, warmup=1)
+
+    # skipStale off: every superstep scans the whole edge table
+    from repro.core import pregel
+    IMAX = jnp.int32(2**31 - 1)
+    g0 = sg.mapV(lambda vid, v: {"cc": vid})
+
+    def send(sv, ev, dv):
+        return {"m": sv["cc"]}
+
+    def vprog(vid, v, msg):
+        return {"cc": jnp.minimum(v["cc"], msg["m"])}
+
+    cc_noskip = timeit(lambda: pregel(
+        g0, vprog, send, "min", default_msg={"m": IMAX},
+        max_supersteps=50, skip_stale=None, incremental=False).supersteps,
+        iters=1, warmup=1)
+
+    rows.append({"benchmark": "fig6_index_scan", "algo": "cc",
+                 "superstep": "TOTAL",
+                 "skipstale_s": round(cc_skip, 3),
+                 "seqscan_s": round(cc_noskip, 3),
+                 "paper_claim": "CC benefits greatly from index scan",
+                 "note": "headline = the live-edge collapse above (what the "
+                         "TPU block-skip kernel exploits); 1-CPU wall time "
+                         "has zero exchange cost so masking overhead is not "
+                         "representative"})
+
+    # --- PageRank: active set stays large (paper: only slight benefit) ----
+    g = Graph.from_edges(gd.src, gd.dst, num_partitions=4)
+    pres = alg.pagerank(g, num_iters=15, tol=1e-6, track_metrics=True)
+    n_edges_pr = float(g.s.num_edges)
+    fractions = [float(m["live_edges"]) / n_edges_pr for m in pres.metrics]
+    rows.append({"benchmark": "fig6_index_scan", "algo": "pagerank",
+                 "superstep": "SUMMARY",
+                 "live_fraction_first": round(fractions[0], 3),
+                 "live_fraction_last": round(fractions[-1], 3),
+                 "paper_claim": "PR active set large even at iteration 15"})
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -1,0 +1,54 @@
+"""Fig. 8 — strong scaling of PageRank with partition count.
+
+Paper result: 8 -> 32 machines gives ~3x; 8 -> 64 gives 3.5x — sublinear
+because communication grows with machine count while per-machine compute
+shrinks.  On one CPU we cannot measure cross-machine wall time, so we report
+the two quantities that DRIVE that curve, both of which our engine exposes
+exactly: per-partition compute work (edges/partition) and total wire bytes
+(which grows ~sqrt(P) per vertex under the 2D cut).  The projected step time
+uses the v5e roofline constants from the launch package.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import Graph, algorithms as alg
+from repro.core.mrtriplets import mr_triplets
+
+from .common import datasets
+
+PEAK_FLOPS = 197e12
+LINK_BW = 50e9
+
+
+def run(quick: bool = True) -> list[dict]:
+    gd = datasets(quick)["twitter-sim"]
+    rows = []
+    base = None
+    for p in (2, 4, 8, 16):
+        g = alg.attach_out_degree(
+            Graph.from_edges(gd.src, gd.dst, num_partitions=p),
+            kernel_mode="ref")
+        g = g.mapV(lambda vid, v: {**v, "pr": jnp.float32(1.0)})
+
+        def send(sv, ev, dv):
+            return {"m": sv["pr"] / sv["deg"] * ev["w"]}
+
+        _, _, _, m = mr_triplets(g, send, "sum", kernel_mode="ref")
+        wire = int(m["fwd"].wire_bytes) + int(m["back"].wire_bytes)
+        flops_per_part = 3.0 * gd.num_edges / p     # mul+add+combine per edge
+        # projected per-superstep time on v5e chips (compute + comm serial)
+        proj = flops_per_part / PEAK_FLOPS + wire / p / LINK_BW
+        if base is None:
+            base = proj
+        rows.append({"benchmark": "fig8_scaling", "partitions": p,
+                     "edges_per_partition": int(gd.num_edges / p),
+                     "total_wire_bytes": wire,
+                     "projected_step_us": round(proj * 1e6, 2),
+                     "speedup_vs_p2": round(base / proj, 2)})
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

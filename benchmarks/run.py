@@ -1,0 +1,69 @@
+"""Benchmark driver — one module per paper figure/table.
+
+  PYTHONPATH=src python -m benchmarks.run            # quick (CPU-sized)
+  PYTHONPATH=src python -m benchmarks.run --full     # Table-1-scaled graphs
+  PYTHONPATH=src python -m benchmarks.run --only fig5_join_elim
+
+Prints one CSV-ish line per measurement and writes reports/bench.json.
+The dry-run/roofline numbers (launch package) are reported separately in
+EXPERIMENTS.md; this file covers the paper's measured figures.
+"""
+from __future__ import annotations
+
+import argparse
+import importlib
+import json
+import os
+import time
+import traceback
+
+MODULES = [
+    "fig4_incremental",
+    "fig5_join_elim",
+    "fig6_index_scan",
+    "fig7_graph_parallel",
+    "fig8_scaling",
+    "fig9_partitioning",
+    "fig10_pipeline",
+    "op_micro",
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default=None)
+    ap.add_argument("--json-out", default="reports/bench.json")
+    args = ap.parse_args()
+
+    mods = [args.only] if args.only else MODULES
+    all_rows = []
+    failures = []
+    for name in mods:
+        mod = importlib.import_module(f"benchmarks.{name}")
+        t0 = time.perf_counter()
+        try:
+            rows = mod.run(quick=not args.full)
+        except Exception as e:  # keep the suite going; report at the end
+            failures.append((name, e))
+            print(f"[{name}] FAILED: {type(e).__name__}: {e}")
+            traceback.print_exc()
+            continue
+        dt = time.perf_counter() - t0
+        print(f"\n== {name} ({dt:.1f}s) " + "=" * max(1, 50 - len(name)))
+        for r in rows:
+            print("  " + ", ".join(f"{k}={v}" for k, v in r.items()
+                                   if k != "benchmark"))
+        all_rows.extend(rows)
+
+    os.makedirs(os.path.dirname(args.json_out), exist_ok=True)
+    with open(args.json_out, "w") as f:
+        json.dump(all_rows, f, indent=1, default=str)
+    print(f"\n{len(all_rows)} measurements -> {args.json_out}")
+    if failures:
+        raise SystemExit(
+            "benchmark failures: " + ", ".join(n for n, _ in failures))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""Graph coarsening (paper Listing 7): build a DOMAIN graph from a page
+graph — the pipeline that pure graph-parallel systems cannot express.
+
+  PYTHONPATH=src python examples/graph_coarsen.py
+
+Pages live in domains (vid // 16 here); we contract all intra-domain links
+(subgraph -> connected components -> reduceByKey -> rebuild) and then rank
+the resulting domain graph — data-parallel and graph-parallel operators
+composed in one program.
+"""
+import numpy as np
+
+from repro.core import Graph, algorithms as alg
+from repro.data import rmat, symmetrize
+
+
+def main():
+    gd = symmetrize(rmat(9, 6, seed=7))
+    vids = np.arange(gd.num_vertices, dtype=np.int64)
+    domains = (vids // 16).astype(np.int32)
+
+    g = Graph.from_edges(
+        gd.src, gd.dst, vertex_keys=vids,
+        vertex_values={"pages": np.ones(gd.num_vertices, np.float32),
+                       "dom": domains},
+        default_vertex={"pages": np.float32(0), "dom": np.int32(-1)},
+        num_partitions=4)
+    print(f"page graph: {g.s.num_vertices} pages, {g.s.num_edges} links")
+
+    coarse = alg.coarsen(
+        g, epred=lambda sv, ev, dv: sv["dom"] == dv["dom"], merge="sum")
+    print(f"domain graph: {coarse.s.num_vertices} super-vertices, "
+          f"{coarse.s.num_edges} inter-domain links")
+
+    cvids, cvals = coarse.vertices_to_numpy()
+    print(f"total pages preserved: {int(cvals['pages'].sum())} "
+          f"== {gd.num_vertices}")
+
+    res = alg.pagerank(coarse, num_iters=10)
+    dv, dvals = res.graph.vertices_to_numpy()
+    top = np.argsort(-dvals["pr"])[:5]
+    print("top domains by PageRank:")
+    for i in top:
+        print(f"  domain(super-vertex {int(dv[i])}): "
+              f"pr={dvals['pr'][i]:.3f} pages={int(dvals['pages'][i])}")
+
+
+if __name__ == "__main__":
+    main()

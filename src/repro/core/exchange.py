@@ -1,0 +1,104 @@
+"""Cross-partition exchange executors.
+
+Every distributed primitive in the engine is written once against the
+semantic contract
+
+    transpose(x)[p, q, ...] == x[q, p, ...]      for x of shape [P, P, ...]
+
+i.e. "partition q's block destined for partition p arrives at p, labelled q".
+Two executors implement the contract:
+
+  * LocalExchange — the whole [P, P, ...] array lives on one device and the
+    exchange is literally an axis transpose.  Used by unit tests, examples,
+    and CPU-only correctness runs: identical engine code, zero collectives.
+
+  * SpmdExchange — the engine step runs inside `jax.shard_map` with the
+    leading partition axis sharded one-partition-per-device; the exchange is
+    `lax.all_to_all`.  Used by the multi-pod dry-run and real deployments.
+
+This is the JAX analog of GraphX-on-Spark's shuffle layer (§4.1): the
+engine never talks to the network directly, only to this interface — which is
+what lets the identical mrTriplets/Pregel code be verified on 1 CPU device
+and lowered onto a 512-chip mesh.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+class Exchange:
+    """Executor interface. `p` is the number of graph partitions."""
+
+    p: int
+
+    def transpose(self, x: jnp.ndarray) -> jnp.ndarray:  # [P, P, ...] -> [P, P, ...]
+        raise NotImplementedError
+
+    def tree_transpose(self, tree):
+        return jax.tree.map(self.transpose, tree)
+
+    # Wire-format hooks (DESIGN.md §2: §4.7 analog — dtype narrowing on the
+    # wire).  Executors may compress payloads before the collective.
+    wire_dtype: jnp.dtype | None = None
+
+    def ship(self, x: jnp.ndarray) -> jnp.ndarray:
+        """transpose() with optional dtype narrowing for inexact data.
+
+        The result STAYS narrow (the mirror view stores the wire dtype and
+        accumulation upcasts at the consumer): upcasting right after the
+        collective lets XLA hoist the convert to the send side and run the
+        collective wide again — measured on the PageRank cell's a2a."""
+        if self.wire_dtype is not None and jnp.issubdtype(x.dtype, jnp.floating):
+            # the barrier stops XLA's algebraic simplifier from commuting
+            # the narrowing convert back across the collective (observed:
+            # convert(a2a(convert(x))) -> a2a(x), re-widening the wire)
+            return self.transpose(
+                jax.lax.optimization_barrier(x.astype(self.wire_dtype)))
+        return self.transpose(x)
+
+    def tree_ship(self, tree):
+        return jax.tree.map(self.ship, tree)
+
+
+@dataclasses.dataclass(frozen=True)
+class LocalExchange(Exchange):
+    """Single-device executor: exchange is a transpose of the block matrix."""
+
+    p: int
+    wire_dtype: jnp.dtype | None = None
+
+    def transpose(self, x: jnp.ndarray) -> jnp.ndarray:
+        assert x.shape[0] == self.p and x.shape[1] == self.p, x.shape
+        return jnp.swapaxes(x, 0, 1)
+
+
+@dataclasses.dataclass(frozen=True)
+class SpmdExchange(Exchange):
+    """shard_map executor: partition axis is a named mesh axis.
+
+    Inside shard_map the global [P, P, ...] array arrives as a local block
+    [P // n, P, ...] (leading axis sharded over `axis_name`, n devices).  The
+    contract transpose is exactly `lax.all_to_all` splitting the *second*
+    axis and concatenating on the first — the collective moves each
+    [blk, blk, ...] tile x[q, p] to device p.
+    """
+
+    p: int
+    axis_name: str = "parts"
+    wire_dtype: jnp.dtype | None = None
+
+    def transpose(self, x: jnp.ndarray) -> jnp.ndarray:
+        # local x: [P_loc=1, P, ...].  Tiled all_to_all over axis 1: device p
+        # sends tile q to device q and receives tile (q -> position q), i.e.
+        # out[0, q] = x_global[q, p] — exactly the transpose contract.
+        return jax.lax.all_to_all(
+            x, self.axis_name, split_axis=1, concat_axis=1, tiled=True
+        )
+
+
+def pack_bf16(ex: Exchange) -> Exchange:
+    """Return a copy of `ex` that ships floating payloads as bfloat16."""
+    return dataclasses.replace(ex, wire_dtype=jnp.bfloat16)  # type: ignore[arg-type]

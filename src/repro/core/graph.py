@@ -1,0 +1,359 @@
+"""The property graph — GraphX's unified data model (paper §3.1) in JAX.
+
+A `Graph` is an immutable pytree: structural index arrays (`StructArrays`,
+shared across property updates — §4.3 index reuse is literal object sharing
+here) plus vertex/edge property pytrees and the visibility bitmasks that make
+`subgraph` a view instead of a rebuild.
+
+Operator semantics follow Listing 4 of the paper:
+  vertices/edges/triplets  — collection views
+  mapV / mapE              — property transforms, structure (and indexes) reused
+  leftJoin / innerJoin     — merge external vertex collections
+  subgraph                 — bitmask-restricted view
+  mrTriplets               — see repro.core.mrtriplets
+Plus `degrees`, `reverse`, and host round-trips for pipeline stages that
+rebuild structure (coarsen).
+
+UDF conventions (all per-element; the engine vmaps):
+  mapV:              f(vid, vval) -> vval'
+  mapE/epred/mapmsg: f(src_vval, eval, dst_vval) -> ...
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from . import partition as part_mod
+from .collections import Col
+from .exchange import Exchange, LocalExchange
+from .mrtriplets import ViewCache, mr_triplets, ship_to_mirrors
+from .tree import elem_spec, gather_rows, tree_where, vmap2
+from . import analysis
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class StructArrays:
+    """Device-resident structural index (immutable, shared — §4.3)."""
+
+    src_slot: jnp.ndarray
+    dst_slot: jnp.ndarray
+    src_perm: jnp.ndarray
+    edge_mask: jnp.ndarray
+    mirror_vid: jnp.ndarray
+    home_vid: jnp.ndarray
+    home_mask: jnp.ndarray
+    routes: dict            # need -> (send_idx, recv_slot)
+    # static metadata
+    p: int = dataclasses.field(default=0)
+    e_blk: int = 0
+    v_mir: int = 0
+    v_blk: int = 0
+    num_vertices: int = 0
+    num_edges: int = 0
+
+    def tree_flatten(self):
+        children = (self.src_slot, self.dst_slot, self.src_perm,
+                    self.edge_mask, self.mirror_vid, self.home_vid,
+                    self.home_mask, self.routes)
+        aux = (self.p, self.e_blk, self.v_mir, self.v_blk,
+               self.num_vertices, self.num_edges)
+        return children, aux
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children, *aux)
+
+    @staticmethod
+    def from_host(s: part_mod.GraphStructure) -> "StructArrays":
+        return StructArrays(
+            src_slot=jnp.asarray(s.src_slot),
+            dst_slot=jnp.asarray(s.dst_slot),
+            src_perm=jnp.asarray(s.src_perm),
+            edge_mask=jnp.asarray(s.edge_mask),
+            mirror_vid=jnp.asarray(s.mirror_vid),
+            home_vid=jnp.asarray(s.home_vid),
+            home_mask=jnp.asarray(s.home_mask),
+            routes={k: (jnp.asarray(v[0]), jnp.asarray(v[1]))
+                    for k, v in s.routes.items()},
+            p=s.num_partitions, e_blk=s.e_blk, v_mir=s.v_mir,
+            v_blk=s.v_blk, num_vertices=s.num_vertices,
+            num_edges=s.num_edges)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class Graph:
+    """Immutable distributed property graph G(P) = (V, E, P)."""
+
+    s: StructArrays
+    vdata: Any               # pytree [P, V_blk, ...]
+    edata: Any               # pytree [P, E_blk, ...]
+    vmask: jnp.ndarray       # [P, V_blk] visibility bitmask (subgraph view)
+    emask: jnp.ndarray       # [P, E_blk]
+    active: jnp.ndarray      # [P, V_blk] changed-since-last-ship (§4.5.1)
+    ex: Exchange = dataclasses.field(default=None)          # static
+    host: part_mod.GraphStructure = dataclasses.field(default=None)  # static
+
+    def tree_flatten(self):
+        return ((self.s, self.vdata, self.edata, self.vmask, self.emask,
+                 self.active), (self.ex, self.host))
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children, ex=aux[0], host=aux[1])
+
+    def replace(self, **kw) -> "Graph":
+        return dataclasses.replace(self, **kw)
+
+    # ------------------------------------------------------------- builders
+    @staticmethod
+    def from_edges(
+        src: np.ndarray,
+        dst: np.ndarray,
+        *,
+        edge_values: Any = None,          # pytree of np [E, ...]
+        vertex_keys: np.ndarray | None = None,
+        vertex_values: Any = None,        # pytree of np [Nv, ...]
+        default_vertex: Any = 0.0,        # paper's defaultV
+        merge_v: str = "last",            # paper's mergeV: last|sum|min|max
+        num_partitions: int = 4,
+        partitioner: str = "2d",
+        ex: Exchange | None = None,
+    ) -> "Graph":
+        """The `Graph` operator (Listing 4): build a consistent property
+        graph from edge and (optional) vertex collections."""
+        host = part_mod.build_structure(
+            src, dst, num_partitions,
+            vertex_ids=vertex_keys, partitioner=partitioner)
+        p, v_blk, e_blk = host.num_partitions, host.v_blk, host.e_blk
+
+        # ---- place edge properties in slab order
+        if edge_values is None:
+            edge_values = {"w": np.ones(len(src), np.float32)}
+
+        def place_edge(leaf):
+            leaf = np.asarray(leaf)
+            buf = np.zeros((p, e_blk) + leaf.shape[1:], leaf.dtype)
+            buf[host.edge_part, host.edge_row] = leaf
+            return jnp.asarray(buf)
+
+        edata = jax.tree.map(place_edge, edge_values)
+
+        # ---- place vertex properties (mergeV + defaultV => consistency)
+        if vertex_keys is None:
+            vertex_keys = np.empty((0,), np.int64)
+            vertex_values = jax.tree.map(
+                lambda d: np.empty((0,) + np.shape(d), np.asarray(d).dtype),
+                default_vertex)
+        vk = np.asarray(vertex_keys, np.int64)
+        vpart, vrow = host.local_row(vk)
+
+        def place_vertex(leaf, dflt):
+            leaf = np.asarray(leaf)
+            dflt_arr = np.asarray(dflt)
+            trailing = leaf.shape[1:] if leaf.size else dflt_arr.shape
+            dtype = leaf.dtype if leaf.size else dflt_arr.dtype
+            buf = np.empty((p, v_blk) + trailing, dtype)
+            buf[...] = dflt_arr
+            if merge_v == "last" or vk.size == 0:
+                buf[vpart, vrow] = leaf
+            elif merge_v == "sum":
+                np.add.at(buf, (vpart, vrow), leaf)
+            elif merge_v == "min":
+                np.minimum.at(buf, (vpart, vrow), leaf)
+            elif merge_v == "max":
+                np.maximum.at(buf, (vpart, vrow), leaf)
+            else:
+                raise ValueError(f"merge_v={merge_v}")
+            return jnp.asarray(buf)
+
+        vdata = jax.tree.map(place_vertex, vertex_values, default_vertex)
+
+        s = StructArrays.from_host(host)
+        return Graph(
+            s=s, vdata=vdata, edata=edata,
+            vmask=jnp.asarray(host.home_mask),
+            emask=jnp.asarray(host.edge_mask),
+            active=jnp.asarray(host.home_mask),
+            ex=ex or LocalExchange(p), host=host)
+
+    # ------------------------------------------------------ collection views
+    @property
+    def vertex_ids(self) -> jnp.ndarray:
+        return self.s.home_vid
+
+    def vertices(self) -> Col:
+        """Collection view of the visible vertices (§3.2)."""
+        return Col(self.s.home_vid, self.vdata, self.vmask, self.ex)
+
+    def edges(self):
+        """(src_vid, dst_vid, edata, mask) in slab order."""
+        svid = gather_rows({"x": self.s.mirror_vid}, self.s.src_slot)["x"]
+        dvid = gather_rows({"x": self.s.mirror_vid}, self.s.dst_slot)["x"]
+        return svid, dvid, self.edata, self.emask
+
+    def triplets(self):
+        """The three-way join (§3.2): per-edge (src_vid, dst_vid, src_vals,
+        edata, dst_vals, mask).  Ships the full replicated view."""
+        view, _ = ship_to_mirrors(self.s, self.vdata, "both", self.ex)
+        svid, dvid, edata, mask = self.edges()
+        svals = gather_rows(view.mirror, self.s.src_slot)
+        dvals = gather_rows(view.mirror, self.s.dst_slot)
+        # visibility: both endpoints visible
+        vis = self._edge_visibility(view)
+        return svid, dvid, svals, edata, dvals, mask & vis
+
+    def _edge_visibility(self, view=None) -> jnp.ndarray:
+        """Edges whose endpoints are both visible under the vertex bitmask."""
+        if bool(jnp.all(self.vmask == self.s.home_mask)):
+            return self.emask
+        vis_view, _ = ship_to_mirrors(
+            self.s, {"vis": self.vmask}, "both", self.ex)
+        svis = gather_rows(vis_view.mirror, self.s.src_slot)["vis"]
+        dvis = gather_rows(vis_view.mirror, self.s.dst_slot)["vis"]
+        return svis & dvis
+
+    # ----------------------------------------------------------- transforms
+    def mapV(self, f: Callable) -> "Graph":
+        """f(vid, vval) -> vval'; structure and indexes reused (§4.3).
+
+        May change the vertex property TYPE (Graph[V,E] -> Graph[V2,E]), so
+        the new values apply everywhere; hidden vertices stay hidden via the
+        bitmask, not via stale data."""
+        return self.replace(vdata=vmap2(f)(self.s.home_vid, self.vdata))
+
+    def mapE(self, f: Callable) -> "Graph":
+        """f(src_vval, eval, dst_vval) -> eval'; join-eliminated shipping."""
+        vex, eex = elem_spec(self.vdata), elem_spec(self.edata)
+        deps = analysis.analyze_message_fn(f, vex, eex, vex)
+        need = ("both" if deps.uses_src and deps.uses_dst
+                else "src" if deps.uses_src
+                else "dst" if deps.uses_dst else None)
+        if need is None:
+            zeros = jax.tree.map(
+                lambda x: jnp.zeros((self.s.p, self.s.e_blk) + x.shape[2:], x.dtype),
+                self.vdata)
+            svals = dvals = zeros
+        else:
+            view, _ = ship_to_mirrors(self.s, self.vdata, need, self.ex)
+            svals = gather_rows(view.mirror, self.s.src_slot)
+            dvals = gather_rows(view.mirror, self.s.dst_slot)
+        return self.replace(edata=vmap2(f)(svals, self.edata, dvals))
+
+    def leftJoin(self, other: Col, f: Callable | None = None,
+                 capacity: int | None = None) -> "Graph":
+        """Merge a vertex property collection into the graph (Listing 4).
+
+        f(vval, other_val, found) -> vval'.  Default keeps a tuple.  Only the
+        input collection is shuffled (§4.4): it is re-keyed to the vertex
+        home partitioning and merge-joined against the sorted home index.
+        """
+        joined, ovf = self._join_to_homes(other, capacity)
+        ovals, found = joined
+        if f is None:
+            f = lambda v, o, hit: (v, o, hit)
+        return self.replace(vdata=vmap2(f)(self.vdata, ovals, found))
+
+    def innerJoin(self, other: Col, f: Callable | None = None,
+                  capacity: int | None = None) -> "Graph":
+        """leftJoin that also hides unmatched vertices via the bitmask."""
+        joined, ovf = self._join_to_homes(other, capacity)
+        ovals, found = joined
+        if f is None:
+            f = lambda v, o, hit: (v, o)
+        new = vmap2(lambda v, o, hit: f(v, o, hit))(self.vdata, ovals, found)
+        return self.replace(vdata=new, vmask=self.vmask & found)
+
+    def _join_to_homes(self, other: Col, capacity: int | None):
+        """Shuffle `other` by vid-home hash; merge-join on sorted home_vid."""
+        from .collections import shuffle_by_key, KEY_PAD
+        capacity = capacity or 2 * max(other.keys.shape[1], self.s.v_blk)
+        k, v, m, ovf = shuffle_by_key(other.keys, other.values, other.mask,
+                                      self.ex, capacity)
+        order = jnp.argsort(jnp.where(m, k, KEY_PAD), axis=1, stable=True)
+        ks = jnp.take_along_axis(k, order, axis=1)
+        idx = jax.vmap(lambda srt, q: jnp.searchsorted(srt, q))(ks, self.s.home_vid)
+        idx = jnp.clip(idx, 0, ks.shape[1] - 1)
+        found = (jnp.take_along_axis(ks, idx, axis=1) == self.s.home_vid) \
+            & self.s.home_mask
+
+        def probe(leaf):
+            srt = jnp.take_along_axis(
+                leaf, order.reshape(order.shape + (1,) * (leaf.ndim - 2)), axis=1)
+            return jnp.take_along_axis(
+                srt, idx.reshape(idx.shape + (1,) * (leaf.ndim - 2)), axis=1)
+
+        return (jax.tree.map(probe, v), found), ovf
+
+    # ------------------------------------------------------------- restrict
+    def subgraph(self, vpred: Callable | None = None,
+                 epred: Callable | None = None) -> "Graph":
+        """Bitmask-restricted view (§4.3): no structure rebuild, indexes
+        shared; retained edges satisfy epred AND both endpoint vpreds."""
+        vmask = self.vmask
+        if vpred is not None:
+            vmask = vmask & vmap2(vpred)(self.s.home_vid, self.vdata)
+
+        # ship new visibility to mirrors, restrict edges
+        vis_view, _ = ship_to_mirrors(self.s, {"vis": vmask}, "both", self.ex)
+        svis = gather_rows(vis_view.mirror, self.s.src_slot)["vis"]
+        dvis = gather_rows(vis_view.mirror, self.s.dst_slot)["vis"]
+        emask = self.emask & svis & dvis
+
+        if epred is not None:
+            view, _ = ship_to_mirrors(self.s, self.vdata, "both", self.ex)
+            svals = gather_rows(view.mirror, self.s.src_slot)
+            dvals = gather_rows(view.mirror, self.s.dst_slot)
+            emask = emask & vmap2(epred)(svals, self.edata, dvals)
+
+        return self.replace(vmask=vmask, emask=emask, active=self.active & vmask)
+
+    def reverse(self) -> "Graph":
+        """Transpose the graph: swap src/dst slots.  Edges were stored
+        dst-sorted, so the *new* src side is already sorted (src_perm =
+        identity); the src/dst routing tables swap roles."""
+        ident = jnp.broadcast_to(
+            jnp.arange(self.s.e_blk, dtype=jnp.int32), self.s.src_perm.shape)
+        s = dataclasses.replace(
+            self.s, src_slot=self.s.dst_slot, dst_slot=self.s.src_slot,
+            src_perm=ident,
+            routes={"src": self.s.routes["dst"], "dst": self.s.routes["src"],
+                    "both": self.s.routes["both"]})
+        return self.replace(s=s)
+
+    # ------------------------------------------------------------ mrTriplets
+    def mrTriplets(self, map_fn: Callable, reduce: str = "sum", *,
+                   to: str = "dst", skip_stale: str | None = None,
+                   cache: ViewCache | None = None, kernel_mode: str = "auto",
+                   force_need: str | None = None):
+        return mr_triplets(self, map_fn, reduce, to=to, skip_stale=skip_stale,
+                           cache=cache, kernel_mode=kernel_mode,
+                           force_need=force_need)
+
+    def degrees(self, direction: str = "in", kernel_mode: str = "auto"):
+        """Vertex degrees via a join-eliminated mrTriplets (the paper's
+        0-way-join example, §4.5.2)."""
+        to = "dst" if direction == "in" else "src"
+        vals, exists, _, metrics = self.mrTriplets(
+            lambda sv, ev, dv: {"deg": jnp.float32(1.0)}, "sum", to=to,
+            kernel_mode=kernel_mode)
+        deg = jnp.where(exists, vals["deg"], 0.0)
+        return deg, metrics
+
+    # ----------------------------------------------------------------- host
+    def vertices_to_numpy(self):
+        vids = np.asarray(self.s.home_vid)
+        mask = np.asarray(self.vmask)
+        vals = jax.tree.map(lambda v: np.asarray(v)[mask], self.vdata)
+        return vids[mask], vals
+
+    def edges_to_numpy(self):
+        svid, dvid, edata, mask = self.edges()
+        m = np.asarray(mask)
+        return (np.asarray(svid)[m], np.asarray(dvid)[m],
+                jax.tree.map(lambda e: np.asarray(e)[m], edata))

@@ -1,0 +1,67 @@
+"""Deterministic integer hashing used by the partitioner and collections.
+
+GraphX hash-partitions vertices by id and 2D-hash-partitions edges by
+(src, dst).  We need hashes that are (a) deterministic across restarts so a
+failed job rebuilds identical routing tables (DESIGN.md §6), and (b) cheap
+to evaluate in numpy at graph-build time and in jnp inside collection
+shuffles.  We use the splitmix64 finalizer for 64-bit ids (host) and a
+Murmur-style 32-bit mix for device-side keys.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+_U64 = np.uint64
+_U32 = np.uint32
+
+
+def splitmix64(x: np.ndarray) -> np.ndarray:
+    """splitmix64 finalizer; input any integer dtype, output uint64."""
+    z = x.astype(np.int64).view(_U64) if x.dtype != _U64 else x.copy()
+    with np.errstate(over="ignore"):
+        z = (z + _U64(0x9E3779B97F4A7C15)) & _U64(0xFFFFFFFFFFFFFFFF)
+        z = (z ^ (z >> _U64(30))) * _U64(0xBF58476D1CE4E5B9)
+        z = (z ^ (z >> _U64(27))) * _U64(0x94D049BB133111EB)
+        z = z ^ (z >> _U64(31))
+    return z
+
+
+def hash_mod(x: np.ndarray, mod: int, salt: int = 0) -> np.ndarray:
+    """Hash-then-mod used for home-partition assignment (numpy, build time)."""
+    h = splitmix64(np.asarray(x, dtype=np.int64) ^ np.int64(salt))
+    return (h % _U64(mod)).astype(np.int64)
+
+
+def mix32_np(x: np.ndarray) -> np.ndarray:
+    """numpy twin of mix32_jnp — MUST stay bit-identical (home partitioning
+    is computed on host at graph build and on device in collection shuffles)."""
+    z = np.asarray(x).astype(np.int64).astype(np.uint32)  # two-step: wrap mod 2^32
+    z = z ^ (z >> _U32(16))
+    z = (z * _U32(0x85EBCA6B)) & _U32(0xFFFFFFFF)
+    z = z ^ (z >> _U32(13))
+    z = (z * _U32(0xC2B2AE35)) & _U32(0xFFFFFFFF)
+    z = z ^ (z >> _U32(16))
+    return z
+
+
+def hash_mod32(x: np.ndarray, mod: int, salt: int = 0) -> np.ndarray:
+    """Host-side home-partition assignment (32-bit; device-matchable)."""
+    x32 = np.asarray(x).astype(np.int64).astype(np.uint32).view(np.int32)
+    return (mix32_np(x32 ^ np.int32(salt)) % _U32(mod)).astype(np.int64)
+
+
+def mix32_jnp(x: jnp.ndarray) -> jnp.ndarray:
+    """Murmur3-style 32-bit finalizer for device-side key shuffles."""
+    z = x.astype(jnp.uint32)
+    z = z ^ (z >> 16)
+    z = z * jnp.uint32(0x85EBCA6B)
+    z = z ^ (z >> 13)
+    z = z * jnp.uint32(0xC2B2AE35)
+    z = z ^ (z >> 16)
+    return z
+
+
+def hash_mod_jnp(x: jnp.ndarray, mod: int, salt: int = 0) -> jnp.ndarray:
+    """Device-side hash-then-mod for shuffle destination selection."""
+    return (mix32_jnp(x ^ jnp.int32(salt)) % jnp.uint32(mod)).astype(jnp.int32)

@@ -1,0 +1,368 @@
+"""mrTriplets execution: the physical join + aggregation plan (paper §4.4–4.6).
+
+Logical plan (paper §4.5): triplets = edges ⋈ vertices(src) ⋈ vertices(dst);
+messages = map(triplets); result = reduceByKey(messages).  Physical plan here:
+
+  1. *join elimination* (§4.5.2) — jaxpr analysis picks the routing table
+     ("src" / "dst" / "both" / none) so un-referenced vertex sides are never
+     shipped;
+  2. *vertex shipping* — gather(route_send) → all_to_all → scatter(route_recv)
+     materialises the replicated vertex view at the edge partitions (join
+     site selection: vertices move to edges, never the reverse);
+  3. *incremental view maintenance* (§4.5.1) — with a `ViewCache`, only
+     vertices whose `active` bit is set are shipped; stale mirror slots keep
+     their previously materialised value;
+  4. *edge-parallel map + local pre-aggregation* — messages are computed for
+     live edges (`skipStale` masks edges whose relevant endpoint is stale,
+     §4.6's index-scan at block granularity inside the Pallas kernel) and
+     segment-reduced per partition BEFORE the wire (PowerGraph-style
+     combiners: wire traffic is O(mirrors), never O(edges));
+  5. *aggregate return* — partial aggregates ship back over the same routing
+     table and combine at each vertex's home partition.
+
+Every step reports both static wire bytes (what the collective moves) and
+effective bytes (what incremental maintenance actually needed) — the
+quantities plotted in paper Figures 4 and 5.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from . import analysis
+from .exchange import Exchange
+from .tree import (bmask, elem_spec, gather_rows, nbytes_of, tree_where,
+                   tree_zeros_like_elem, vmap2)
+from ..kernels import ops as kops
+
+_REDUCE_IDENTITY = {
+    "sum": lambda dt: jnp.zeros((), dt),
+    "min": lambda dt: jnp.array(jnp.finfo(dt).max if jnp.issubdtype(dt, jnp.floating)
+                                else jnp.iinfo(dt).max, dt),
+    "max": lambda dt: jnp.array(jnp.finfo(dt).min if jnp.issubdtype(dt, jnp.floating)
+                                else jnp.iinfo(dt).min, dt),
+}
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class ViewCache:
+    """Previously materialised replicated vertex view (§4.5.1)."""
+
+    mirror: Any           # pytree [P, V_mir, ...]
+    filled: jnp.ndarray   # [P, V_mir] bool — slot has ever been shipped
+    active: jnp.ndarray   # [P, V_mir] bool — slot changed in latest ship
+
+    def tree_flatten(self):
+        return (self.mirror, self.filled, self.active), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class ShipMetrics:
+    wire_bytes: int                 # static bytes moved by the collective
+    effective_bytes: jnp.ndarray    # data actually needed (Fig 4 quantity)
+    n_shipped: jnp.ndarray
+
+    def tree_flatten(self):
+        return (self.effective_bytes, self.n_shipped), (self.wire_bytes,)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(aux[0], *children)
+
+
+def ship_to_mirrors(
+    s,                      # StructArrays (duck-typed: routes, v_mir, p)
+    values: Any,            # pytree [P, V_blk, ...]
+    need: str,              # "src" | "dst" | "both"
+    ex: Exchange,
+    *,
+    active: jnp.ndarray | None = None,   # [P, V_blk] bool — ship only these
+    cache: ViewCache | None = None,
+) -> tuple[ViewCache, ShipMetrics]:
+    """Materialise the replicated vertex view for one need set."""
+    send_idx, recv_slot = s.routes[need]          # [nl, P, K] each
+    # nl = partitions on this device (= P globally, 1 inside shard_map);
+    # the middle axis is always the GLOBAL partner count.
+    nl, p, k = send_idx.shape
+    valid = send_idx >= 0
+    safe_idx = jnp.maximum(send_idx, 0)
+
+    # sender-side gather;  flags mark entries that must overwrite the view
+    flags = valid if active is None else (
+        valid & jax.vmap(lambda a, i: jnp.take(a, i, mode="clip"))(
+            active, safe_idx.reshape(nl, -1)).reshape(nl, p, k))
+    sendbuf = jax.tree.map(
+        lambda v: jax.vmap(lambda vv, ii: jnp.take(vv, ii, axis=0, mode="clip"))(
+            v, safe_idx.reshape(nl, -1)).reshape((nl, p, k) + v.shape[2:]),
+        values)
+    sendbuf = tree_where(flags, sendbuf, jax.tree.map(jnp.zeros_like, sendbuf))
+
+    recvbuf = ex.tree_ship(sendbuf)               # [P(pe), P(q), K, ...]
+    if active is None and cache is None:
+        # full ship: the flag pattern is STRUCTURAL (route padding), already
+        # known at the receiver as recv_slot validity — skip the flags
+        # collective entirely (one of the two forward a2a buffers).
+        recvflags = recv_slot < s.v_mir
+    else:
+        recvflags = ex.transpose(flags)
+
+    # receiver-side scatter into mirror slots (slots are unique per partition)
+    def scatter_leaf(leaf):
+        flat = leaf.reshape((nl, p * k) + leaf.shape[3:])
+        init = jnp.zeros((nl, s.v_mir) + leaf.shape[3:], leaf.dtype)
+        return jax.vmap(lambda b, sl, x: b.at[sl].set(x, mode="drop"))(
+            init, recv_slot.reshape(nl, -1), flat)
+
+    new_mirror = jax.tree.map(scatter_leaf, recvbuf)
+    shipped = jax.vmap(lambda b, sl, x: b.at[sl].set(x, mode="drop"))(
+        jnp.zeros((nl, s.v_mir), bool), recv_slot.reshape(nl, -1),
+        recvflags.reshape(nl, -1))
+
+    if cache is None:
+        mirror, filled = new_mirror, shipped
+    else:
+        mirror = tree_where(shipped, new_mirror, cache.mirror)
+        filled = cache.filled | shipped
+
+    elem_bytes = nbytes_of(jax.tree.map(lambda v: v[0, 0], values))
+    metrics = ShipMetrics(
+        wire_bytes=_wire_bytes(sendbuf, ex),
+        effective_bytes=flags.sum() * elem_bytes,
+        n_shipped=flags.sum(),
+    )
+    return ViewCache(mirror=mirror, filled=filled, active=shipped), metrics
+
+
+def _wire_bytes(tree, ex: Exchange) -> int:
+    """Static bytes the exchange moves, honouring on-wire dtype narrowing.
+
+    (The CPU dry-run backend float-normalises bf16 collectives back to f32
+    — a backend artifact; TPU runs them native, so the engine metric is the
+    truthful wire count.)"""
+    total = 0
+    for x in jax.tree.leaves(tree):
+        item = x.dtype.itemsize
+        if ex.wire_dtype is not None and jnp.issubdtype(x.dtype, jnp.floating):
+            item = min(item, jnp.dtype(ex.wire_dtype).itemsize)
+        total += x.size * item
+    return total
+
+
+def ship_aggregates_home(
+    s,
+    partial: Any,            # pytree [P, V_mir, ...] partial aggregates
+    had_msg: jnp.ndarray,    # [P, V_mir] bool
+    need: str,
+    reduce: str,
+    ex: Exchange,
+) -> tuple[Any, jnp.ndarray, ShipMetrics]:
+    """Return partial aggregates to vertex homes and combine (reduce UDF is
+    commutative-associative, §3.2, so cross-partition combining is a
+    scatter-reduce)."""
+    send_idx, recv_slot = s.routes[need]
+    nl, p, k = send_idx.shape
+
+    def gather_leaf(leaf):
+        flat = jax.vmap(lambda t, i: jnp.take(t, i, axis=0, mode="clip"))(
+            leaf, recv_slot.reshape(nl, -1))
+        return flat.reshape((nl, p, k) + leaf.shape[2:])
+
+    backbuf = jax.tree.map(gather_leaf, partial)
+    backflags = jax.vmap(lambda t, i: jnp.take(t, i, mode="clip"))(
+        had_msg, recv_slot.reshape(nl, -1)).reshape(nl, p, k)
+    backflags &= recv_slot < s.v_mir
+
+    recv = ex.tree_ship(backbuf)                  # [P(q), P(pe), K, ...]
+    rflags = ex.transpose(backflags)
+
+    v_blk = s.home_mask.shape[1]
+    scatter_ops = {"sum": "add", "min": "min", "max": "max"}
+    mode = scatter_ops[reduce]
+
+    def combine_leaf(leaf):
+        # narrow wire dtypes accumulate in f32 at the home partition
+        if jnp.issubdtype(leaf.dtype, jnp.floating):
+            leaf = leaf.astype(jnp.float32)
+        ident = _REDUCE_IDENTITY[reduce](leaf.dtype)
+        flat = leaf.reshape((nl, p * k) + leaf.shape[3:])
+        flat = jnp.where(bmask(rflags.reshape(nl, -1), flat), flat, ident)
+        init = jnp.full((nl, v_blk) + leaf.shape[3:], ident, leaf.dtype)
+        idx = jnp.where(rflags, send_idx, v_blk).reshape(nl, -1)  # OOB drop
+        return jax.vmap(lambda b, ii, x: getattr(b.at[ii], mode)(x, mode="drop"))(
+            init, idx, flat)
+
+    out = jax.tree.map(combine_leaf, recv)
+    exists = jax.vmap(lambda b, ii, x: b.at[ii].max(x, mode="drop"))(
+        jnp.zeros((nl, v_blk), jnp.int32),
+        jnp.where(rflags, send_idx, v_blk).reshape(nl, -1),
+        rflags.reshape(nl, -1).astype(jnp.int32)) > 0
+
+    elem_bytes = nbytes_of(jax.tree.map(lambda v: v[0, 0], partial))
+    metrics = ShipMetrics(
+        wire_bytes=_wire_bytes(backbuf, ex),
+        effective_bytes=backflags.sum() * elem_bytes,
+        n_shipped=backflags.sum(),
+    )
+    return out, exists, metrics
+
+
+def _segment_aggregate(msgs: Any, ids: jnp.ndarray, valid: jnp.ndarray,
+                       v_mir: int, reduce: str, kernel_mode: str):
+    """Per-partition segment reduction of edge messages into mirror slots.
+
+    msgs: pytree [nl, E, ...]; ids: [nl, E] slots (dst or src side); valid [nl,E].
+    Flattens the local-partition axis into the segment space so one kernel
+    call covers all local partitions (ids stay sorted within each block).
+    """
+    nl, e = ids.shape
+    num_seg = nl * v_mir
+    flat_ids = jnp.where(valid, ids + jnp.arange(nl, dtype=jnp.int32)[:, None] * v_mir,
+                         num_seg).reshape(-1)
+
+    def agg_leaf(leaf):
+        flat = leaf.reshape(nl * e, -1)
+        if reduce == "sum" and jnp.issubdtype(leaf.dtype, jnp.floating):
+            out = kops.segment_sum(flat, flat_ids, num_seg, mode=kernel_mode)
+        else:
+            fill = jnp.where(bmask(valid, leaf), leaf, _REDUCE_IDENTITY[reduce](leaf.dtype))
+            flat = fill.reshape(nl * e, -1)
+            fn = {"sum": jax.ops.segment_sum, "min": jax.ops.segment_min,
+                  "max": jax.ops.segment_max}[reduce]
+            out = fn(flat, flat_ids.clip(0, num_seg), num_segments=num_seg + 1)[:num_seg]
+        return out.reshape((nl, v_mir) + leaf.shape[2:])
+
+    partial = jax.tree.map(agg_leaf, msgs)
+    counts = jax.ops.segment_sum(valid.reshape(-1).astype(jnp.int32),
+                                 flat_ids.clip(0, num_seg),
+                                 num_segments=num_seg + 1)[:num_seg]
+    had_msg = counts.reshape(nl, v_mir) > 0
+    return partial, had_msg
+
+
+def mr_triplets(
+    g,                               # Graph (duck-typed)
+    map_fn: Callable,                # f(src_val, edge_val, dst_val) -> msg pytree
+    reduce: str = "sum",
+    *,
+    to: str = "dst",                 # "dst" | "src"
+    skip_stale: str | None = None,   # None | "out" | "in" | "both"
+    cache: ViewCache | None = None,
+    kernel_mode: str = "auto",
+    force_need: str | None = None,   # override join elimination (benchmarks)
+):
+    """Execute one mrTriplets. Returns (values, exists, new_cache, metrics).
+
+    values: pytree [P, V_blk, ...] aggregated at vertex homes;
+    exists:  [P, V_blk] bool ("WHERE sum IS NOT null", §3.2).
+    """
+    s, ex = g.s, g.ex
+    nl = g.vmask.shape[0]   # local partition count (1 inside shard_map)
+
+    vex, eex = elem_spec(g.vdata), elem_spec(g.edata)
+    deps = analysis.analyze_message_fn(map_fn, vex, eex, vex)
+    if force_need is not None:
+        need = force_need
+        uses_src = uses_dst = True
+        arity = 1 + (need in ("src", "both")) + (need in ("dst", "both"))
+    else:
+        uses_src, uses_dst = deps.uses_src, deps.uses_dst
+        need = ("both" if (uses_src and uses_dst)
+                else "src" if uses_src else "dst" if uses_dst else None)
+        arity = deps.n_way
+
+    metrics: dict[str, Any] = {"join_arity": arity, "need": need or "none"}
+
+    # property-level join elimination (beyond §4.5.2): ship only the vdata
+    # LEAVES the UDF actually reads.  Unused leaves become zeros in the
+    # reconstructed view; since the UDF provably ignores them, XLA DCEs the
+    # zero gathers.
+    flat_vals, vtreedef = jax.tree.flatten(g.vdata)
+    leaf_mask = None
+    if (force_need is None and deps.src_leaves is not None
+            and len(deps.src_leaves) == len(flat_vals)):
+        leaf_mask = tuple(su or du for su, du in
+                          zip(deps.src_leaves, deps.dst_leaves))
+        if all(leaf_mask) or not any(leaf_mask):
+            leaf_mask = None
+    metrics["shipped_leaves"] = (sum(leaf_mask) if leaf_mask
+                                 else len(flat_vals))
+
+    def ship_values():
+        if leaf_mask is None:
+            return flat_vals
+        return [v for v, u in zip(flat_vals, leaf_mask) if u]
+
+    def rebuild_mirror(mirror_subset):
+        if leaf_mask is None:
+            return jax.tree.unflatten(vtreedef, mirror_subset)
+        it = iter(mirror_subset)
+        leaves = [next(it) if u
+                  else jnp.zeros((nl, s.v_mir) + v.shape[2:], v.dtype)
+                  for v, u in zip(flat_vals, leaf_mask)]
+        return jax.tree.unflatten(vtreedef, leaves)
+
+    # --- 1/2/3: ship the replicated vertex view (with incremental cache) ----
+    if need is not None:
+        ship_active = g.active if cache is not None else None
+        view, m_fwd = ship_to_mirrors(s, ship_values(), need, ex,
+                                      active=ship_active, cache=cache)
+        metrics["fwd"] = m_fwd
+    else:
+        view = cache or ViewCache(
+            mirror=tree_zeros_like_elem(g.vdata, (nl, s.v_mir)),
+            filled=jnp.zeros((nl, s.v_mir), bool),
+            active=jnp.ones((nl, s.v_mir), bool))
+        metrics["fwd"] = ShipMetrics(0, jnp.int32(0), jnp.int32(0))
+
+    # --- 4: edge-parallel message computation -------------------------------
+    zeros_elem = tree_zeros_like_elem(g.vdata, (nl, s.e_blk))
+    mirror_tree = rebuild_mirror(view.mirror) if need is not None else None
+    svals = gather_rows(mirror_tree, s.src_slot) if uses_src else zeros_elem
+    dvals = gather_rows(mirror_tree, s.dst_slot) if uses_dst else zeros_elem
+    msgs = vmap2(map_fn)(svals, g.edata, dvals)
+
+    # skipStale (§3.2 / §4.6): drop edges whose relevant endpoint did not
+    # change since the last ship.  "out" skips stale sources, "in" stale
+    # destinations, "both" requires either endpoint fresh.
+    live = g.emask
+    if skip_stale is not None:
+        take_active = jax.vmap(lambda a, i: jnp.take(a, i, mode="clip"))
+        src_fresh = take_active(view.active, s.src_slot)
+        dst_fresh = take_active(view.active, s.dst_slot)
+        fresh = {"out": src_fresh, "in": dst_fresh,
+                 "both": src_fresh | dst_fresh}[skip_stale]
+        live = live & fresh
+    metrics["live_edges"] = live.sum()
+
+    # --- aggregation toward the requested side ------------------------------
+    if to == "dst":
+        ids = s.dst_slot
+        agg_msgs, agg_valid = msgs, live
+    else:  # "src": pre-sorted permutation keeps segment ids ordered
+        perm = s.src_perm
+        agg_msgs = jax.tree.map(
+            lambda mm: jax.vmap(lambda x, i: jnp.take(x, i, axis=0))(mm, perm), msgs)
+        ids = jax.vmap(lambda x, i: jnp.take(x, i))(s.src_slot, perm)
+        agg_valid = jax.vmap(lambda x, i: jnp.take(x, i))(live, perm)
+
+    partial, had_msg = _segment_aggregate(agg_msgs, ids, agg_valid,
+                                          s.v_mir, reduce, kernel_mode)
+
+    # --- 5: return aggregates to vertex homes --------------------------------
+    # Aggregates flow back along the routing table of the side they were
+    # aggregated on (structural, independent of which sides were shipped).
+    values, exists, m_back = ship_aggregates_home(
+        s, partial, had_msg, to, reduce, ex)
+    metrics["back"] = m_back
+
+    return values, exists, view, metrics

@@ -1,0 +1,336 @@
+"""Distributed graph representation: vertex-cut partitioning + routing tables.
+
+This is the build-time half of GraphX §4.2.  Graphs are immutable (§3.1), so
+we "can afford to construct indexes" (§4): everything here runs once in numpy
+when a graph is constructed, producing a `GraphStructure` — a pytree of
+static-shape device arrays that the iterative device-side operators
+(mrTriplets, Pregel) consume.
+
+Layout (P = number of partitions):
+
+  Edge slabs (vertex-cut: edges partitioned, vertices replicated to mirrors):
+    src_slot   [P, E_blk] int32   index into the partition's mirror table
+    dst_slot   [P, E_blk] int32   (edges CLUSTERED by dst_slot — CSR analog —
+                                   so message aggregation is a segment-sum
+                                   over sorted segment ids)
+    src_perm   [P, E_blk] int32   permutation that re-sorts edges by src_slot
+                                   (for aggregation toward the source side)
+    edge_mask  [P, E_blk] bool    validity (padding + `subgraph` restriction)
+
+  Mirror tables (the "replicated vertex view", §4.5.1):
+    mirror_vid  [P, V_mir] int32  global vertex id of each mirror slot (-1 pad)
+
+  Vertex home partitions (hash partitioned by id, SORTED by id within the
+  partition — the paper's hash index, realised as a searchsorted/merge-join
+  index on TPU):
+    home_vid   [P, V_blk] int32   sorted global ids (-1 padding at the tail
+                                   sorts high via uint reinterpretation; we
+                                   pad with INT32_MAX and mask)
+    home_mask  [P, V_blk] bool
+
+  Routing tables (§4.2 "join sites").  Three variants are precomputed, one
+  per *need set*, so automatic join elimination (§4.5.2) ships strictly
+  fewer bytes: "src" routes only vertices appearing as a source in the
+  target edge partition, "dst" only destinations, "both" the union:
+    route_send_idx [P, P, K] int32  send_idx[q, p, k]: local row in home
+                                    partition q of the k-th vertex shipped to
+                                    edge partition p  (-1 = padding)
+    route_recv_slot[P, P, K] int32  recv_slot[p, q, k]: mirror slot in edge
+                                    partition p where that vertex lands
+
+Shipping vertices = gather(route_send_idx) → all_to_all → scatter(route_recv_slot).
+Returning partial aggregates runs the same tables backwards.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import numpy as np
+
+from .hashing import hash_mod, hash_mod32
+
+INT_PAD = np.int32(2**31 - 1)  # sorts after every real id
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+@dataclasses.dataclass(frozen=True)
+class PartitionStats:
+    """Replication statistics — used to property-test the O(|V|·sqrt(P)) bound."""
+
+    num_vertices: int
+    num_edges: int
+    num_partitions: int
+    total_mirrors: int
+
+    @property
+    def replication_factor(self) -> float:
+        return self.total_mirrors / max(self.num_vertices, 1)
+
+
+@dataclasses.dataclass(eq=False)
+class GraphStructure:
+    """Static-shape device-ready index arrays for one partitioned graph.
+
+    All members are numpy here; `repro.core.graph.Graph` converts to jnp and
+    treats this as an immutable, shareable structural index (§4.3: index
+    reuse across property updates).
+
+    eq=False: this object rides in Graph's pytree METADATA (it is static),
+    so jit compares it when matching cache entries — identity equality is
+    both correct (structures are immutable and shared, §4.3) and required
+    (field-wise numpy comparison raises).
+    """
+
+    num_partitions: int
+    num_vertices: int
+    num_edges: int
+    e_blk: int
+    v_mir: int
+    v_blk: int
+    k_route: int
+
+    src_slot: np.ndarray      # [P, E_blk] int32
+    dst_slot: np.ndarray      # [P, E_blk] int32
+    src_perm: np.ndarray      # [P, E_blk] int32 (indices re-sorting by src)
+    edge_mask: np.ndarray     # [P, E_blk] bool
+    mirror_vid: np.ndarray    # [P, V_mir] int32
+    home_vid: np.ndarray      # [P, V_blk] int32 sorted, INT_PAD padding
+    home_mask: np.ndarray     # [P, V_blk] bool
+    # routes[need] for need in {"src", "dst", "both"}:
+    #   (route_send_idx [P,P,K], route_recv_slot [P,P,K], K)
+    routes: dict = None  # type: ignore[assignment]
+    stats: PartitionStats = None  # type: ignore[assignment]
+    # placement of the i-th INPUT edge: partition + row within the slab
+    edge_part: np.ndarray = None  # [E] int32  # type: ignore[assignment]
+    edge_row: np.ndarray = None   # [E] int32  # type: ignore[assignment]
+
+    @property
+    def route_send_idx(self) -> np.ndarray:   # back-compat: union route
+        return self.routes["both"][0]
+
+    @property
+    def route_recv_slot(self) -> np.ndarray:
+        return self.routes["both"][1]
+
+    # ---- host-side lookups used by build + tests ------------------------
+    def home_of(self, vids: np.ndarray) -> np.ndarray:
+        return hash_mod32(vids, self.num_partitions)
+
+    def local_row(self, vids: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+        """(partition, row) of each vertex id in its home partition."""
+        part = self.home_of(vids)
+        rows = np.empty_like(part)
+        for q in np.unique(part):
+            sel = part == q
+            rows[sel] = np.searchsorted(self.home_vid[q], vids[sel])
+        return part, rows
+
+
+def edge_partition_2d(src: np.ndarray, dst: np.ndarray, p: int) -> np.ndarray:
+    """2D hash partitioner (§4.2).
+
+    Lays partitions on a ceil(sqrt(P)) grid; edge (s, d) goes to cell
+    (h(s) mod R, h(d) mod C).  Each vertex's edges then touch at most
+    R + C - 1 = O(sqrt(P)) partitions, giving the paper's O(n·sqrt(P))
+    replication upper bound for mrTriplets communication.
+    """
+    r = int(np.floor(np.sqrt(p)))
+    while p % r != 0:
+        r -= 1
+    c = p // r  # r*c == p exactly; grid as square as divisibility allows
+    hs = hash_mod(src, r, salt=0x5EED)
+    hd = hash_mod(dst, c, salt=0xF00D)
+    return hs * c + hd
+
+
+def edge_partition_1d(src: np.ndarray, dst: np.ndarray, p: int) -> np.ndarray:
+    """Edge-cut style hash of the canonical endpoint (baseline partitioner)."""
+    del dst
+    return hash_mod(src, p, salt=0x5EED)
+
+
+def random_partition(src: np.ndarray, dst: np.ndarray, p: int) -> np.ndarray:
+    """Random edge placement — the paper's "default placement" baseline."""
+    return hash_mod(src * np.int64(1315423911) + dst, p, salt=0xABCD)
+
+
+PARTITIONERS = {
+    "2d": edge_partition_2d,
+    "1d": edge_partition_1d,
+    "random": random_partition,
+}
+
+
+def build_structure(
+    src: np.ndarray,
+    dst: np.ndarray,
+    num_partitions: int,
+    *,
+    vertex_ids: np.ndarray | None = None,
+    partitioner: str = "2d",
+    pad_multiple: int = 8,
+) -> GraphStructure:
+    """Partition the edge list and build every structural index.
+
+    `vertex_ids` may include isolated vertices (present in the vertex
+    collection but with no edges); they get home rows but no mirrors.
+    """
+    src = np.asarray(src, dtype=np.int64)
+    dst = np.asarray(dst, dtype=np.int64)
+    if src.shape != dst.shape or src.ndim != 1:
+        raise ValueError("src/dst must be 1-D arrays of equal length")
+    p = int(num_partitions)
+    n_edges = int(src.shape[0])
+
+    all_vids = np.unique(np.concatenate([src, dst]))
+    if vertex_ids is not None:
+        all_vids = np.unique(np.concatenate([all_vids, np.asarray(vertex_ids, np.int64)]))
+    if all_vids.size and (all_vids.min() < 0 or all_vids.max() >= INT_PAD):
+        raise ValueError("vertex ids must fit int32 and be non-negative "
+                         "(ingest with dictionary encoding first)")
+    n_vertices = int(all_vids.size)
+
+    # ---- home partitions (hash by id, sorted within partition) ----------
+    home = hash_mod32(all_vids, p)
+    v_blk = _round_up(max(int(np.max(np.bincount(home, minlength=p))) if n_vertices else 1, 1),
+                      pad_multiple)
+    home_vid = np.full((p, v_blk), INT_PAD, dtype=np.int32)
+    home_mask = np.zeros((p, v_blk), dtype=bool)
+    for q in range(p):
+        mine = np.sort(all_vids[home == q]).astype(np.int32)
+        home_vid[q, : mine.size] = mine
+        home_mask[q, : mine.size] = True
+
+    # ---- edge partitions + mirror tables ---------------------------------
+    epart = PARTITIONERS[partitioner](src, dst, p)
+    counts = np.bincount(epart, minlength=p)
+    e_blk = _round_up(max(int(counts.max()) if n_edges else 1, 1), pad_multiple)
+
+    mirrors: list[np.ndarray] = []
+    for q in range(p):
+        sel = epart == q
+        mirrors.append(np.unique(np.concatenate([src[sel], dst[sel]])).astype(np.int32))
+    v_mir = _round_up(max(max((m.size for m in mirrors), default=1), 1), pad_multiple)
+
+    src_slot = np.zeros((p, e_blk), dtype=np.int32)
+    dst_slot = np.zeros((p, e_blk), dtype=np.int32)
+    src_perm = np.tile(np.arange(e_blk, dtype=np.int32), (p, 1))
+    edge_mask = np.zeros((p, e_blk), dtype=bool)
+    mirror_vid = np.full((p, v_mir), -1, dtype=np.int32)
+    edge_part = np.zeros(n_edges, dtype=np.int32)
+    edge_row = np.zeros(n_edges, dtype=np.int32)
+
+    for q in range(p):
+        sel = np.flatnonzero(epart == q)
+        m = mirrors[q]
+        mirror_vid[q, : m.size] = m
+        s_loc = np.searchsorted(m, src[sel]).astype(np.int32)
+        d_loc = np.searchsorted(m, dst[sel]).astype(np.int32)
+        # cluster by destination slot (stable, keeps src runs cache-friendly)
+        order = np.argsort(d_loc, kind="stable")
+        s_loc, d_loc = s_loc[order], d_loc[order]
+        n = sel.size
+        src_slot[q, :n] = s_loc
+        dst_slot[q, :n] = d_loc
+        edge_mask[q, :n] = True
+        edge_part[sel[order]] = q
+        edge_row[sel[order]] = np.arange(n, dtype=np.int32)
+        # padding edges point at an always-masked slot pattern: slot 0 is fine
+        # because edge_mask gates them everywhere.
+        perm = np.argsort(np.where(edge_mask[q], src_slot[q], INT_PAD), kind="stable")
+        src_perm[q] = perm.astype(np.int32)
+
+    # ---- routing tables (per need set, for join elimination §4.5.2) -------
+    # For edge partition pe, mirror v is "src-needed" if it appears as the
+    # source of some edge there, "dst-needed" likewise; the union is the
+    # classic replicated view.  We emit one table per need set; shipping
+    # with the narrower table is the physical realisation of the 3-way →
+    # 2-way join rewrite.
+    need_flags: dict[str, list[np.ndarray]] = {"src": [], "dst": [], "both": []}
+    for q in range(p):
+        sel = epart == q
+        m = mirrors[q]
+        is_src = np.isin(m, src[sel])
+        is_dst = np.isin(m, dst[sel])
+        need_flags["src"].append(is_src)
+        need_flags["dst"].append(is_dst)
+        need_flags["both"].append(is_src | is_dst)
+
+    def build_route(flags: list[np.ndarray]):
+        send_lists: list[list[np.ndarray]] = [[None] * p for _ in range(p)]  # type: ignore
+        recv_lists: list[list[np.ndarray]] = [[None] * p for _ in range(p)]  # type: ignore
+        k_route = 1
+        for pe in range(p):
+            m = mirrors[pe][flags[pe]]
+            mslot = np.arange(mirrors[pe].size, dtype=np.int32)[flags[pe]]
+            vhome = hash_mod32(m, p)
+            for q in range(p):
+                sel = vhome == q
+                rows = np.searchsorted(home_vid[q], m[sel]).astype(np.int32)
+                send_lists[q][pe] = rows
+                recv_lists[pe][q] = mslot[sel]
+                k_route = max(k_route, rows.size)
+        k_route = _round_up(k_route, pad_multiple)
+        send = np.full((p, p, k_route), -1, dtype=np.int32)
+        recv = np.full((p, p, k_route), v_mir, dtype=np.int32)  # OOB pad
+        for q in range(p):
+            for pe in range(p):
+                rows = send_lists[q][pe]
+                slots = recv_lists[pe][q]
+                send[q, pe, : rows.size] = rows
+                recv[pe, q, : slots.size] = slots
+        return send, recv, k_route
+
+    routes = {need: build_route(flags) for need, flags in need_flags.items()}
+    k_route = routes["both"][2]
+
+    stats = PartitionStats(
+        num_vertices=n_vertices,
+        num_edges=n_edges,
+        num_partitions=p,
+        total_mirrors=int(sum(m.size for m in mirrors)),
+    )
+    return GraphStructure(
+        num_partitions=p,
+        num_vertices=n_vertices,
+        num_edges=n_edges,
+        e_blk=e_blk,
+        v_mir=v_mir,
+        v_blk=v_blk,
+        k_route=k_route,
+        src_slot=src_slot,
+        dst_slot=dst_slot,
+        src_perm=src_perm,
+        edge_mask=edge_mask,
+        mirror_vid=mirror_vid,
+        home_vid=home_vid,
+        home_mask=home_mask,
+        routes=routes,
+        stats=stats,
+        edge_part=edge_part,
+        edge_row=edge_row,
+    )
+
+
+def structure_spec(n_vertices: int, n_edges: int, p: int, *, pad_multiple: int = 128,
+                   mirror_factor: float = 2.0) -> dict[str, Any]:
+    """Shape-only structure descriptor for dry-runs (no real graph needed).
+
+    Sizes follow the 2D-cut replication model: mirrors per partition
+    ≈ min(V, (E/P) + 1) bounded by the sqrt(P) replication factor.
+    """
+    import math
+
+    e_blk = _round_up(max(math.ceil(n_edges / p), 1), pad_multiple)
+    v_blk = _round_up(max(math.ceil(n_vertices / p), 1), pad_multiple)
+    repl = min(2 * math.sqrt(p) - 1, p)
+    v_mir = _round_up(
+        max(min(int(mirror_factor * n_vertices * repl / p), n_vertices, 2 * e_blk), 1),
+        pad_multiple)
+    k_route = _round_up(max(math.ceil(v_mir / p) * 2, 1), pad_multiple)
+    return dict(num_partitions=p, e_blk=e_blk, v_blk=v_blk, v_mir=v_mir, k_route=k_route,
+                num_vertices=n_vertices, num_edges=n_edges)

@@ -1,0 +1,63 @@
+"""Pytree helpers shared across the engine."""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+
+def bmask(mask: jnp.ndarray, like: jnp.ndarray) -> jnp.ndarray:
+    """Broadcast a [..] bool mask against a [.., extra...] value array."""
+    return mask.reshape(mask.shape + (1,) * (like.ndim - mask.ndim))
+
+
+def tree_where(mask: jnp.ndarray, a: Any, b: Any) -> Any:
+    """Elementwise select over matching pytrees; mask broadcasts per leaf."""
+    return jax.tree.map(lambda x, y: jnp.where(bmask(mask, x), x, y), a, b)
+
+
+def tree_changed(a: Any, b: Any) -> jnp.ndarray:
+    """Per-element 'any leaf differs' between two matching pytrees.
+
+    Leaves are compared over their trailing dims; returns a bool array of the
+    shared leading shape."""
+    leaves_a = jax.tree.leaves(a)
+    leaves_b = jax.tree.leaves(b)
+    out = None
+    for x, y in zip(leaves_a, leaves_b):
+        d = x != y
+        lead = min(x.ndim, 2)
+        d = d.reshape(d.shape[:lead] + (-1,)).any(axis=-1) if d.ndim > lead else d
+        out = d if out is None else (out | d)
+    return out
+
+
+def tree_zeros_like_elem(tree: Any, lead_shape: tuple[int, ...]) -> Any:
+    """Zeros with each leaf's element (trailing) shape under a new lead."""
+    return jax.tree.map(
+        lambda x: jnp.zeros(lead_shape + x.shape[2:], x.dtype), tree)
+
+
+def elem_spec(tree: Any) -> Any:
+    """ShapeDtypeStructs of a [P, N, ...] pytree's *element* type."""
+    return jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape[2:], x.dtype), tree)
+
+
+def gather_rows(tree: Any, idx: jnp.ndarray) -> Any:
+    """tree leaves [P, N, ...], idx [P, M] -> leaves [P, M, ...]."""
+    return jax.tree.map(
+        lambda t: jax.vmap(lambda tt, ii: jnp.take(tt, ii, axis=0,
+                                                   mode="clip"))(t, idx),
+        tree)
+
+
+def vmap2(f: Callable) -> Callable:
+    """vmap over the two leading (partition, element) axes."""
+    return jax.vmap(jax.vmap(f))
+
+
+def nbytes_of(tree: Any) -> int:
+    """Static total byte size of a pytree of arrays (python int)."""
+    return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(tree))

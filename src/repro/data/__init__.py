@@ -1,0 +1,6 @@
+from . import graphs
+from .graphs import (GraphData, rmat, symmetrize, load_edge_list, table1,
+                     chain, star)
+
+__all__ = ["graphs", "GraphData", "rmat", "symmetrize", "load_edge_list",
+           "table1", "chain", "star"]

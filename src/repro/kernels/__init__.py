@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for the engine's compute hot-spots.
+
+segment_sum — CSR message aggregation (mrTriplets' reduce)
+spmv        — fused gather+aggregate for linear messages (PageRank)
+flash_attention — LM-substrate attention
+
+Each kernel: <name>.py (pl.pallas_call + BlockSpec), wrapped by ops.py,
+oracled by ref.py.
+"""
+from . import ops, ref
+
+__all__ = ["ops", "ref"]

@@ -1,0 +1,139 @@
+"""Pallas TPU kernel: GQA flash attention (causal / full, cache-offset aware).
+
+The LM-substrate compute hot-spot.  Standard online-softmax tiling adapted to
+the TPU memory hierarchy: Q/K/V stream HBM→VMEM in (block_q × head_dim) /
+(block_kv × head_dim) tiles; the running max/denominator/accumulator live in
+VMEM scratch across the KV sweep; both matmuls hit the MXU with
+128-aligned contraction dims.  GQA is expressed in the BlockSpec index maps
+(query head h reads KV head h // group) so no KV replication ever
+materialises in HBM.
+
+Causal block skip: tiles entirely above the diagonal are skipped with
+`pl.when` — upper-triangular work never runs, matching the ~2× FLOP saving
+the roofline model assumes for causal attention.
+
+`kv_offset` shifts the diagonal for decode / chunked prefill with an
+existing KV cache (query position i sees kv positions ≤ i + kv_offset).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG_BIG = -0.7 * float(jnp.finfo(jnp.float32).max)
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+            scale: float, causal: bool, kv_offset: int, valid_len: int,
+            n_kv_blocks: int):
+    iq = pl.program_id(1)
+    jk = pl.program_id(2)
+    bq, dh = q_ref.shape[1], q_ref.shape[2]
+    bkv = k_ref.shape[1]
+
+    @pl.when(jk == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG_BIG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # Block-level skip: fully-padded KV tiles, and (when causal) tiles
+    # entirely above the shifted diagonal.
+    run = jk * bkv < valid_len
+    if causal:
+        run = jnp.logical_and(run, jk * bkv <= iq * bq + (bq - 1) + kv_offset)
+
+    @pl.when(run)
+    def _step():
+        q = q_ref[0].astype(jnp.float32) * scale            # [bq, dh]
+        k = k_ref[0].astype(jnp.float32)                    # [bkv, dh]
+        v = v_ref[0].astype(jnp.float32)                    # [bkv, dh]
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)  # [bq, bkv]
+        cols = jk * bkv + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 1)
+        mask = cols < valid_len                              # KV padding
+        if causal:
+            rows = iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 0)
+            mask = jnp.logical_and(mask, rows + kv_offset >= cols)
+        s = jnp.where(mask, s, _NEG_BIG)
+
+        m_prev, l_prev = m_ref[...], l_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        # `p` must be exactly 0 on masked lanes even when an entire row is
+        # masked (s == m_new == _NEG_BIG would give exp(0) == 1).
+        p = jnp.where(mask, jnp.exp(s - m_new[:, None]), 0.0)  # [bq, bkv]
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = alpha * l_prev + p.sum(axis=1)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(jk == n_kv_blocks - 1)
+    def _finish():
+        l = l_ref[...]
+        denom = jnp.where(l == 0.0, 1.0, l)                  # dead rows -> 0
+        o_ref[0] = (acc_ref[...] / denom[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "scale", "kv_offset", "block_q", "block_kv", "interpret"))
+def flash_attention(
+    q: jnp.ndarray,  # [B, Hq, Lq, Dh]
+    k: jnp.ndarray,  # [B, Hkv, Lk, Dh]
+    v: jnp.ndarray,  # [B, Hkv, Lk, Dh]
+    *,
+    causal: bool = True,
+    scale: float | None = None,
+    kv_offset: int = 0,
+    block_q: int = 512,
+    block_kv: int = 512,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    b, hq, lq, dh = q.shape
+    _, hkv, lk, _ = k.shape
+    assert hq % hkv == 0, (hq, hkv)
+    group = hq // hkv
+    scale = dh ** -0.5 if scale is None else scale
+
+    bq = min(block_q, max(lq, 8))
+    bkv = min(block_kv, max(lk, 8))
+    lq_pad, lk_pad = (-lq) % bq, (-lk) % bkv
+    qf = q.reshape(b * hq, lq, dh)
+    kf = k.reshape(b * hkv, lk, dh)
+    vf = v.reshape(b * hkv, lk, dh)
+    if lq_pad:
+        qf = jnp.pad(qf, ((0, 0), (0, lq_pad), (0, 0)))
+    if lk_pad:
+        kf = jnp.pad(kf, ((0, 0), (0, lk_pad), (0, 0)))
+        vf = jnp.pad(vf, ((0, 0), (0, lk_pad), (0, 0)))
+
+    n_qb = (lq + lq_pad) // bq
+    n_kb = (lk + lk_pad) // bkv
+
+    kernel = functools.partial(
+        _kernel, scale=scale, causal=causal, kv_offset=kv_offset,
+        valid_len=lk, n_kv_blocks=n_kb)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(b * hq, n_qb, n_kb),
+        in_specs=[
+            pl.BlockSpec((1, bq, dh), lambda h, i, j: (h, i, 0)),
+            pl.BlockSpec((1, bkv, dh), lambda h, i, j, g=group: (h // g, j, 0)),
+            pl.BlockSpec((1, bkv, dh), lambda h, i, j, g=group: (h // g, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, dh), lambda h, i, j: (h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * hq, lq + lq_pad, dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, dh), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+
+    return out[:, :lq].reshape(b, hq, lq, dh)

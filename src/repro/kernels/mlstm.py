@@ -1,0 +1,120 @@
+"""Pallas TPU kernel: chunkwise-parallel mLSTM (xLSTM matrix memory).
+
+This is the structural fix identified in the xlstm-350m hillclimb
+(EXPERIMENTS.md §Perf cell 2): the pure-jnp chunk scan moves the [Dh, Dh]
+matrix state and every intra-chunk intermediate through HBM each chunk; the
+kernel keeps the state in VMEM scratch across the whole sequence and streams
+only q/k/v/gates in and outputs out.
+
+Grid = (B*H, NC) with the chunk axis innermost: TPU grid steps execute
+sequentially, so VMEM scratch (C [Dh,Dh], n [Dh]) carries across chunks and
+resets when a new (batch, head) row begins.  All matmuls are [W, Dh] x
+[Dh, Dh/W] shapes — MXU-aligned when W and Dh are multiples of 128 (the
+defaults below; smaller shapes still validate in interpret mode).
+
+Math identical to repro.models.recurrent.mlstm_block (the oracle in
+ref_mlstm below restates it): per chunk, with running log-decay cum and
+row-stabiliser m,
+
+    intra  = (q e^{cum_t - cum_s + logi_s} k^T)_{s<=t} v
+    inter  = q e^{cum_t} C_prev
+    out    = (intra + inter) / max(|den|, e^{-m_row})
+    C_next = e^{total} C_prev + sum_s e^{total - cum_s + logi_s} k_s v_s^T
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(q_ref, k_ref, v_ref, li_ref, lf_ref, out_ref, c_ref, n_ref):
+    nc_i = pl.program_id(1)
+
+    @pl.when(nc_i == 0)
+    def _reset():
+        c_ref[...] = jnp.zeros_like(c_ref)
+        n_ref[...] = jnp.zeros_like(n_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)          # [W, Dh]
+    k = k_ref[0, 0].astype(jnp.float32)
+    v = v_ref[0, 0].astype(jnp.float32)
+    li = li_ref[0, 0].astype(jnp.float32)        # [W]
+    lf = lf_ref[0, 0].astype(jnp.float32)
+
+    w = q.shape[0]
+    cum = jnp.cumsum(lf)                      # [W]
+    total = cum[-1]
+
+    # intra-chunk decay matrix D[t, s] = exp(cum_t - cum_s + logi_s), s <= t
+    dmat = cum[:, None] - cum[None, :] + li[None, :]
+    tri = jax.lax.broadcasted_iota(jnp.int32, (w, w), 0) >= \
+        jax.lax.broadcasted_iota(jnp.int32, (w, w), 1)
+    dmat = jnp.where(tri, dmat, -jnp.inf)
+    m_row = jnp.maximum(jnp.max(dmat, axis=-1), cum)         # [W]
+
+    att = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                              preferred_element_type=jnp.float32)
+    att = att * jnp.exp(dmat - m_row[:, None])
+    intra = jax.lax.dot_general(att, v, (((1,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+
+    dec = jnp.exp(cum - m_row)                               # [W]
+    qd = q * dec[:, None]
+    inter = jax.lax.dot_general(qd, c_ref[...], (((1,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+    num = intra + inter
+    den = att.sum(axis=-1) + jax.lax.dot_general(
+        qd, n_ref[...][:, None], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)[:, 0]
+    out = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_row))[:, None]
+    out_ref[0, 0] = out.astype(out_ref.dtype)
+
+    # carry update (state never leaves VMEM)
+    wgt = jnp.exp(total - cum + li)                          # [W]
+    kw = k * wgt[:, None]
+    c_ref[...] = jnp.exp(total) * c_ref[...] + jax.lax.dot_general(
+        kw, v, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    n_ref[...] = jnp.exp(total) * n_ref[...] + kw.sum(axis=0)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def mlstm_chunked(q, k, v, logi, logf, *, chunk: int = 128,
+                  interpret: bool = False):
+    """q/k/v [B, H, L, Dh] (q pre-scaled), logi/logf [B, H, L] ->
+    out [B, H, L, Dh] (f32)."""
+    b, h, l, dh = q.shape
+    w = min(chunk, l)
+    assert l % w == 0, (l, w)
+    nc = l // w
+    bh = b * h
+
+    def cview(x):
+        return x.reshape(bh, nc, w, dh)
+
+    def gview(x):
+        return x.reshape(bh, nc, w)
+
+    out = pl.pallas_call(
+        _kernel,
+        grid=(bh, nc),
+        in_specs=[
+            pl.BlockSpec((1, 1, w, dh), lambda i, j: (i, j, 0, 0)),  # q
+            pl.BlockSpec((1, 1, w, dh), lambda i, j: (i, j, 0, 0)),  # k
+            pl.BlockSpec((1, 1, w, dh), lambda i, j: (i, j, 0, 0)),  # v
+            pl.BlockSpec((1, 1, w), lambda i, j: (i, j, 0)),         # logi
+            pl.BlockSpec((1, 1, w), lambda i, j: (i, j, 0)),         # logf
+        ],
+        out_specs=pl.BlockSpec((1, 1, w, dh), lambda i, j: (i, j, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, nc, w, dh), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((dh, dh), jnp.float32),   # C state (stays on chip)
+            pltpu.VMEM((dh,), jnp.float32),      # n state
+        ],
+        interpret=interpret,
+    )(cview(q), cview(k), cview(v), gview(logi), gview(logf))
+    return out.reshape(b, h, l, dh)

@@ -1,0 +1,86 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+Dispatch policy (one switch for the whole engine):
+  * on TPU           -> compiled Pallas kernels,
+  * on CPU (tests)   -> pure-jnp oracle from ref.py (fast) or the kernel in
+                        interpret mode (exact kernel semantics; used by the
+                        per-kernel sweep tests),
+  * `force` overrides for benchmarking either path.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from . import segment_sum as _segsum
+from . import spmv as _spmv
+from . import flash_attention as _flash
+
+Mode = Literal["auto", "pallas", "interpret", "ref", "chunked"]
+
+
+def _backend_is_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _resolve(mode: Mode) -> str:
+    if mode != "auto":
+        return mode
+    return "pallas" if _backend_is_tpu() else "ref"
+
+
+def segment_sum(msgs, seg_ids, num_segments: int, *, mode: Mode = "auto",
+                edge_block: int = 512, vertex_block: int = 512):
+    m = _resolve(mode)
+    if m == "ref":
+        return ref.segment_sum(msgs, seg_ids, num_segments)
+    return _segsum.segment_sum(
+        msgs, seg_ids, num_segments,
+        edge_block=edge_block, vertex_block=vertex_block,
+        interpret=(m == "interpret"))
+
+
+def spmv(x, w, src_slot, dst_slot, tiles, active_src_blocks, v_mir: int, *,
+         mode: Mode = "auto", eb: int = 512, vb: int = 512):
+    m = _resolve(mode)
+    if m == "ref":
+        return ref.fused_gather_segment_sum(x, w, src_slot, dst_slot, v_mir)
+    return _spmv.spmv(x, w, src_slot, dst_slot,
+                      tiles["perm"], tiles["chunk_dst"], tiles["chunk_src"],
+                      active_src_blocks, v_mir, eb=eb, vb=vb,
+                      interpret=(m == "interpret"))
+
+
+build_tiles = _spmv.build_tiles
+
+
+def flash_attention(q, k, v, *, causal: bool = True, scale: float | None = None,
+                    kv_offset: int = 0, mode: Mode = "auto",
+                    block_q: int = 512, block_kv: int = 512):
+    m = _resolve(mode)
+    if m == "chunked":
+        return ref.flash_attention_chunked(q, k, v, causal=causal,
+                                           scale=scale, kv_offset=kv_offset,
+                                           block_kv=max(block_kv, 1024))
+    if m == "ref":
+        return ref.flash_attention(q, k, v, causal=causal, scale=scale,
+                                   kv_offset=kv_offset)
+    return _flash.flash_attention(q, k, v, causal=causal, scale=scale,
+                                  kv_offset=kv_offset,
+                                  block_q=block_q, block_kv=block_kv,
+                                  interpret=(m == "interpret"))
+
+
+def mlstm_chunked(q, k, v, logi, logf, *, chunk: int = 128,
+                  mode: Mode = "auto"):
+    """Fused chunkwise mLSTM (state resident in VMEM across the sequence)."""
+    m = _resolve(mode)
+    if m == "ref":
+        return ref.mlstm_chunked(q, k, v, logi, logf, chunk=chunk)
+    from . import mlstm as _mlstm
+    return _mlstm.mlstm_chunked(q, k, v, logi, logf, chunk=chunk,
+                                interpret=(m == "interpret"))

@@ -1,0 +1,182 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the semantics contracts: tests sweep shapes/dtypes and assert
+`assert_allclose(kernel(interpret=True), ref)`.  They are also the CPU
+fallback paths used by the engine when no TPU is present.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def segment_sum(msgs: jnp.ndarray, seg_ids: jnp.ndarray, num_segments: int) -> jnp.ndarray:
+    """Sum messages [E, D] into segments [V, D] by sorted-or-not seg_ids [E].
+
+    seg_ids >= num_segments (or < 0) are dropped (padding convention).
+    Accumulation in float32.
+    """
+    valid = (seg_ids >= 0) & (seg_ids < num_segments)
+    safe = jnp.where(valid, seg_ids, 0)
+    m = jnp.where(valid[:, None], msgs, 0).astype(jnp.float32)
+    out = jax.ops.segment_sum(m, safe, num_segments=num_segments)
+    return out.astype(msgs.dtype)
+
+
+def fused_gather_segment_sum(
+    x: jnp.ndarray,          # [V_mir, D] mirror vertex values
+    w: jnp.ndarray,          # [E] edge weights
+    src_slot: jnp.ndarray,   # [E] int32
+    dst_slot: jnp.ndarray,   # [E] int32 (sorted; padding -> >= num_segments)
+    num_segments: int,
+) -> jnp.ndarray:
+    """Fused triplet-map + aggregate: out[v] = sum_{e: dst=v} w[e] * x[src[e]].
+
+    This is mrTriplets specialised to linear messages (PageRank, degree with
+    w=1, weighted diffusion) — one HBM pass instead of materialising [E, D]
+    messages.  Equivalent to SpMV with a block-CSR matrix.
+    """
+    msgs = x[src_slot] * w[:, None].astype(x.dtype)
+    return segment_sum(msgs, dst_slot, num_segments)
+
+
+def flash_attention(
+    q: jnp.ndarray,  # [B, Hq, Lq, Dh]
+    k: jnp.ndarray,  # [B, Hkv, Lk, Dh]
+    v: jnp.ndarray,  # [B, Hkv, Lk, Dh]
+    *,
+    causal: bool = True,
+    scale: float | None = None,
+    kv_offset: int = 0,
+) -> jnp.ndarray:
+    """Reference GQA attention (fp32 softmax).  kv_offset shifts the causal
+    diagonal for decode/prefill-with-cache: query position i attends to
+    kv positions <= i + kv_offset."""
+    b, hq, lq, dh = q.shape
+    hkv = k.shape[1]
+    assert hq % hkv == 0
+    g = hq // hkv
+    scale = scale if scale is not None else dh ** -0.5
+    qf = q.astype(jnp.float32).reshape(b, hkv, g, lq, dh)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    logits = jnp.einsum("bhgqd,bhkd->bhgqk", qf, kf) * scale
+    if causal:
+        lk = k.shape[2]
+        mask = jnp.arange(lq)[:, None] + kv_offset >= jnp.arange(lk)[None, :]
+        logits = jnp.where(mask[None, None, None], logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgqk,bhkd->bhgqd", probs, vf)
+    return out.reshape(b, hq, lq, dh).astype(q.dtype)
+
+
+def flash_attention_chunked(
+    q: jnp.ndarray,  # [B, Hq, Lq, Dh]
+    k: jnp.ndarray,  # [B, Hkv, Lk, Dh]
+    v: jnp.ndarray,  # [B, Hkv, Lk, Dh]
+    *,
+    causal: bool = True,
+    scale: float | None = None,
+    kv_offset: int = 0,
+    block_kv: int = 2048,
+) -> jnp.ndarray:
+    """Streaming (online-softmax) attention in pure jnp — the XLA-level
+    flash algorithm.
+
+    Semantically identical to `flash_attention` above but NEVER materialises
+    the [Lq, Lk] logits: a lax.scan over KV blocks carries running
+    (max, denom, accumulator).  This is what the dry-run lowers for
+    long-sequence cells — on TPU the Pallas kernel plays this role; on the
+    CPU-backend SPMD compile this keeps both HBM traffic and residency
+    linear in sequence length, and GSPMD shards the query axis cleanly.
+    """
+    b, hq, lq, dh = q.shape
+    hkv, lk = k.shape[1], k.shape[2]
+    assert hq % hkv == 0
+    g = hq // hkv
+    scale = scale if scale is not None else dh ** -0.5
+    blk = min(block_kv, lk)
+    nb = -(-lk // blk)
+    pad = nb * blk - lk
+
+    qf = (q.astype(jnp.float32) * scale).reshape(b, hkv, g, lq, dh)
+    kp = jnp.pad(k.astype(jnp.float32), ((0, 0), (0, 0), (0, pad), (0, 0)))
+    vp = jnp.pad(v.astype(jnp.float32), ((0, 0), (0, 0), (0, pad), (0, 0)))
+    kb = kp.reshape(b, hkv, nb, blk, dh).transpose(2, 0, 1, 3, 4)
+    vb = vp.reshape(b, hkv, nb, blk, dh).transpose(2, 0, 1, 3, 4)
+    q_pos = jnp.arange(lq, dtype=jnp.int32) + kv_offset
+
+    NEG = jnp.float32(-1e30)   # finite sentinel: exp(-inf - NEG) stays 0
+
+    def body(carry, inp):
+        m, l, acc = carry
+        kb_, vb_, j0 = inp
+        s = jnp.einsum("bhgqd,bhkd->bhgqk", qf, kb_)          # [b,h,g,lq,blk]
+        k_pos = j0 + jnp.arange(blk, dtype=jnp.int32)
+        valid = k_pos < lk
+        if causal:
+            valid = valid[None, :] & (q_pos[:, None] >= k_pos[None, :])
+        else:
+            valid = jnp.broadcast_to(valid[None, :], (lq, blk))
+        s = jnp.where(valid[None, None, None], s, -jnp.inf)
+        m2 = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m2[..., None])
+        corr = jnp.exp(m - m2)
+        l2 = l * corr + p.sum(axis=-1)
+        acc2 = acc * corr[..., None] + jnp.einsum("bhgqk,bhkd->bhgqd", p, vb_)
+        return (m2, l2, acc2), None
+
+    m0 = jnp.full((b, hkv, g, lq), NEG, jnp.float32)
+    l0 = jnp.zeros((b, hkv, g, lq), jnp.float32)
+    a0 = jnp.zeros((b, hkv, g, lq, dh), jnp.float32)
+    j0s = jnp.arange(nb, dtype=jnp.int32) * blk
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), (kb, vb, j0s))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.reshape(b, hq, lq, dh).astype(q.dtype)
+
+
+def mlstm_chunked(q, k, v, logi, logf, *, chunk: int = 128):
+    """Oracle for kernels/mlstm.py — the chunkwise-parallel mLSTM scan in
+    pure jnp (same math as models/recurrent.mlstm_block's core)."""
+    b, h, l, dh = q.shape
+    w = min(chunk, l)
+    assert l % w == 0
+    nc = l // w
+    qf = q.astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+
+    cq = qf.reshape(b, h, nc, w, dh).transpose(2, 0, 1, 3, 4)
+    ck = kf.reshape(b, h, nc, w, dh).transpose(2, 0, 1, 3, 4)
+    cv = vf.reshape(b, h, nc, w, dh).transpose(2, 0, 1, 3, 4)
+    cli = logi.astype(jnp.float32).reshape(b, h, nc, w).transpose(2, 0, 1, 3)
+    clf = logf.astype(jnp.float32).reshape(b, h, nc, w).transpose(2, 0, 1, 3)
+
+    def chunk_step(carry, inp):
+        C, n = carry
+        qc, kc, vc, lic, lfc = inp
+        cum = jnp.cumsum(lfc, axis=-1)
+        total = cum[..., -1:]
+        dmat = cum[..., :, None] - cum[..., None, :] + lic[..., None, :]
+        tri = jnp.tril(jnp.ones((w, w), bool))
+        dmat = jnp.where(tri, dmat, -jnp.inf)
+        m_row = jnp.maximum(jnp.max(dmat, axis=-1), cum)
+        att = jnp.einsum("bhtk,bhsk->bhts", qc, kc) * jnp.exp(
+            dmat - m_row[..., None])
+        intra = jnp.einsum("bhts,bhsk->bhtk", att, vc)
+        dec = jnp.exp(cum - m_row)
+        inter = jnp.einsum("bhtk,bhkv->bhtv", qc * dec[..., None], C)
+        num = intra + inter
+        den = att.sum(axis=-1) + jnp.einsum("bhtk,bhk->bht",
+                                            qc * dec[..., None], n)
+        out = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_row))[..., None]
+        wgt = jnp.exp(total - cum + lic)
+        C2 = jnp.exp(total)[..., None] * C + jnp.einsum(
+            "bhsk,bhsv->bhkv", kc * wgt[..., None], vc)
+        n2 = jnp.exp(total) * n + jnp.einsum("bhsk,bhs->bhk", kc, wgt)
+        return (C2, n2), out
+
+    C0 = jnp.zeros((b, h, dh, dh), jnp.float32)
+    n0 = jnp.zeros((b, h, dh), jnp.float32)
+    _, outs = jax.lax.scan(chunk_step, (C0, n0), (cq, ck, cv, cli, clf))
+    return outs.transpose(1, 2, 0, 3, 4).reshape(b, h, l, dh)

@@ -1,0 +1,2 @@
+# NOTE: deliberately empty of jax imports — repro.launch.dryrun must be able
+# to set XLA_FLAGS before any jax device initialisation.

@@ -1,0 +1,491 @@
+"""Multi-pod dry-run: lower + compile every (architecture x input shape) on
+the production meshes, and extract the roofline inputs.
+
+For each cell we build ShapeDtypeStruct stand-ins (zero allocation), attach
+NamedShardings from the logical-axis rules, lower the jitted step, compile,
+and record:
+  * memory_analysis()  — per-device bytes (does it fit 16 GB v5e HBM?)
+  * cost_analysis()    — HLO FLOPs + bytes accessed
+  * collective bytes   — parsed from the compiled SPMD HLO (utils/hlo.py)
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch stablelm-1.6b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--graph]
+  PYTHONPATH=src python -m repro.launch.dryrun --graph          # GraphX engine cell
+
+Results accumulate in reports/dryrun.json (one entry per cell x mesh).
+"""
+# The first two executable statements MUST precede any other import — jax
+# locks the device count at first backend initialisation.
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse
+import functools
+import json
+import time
+import traceback
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from .. import configs as C
+from ..configs.base import SHAPES, shape_applicable
+from ..models import transformer as T
+from ..models import layers as L
+from ..sharding import rules
+from ..train import optimizer as opt_mod
+from ..utils import hlo as hlo_utils
+from .mesh import make_production_mesh, make_graph_mesh, mesh_axis_sizes
+
+REPORT_PATH = "reports/dryrun.json"
+
+
+# ---------------------------------------------------------------------------
+# Input specs (ShapeDtypeStruct stand-ins — never allocated)
+# ---------------------------------------------------------------------------
+def _batch_axes(mesh, batch: int):
+    from ..models import perf
+    sizes = mesh_axis_sizes(mesh)
+    dp_axes = tuple(a for a in ("pod", "data") if a in sizes)
+    # perf knob: archs too small to use tensor parallelism (xlstm-350m:
+    # replicated weights after the head-divisibility guard) hand the model
+    # axis to data parallelism instead — full-mesh DP.
+    if perf.get("dp_over_model") and "model" in sizes:
+        full = dp_axes + ("model",)
+        n = int(np.prod([sizes[a] for a in full]))
+        if batch % n == 0 and batch >= n:
+            return full
+    dp = int(np.prod([sizes[a] for a in dp_axes])) if dp_axes else 1
+    if batch % dp == 0 and batch >= dp:
+        return dp_axes
+    if "data" in sizes and batch % sizes["data"] == 0:
+        return ("data",)
+    return ()
+
+
+def input_specs(cfg, shape, mesh) -> dict:
+    """ShapeDtypeStructs for one cell's step inputs (weak-type-correct,
+    shardable, no device allocation)."""
+    b, s = shape.global_batch, shape.seq_len
+    ba = _batch_axes(mesh, b)
+    bspec = P(ba if ba else None, None)
+
+    def sds(shp, dtype, spec):
+        return jax.ShapeDtypeStruct(shp, dtype,
+                                    sharding=NamedSharding(mesh, spec))
+
+    out = {}
+    if shape.kind == "train":
+        out["tokens"] = sds((b, s), jnp.int32, bspec)
+        out["labels"] = sds((b, s), jnp.int32, bspec)
+    elif shape.kind == "prefill":
+        out["tokens"] = sds((b, s), jnp.int32, bspec)
+    else:  # decode: one new token against a seq_len cache
+        out["tokens"] = sds((b, 1), jnp.int32, bspec)
+
+    if cfg.n_context_tokens:
+        n_ctx = (s // cfg.frontend_downsample if cfg.is_encdec
+                 else cfg.n_context_tokens)
+        if shape.kind == "decode" and cfg.is_encdec:
+            n_ctx = min(n_ctx, 8192)  # decode: encoder output bounded
+        out["context"] = sds((b, n_ctx, cfg.d_model), jnp.float32,
+                             P(ba if ba else None, None, None))
+    return out
+
+
+def _named_tree(mesh, spec_tree, shape_tree):
+    return jax.tree.map(
+        lambda sds_, spec: jax.ShapeDtypeStruct(
+            sds_.shape, sds_.dtype, sharding=NamedSharding(mesh, spec)),
+        shape_tree, spec_tree)
+
+
+# ---------------------------------------------------------------------------
+# Cell lowering
+# ---------------------------------------------------------------------------
+def lower_cell(arch: str, shape_name: str, mesh, *, strategy: str | None = None,
+               kernel_mode: str = "ref", extra_tags: dict | None = None,
+               return_hlo: bool = False, perf_opts: dict | None = None):
+    cfg = C.get(arch)
+    shape = SHAPES[shape_name]
+    ok, reason = shape_applicable(cfg, shape)
+    if not ok:
+        rec = {"arch": arch, "shape": shape_name, "status": "skipped",
+               "reason": reason}
+        return (rec, "") if return_hlo else rec
+
+    strategy = strategy or rules.default_strategy(cfg)
+    sizes = mesh_axis_sizes(mesh)
+
+    from ..models import perf
+    import contextlib
+
+    def perf_ctx():   # fresh context per use (generator CMs are single-shot)
+        return (perf.options(mesh=mesh, **perf_opts) if perf_opts
+                else contextlib.nullcontext())
+
+    # parameter structure + shardings (eval_shape: no allocation)
+    p_struct = jax.eval_shape(
+        lambda: T.init_model(jax.random.PRNGKey(0), cfg))
+    p_vals_struct, axes_tree = L.split_params(p_struct)
+    pspecs = rules.param_specs(axes_tree, p_vals_struct, strategy, sizes)
+    p_sds = _named_tree(mesh, pspecs, p_vals_struct)
+
+    with perf_ctx():
+        batch_sds = input_specs(cfg, shape, mesh)
+
+    t0 = time.time()
+    if shape.kind == "train":
+        ospecs = opt_specs = rules.opt_state_specs(pspecs, p_vals_struct,
+                                                    strategy, sizes)
+        o_struct = jax.eval_shape(opt_mod.init, p_vals_struct)
+        o_sds = opt_mod.OptState(
+            m=_named_tree(mesh, ospecs, o_struct.m),
+            v=_named_tree(mesh, opt_specs, o_struct.v),
+            step=jax.ShapeDtypeStruct((), jnp.int32,
+                                      sharding=NamedSharding(mesh, P())))
+        ocfg = opt_mod.AdamWConfig()
+
+        def train_step(params, opt_state, batch):
+            loss, grads = jax.value_and_grad(
+                functools.partial(T.loss_fn, cfg=cfg, mode=kernel_mode))(
+                    params, batch)
+            params, opt_state, metrics = opt_mod.update(
+                ocfg, params, grads, opt_state)
+            return params, opt_state, {"loss": loss, **metrics}
+
+        with perf_ctx():
+            lowered = jax.jit(train_step, donate_argnums=(0, 1)).lower(
+                p_sds, o_sds, batch_sds)
+
+    elif shape.kind == "prefill":
+        def prefill_step(params, batch):
+            return T.forward(params, batch, cfg, mode=kernel_mode, remat=False)
+        with perf_ctx():
+            lowered = jax.jit(prefill_step).lower(p_sds, batch_sds)
+
+    else:  # decode
+        st_struct = jax.eval_shape(
+            functools.partial(T.init_decode_state, cfg,
+                              shape.global_batch, shape.seq_len))
+        st_spec_fn = rules.decode_state_spec_fn(sizes)
+        st_sds = jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(
+                x.shape, x.dtype,
+                sharding=NamedSharding(mesh, st_spec_fn(x))), st_struct)
+        ctx_sds = batch_sds.pop("context", None)
+        pos_sds = jax.ShapeDtypeStruct((), jnp.int32,
+                                       sharding=NamedSharding(mesh, P()))
+
+        def serve_step(params, state, tokens, pos, ctx=None):
+            return T.decode_step(params, state, tokens, pos, cfg,
+                                 cross_ctx=ctx, mode=kernel_mode)
+
+        args = (p_sds, st_sds, batch_sds["tokens"], pos_sds)
+        with perf_ctx():
+            if ctx_sds is not None:
+                lowered = jax.jit(serve_step, donate_argnums=(1,)).lower(
+                    *args, ctx_sds)
+            else:
+                lowered = jax.jit(serve_step, donate_argnums=(1,)).lower(*args)
+
+    compiled = lowered.compile()
+    compile_s = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    txt = compiled.as_text()
+    coll = hlo_utils.collective_bytes(txt)
+    # Trip-count-corrected terms (see utils/hlo.py): XLA cost_analysis counts
+    # While bodies once; scan-over-layers models undercount by ~n_layers.
+    dots = hlo_utils.dot_flops(txt)
+    bytes_tc = hlo_utils.bytes_accessed(txt)
+
+    n_chips = int(np.prod(mesh.devices.shape))
+    rec = {
+        "arch": arch, "shape": shape_name, "status": "ok",
+        "mesh": "x".join(map(str, mesh.devices.shape)),
+        "mesh_axes": list(mesh.axis_names),
+        "n_chips": n_chips,
+        "strategy": strategy,
+        "kind": shape.kind,
+        "compile_seconds": round(compile_s, 1),
+        "flops_per_chip": float(cost.get("flops", 0.0)),
+        "bytes_accessed_per_chip": float(cost.get("bytes accessed", 0.0)),
+        "flops_per_chip_tc": float(max(dots["dot_flops"],
+                                       cost.get("flops", 0.0))),
+        "dot_count_tc": float(dots["dot_count"]),
+        "bytes_accessed_per_chip_tc": float(max(bytes_tc,
+                                                cost.get("bytes accessed", 0.0))),
+        "collective_bytes_per_chip": int(coll.get("total_bytes", 0)),
+        "collectives": {k: v for k, v in coll.items() if k != "total_bytes"},
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+        },
+        "param_count": int(sum(np.prod(x.shape)
+                               for x in jax.tree.leaves(p_vals_struct))),
+    }
+    if extra_tags:
+        rec.update(extra_tags)
+    return (rec, txt) if return_hlo else rec
+
+
+# ---------------------------------------------------------------------------
+# GraphX engine cell (the paper's own workload on the production mesh)
+# ---------------------------------------------------------------------------
+def lower_graph_cell(mesh, *, n_vertices=41_652_230, n_edges=1_468_365_182,
+                     supersteps: int = 1, return_hlo: bool = False,
+                     wire_dtype=None, mirror_factor: float = 2.0,
+                     contrib_form: bool = False):
+    """PageRank superstep on a Twitter-scale graph (paper Table 1), SPMD over
+    the flat parts axis.  Structure arrays are ShapeDtypeStructs sized by the
+    2D-cut replication model."""
+    from ..core import partition as pm
+    from ..core.exchange import SpmdExchange
+    from ..core.graph import Graph, StructArrays
+    from ..core.pregel import _superstep
+
+    sizes = mesh_axis_sizes(mesh)
+    p = sizes["parts"]
+    spec = pm.structure_spec(n_vertices, n_edges, p,
+                             mirror_factor=mirror_factor)
+    e_blk, v_blk, v_mir, k = (spec["e_blk"], spec["v_blk"], spec["v_mir"],
+                              spec["k_route"])
+
+    def sds(shp, dtype, pspec):
+        return jax.ShapeDtypeStruct(shp, dtype,
+                                    sharding=NamedSharding(mesh, pspec))
+
+    pp = P("parts")
+    s = StructArrays(
+        src_slot=sds((p, e_blk), jnp.int32, pp),
+        dst_slot=sds((p, e_blk), jnp.int32, pp),
+        src_perm=sds((p, e_blk), jnp.int32, pp),
+        edge_mask=sds((p, e_blk), jnp.bool_, pp),
+        mirror_vid=sds((p, v_mir), jnp.int32, pp),
+        home_vid=sds((p, v_blk), jnp.int32, pp),
+        home_mask=sds((p, v_blk), jnp.bool_, pp),
+        routes={need: (sds((p, p, k), jnp.int32, pp),
+                       sds((p, p, k), jnp.int32, pp))
+                for need in ("src", "dst", "both")},
+        p=p, e_blk=e_blk, v_mir=v_mir, v_blk=v_blk,
+        num_vertices=n_vertices, num_edges=n_edges)
+
+    vdata_sds = {"pr": sds((p, v_blk), jnp.float32, pp),
+                 "deg": sds((p, v_blk), jnp.float32, pp)}
+    if contrib_form:
+        # PowerGraph-style pre-aggregation: the message reads ONE
+        # home-computed property, so property-level join elimination ships
+        # a single float per mirror instead of the whole struct.
+        vdata_sds["contrib"] = sds((p, v_blk), jnp.float32, pp)
+    g_sds = Graph(
+        s=s,
+        vdata=vdata_sds,
+        edata={"w": sds((p, e_blk), jnp.float32, pp)},
+        vmask=sds((p, v_blk), jnp.bool_, pp),
+        emask=sds((p, e_blk), jnp.bool_, pp),
+        active=sds((p, v_blk), jnp.bool_, pp),
+        ex=SpmdExchange(p=p, axis_name="parts", wire_dtype=wire_dtype),
+        host=None)
+
+    if contrib_form:
+        def send(sv, ev, dv):
+            return {"m": sv["contrib"] * ev["w"]}
+
+        def vprog(vid, v, msg):
+            pr = 0.15 + 0.85 * msg["m"]
+            return {"pr": pr, "deg": v["deg"], "contrib": pr / v["deg"]}
+    else:
+        def send(sv, ev, dv):
+            return {"m": sv["pr"] / sv["deg"] * ev["w"]}
+
+        def vprog(vid, v, msg):
+            return {"pr": 0.15 + 0.85 * msg["m"], "deg": v["deg"]}
+
+    def pr_superstep(g):
+        out, cache = g, None
+        for _ in range(supersteps):
+            out, cache, live, _ = _superstep(
+                out, cache, vprog=vprog, send_msg=send, gather="sum",
+                default_msg={"m": jnp.float32(0.0)}, skip_stale=None,
+                changed_fn=None, kernel_mode="ref", use_cache=True)
+        return out, live
+
+    in_specs = jax.tree.map(lambda x: P(*(("parts",) + (None,) * (len(x.shape) - 1))),
+                            g_sds, is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+    out_specs = (in_specs, P())
+    fn = jax.jit(jax.shard_map(pr_superstep, mesh=mesh,
+                               in_specs=(in_specs,), out_specs=out_specs,
+                               check_vma=False))
+    t0 = time.time()
+    lowered = fn.lower(g_sds)
+    compiled = lowered.compile()
+    compile_s = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    txt = compiled.as_text()
+    coll = hlo_utils.collective_bytes(txt)
+    dots = hlo_utils.dot_flops(txt)
+    bytes_tc = hlo_utils.bytes_accessed(txt)
+    rec = {
+        "arch": "graphx-pagerank", "shape": f"twitter_{supersteps}step",
+        "status": "ok",
+        "mesh": "x".join(map(str, mesh.devices.shape)),
+        "mesh_axes": list(mesh.axis_names),
+        "n_chips": int(np.prod(mesh.devices.shape)),
+        "strategy": "vertex-cut-2d", "kind": "graph",
+        "compile_seconds": round(compile_s, 1),
+        "flops_per_chip": float(cost.get("flops", 0.0)),
+        "bytes_accessed_per_chip": float(cost.get("bytes accessed", 0.0)),
+        "flops_per_chip_tc": float(max(dots["dot_flops"],
+                                       cost.get("flops", 0.0))),
+        "bytes_accessed_per_chip_tc": float(max(bytes_tc,
+                                                cost.get("bytes accessed", 0.0))),
+        "collective_bytes_per_chip": int(coll.get("total_bytes", 0)),
+        "collectives": {kk: v for kk, v in coll.items() if kk != "total_bytes"},
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+        },
+        "graph": {"vertices": n_vertices, "edges": n_edges,
+                  "e_blk": e_blk, "v_mir": v_mir, "k_route": k},
+    }
+    return (rec, txt) if return_hlo else rec
+
+
+# ---------------------------------------------------------------------------
+# Driver
+# ---------------------------------------------------------------------------
+def _load_report() -> list:
+    try:
+        with open(REPORT_PATH) as f:
+            return json.load(f)
+    except FileNotFoundError:
+        return []
+
+
+def _save_report(entries: list) -> None:
+    os.makedirs(os.path.dirname(REPORT_PATH), exist_ok=True)
+    with open(REPORT_PATH, "w") as f:
+        json.dump(entries, f, indent=1)
+
+
+def _upsert(entries: list, rec: dict) -> None:
+    key = (rec["arch"], rec["shape"], rec.get("mesh"), rec.get("variant", ""))
+    entries[:] = [e for e in entries
+                  if (e["arch"], e["shape"], e.get("mesh"),
+                      e.get("variant", "")) != key]
+    entries.append(rec)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--graph", action="store_true",
+                    help="lower the GraphX PageRank superstep instead")
+    ap.add_argument("--strategy", default=None)
+    ap.add_argument("--variant", default="",
+                    help="tag for perf-iteration variants in the report")
+    ap.add_argument("--kernel-mode", default="ref")
+    ap.add_argument("--seq-shard", action="store_true")
+    ap.add_argument("--moe-pin", action="store_true")
+    ap.add_argument("--moe-bf16", action="store_true")
+    ap.add_argument("--moe-cap", type=float, default=None)
+    ap.add_argument("--moe-groups", action="store_true")
+    ap.add_argument("--wire-bf16", action="store_true")
+    ap.add_argument("--mirror-factor", type=float, default=2.0)
+    ap.add_argument("--contrib-form", action="store_true")
+    ap.add_argument("--state-bf16", action="store_true")
+    ap.add_argument("--mlstm-chunk", type=int, default=None)
+    ap.add_argument("--dp-over-model", action="store_true")
+    ap.add_argument("--batch-shard", action="store_true",
+                    help="constrain activations batch-sharded over the full mesh")
+    args = ap.parse_args()
+
+    popts = {}
+    if args.seq_shard:
+        popts["act_spec"] = ("data", "model", None)
+    if args.moe_pin:
+        popts["moe_dispatch_spec"] = ("model", None, None)
+    if args.moe_bf16:
+        popts["moe_payload_dtype"] = jnp.bfloat16
+    if args.moe_cap is not None:
+        popts["moe_capacity_factor"] = args.moe_cap
+    if args.moe_groups:
+        popts["moe_groups"] = True
+    if args.state_bf16:
+        popts["state_dtype"] = jnp.bfloat16
+    if args.mlstm_chunk:
+        popts["mlstm_chunk"] = args.mlstm_chunk
+    if args.dp_over_model:
+        popts["dp_over_model"] = True
+    if args.batch_shard:
+        popts["act_spec"] = (("data", "model"), None, None)
+
+    meshes = []
+    if args.both_meshes:
+        meshes = [make_production_mesh(multi_pod=False),
+                  make_production_mesh(multi_pod=True)]
+    else:
+        meshes = [make_production_mesh(multi_pod=args.multi_pod)]
+
+    entries = _load_report()
+
+    if args.graph:
+        for mp in ([False, True] if args.both_meshes else [args.multi_pod]):
+            gmesh = make_graph_mesh(multi_pod=mp)
+            rec = lower_graph_cell(
+                gmesh, wire_dtype=jnp.bfloat16 if args.wire_bf16 else None,
+                mirror_factor=args.mirror_factor,
+                contrib_form=args.contrib_form)
+            if args.variant:
+                rec["variant"] = args.variant
+            print(json.dumps(rec, indent=1))
+            _upsert(entries, rec)
+        _save_report(entries)
+        return
+
+    archs = C.all_archs() if (args.all or args.arch is None) else [args.arch]
+    shapes = list(SHAPES) if (args.all or args.shape is None) else [args.shape]
+
+    for mesh in meshes:
+        for arch in archs:
+            for shape in shapes:
+                tag = f"[{arch} x {shape} @ {'x'.join(map(str, mesh.devices.shape))}]"
+                try:
+                    rec = lower_cell(arch, shape, mesh,
+                                     strategy=args.strategy,
+                                     kernel_mode=args.kernel_mode,
+                                     perf_opts=popts or None)
+                    if args.variant:
+                        rec["variant"] = args.variant
+                    status = rec["status"]
+                    extra = (f" flops/chip={rec.get('flops_per_chip', 0):.3g}"
+                             f" compile={rec.get('compile_seconds', 0)}s"
+                             if status == "ok" else f" ({rec.get('reason')})")
+                    print(f"{tag} {status}{extra}", flush=True)
+                except Exception as e:
+                    rec = {"arch": arch, "shape": shape,
+                           "mesh": "x".join(map(str, mesh.devices.shape)),
+                           "status": "error", "error": f"{type(e).__name__}: {e}",
+                           "trace": traceback.format_exc()[-2000:]}
+                    print(f"{tag} ERROR {type(e).__name__}: {e}", flush=True)
+                _upsert(entries, rec)
+                _save_report(entries)
+
+
+if __name__ == "__main__":
+    main()

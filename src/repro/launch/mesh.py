@@ -1,0 +1,42 @@
+"""Production mesh construction.
+
+IMPORTANT: functions, never module-level constants — importing this module
+must not touch jax device state (the dry-run sets
+XLA_FLAGS=--xla_force_host_platform_device_count=512 BEFORE first jax use).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 single-pod (256 chips) or 2x16x16 multi-pod (512 chips)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = 1
+    for s in shape:
+        n *= s
+    devices = jax.devices()[:n]
+    if len(devices) < n:
+        raise RuntimeError(
+            f"mesh {shape} needs {n} devices, have {len(devices)} — the "
+            "dry-run must set xla_force_host_platform_device_count first")
+    return jax.make_mesh(shape, axes, devices=devices,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_graph_mesh(*, multi_pod: bool = False):
+    """Graph-engine view of the same chips: one flat 'parts' axis per pod
+    (graph work is throughput work; the pod axis replicates the graph for
+    independent subgraph analyses / fault tolerance — DESIGN.md §4)."""
+    if multi_pod:
+        devices = jax.devices()[:512]
+        return jax.make_mesh((2, 256), ("pod", "parts"), devices=devices,
+                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    devices = jax.devices()[:256]
+    return jax.make_mesh((256,), ("parts",), devices=devices,
+                         axis_types=(jax.sharding.AxisType.Auto,))
+
+
+def mesh_axis_sizes(mesh) -> dict[str, int]:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))

@@ -1,0 +1,159 @@
+"""Roofline analysis over the dry-run report.
+
+Per (arch x shape x mesh) cell:
+  compute_term    = HLO_FLOPs_per_chip / peak_FLOPs          [s]
+  memory_term     = HLO_bytes_per_chip / HBM_bw              [s]
+  collective_term = collective_bytes_per_chip / link_bw      [s]
+plus MODEL_FLOPS = 6·N·D (dense) or 6·N_active·D (MoE) and the usefulness
+ratio MODEL_FLOPS / (HLO_FLOPs·chips) that catches remat/padding waste.
+
+Hardware constants (TPU v5e): 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link
+ICI (constants below; the report normalises everything to seconds/step).
+
+  PYTHONPATH=src python -m repro.launch.roofline            # print table
+  PYTHONPATH=src python -m repro.launch.roofline --md       # markdown
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+PEAK_FLOPS = 197e12          # bf16 per chip
+HBM_BW = 819e9               # bytes/s per chip
+LINK_BW = 50e9               # bytes/s per ICI link (per chip, one direction)
+
+REPORT_PATH = "reports/dryrun.json"
+
+
+def model_flops(rec: dict, cfgs) -> float:
+    """6·N·D with N = active params (MoE: routed experts only count top_k/E)."""
+    arch = rec["arch"]
+    if arch.startswith("graphx"):
+        # PageRank SpMV: ~3 flops per edge per superstep (mul, add, combine)
+        return 3.0 * rec.get("graph", {}).get("edges", 0)
+    cfg = cfgs.get(arch)
+    n_total = rec.get("param_count", 0)
+    if cfg.n_experts and cfg.top_k:
+        per_layer_expert = 3 * cfg.d_model * cfg.d_ff_expert
+        inactive = cfg.n_layers * per_layer_expert * (cfg.n_experts - cfg.top_k)
+        n_active = n_total - inactive
+    else:
+        n_active = n_total
+    if rec["kind"] == "train":
+        tokens = _tokens(rec)
+        return 6.0 * n_active * tokens
+    if rec["kind"] == "prefill":
+        tokens = _tokens(rec)
+        return 2.0 * n_active * tokens
+    # decode: one token per sequence
+    return 2.0 * n_active * _batch(rec)
+
+
+_SHAPE_TOKENS = {"train_4k": (4096, 256), "prefill_32k": (32768, 32),
+                 "decode_32k": (32768, 128), "long_500k": (524288, 1)}
+
+
+def _tokens(rec):
+    s, b = _SHAPE_TOKENS[rec["shape"]]
+    return s * b
+
+
+def _batch(rec):
+    return _SHAPE_TOKENS[rec["shape"]][1]
+
+
+def analyse(rec: dict, cfgs) -> dict:
+    # prefer the trip-count-corrected terms (utils/hlo.py) when the dry-run
+    # recorded them; raw cost_analysis undercounts While bodies.
+    flops = rec.get("flops_per_chip_tc", rec["flops_per_chip"])
+    mem = rec.get("bytes_accessed_per_chip_tc", rec["bytes_accessed_per_chip"])
+    coll = rec["collective_bytes_per_chip"]
+    n = rec["n_chips"]
+    compute_t = flops / PEAK_FLOPS
+    memory_t = mem / HBM_BW
+    coll_t = coll / LINK_BW
+    terms = {"compute": compute_t, "memory": memory_t, "collective": coll_t}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(rec, cfgs)
+    useful = mf / max(flops * n, 1.0)
+    bound_t = max(terms.values())
+    return {
+        **{k: rec[k] for k in ("arch", "shape", "mesh", "kind", "strategy")
+           if k in rec},
+        "variant": rec.get("variant", "baseline"),
+        "compute_s": compute_t,
+        "memory_s": memory_t,
+        "collective_s": coll_t,
+        "dominant": dominant,
+        "step_lower_bound_s": bound_t,
+        "model_flops": mf,
+        "useful_flop_ratio": useful,
+        "roofline_fraction": compute_t / bound_t if bound_t > 0 else 0.0,
+        "hbm_gb_per_chip": (rec["memory"]["argument_bytes"]
+                            + rec["memory"]["temp_bytes"]) / n / 2**30
+        if "memory" in rec else None,
+    }
+
+
+def _fit_note(row, rec):
+    if "memory" not in rec:
+        return ""
+    gb = (rec["memory"]["argument_bytes"] + rec["memory"]["temp_bytes"]) \
+        / rec["n_chips"] / 2**30
+    return "FITS" if gb <= 16 else f"OVER 16GB ({gb:.1f})"
+
+
+def load_analyses(path=REPORT_PATH):
+    import repro.configs as C
+    with open(path) as f:
+        entries = json.load(f)
+    cfgs = {a: C.get(a) for a in C.all_archs()}
+    rows = []
+    for rec in entries:
+        if rec.get("status") != "ok":
+            rows.append({**{k: rec.get(k) for k in ("arch", "shape", "mesh")},
+                         "status": rec.get("status"),
+                         "reason": rec.get("reason", rec.get("error", ""))})
+            continue
+        row = analyse(rec, cfgs)
+        row["status"] = "ok"
+        row["fit"] = _fit_note(row, rec)
+        rows.append(row)
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--md", action="store_true")
+    ap.add_argument("--json-out", default="reports/roofline.json")
+    args = ap.parse_args()
+
+    rows = load_analyses()
+    with open(args.json_out, "w") as f:
+        json.dump(rows, f, indent=1)
+
+    hdr = ["arch", "shape", "mesh", "variant", "compute_s", "memory_s",
+           "collective_s", "dominant", "useful", "fit"]
+    sep = " | " if args.md else "  "
+    if args.md:
+        print("| " + " | ".join(hdr) + " |")
+        print("|" + "---|" * len(hdr))
+    for r in rows:
+        if r.get("status") != "ok":
+            line = [str(r.get("arch")), str(r.get("shape")),
+                    str(r.get("mesh")), r.get("status", ""), "", "", "",
+                    str(r.get("reason", ""))[:60], "", ""]
+        else:
+            line = [r["arch"], r["shape"], r["mesh"], r["variant"],
+                    f"{r['compute_s']:.3e}", f"{r['memory_s']:.3e}",
+                    f"{r['collective_s']:.3e}", r["dominant"],
+                    f"{r['useful_flop_ratio']:.2f}", r["fit"]]
+        if args.md:
+            print("| " + " | ".join(line) + " |")
+        else:
+            print(sep.join(f"{c:<22}" if i < 2 else f"{c:<12}"
+                           for i, c in enumerate(line)))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,76 @@
+"""Batched serving driver: prefill (teacher-forced cache build via decode
+steps) + token-by-token decode with a jitted serve_step.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch stablelm-1.6b --smoke \\
+      --batch 4 --prompt-len 32 --gen 16
+"""
+from __future__ import annotations
+
+import argparse
+import functools
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from .. import configs as C
+from ..models import transformer as T
+from ..models import layers as L
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="stablelm-1.6b")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--kernel-mode", default="auto")
+    args = ap.parse_args()
+
+    cfg = C.get(args.arch, smoke=args.smoke)
+    params, _ = L.split_params(T.init_model(jax.random.PRNGKey(0), cfg))
+    kv_len = args.prompt_len + args.gen
+
+    ctx = None
+    if cfg.n_context_tokens:
+        ctx = jnp.asarray(np.random.default_rng(0).standard_normal(
+            (args.batch, cfg.n_context_tokens, cfg.d_model)), jnp.float32)
+
+    step = jax.jit(functools.partial(T.decode_step, cfg=cfg,
+                                     mode=args.kernel_mode))
+    rng = np.random.default_rng(0)
+    prompt = rng.integers(0, cfg.vocab, (args.batch, args.prompt_len))
+
+    state = T.init_decode_state(cfg, args.batch, kv_len)
+    # prefill = teacher-forced decode over the prompt (cache build)
+    t0 = time.perf_counter()
+    for pos in range(args.prompt_len):
+        logits, state = step(params, state, jnp.asarray(prompt[:, pos:pos+1]),
+                             jnp.int32(pos), cross_ctx=ctx)
+    prefill_s = time.perf_counter() - t0
+
+    # greedy decode
+    tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+    out_toks = [np.asarray(tok)]
+    t0 = time.perf_counter()
+    for i in range(args.gen - 1):
+        logits, state = step(params, state, tok,
+                             jnp.int32(args.prompt_len + i), cross_ctx=ctx)
+        tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+        out_toks.append(np.asarray(tok))
+    jax.block_until_ready(tok)
+    decode_s = time.perf_counter() - t0
+
+    gen = np.concatenate(out_toks, axis=1)
+    tps = args.batch * (args.gen - 1) / max(decode_s, 1e-9)
+    print(f"arch={cfg.name} batch={args.batch} prefill={prefill_s:.2f}s "
+          f"decode={decode_s:.2f}s ({tps:.1f} tok/s)")
+    print("sample generations (token ids):")
+    for row in gen[:2]:
+        print(" ", row[:12].tolist())
+
+
+if __name__ == "__main__":
+    main()

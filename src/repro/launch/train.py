@@ -1,0 +1,60 @@
+"""End-to-end training driver.
+
+  PYTHONPATH=src python -m repro.launch.train --arch stablelm-1.6b --smoke \\
+      --steps 200 --batch 8 --seq 256
+
+--smoke uses the reduced config (CPU-friendly ~100M-and-below models); full
+configs are for real meshes.  Deterministic synthetic data; checkpoints are
+written/restored from --ckpt-dir, so killing and re-running resumes.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import logging
+
+from .. import configs as C
+from ..data.tokens import SyntheticLM, Prefetcher
+from ..train import optimizer as opt_mod
+from ..train.train_loop import TrainConfig, train
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="stablelm-1.6b")
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced config (CPU-scale)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--kernel-mode", default="auto")
+    args = ap.parse_args()
+
+    logging.basicConfig(level=logging.INFO,
+                        format="%(asctime)s %(name)s %(message)s")
+
+    cfg = C.get(args.arch, smoke=args.smoke)
+    data = SyntheticLM(
+        vocab=cfg.vocab, seq_len=args.seq, global_batch=args.batch,
+        context_tokens=(args.seq // cfg.frontend_downsample if cfg.is_encdec
+                        else cfg.n_context_tokens),
+        d_model=cfg.d_model)
+    tcfg = TrainConfig(
+        steps=args.steps, checkpoint_dir=args.ckpt_dir,
+        kernel_mode=args.kernel_mode,
+        opt=opt_mod.AdamWConfig(lr=args.lr, total_steps=args.steps,
+                                warmup_steps=max(args.steps // 20, 5)))
+    pf = Prefetcher(data)
+    try:
+        out = train(cfg, pf, tcfg)
+    finally:
+        pf.close()
+    print(f"arch={cfg.name} steps={out['steps']} "
+          f"loss {out['first_loss']:.4f} -> {out['final_loss']:.4f} "
+          f"({out['wall_seconds']:.1f}s, stragglers={out['straggler_events']})")
+
+
+if __name__ == "__main__":
+    main()

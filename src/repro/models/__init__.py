@@ -1,0 +1,8 @@
+from . import layers, moe, recurrent, transformer
+from .transformer import (init_model, forward, loss_fn, decode_step,
+                          init_decode_state)
+from .layers import split_params, param_count
+
+__all__ = ["layers", "moe", "recurrent", "transformer", "init_model",
+           "forward", "loss_fn", "decode_step", "init_decode_state",
+           "split_params", "param_count"]

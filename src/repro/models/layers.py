@@ -1,0 +1,243 @@
+"""Shared LM layers: params-with-logical-axes, norms, attention, MLP, loss.
+
+Parameter system: every leaf is created through `param(...)` with *logical
+axis names* (t5x-style).  `split_params` separates the value tree from the
+axes tree; `repro.sharding.rules` maps logical axes -> mesh axes to produce
+PartitionSpec trees for any parallelism strategy without touching model code.
+
+All models are pure functions over (params, inputs); layers stack via
+`jax.lax.scan` over a leading layer axis so 95-layer models lower to one
+While op (compile-time sanity on 512-device meshes).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels import ops as kops
+
+
+# ---------------------------------------------------------------------------
+# Parameters with logical axes
+# ---------------------------------------------------------------------------
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class Param:
+    value: jnp.ndarray
+    axes: tuple[str | None, ...]
+
+    def tree_flatten(self):
+        return (self.value,), (self.axes,)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], aux[0])
+
+
+def param(key, shape, axes, scale=None, dtype=jnp.float32, init="normal"):
+    assert len(shape) == len(axes), (shape, axes)
+    if init == "zeros":
+        v = jnp.zeros(shape, dtype)
+    elif init == "ones":
+        v = jnp.ones(shape, dtype)
+    else:
+        scale = scale if scale is not None else 0.02
+        v = jax.random.normal(key, shape, dtype) * scale
+    return Param(v, tuple(axes))
+
+
+def split_params(tree):
+    """-> (values pytree, logical-axes pytree with same structure)."""
+    is_p = lambda x: isinstance(x, Param)
+    values = jax.tree.map(lambda p: p.value, tree, is_leaf=is_p)
+    axes = jax.tree.map(lambda p: p.axes, tree, is_leaf=is_p)
+    return values, axes
+
+
+def param_count(values) -> int:
+    return sum(x.size for x in jax.tree.leaves(values))
+
+
+# ---------------------------------------------------------------------------
+# Primitive layers
+# ---------------------------------------------------------------------------
+def rms_norm(x, gamma, eps=1e-6):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps).astype(x.dtype)) * gamma
+
+
+def init_rms(key, d):
+    return param(key, (d,), ("embed",), init="ones")
+
+
+def dense(x, w):
+    """x [..., in] @ w [in, out] with bf16 compute, fp32 params."""
+    return jnp.einsum("...i,io->...o", x.astype(jnp.bfloat16),
+                      w.astype(jnp.bfloat16)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+def rope(x, positions, theta=10000.0):
+    """x [B, H, L, Dh]; positions [B, L] (absolute)."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[:, None, :, None].astype(jnp.float32) * freqs  # [B,1,L,half]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention (train path = flash kernel; decode path = cache attention)
+# ---------------------------------------------------------------------------
+def init_attention(key, cfg) -> dict:
+    d, hq, hkv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": param(ks[0], (d, hq, dh), ("embed", "heads", "head_dim"),
+                    scale=d ** -0.5),
+        "wk": param(ks[1], (d, hkv, dh), ("embed", "kv_heads", "head_dim"),
+                    scale=d ** -0.5),
+        "wv": param(ks[2], (d, hkv, dh), ("embed", "kv_heads", "head_dim"),
+                    scale=d ** -0.5),
+        "wo": param(ks[3], (hq, dh, d), ("heads", "head_dim", "embed"),
+                    scale=(hq * dh) ** -0.5),
+    }
+
+
+def attention(p, x, positions, *, cfg, causal=True, window=None,
+              kv=None, kv_offset=0, mode="auto"):
+    """Self attention.  kv=(k_cache, v_cache) for decode; window for local
+    attention (sliding).  Returns (out, (k_new, v_new))."""
+    b, l, d = x.shape
+    q = jnp.einsum("bld,dhk->bhlk", x.astype(jnp.bfloat16),
+                   p["wq"].astype(jnp.bfloat16))
+    k = jnp.einsum("bld,dhk->bhlk", x.astype(jnp.bfloat16),
+                   p["wk"].astype(jnp.bfloat16))
+    v = jnp.einsum("bld,dhk->bhlk", x.astype(jnp.bfloat16),
+                   p["wv"].astype(jnp.bfloat16))
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+
+    if kv is not None:
+        # decode/chunked-prefill: append to cache then attend over it
+        k_cache, v_cache = kv
+        k_full = jax.lax.dynamic_update_slice_in_dim(k_cache, k.astype(k_cache.dtype), kv_offset, axis=2)
+        v_full = jax.lax.dynamic_update_slice_in_dim(v_cache, v.astype(v_cache.dtype), kv_offset, axis=2)
+        out = kops.flash_attention(q, k_full, v_full, causal=causal,
+                                   kv_offset=kv_offset, mode=mode)
+        new_kv = (k_full, v_full)
+    else:
+        if window is not None:
+            out = _windowed_attention(q, k, v, window, mode)
+        else:
+            out = kops.flash_attention(q, k, v, causal=causal, mode=mode)
+        new_kv = (k, v)
+    y = jnp.einsum("bhlk,hkd->bld", out.astype(jnp.bfloat16),
+                   p["wo"].astype(jnp.bfloat16)).astype(x.dtype)
+    return y, new_kv
+
+
+def _windowed_attention(q, k, v, window, mode):
+    """Sliding-window causal attention via chunking: queries in chunk c see
+    kv chunks c-1 and c (chunk = window), the standard Griffin/Mistral local
+    pattern.  Work is O(L·window) instead of O(L²)."""
+    b, h, l, dh = q.shape
+    w = window
+    if l <= w:
+        return kops.flash_attention(q, k, v, causal=True, mode=mode)
+    assert l % w == 0, (l, w)
+    nc = l // w
+    hkv = k.shape[1]
+    qc = q.reshape(b, h, nc, w, dh).transpose(0, 2, 1, 3, 4).reshape(b * nc, h, w, dh)
+    # kv for chunk c = [chunk c-1 ; chunk c]
+    kc = k.reshape(b, hkv, nc, w, dh)
+    k_prev = jnp.concatenate([jnp.zeros_like(kc[:, :, :1]), kc[:, :, :-1]], axis=2)
+    k2 = jnp.concatenate([k_prev, kc], axis=3)          # [B,Hkv,nc,2w,dh]
+    vc = v.reshape(b, hkv, nc, w, dh)
+    v_prev = jnp.concatenate([jnp.zeros_like(vc[:, :, :1]), vc[:, :, :-1]], axis=2)
+    v2 = jnp.concatenate([v_prev, vc], axis=3)
+    k2 = k2.transpose(0, 2, 1, 3, 4).reshape(b * nc, hkv, 2 * w, dh)
+    v2 = v2.transpose(0, 2, 1, 3, 4).reshape(b * nc, hkv, 2 * w, dh)
+    # Causal with kv_offset=w: local query i sees concatenated kv pos <= i+w.
+    out = kops.flash_attention(qc, k2, v2, causal=True, kv_offset=w, mode=mode)
+    # Chunk 0 has a zero-padded "previous" half that the offset mask does NOT
+    # hide (zero-K columns would contribute exp(0) uniformly); recompute it
+    # against its own chunk only.  Chunk-0 rows sit at flat indices b_idx*nc.
+    out0 = kops.flash_attention(qc[::nc], k2[::nc, :, w:], v2[::nc, :, w:],
+                                causal=True, kv_offset=0, mode=mode)
+    out = out.reshape(b, nc, h, w, dh).at[:, 0].set(out0)
+    return out.transpose(0, 2, 1, 3, 4).reshape(b, h, l, dh)
+
+
+def decode_attention(q, k_cache, v_cache, pos):
+    """Single-token attention over a cache (bandwidth-bound matrix-vector;
+    the MXU flash kernel brings nothing at lq=1, and `pos` must be dynamic).
+
+    q [B,Hq,1,Dh]; caches [B,Hkv,Lc,Dh]; slots with index > pos are masked
+    (ring-buffer caches pass pos >= Lc-1 once full => nothing masked)."""
+    b, hq, _, dh = q.shape
+    hkv, lc = k_cache.shape[1], k_cache.shape[2]
+    g = hq // hkv
+    qf = q.astype(jnp.float32).reshape(b, hkv, g, dh) * dh ** -0.5
+    scores = jnp.einsum("bhgd,bhld->bhgl", qf, k_cache.astype(jnp.float32))
+    mask = jnp.arange(lc) <= pos
+    scores = jnp.where(mask[None, None, None], scores, -jnp.inf)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgl,bhld->bhgd", probs, v_cache.astype(jnp.float32))
+    return out.reshape(b, hq, 1, dh).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+def init_mlp(key, cfg, d_ff=None) -> dict:
+    d = cfg.d_model
+    f = d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    return {
+        "wi": param(ks[0], (d, f), ("embed", "mlp"), scale=d ** -0.5),
+        "wg": param(ks[1], (d, f), ("embed", "mlp"), scale=d ** -0.5),
+        "wo": param(ks[2], (f, d), ("mlp", "embed"), scale=f ** -0.5),
+    }
+
+
+def mlp(p, x):
+    h = jax.nn.silu(dense(x, p["wg"])) * dense(x, p["wi"])
+    return dense(h, p["wo"])
+
+
+# ---------------------------------------------------------------------------
+# Embedding + LM head (vocab sharded)
+# ---------------------------------------------------------------------------
+def init_embed(key, cfg) -> dict:
+    return {"tok": param(key, (cfg.vocab, cfg.d_model), ("vocab", "embed"),
+                         scale=cfg.d_model ** -0.5)}
+
+
+def embed(p, tokens):
+    return jnp.take(p["tok"], tokens, axis=0)
+
+
+def lm_logits(p_embed, x):
+    """Tied LM head: logits over the (model-sharded) vocab axis."""
+    return jnp.einsum("bld,vd->blv", x.astype(jnp.bfloat16),
+                      p_embed["tok"].astype(jnp.bfloat16)).astype(jnp.float32)
+
+
+def softmax_xent(logits, labels, mask=None):
+    """Stable CE over the vocab axis (fp32)."""
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    loss = lse - gold
+    if mask is not None:
+        return (loss * mask).sum() / jnp.maximum(mask.sum(), 1)
+    return loss.mean()

@@ -1,0 +1,118 @@
+"""Mixture-of-Experts with sort-based dispatch.
+
+DESIGN.md §5: token→expert routing IS a bipartite mrTriplets — tokens are
+"vertices", (token, expert) assignments are "edges", dispatch ships vertex
+data to assignment sites, combine is a segment aggregation keyed by the
+destination.  The implementation below shares the engine's philosophy
+(static-capacity routing + segment aggregation) and, on the combine side,
+the same segment-sum primitive.
+
+Dispatch: top-k router -> argsort by expert -> positions via prefix counts ->
+scatter into [n_experts, capacity, d] buffers.  Under expert parallelism the
+expert axis is model-sharded; XLA turns the gather/scatter across the sharded
+axis into the expected all_to_all pair.  Tokens over capacity are dropped
+(standard; capacity_factor sizes the buffers).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import perf
+from .layers import param, dense
+
+
+def init_moe(key, cfg) -> dict:
+    d, f, ne = cfg.d_model, cfg.d_ff_expert, cfg.n_experts
+    ks = jax.random.split(key, 4)
+    p = {
+        "router": param(ks[0], (d, ne), ("embed", "expert_dim"), scale=d ** -0.5),
+        "wi": param(ks[1], (ne, d, f), ("expert", "embed", "mlp"), scale=d ** -0.5),
+        "wg": param(ks[2], (ne, d, f), ("expert", "embed", "mlp"), scale=d ** -0.5),
+        "wo": param(ks[3], (ne, f, d), ("expert", "mlp", "embed"), scale=f ** -0.5),
+    }
+    return p
+
+
+def _moe_tokens(p, xt, cfg, capacity_factor: float, pay_dtype):
+    """Token-choice top-k MoE over a flat token table xt [T, D].
+
+    Sort-based dispatch (argsort by expert + prefix positions) — the same
+    static-capacity routing machinery as the graph engine's shuffles.
+    Returns ([T, D], n_dropped, capacity).
+    """
+    n_tok, d = xt.shape
+    ne, topk = cfg.n_experts, cfg.top_k
+
+    logits = dense(xt, p["router"]).astype(jnp.float32)       # [T, ne]
+    gates, experts = jax.lax.top_k(logits, topk)               # [T, k]
+    gates = jax.nn.softmax(gates, axis=-1)
+
+    # flatten assignments: (token, expert, gate) triples — the "edge list"
+    tok_idx = jnp.repeat(jnp.arange(n_tok), topk)              # [T*k]
+    exp_idx = experts.reshape(-1)                              # [T*k]
+    gate = gates.reshape(-1)
+
+    capacity = max(int(capacity_factor * n_tok * topk / ne), 4)
+    capacity = -(-capacity // 4) * 4
+
+    # position of each assignment within its expert (stable by token order)
+    order = jnp.argsort(exp_idx, stable=True)
+    exp_sorted = exp_idx[order]
+    first = jnp.searchsorted(exp_sorted, exp_sorted, side="left")
+    pos = jnp.arange(exp_sorted.shape[0]) - first
+    keep = pos < capacity
+
+    # dispatch: scatter token vectors into [ne, capacity, d]
+    drow = jnp.where(keep, exp_sorted, ne)                     # OOB -> drop
+    dbuf = jnp.zeros((ne, capacity, d), pay_dtype).at[
+        drow, jnp.where(keep, pos, 0)].set(
+            xt.astype(pay_dtype)[tok_idx[order]], mode="drop")
+    # pin dispatch buffers to the expert-parallel axis (perf hillclimb):
+    # keeps the token->expert scatter an a2a instead of a replicate
+    dbuf = perf.constrain(dbuf, "moe_dispatch_spec")
+
+    # expert computation (expert axis model-sharded => expert parallel)
+    h = jnp.einsum("ecd,edf->ecf", dbuf.astype(jnp.bfloat16),
+                   p["wg"].astype(jnp.bfloat16))
+    h = jax.nn.silu(h) * jnp.einsum("ecd,edf->ecf", dbuf.astype(jnp.bfloat16),
+                                    p["wi"].astype(jnp.bfloat16))
+    y = jnp.einsum("ecf,efd->ecd", h, p["wo"].astype(jnp.bfloat16))
+    y = perf.constrain(y, "moe_dispatch_spec")
+
+    # combine: gather back and weight by gate (segment-sum over k per token)
+    got = y[drow.clip(0, ne - 1), pos.clip(0, capacity - 1)]    # [T*k, d]
+    got = jnp.where((keep & (drow < ne))[:, None], got, 0)
+    contrib = got.astype(jnp.float32) * gate[order][:, None]
+    out = jnp.zeros((n_tok, d), jnp.float32).at[tok_idx[order]].add(contrib)
+    return out.astype(xt.dtype), (~keep).sum(), capacity
+
+
+def moe_block(p, x, cfg, *, capacity_factor: float = 1.25):
+    """x [B, L, D] -> [B, L, D]; top-k token-choice routing.
+
+    Two dispatch scopes:
+      * global (default) — one token table, one global sort.  Fine on a few
+        devices; under GSPMD a global argsort over every token CANNOT be
+        sharded, so the partitioner materialises [B·L·k, D] per chip
+        (measured: 8.4e12 collective bytes/chip on arctic prefill).
+      * grouped (perf option "moe_groups" = True) — GShard/Switch-style
+        group-local routing: each batch row routes its own tokens with a
+        per-group capacity, so sorts/gathers vmap over the (data-sharded)
+        batch axis and stay local.  The only cross-chip movement left is
+        the expert weight/buffer exchange on the model axis.
+    """
+    b, l, d = x.shape
+    capacity_factor = perf.get("moe_capacity_factor", capacity_factor)
+    # perf knob: narrow the dispatch/combine payload dtype — the token
+    # vectors crossing the data<->expert boundary dominate MoE collectives
+    pay_dtype = perf.get("moe_payload_dtype", x.dtype)
+
+    if perf.get("moe_groups"):
+        out, dropped, cap = jax.vmap(
+            lambda xr: _moe_tokens(p, xr, cfg, capacity_factor, pay_dtype))(x)
+        return out, {"dropped": dropped.sum(), "capacity": cap[0]}
+
+    out, dropped, cap = _moe_tokens(p, x.reshape(b * l, d), cfg,
+                                    capacity_factor, pay_dtype)
+    return out.reshape(b, l, d), {"dropped": dropped, "capacity": cap}

@@ -1,0 +1,66 @@
+"""Trace-time performance options (the hillclimb knobs).
+
+A contextvar consulted by model code DURING TRACING — options only change
+which `with_sharding_constraint`s / layouts get staged into the program, so
+scoping them around `jit(...).lower()` is exact.  Used by launch/dryrun.py
+to lower optimisation variants without forking the model code.
+
+  with perf.options(mesh=mesh, act_spec=("data", "model", None)):
+      jax.jit(step).lower(...)
+
+Knobs:
+  mesh         — concrete jax Mesh for building NamedShardings;
+  act_spec     — PartitionSpec tuple for the [B, S, D] residual stream,
+                 applied between layer blocks (sequence sharding when S is
+                 mapped to "model");
+  moe_expert_axis — mesh axis to pin MoE dispatch/combine buffers' expert
+                 dim to (keeps token->expert scatter local to the a2a);
+  state_dtype  — dtype for recurrent inter-chunk carries (bf16 halves the
+                 mLSTM state traffic).
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+_OPTS: contextvars.ContextVar[dict] = contextvars.ContextVar(
+    "repro_perf_opts", default={})
+
+
+def get(name: str, default=None):
+    return _OPTS.get().get(name, default)
+
+
+@contextlib.contextmanager
+def options(**kw):
+    tok = _OPTS.set({**_OPTS.get(), **kw})
+    try:
+        yield
+    finally:
+        _OPTS.reset(tok)
+
+
+def constrain(x, spec_name: str):
+    """Apply the named sharding constraint to x if the option is set (and
+    the spec ranks match); identity otherwise."""
+    spec = get(spec_name)
+    mesh = get("mesh")
+    if spec is None or mesh is None:
+        return x
+    spec = tuple(spec)[:x.ndim]
+    spec = spec + (None,) * (x.ndim - len(spec))
+    # drop axes that do not divide
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    fixed = []
+    for dim, ax in zip(x.shape, spec):
+        ok = True
+        if ax is not None:
+            for a in (ax if isinstance(ax, tuple) else (ax,)):
+                if a not in sizes or dim % sizes[a] != 0:
+                    ok = False
+        fixed.append(ax if ok else None)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*fixed)))

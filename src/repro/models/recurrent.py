@@ -1,0 +1,309 @@
+"""Recurrent sequence-mixing layers: xLSTM (mLSTM + sLSTM) and RG-LRU.
+
+TPU adaptations (DESIGN.md §2 discipline — rethink for the MXU, don't port):
+
+* mLSTM (arXiv:2405.04517) — matrix-memory LSTM.  The naive recurrence
+  updates a [Dh, Dh] state per token; we use the *chunkwise-parallel* form
+  (flash-linear-attention style): within a chunk of size W everything is
+  dense matmuls (MXU), and only one [Dh, Dh] state carries between chunks
+  via lax.scan.  Work: O(L·W·Dh + L·Dh²/W · W) ≈ attention-with-window-W.
+
+* sLSTM — scalar-memory with a per-head recurrent matrix; irreducibly
+  sequential, so it scans over time with a small [B, D] state (the honest
+  cost of that architecture; noted in the roofline).
+
+* RG-LRU (Griffin, arXiv:2402.19427) — diagonal gated linear recurrence:
+  h_t = a_t ⊙ h_{t-1} + sqrt(1-a_t²) ⊙ (i_t ⊙ x_t).  Diagonal ⇒
+  `associative_scan` (parallel prefix), the canonical TPU lowering.
+
+Each layer has a `*_step` single-token variant threading explicit state for
+decode (long_500k runs through these).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import param, dense
+
+_LOG_EPS = -12.0
+
+
+# ===========================================================================
+# mLSTM
+# ===========================================================================
+def init_mlstm(key, cfg) -> dict:
+    d, h, dh = cfg.d_model, cfg.n_heads, cfg.head_dim
+    ks = jax.random.split(key, 7)
+    return {
+        "wq": param(ks[0], (d, h, dh), ("embed", "heads", "head_dim"), scale=d ** -0.5),
+        "wk": param(ks[1], (d, h, dh), ("embed", "heads", "head_dim"), scale=d ** -0.5),
+        "wv": param(ks[2], (d, h, dh), ("embed", "heads", "head_dim"), scale=d ** -0.5),
+        "wi": param(ks[3], (d, h), ("embed", "heads"), scale=d ** -0.5),
+        "wf": param(ks[4], (d, h), ("embed", "heads"), scale=d ** -0.5),
+        "wo": param(ks[5], (h, dh, d), ("heads", "head_dim", "embed"),
+                    scale=(h * dh) ** -0.5),
+        "wog": param(ks[6], (d, h, dh), ("embed", "heads", "head_dim"),
+                     scale=d ** -0.5),
+    }
+
+
+def _mlstm_gates(p, x):
+    """log input/forget gates, stabilised: logf<=0 (sigmoid-style), logi clamped."""
+    logi = jnp.clip(jnp.einsum("bld,dh->bhl", x.astype(jnp.float32),
+                               p["wi"].astype(jnp.float32)), _LOG_EPS, 8.0)
+    logf = -jax.nn.softplus(-jnp.einsum("bld,dh->bhl", x.astype(jnp.float32),
+                                        p["wf"].astype(jnp.float32)) - 1.0)
+    return logi, logf
+
+
+def mlstm_block(p, x, *, chunk: int = 64):
+    """x [B, L, D] -> [B, L, D]; chunkwise-parallel matrix-memory mixing."""
+    b, l, d = x.shape
+    h, dh = p["wq"].shape[1], p["wq"].shape[2]
+    w = min(chunk, l)
+    assert l % w == 0, (l, w)
+    nc = l // w
+
+    q = jnp.einsum("bld,dhk->bhlk", x.astype(jnp.bfloat16),
+                   p["wq"].astype(jnp.bfloat16)).astype(jnp.float32) * dh ** -0.5
+    k = jnp.einsum("bld,dhk->bhlk", x.astype(jnp.bfloat16),
+                   p["wk"].astype(jnp.bfloat16)).astype(jnp.float32)
+    v = jnp.einsum("bld,dhk->bhlk", x.astype(jnp.bfloat16),
+                   p["wv"].astype(jnp.bfloat16)).astype(jnp.float32)
+    logi, logf = _mlstm_gates(p, x)                       # [B,H,L]
+
+    # chunked views: [nc, B, H, W, ...]
+    cq = q.reshape(b, h, nc, w, dh).transpose(2, 0, 1, 3, 4)
+    ck = k.reshape(b, h, nc, w, dh).transpose(2, 0, 1, 3, 4)
+    cv = v.reshape(b, h, nc, w, dh).transpose(2, 0, 1, 3, 4)
+    cli = logi.reshape(b, h, nc, w).transpose(2, 0, 1, 3)
+    clf = logf.reshape(b, h, nc, w).transpose(2, 0, 1, 3)
+
+    def chunk_step(carry, inp):
+        C, n = carry                                       # [B,H,dh,dh], [B,H,dh]
+        qc, kc, vc, lic, lfc = inp
+        cum = jnp.cumsum(lfc, axis=-1)                    # [B,H,W] Σ_{s<=t} logf
+        total = cum[..., -1:]
+        # intra-chunk: D[t,s] = exp(cum_t - cum_s + logi_s), s <= t
+        dmat = cum[..., :, None] - cum[..., None, :] + lic[..., None, :]
+        tri = jnp.tril(jnp.ones((w, w), bool))
+        dmat = jnp.where(tri, dmat, -jnp.inf)
+        # stabiliser: row max of [dmat | inter-decay]
+        m_row = jnp.maximum(jnp.max(dmat, axis=-1), cum)   # [B,H,W]
+        att = jnp.einsum("bhtk,bhsk->bhts", qc, kc) * jnp.exp(
+            dmat - m_row[..., None])
+        intra = jnp.einsum("bhts,bhsk->bhtk", att, vc)
+        # inter-chunk: decay_t = exp(cum_t - m_row)
+        dec = jnp.exp(cum - m_row)
+        inter = jnp.einsum("bhtk,bhkv->bhtv", qc * dec[..., None], C)
+        num = intra + inter
+        den = att.sum(axis=-1) + jnp.einsum("bhtk,bhk->bht", qc * dec[..., None], n)
+        # stabilised clamp: num/den are both scaled by exp(-m_row), so the
+        # xLSTM max(|n^T q|, 1) becomes max(|den|, exp(-m_row))
+        out = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_row))[..., None]
+        # carry update: C' = exp(total) C + Σ_s exp(total - cum_s + logi_s) k v^T
+        wgt = jnp.exp(total - cum + lic)                   # [B,H,W]
+        C2 = jnp.exp(total)[..., None] * C + jnp.einsum(
+            "bhsk,bhsv->bhkv", kc * wgt[..., None], vc)
+        n2 = jnp.exp(total) * n + jnp.einsum("bhsk,bhs->bhk", kc, wgt)
+        return (C2, n2), out
+
+    C0 = jnp.zeros((b, h, dh, dh), jnp.float32)
+    n0 = jnp.zeros((b, h, dh), jnp.float32)
+    (_, _), outs = jax.lax.scan(chunk_step, (C0, n0), (cq, ck, cv, cli, clf))
+    y = outs.transpose(1, 2, 0, 3, 4).reshape(b, h, l, dh)
+
+    og = jax.nn.sigmoid(jnp.einsum("bld,dhk->bhlk", x.astype(jnp.float32),
+                                   p["wog"].astype(jnp.float32)))
+    y = y * og
+    return jnp.einsum("bhlk,hkd->bld", y.astype(jnp.bfloat16),
+                      p["wo"].astype(jnp.bfloat16)).astype(x.dtype)
+
+
+def mlstm_init_state(b, h, dh):
+    return {"C": jnp.zeros((b, h, dh, dh), jnp.float32),
+            "n": jnp.zeros((b, h, dh), jnp.float32),
+            "m": jnp.zeros((b, h), jnp.float32)}
+
+
+def mlstm_step(p, x, state):
+    """Single-token decode.  x [B, 1, D] -> ([B, 1, D], state')."""
+    b = x.shape[0]
+    h, dh = p["wq"].shape[1], p["wq"].shape[2]
+    # projections in bf16 to match mlstm_block bit-for-bit (decode must
+    # reproduce the chunked forward path)
+    q = jnp.einsum("bld,dhk->bhk", x.astype(jnp.bfloat16),
+                   p["wq"].astype(jnp.bfloat16)).astype(jnp.float32) * dh ** -0.5
+    k = jnp.einsum("bld,dhk->bhk", x.astype(jnp.bfloat16),
+                   p["wk"].astype(jnp.bfloat16)).astype(jnp.float32)
+    v = jnp.einsum("bld,dhk->bhk", x.astype(jnp.bfloat16),
+                   p["wv"].astype(jnp.bfloat16)).astype(jnp.float32)
+    logi, logf = _mlstm_gates(p, x)
+    logi, logf = logi[..., 0], logf[..., 0]               # [B,H]
+    m2 = jnp.maximum(state["m"] + logf, logi)
+    fi = jnp.exp(state["m"] + logf - m2)[..., None]
+    ii = jnp.exp(logi - m2)[..., None]
+    C = fi[..., None] * state["C"] + ii[..., None] * k[..., :, None] * v[..., None, :]
+    n = fi * state["n"] + ii * k
+    num = jnp.einsum("bhk,bhkv->bhv", q, C)
+    den = jnp.einsum("bhk,bhk->bh", q, n)
+    y = num / jnp.maximum(jnp.abs(den), jnp.exp(-m2))[..., None]
+    og = jax.nn.sigmoid(jnp.einsum("bld,dhk->bhk", x.astype(jnp.float32),
+                                   p["wog"].astype(jnp.float32)))
+    y = (y * og).astype(jnp.bfloat16)
+    out = jnp.einsum("bhk,hkd->bd", y, p["wo"].astype(jnp.bfloat16))
+    return out[:, None].astype(x.dtype), {"C": C, "n": n, "m": m2}
+
+
+# ===========================================================================
+# sLSTM
+# ===========================================================================
+def init_slstm(key, cfg) -> dict:
+    d, h = cfg.d_model, cfg.n_heads
+    dh = cfg.d_model // cfg.n_heads
+    ks = jax.random.split(key, 6)
+    return {
+        "wz": param(ks[0], (d, d), ("embed", "embed2"), scale=d ** -0.5),
+        "wi": param(ks[1], (d, d), ("embed", "embed2"), scale=d ** -0.5),
+        "wf": param(ks[2], (d, d), ("embed", "embed2"), scale=d ** -0.5),
+        "wo_g": param(ks[3], (d, d), ("embed", "embed2"), scale=d ** -0.5),
+        # block-diagonal recurrent weights, one [dh, dh] block per head
+        "r": param(ks[4], (h, dh, dh), ("heads", "head_dim", "head_dim2"),
+                   scale=dh ** -0.5),
+        "wout": param(ks[5], (d, d), ("embed2", "embed"), scale=d ** -0.5),
+    }
+
+
+def slstm_block(p, x):
+    """x [B, L, D] -> [B, L, D]; sequential scan (inherently recurrent)."""
+    b, l, d = x.shape
+    h, dh = p["r"].shape[0], p["r"].shape[1]
+
+    zx = dense(x, p["wz"]).astype(jnp.float32)
+    ix = dense(x, p["wi"]).astype(jnp.float32)
+    fx = dense(x, p["wf"]).astype(jnp.float32)
+    ox = dense(x, p["wo_g"]).astype(jnp.float32)
+
+    def step(carry, inp):
+        c, n, hprev, m = carry                            # [B,D],[B,D],[B,D],[B,D]
+        zx_t, ix_t, fx_t, ox_t = inp
+        rh = jnp.einsum("bhk,hkv->bhv", hprev.reshape(b, h, dh),
+                        p["r"].astype(jnp.float32)).reshape(b, d)
+        zt = jnp.tanh(zx_t + rh)
+        lit = jnp.clip(ix_t, _LOG_EPS, 8.0)
+        lft = -jax.nn.softplus(-fx_t - 1.0)
+        m2 = jnp.maximum(lft + m, lit)
+        i_ = jnp.exp(lit - m2)
+        f_ = jnp.exp(lft + m - m2)
+        c2 = f_ * c + i_ * zt
+        n2 = f_ * n + i_
+        h2 = jax.nn.sigmoid(ox_t) * c2 / jnp.maximum(n2, 1.0)
+        return (c2, n2, h2, m2), h2
+
+    zeros = jnp.zeros((b, d), jnp.float32)
+    (_, _, _, _), hs = jax.lax.scan(
+        step, (zeros, zeros, zeros, zeros),
+        (zx.transpose(1, 0, 2), ix.transpose(1, 0, 2),
+         fx.transpose(1, 0, 2), ox.transpose(1, 0, 2)))
+    y = hs.transpose(1, 0, 2).astype(x.dtype)
+    return dense(y, p["wout"])
+
+
+def slstm_init_state(b, d):
+    z = jnp.zeros((b, d), jnp.float32)
+    return {"c": z, "n": z, "h": z, "m": z}
+
+
+def slstm_step(p, x, state):
+    b, _, d = x.shape
+    h, dh = p["r"].shape[0], p["r"].shape[1]
+    xt = x[:, 0]
+    rh = jnp.einsum("bhk,hkv->bhv", state["h"].reshape(b, h, dh),
+                    p["r"].astype(jnp.float32)).reshape(b, d)
+    zt = jnp.tanh(dense(xt, p["wz"]).astype(jnp.float32) + rh)
+    lit = jnp.clip(dense(xt, p["wi"]).astype(jnp.float32), _LOG_EPS, 8.0)
+    lft = -jax.nn.softplus(-dense(xt, p["wf"]).astype(jnp.float32) - 1.0)
+    m2 = jnp.maximum(lft + state["m"], lit)
+    i_ = jnp.exp(lit - m2)
+    f_ = jnp.exp(lft + state["m"] - m2)
+    c2 = f_ * state["c"] + i_ * zt
+    n2 = f_ * state["n"] + i_
+    h2 = jax.nn.sigmoid(dense(xt, p["wo_g"]).astype(jnp.float32)) * c2 \
+        / jnp.maximum(n2, 1.0)
+    out = dense(h2.astype(x.dtype), p["wout"])
+    return out[:, None], {"c": c2, "n": n2, "h": h2, "m": m2}
+
+
+# ===========================================================================
+# RG-LRU recurrent block (Griffin / RecurrentGemma)
+# ===========================================================================
+def init_rglru(key, cfg) -> dict:
+    d = cfg.d_model
+    dr = cfg.d_recurrent
+    ks = jax.random.split(key, 7)
+    return {
+        "w_in": param(ks[0], (d, dr), ("embed", "mlp"), scale=d ** -0.5),
+        "w_gate": param(ks[1], (d, dr), ("embed", "mlp"), scale=d ** -0.5),
+        "conv_w": param(ks[2], (4, dr), ("conv", "mlp"), scale=0.25),
+        "wr": param(ks[3], (dr, dr), ("mlp", "mlp2"), scale=dr ** -0.5),
+        "wi": param(ks[4], (dr, dr), ("mlp", "mlp2"), scale=dr ** -0.5),
+        "lam": param(ks[5], (dr,), ("mlp",), init="ones"),
+        "w_out": param(ks[6], (dr, d), ("mlp", "embed"), scale=dr ** -0.5),
+    }
+
+
+def _rglru_core(p, u, h0=None):
+    """Diagonal gated linear recurrence over u [B, L, Dr] via parallel scan."""
+    c = 8.0
+    r = jax.nn.sigmoid(dense(u, p["wr"]).astype(jnp.float32))
+    i = jax.nn.sigmoid(dense(u, p["wi"]).astype(jnp.float32))
+    log_a = -c * r * jax.nn.softplus(p["lam"].astype(jnp.float32))  # <= 0
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-6)) \
+        * (i * u.astype(jnp.float32))
+
+    def combine(x, y):
+        a1, b1 = x
+        a2, b2 = y
+        return a1 * a2, a2 * b1 + b2
+
+    if h0 is not None:
+        gated = gated.at[:, 0].add(a[:, 0] * h0)
+    _, h = jax.lax.associative_scan(combine, (a, gated), axis=1)
+    return h
+
+
+def rglru_block(p, x, h0=None):
+    """Griffin recurrent block: (gate ⊙ conv→RG-LRU) -> out proj."""
+    u = dense(x, p["w_in"])
+    gate = jax.nn.gelu(dense(x, p["w_gate"]).astype(jnp.float32))
+    # short temporal conv (width 4, causal)
+    upad = jnp.pad(u, ((0, 0), (3, 0), (0, 0)))
+    conv = sum(upad[:, 3 - j:upad.shape[1] - j] * p["conv_w"].astype(u.dtype)[3 - j]
+               for j in range(4))
+    h = _rglru_core(p, conv, h0)
+    y = (gate * h).astype(x.dtype)
+    return dense(y, p["w_out"])
+
+
+def rglru_init_state(b, dr):
+    return {"h": jnp.zeros((b, dr), jnp.float32),
+            "conv": jnp.zeros((b, 3, dr), jnp.float32)}
+
+
+def rglru_step(p, x, state):
+    xt = x[:, 0]
+    u = dense(xt, p["w_in"]).astype(jnp.float32)
+    gate = jax.nn.gelu(dense(xt, p["w_gate"]).astype(jnp.float32))
+    hist = jnp.concatenate([state["conv"], u[:, None]], axis=1)   # [B,4,Dr]
+    conv = jnp.einsum("bjd,jd->bd", hist, p["conv_w"].astype(jnp.float32))
+    r = jax.nn.sigmoid(conv @ p["wr"].astype(jnp.float32))
+    i = jax.nn.sigmoid(conv @ p["wi"].astype(jnp.float32))
+    log_a = -8.0 * r * jax.nn.softplus(p["lam"].astype(jnp.float32))
+    a = jnp.exp(log_a)
+    h2 = a * state["h"] + jnp.sqrt(jnp.maximum(1 - jnp.exp(2 * log_a), 1e-6)) \
+        * (i * conv)
+    y = (gate * h2).astype(x.dtype)
+    out = dense(y, p["w_out"])
+    return out[:, None], {"h": h2, "conv": hist[:, 1:]}

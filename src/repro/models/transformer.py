@@ -1,0 +1,401 @@
+"""Model assembly: any ModelConfig -> init / forward / decode functions.
+
+Layers stack via `lax.scan` over *super-layers* (one period of the layer
+pattern), so a 95-layer model lowers to a single While op regardless of mesh
+size.  Pattern remainders (e.g. 26 layers, period 3) unroll after the scan.
+
+Decode paths thread explicit per-layer state (KV caches for attention
+blocks, recurrent state for mLSTM/sLSTM/RG-LRU) through the same scan.
+Modality frontends (audio frames, image patches) are STUBS per the
+assignment: `input_specs` provides precomputed embeddings and a single
+projection maps them to d_model.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from . import layers as L
+from . import moe as M
+from . import perf
+from . import recurrent as R
+
+
+# ===========================================================================
+# Per-block init / apply / state
+# ===========================================================================
+def _init_block(key, cfg: ModelConfig, kind: str, *, with_cross=False,
+                causal=True) -> dict:
+    ks = jax.random.split(key, 8)
+    p: dict[str, Any] = {"ln1": L.init_rms(ks[0], cfg.d_model)}
+    if kind in ("attn", "local_attn"):
+        p["attn"] = L.init_attention(ks[1], cfg)
+        if cfg.family == "moe":
+            p["ln2"] = L.init_rms(ks[2], cfg.d_model)
+            p["moe"] = M.init_moe(ks[3], cfg)
+            if cfg.dense_residual and cfg.d_ff:
+                p["mlp"] = L.init_mlp(ks[4], cfg)
+        elif cfg.d_ff:
+            p["ln2"] = L.init_rms(ks[2], cfg.d_model)
+            p["mlp"] = L.init_mlp(ks[4], cfg)
+    elif kind == "mlstm":
+        p["mix"] = R.init_mlstm(ks[1], cfg)
+    elif kind == "slstm":
+        p["mix"] = R.init_slstm(ks[1], cfg)
+    elif kind == "rglru":
+        p["mix"] = R.init_rglru(ks[1], cfg)
+        if cfg.d_ff:
+            p["ln2"] = L.init_rms(ks[2], cfg.d_model)
+            p["mlp"] = L.init_mlp(ks[4], cfg)
+    else:
+        raise ValueError(kind)
+    if with_cross:
+        p["lnx"] = L.init_rms(ks[5], cfg.d_model)
+        p["xattn"] = L.init_attention(ks[6], cfg)
+    return p
+
+
+def _apply_block(p, x, positions, cfg: ModelConfig, kind: str, *,
+                 causal=True, cross_ctx=None, mode="auto"):
+    """Training/prefill-style full-sequence block application."""
+    h = L.rms_norm(x, p["ln1"], cfg.norm_eps)
+    if kind in ("attn", "local_attn"):
+        window = cfg.window if kind == "local_attn" else None
+        a, _ = L.attention(p["attn"], h, positions, cfg=cfg, causal=causal,
+                           window=window, mode=mode)
+        x = x + a
+        if "xattn" in p and cross_ctx is not None:
+            hx = L.rms_norm(x, p["lnx"], cfg.norm_eps)
+            cx = _cross_attention(p["xattn"], hx, cross_ctx, cfg, mode)
+            x = x + cx
+        if "moe" in p:
+            h2 = L.rms_norm(x, p["ln2"], cfg.norm_eps)
+            mo, _ = M.moe_block(p["moe"], h2, cfg)
+            if "mlp" in p:
+                mo = mo + L.mlp(p["mlp"], h2)
+            x = x + mo
+        elif "mlp" in p:
+            x = x + L.mlp(p["mlp"], L.rms_norm(x, p["ln2"], cfg.norm_eps))
+    elif kind == "mlstm":
+        x = x + R.mlstm_block(p["mix"], h,
+                              chunk=perf.get("mlstm_chunk", cfg.mlstm_chunk))
+    elif kind == "slstm":
+        x = x + R.slstm_block(p["mix"], h)
+    elif kind == "rglru":
+        x = x + R.rglru_block(p["mix"], h)
+        if "mlp" in p:
+            x = x + L.mlp(p["mlp"], L.rms_norm(x, p["ln2"], cfg.norm_eps))
+    return x
+
+
+def _cross_attention(p, x, ctx, cfg, mode):
+    """Query from x, K/V from a fixed context (image patches / encoder out)."""
+    q = jnp.einsum("bld,dhk->bhlk", x.astype(jnp.bfloat16),
+                   p["wq"].astype(jnp.bfloat16))
+    k = jnp.einsum("bld,dhk->bhlk", ctx.astype(jnp.bfloat16),
+                   p["wk"].astype(jnp.bfloat16))
+    v = jnp.einsum("bld,dhk->bhlk", ctx.astype(jnp.bfloat16),
+                   p["wv"].astype(jnp.bfloat16))
+    o = L.kops.flash_attention(q, k, v, causal=False, mode=mode)
+    return jnp.einsum("bhlk,hkd->bld", o.astype(jnp.bfloat16),
+                      p["wo"].astype(jnp.bfloat16)).astype(x.dtype)
+
+
+# --- decode state ----------------------------------------------------------
+def _init_block_state(cfg: ModelConfig, kind: str, batch: int, kv_len: int,
+                      with_cross=False, cross_ctx=None, p=None):
+    dh, hkv = cfg.head_dim, cfg.n_kv_heads
+    if kind in ("attn", "local_attn"):
+        cache_len = min(kv_len, cfg.window) if kind == "local_attn" and cfg.window \
+            else kv_len
+        st = {"k": jnp.zeros((batch, hkv, cache_len, dh), jnp.bfloat16),
+              "v": jnp.zeros((batch, hkv, cache_len, dh), jnp.bfloat16)}
+    elif kind == "mlstm":
+        st = R.mlstm_init_state(batch, cfg.n_heads, dh)
+    elif kind == "slstm":
+        st = R.slstm_init_state(batch, cfg.d_model)
+    elif kind == "rglru":
+        st = R.rglru_init_state(batch, cfg.d_recurrent)
+    else:
+        raise ValueError(kind)
+    return st
+
+
+def _apply_block_decode(p, x, pos, state, cfg: ModelConfig, kind: str, *,
+                        cross_ctx=None, mode="auto"):
+    """Single-token step.  x [B,1,D], pos scalar int32 -> (x', state')."""
+    h = L.rms_norm(x, p["ln1"], cfg.norm_eps)
+    if kind in ("attn", "local_attn"):
+        cache_len = state["k"].shape[2]
+        slot = pos % cache_len                 # ring buffer (= pos when full-length)
+        positions = jnp.full((x.shape[0], 1), pos, jnp.int32)
+        q = jnp.einsum("bld,dhk->bhlk", h.astype(jnp.bfloat16),
+                       p["attn"]["wq"].astype(jnp.bfloat16))
+        k = jnp.einsum("bld,dhk->bhlk", h.astype(jnp.bfloat16),
+                       p["attn"]["wk"].astype(jnp.bfloat16))
+        v = jnp.einsum("bld,dhk->bhlk", h.astype(jnp.bfloat16),
+                       p["attn"]["wv"].astype(jnp.bfloat16))
+        q = L.rope(q, positions, cfg.rope_theta)
+        k = L.rope(k, positions, cfg.rope_theta)   # RoPE by true position, then cache
+        kc = jax.lax.dynamic_update_slice_in_dim(
+            state["k"], k.astype(state["k"].dtype), slot, axis=2)
+        vc = jax.lax.dynamic_update_slice_in_dim(
+            state["v"], v.astype(state["v"].dtype), slot, axis=2)
+        # mask slots beyond what has been written (ring-full => pos >= len-1
+        # => nothing masked; slot order vs time order is irrelevant since
+        # RoPE is content-applied)
+        o = L.decode_attention(q, kc, vc, jnp.minimum(pos, cache_len - 1))
+        a = jnp.einsum("bhlk,hkd->bld", o.astype(jnp.bfloat16),
+                       p["attn"]["wo"].astype(jnp.bfloat16)).astype(x.dtype)
+        x = x + a
+        st = {"k": kc, "v": vc}
+        if "xattn" in p and cross_ctx is not None:
+            hx = L.rms_norm(x, p["lnx"], cfg.norm_eps)
+            x = x + _cross_attention(p["xattn"], hx, cross_ctx, cfg, mode)
+        if "moe" in p:
+            h2 = L.rms_norm(x, p["ln2"], cfg.norm_eps)
+            mo, _ = M.moe_block(p["moe"], h2, cfg)
+            if "mlp" in p:
+                mo = mo + L.mlp(p["mlp"], h2)
+            x = x + mo
+        elif "mlp" in p:
+            x = x + L.mlp(p["mlp"], L.rms_norm(x, p["ln2"], cfg.norm_eps))
+        return x, st
+    elif kind == "mlstm":
+        y, st = R.mlstm_step(p["mix"], h, state)
+        return x + y, st
+    elif kind == "slstm":
+        y, st = R.slstm_step(p["mix"], h, state)
+        return x + y, st
+    elif kind == "rglru":
+        y, st = R.rglru_step(p["mix"], h, state)
+        x = x + y
+        if "mlp" in p:
+            x = x + L.mlp(p["mlp"], L.rms_norm(x, p["ln2"], cfg.norm_eps))
+        return x, st
+    raise ValueError(kind)
+
+
+# ===========================================================================
+# Whole-model init
+# ===========================================================================
+def _pattern(cfg: ModelConfig) -> tuple[list[str], int, int]:
+    """(types-per-super-layer, n_super, n_remainder).
+
+    The effective period is lcm(pattern, cross_attn_every) so every scan slot
+    has a homogeneous parameter structure (slots with a cross-attn sublayer
+    differ structurally from those without)."""
+    import math
+    period = len(cfg.layer_pattern)
+    if cfg.cross_attn_every:
+        period = math.lcm(period, cfg.cross_attn_every)
+    types = [cfg.layer_pattern[i % len(cfg.layer_pattern)]
+             for i in range(period)]
+    n_super, rem = divmod(cfg.n_layers, period)
+    return types, n_super, rem
+
+
+def _layer_has_cross(cfg: ModelConfig, layer_idx: int) -> bool:
+    if cfg.is_encdec:
+        return True                           # every decoder layer cross-attends
+    if cfg.cross_attn_every:
+        return (layer_idx + 1) % cfg.cross_attn_every == 0
+    return False
+
+
+def init_model(key, cfg: ModelConfig):
+    """Returns a Param tree (values + logical axes; see layers.split_params)."""
+    keys = jax.random.split(key, cfg.n_layers + cfg.enc_layers + 4)
+    types, n_super, rem = _pattern(cfg)
+    period = len(types)
+
+    def block_at(i):
+        return _init_block(keys[i], cfg, types[i % period],
+                           with_cross=_layer_has_cross(cfg, i))
+
+    # stack scan groups: slot j holds layers j, j+period, ... (n_super of them)
+    def stack(trees):
+        return jax.tree.map(
+            lambda *xs: L.Param(jnp.stack([x.value for x in xs]),
+                                (None,) + xs[0].axes),
+            *trees, is_leaf=lambda x: isinstance(x, L.Param))
+
+    params: dict[str, Any] = {
+        "embed": L.init_embed(keys[-1], cfg),
+        "final_norm": L.init_rms(keys[-2], cfg.d_model),
+    }
+    if n_super > 0:
+        params["blocks"] = {
+            f"slot{j}": stack([block_at(s * period + j) for s in range(n_super)])
+            for j in range(period)}
+    if rem:
+        params["rem"] = {f"layer{i}": block_at(n_super * period + i)
+                         for i in range(rem)}
+
+    if cfg.is_encdec:
+        enc_keys = jax.random.split(keys[-3], cfg.enc_layers)
+        params["enc"] = {
+            "blocks": stack([_init_block(enc_keys[i], cfg, "attn")
+                             for i in range(cfg.enc_layers)]),
+            "final_norm": L.init_rms(keys[-4], cfg.d_model),
+        }
+    if cfg.n_context_tokens:
+        # modality frontend STUB: one projection from precomputed embeddings
+        params["frontend"] = {
+            "proj": L.param(keys[-4], (cfg.d_model, cfg.d_model),
+                            ("embed", "embed2"), scale=cfg.d_model ** -0.5)}
+    return params
+
+
+# ===========================================================================
+# Forward (train / prefill)
+# ===========================================================================
+def _run_stack(params, x, positions, cfg, *, causal=True, cross_ctx=None,
+               mode="auto", remat=True, unroll=False):
+    types, n_super, rem = _pattern(cfg)
+    period = len(types)
+
+    def super_layer(x, slot_params):
+        for j, t in enumerate(types):
+            x = _apply_block(slot_params[f"slot{j}"], x, positions, cfg, t,
+                             causal=causal, cross_ctx=cross_ctx, mode=mode)
+            # optional sequence-sharded residual stream (perf hillclimb):
+            # [B, S, D] constrained so S maps onto the model axis between
+            # blocks; GSPMD inserts the KV all-gather inside attention and
+            # everything elementwise runs 1/tp-th per chip.
+            x = perf.constrain(x, "act_spec")
+        return x
+
+    if remat:
+        # perf knob: "nothing" recomputes the whole super-layer in backward
+        # (saves only block inputs) — right trade when memory traffic
+        # dominates compute by orders of magnitude (xlstm-350m: 850x).
+        if perf.get("remat_policy") == "nothing":
+            super_layer = jax.checkpoint(super_layer)
+        else:
+            super_layer = jax.checkpoint(
+                super_layer,
+                policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+
+    if n_super > 0:
+        def body(carry, slot_params):
+            return super_layer(carry, slot_params), None
+        # unroll=True is used by the roofline calibration pass: XLA's
+        # cost_analysis counts While bodies ONCE regardless of trip count,
+        # so calibration lowers shallow unrolled variants instead.
+        x, _ = jax.lax.scan(body, x, params["blocks"],
+                            unroll=n_super if unroll else 1)
+    for i in range(rem):
+        x = _apply_block(params["rem"][f"layer{i}"], x, positions, cfg,
+                         types[i % period], causal=causal,
+                         cross_ctx=cross_ctx, mode=mode)
+    return x
+
+
+def _frontend(params, cfg, ctx_embeddings):
+    """STUB frontend: project precomputed patch/frame embeddings."""
+    return L.dense(ctx_embeddings, params["frontend"]["proj"])
+
+
+def forward(params, batch, cfg: ModelConfig, *, mode="auto", remat=True,
+            unroll=False):
+    """batch: {tokens [B,S], (context [B,T,D] for vlm/audio)} -> logits."""
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    x = L.embed(params["embed"], tokens)
+    x = perf.constrain(x, "act_spec")
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+
+    cross_ctx = None
+    if cfg.is_encdec:
+        enc_in = _frontend(params, cfg, batch["context"])
+        enc_pos = jnp.broadcast_to(
+            jnp.arange(enc_in.shape[1], dtype=jnp.int32), enc_in.shape[:2])
+        e = enc_in
+        def enc_body(carry, slot):
+            return _apply_block(slot, carry, enc_pos, cfg, "attn",
+                                causal=False, mode=mode), None
+        e, _ = jax.lax.scan(enc_body, e, params["enc"]["blocks"],
+                            unroll=cfg.enc_layers if unroll else 1)
+        cross_ctx = L.rms_norm(e, params["enc"]["final_norm"], cfg.norm_eps)
+    elif cfg.n_context_tokens:
+        cross_ctx = _frontend(params, cfg, batch["context"])
+
+    x = _run_stack(params, x, positions, cfg, causal=True,
+                   cross_ctx=cross_ctx, mode=mode, remat=remat, unroll=unroll)
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return L.lm_logits(params["embed"], x)
+
+
+def loss_fn(params, batch, cfg: ModelConfig, *, mode="auto", remat=True,
+            unroll=False):
+    logits = forward(params, batch, cfg, mode=mode, remat=remat, unroll=unroll)
+    return L.softmax_xent(logits, batch["labels"], batch.get("mask"))
+
+
+# ===========================================================================
+# Decode
+# ===========================================================================
+def init_decode_state(cfg: ModelConfig, batch: int, kv_len: int):
+    types, n_super, rem = _pattern(cfg)
+    period = len(types)
+
+    def stack_states(sts):
+        return jax.tree.map(lambda *xs: jnp.stack(xs), *sts)
+
+    state: dict[str, Any] = {}
+    if n_super > 0:
+        state["blocks"] = {
+            f"slot{j}": stack_states(
+                [_init_block_state(cfg, types[j], batch, kv_len)
+                 for _ in range(n_super)])
+            for j in range(period)}
+    if rem:
+        state["rem"] = {
+            f"layer{i}": _init_block_state(cfg, types[i % period], batch, kv_len)
+            for i in range(rem)}
+    return state
+
+
+def decode_step(params, state, tokens, pos, cfg: ModelConfig, *,
+                cross_ctx=None, mode="auto", unroll=False):
+    """One decode step: tokens [B, 1], pos scalar -> (logits [B,1,V], state')."""
+    types, n_super, rem = _pattern(cfg)
+    period = len(types)
+    x = L.embed(params["embed"], tokens)
+
+    if cfg.is_encdec or cfg.n_context_tokens:
+        assert cross_ctx is not None, "decode for enc-dec/vlm needs context"
+
+    new_state: dict[str, Any] = {}
+    if n_super > 0:
+        def body(carry, inp):
+            slot_params, slot_state = inp
+            x_ = carry
+            out_states = {}
+            for j, t in enumerate(types):
+                x_, st = _apply_block_decode(
+                    slot_params[f"slot{j}"], x_, pos,
+                    slot_state[f"slot{j}"], cfg, t,
+                    cross_ctx=cross_ctx, mode=mode)
+                out_states[f"slot{j}"] = st
+            return x_, out_states
+        x, scanned_states = jax.lax.scan(
+            body, x, (params["blocks"], state["blocks"]),
+            unroll=n_super if unroll else 1)
+        new_state["blocks"] = scanned_states
+    if rem:
+        new_state["rem"] = {}
+        for i in range(rem):
+            x, st = _apply_block_decode(
+                params["rem"][f"layer{i}"], x, pos,
+                state["rem"][f"layer{i}"], cfg, types[i % period],
+                cross_ctx=cross_ctx, mode=mode)
+            new_state["rem"][f"layer{i}"] = st
+
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return L.lm_logits(params["embed"], x), new_state

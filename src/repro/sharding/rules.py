@@ -1,0 +1,157 @@
+"""Logical-axis -> mesh-axis sharding rules (t5x/MaxText style).
+
+Model code tags every parameter dimension with a logical axis name
+(layers.param); this module turns those tags into PartitionSpecs for a given
+strategy.  Rules apply in priority order, are *shape-aware* (an assignment
+must evenly divide the dim — jit rejects ragged input shardings), never
+reuse a mesh axis within one tensor, and fall through to the next rule when
+a dim doesn't divide (e.g. arctic's 56 heads on a 16-way model axis fall
+back to sharding head_dim=128 instead — full TP preserved, no padding).
+
+Strategies:
+  tp        tensor parallel on "model"; replicated over data/pod.
+  tp_zero1  tp + optimizer state sharded over "data" (ZeRO-1): the moment
+            update runs on 1/data-th of each tensor; GSPMD inserts the
+            reduce-scatter (grads) / all-gather (updated params) pair.
+  tp_fsdp   tp + parameters sharded over "data" too (ZeRO-3/FSDP): required
+            for arctic-480b-class models whose state cannot fit replicated.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+# (logical axis, mesh axis) in priority order; later rules are fallbacks.
+_TP_RULES: list[tuple[str, str]] = [
+    ("vocab", "model"),
+    ("heads", "model"),
+    ("kv_heads", "model"),
+    ("expert", "model"),
+    ("mlp", "model"),
+    ("embed2", "model"),
+    ("mlp2", "model"),
+    ("head_dim2", "model"),
+    ("head_dim", "model"),   # fallback: heads/kv_heads didn't divide
+    ("embed", "model"),      # last resort (e.g. odd vocab sizes: granite 49155)
+]
+_FSDP_RULES: list[tuple[str, str]] = [
+    ("embed", "data"),
+    ("mlp", "data"),
+    ("vocab", "data"),
+    ("head_dim", "data"),
+]
+
+
+# Attention projections (tensors tagged with heads/kv_heads) may ONLY take
+# model-parallelism through their head axes.  Falling back to head_dim or
+# embed shards a CONTRACTION dim of Q.K^T / the QKV projections, which makes
+# GSPMD all-reduce O(S^2) attention logits every layer — measured at
+# 5.4e14 bytes/chip/step on arctic-480b (56 heads, 16-way model axis) before
+# this guard existed.  Head-indivisible archs now run attention model-
+# replicated (FSDP still shards the *storage* over "data").
+_HEAD_MARKERS = frozenset({"heads", "kv_heads"})
+_HEAD_SAFE_LOGICAL = frozenset({"heads", "kv_heads", "expert", "vocab"})
+
+
+def _spec_for(axes: tuple, shape: tuple, rules, sizes: dict[str, int]) -> P:
+    out: list[Any] = [None] * len(axes)
+    used_mesh: set[str] = set()
+    is_attn = bool(_HEAD_MARKERS & set(a for a in axes if a))
+    for logical, mesh_axis in rules:
+        if mesh_axis in used_mesh or mesh_axis not in sizes:
+            continue
+        if (is_attn and mesh_axis == "model"
+                and logical not in _HEAD_SAFE_LOGICAL):
+            continue
+        for i, ax in enumerate(axes):
+            if (ax == logical and out[i] is None
+                    and shape[i] % sizes[mesh_axis] == 0
+                    and shape[i] >= sizes[mesh_axis]):
+                out[i] = mesh_axis
+                used_mesh.add(mesh_axis)
+                break
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+def _is_axes(x) -> bool:
+    return isinstance(x, tuple) and all(a is None or isinstance(a, str)
+                                        for a in x)
+
+
+def param_specs(axes_tree: Any, shapes_tree: Any, strategy: str,
+                sizes: dict[str, int]) -> Any:
+    """axes_tree: logical-axes tuples (from split_params); shapes_tree: a
+    parallel tree of ShapeDtypeStructs/arrays."""
+    rules = list(_TP_RULES)
+    if strategy == "tp_fsdp":
+        # FSDP rules run FIRST on the data axis, TP rules then pick the
+        # model axis; both can shard the same tensor on different dims.
+        rules = _FSDP_RULES + rules
+    return jax.tree.map(
+        lambda axes, leaf: _spec_for(axes, leaf.shape, rules, sizes),
+        axes_tree, shapes_tree, is_leaf=_is_axes)
+
+
+def opt_state_specs(pspecs: Any, shapes_tree: Any, strategy: str,
+                    sizes: dict[str, int]) -> Any:
+    """AdamW moment specs.  ZeRO-1: additionally shard the largest
+    data-divisible unsharded dim over "data"."""
+    if strategy != "tp_zero1" or "data" not in sizes:
+        return pspecs
+    d = sizes["data"]
+
+    def zero1(spec: P, leaf) -> P:
+        shape = leaf.shape
+        parts = list(spec) + [None] * (len(shape) - len(spec))
+        if any(q == "data" or (isinstance(q, tuple) and "data" in q)
+               for q in parts):
+            return spec
+        best, best_size = -1, 0
+        for i, (q, s) in enumerate(zip(parts, shape)):
+            if q is None and s % d == 0 and s >= d and s > best_size:
+                best, best_size = i, s
+        if best < 0:
+            return spec
+        parts[best] = "data"
+        return P(*parts)
+
+    return jax.tree.map(zero1, pspecs, shapes_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def default_strategy(cfg) -> str:
+    """Big models shard parameters; the rest shard optimizer state only."""
+    approx_params = cfg.n_layers * (
+        4 * cfg.d_model * cfg.n_heads * cfg.head_dim
+        + 3 * cfg.d_model * cfg.d_ff
+        + 3 * cfg.n_experts * cfg.d_model * cfg.d_ff_expert)
+    return "tp_fsdp" if approx_params > 2e10 else "tp_zero1"
+
+
+def decode_state_spec_fn(sizes: dict[str, int]):
+    """Specs for decode-state leaves [B, ...]: batch over (pod,data) when
+    divisible, then the first model-divisible feature dim over "model"."""
+    dp_axes = tuple(a for a in ("pod", "data") if a in sizes)
+    dp = int(np.prod([sizes[a] for a in dp_axes])) if dp_axes else 1
+    tp = sizes.get("model", 1)
+
+    def spec(leaf) -> P:
+        parts: list[Any] = [None] * leaf.ndim
+        start = 0
+        if leaf.ndim >= 1 and leaf.shape[0] % dp == 0 and leaf.shape[0] >= dp:
+            parts[0] = dp_axes if len(dp_axes) > 1 else dp_axes[0]
+            start = 1
+        for i in range(start, leaf.ndim):
+            if leaf.shape[i] % tp == 0 and leaf.shape[i] >= tp:
+                parts[i] = "model"
+                break
+        while parts and parts[-1] is None:
+            parts.pop()
+        return P(*parts)
+
+    return spec

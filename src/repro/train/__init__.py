@@ -1,0 +1,2 @@
+from . import optimizer, checkpoint, fault
+__all__ = ["optimizer", "checkpoint", "fault"]

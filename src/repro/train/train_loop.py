@@ -1,0 +1,137 @@
+"""Training loop: jitted step + checkpointing + fault-tolerance runtime.
+
+Composes every substrate piece: sharded params/optimizer (rules.py), AdamW,
+data pipeline with prefetch, async checkpointer, preemption guard, and the
+straggler detector.  Runs identically on 1 CPU device (examples, tests) and
+on a production mesh (launch/train.py passes one in).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import logging
+import time
+from typing import Any, Callable
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs.base import ModelConfig
+from ..models import transformer as T
+from ..models import layers as L
+from ..sharding import rules
+from . import optimizer as opt_mod
+from .checkpoint import Checkpointer
+from .fault import PreemptionGuard, StragglerDetector, StepTimer
+
+log = logging.getLogger("repro.train")
+
+
+@dataclasses.dataclass
+class TrainConfig:
+    steps: int = 100
+    log_every: int = 10
+    checkpoint_every: int = 50
+    checkpoint_dir: str | None = None
+    seed: int = 0
+    strategy: str | None = None
+    kernel_mode: str = "auto"
+    opt: opt_mod.AdamWConfig = dataclasses.field(
+        default_factory=opt_mod.AdamWConfig)
+
+
+def make_train_step(cfg: ModelConfig, ocfg: opt_mod.AdamWConfig,
+                    kernel_mode: str = "auto"):
+    def train_step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(
+            functools.partial(T.loss_fn, cfg=cfg, mode=kernel_mode))(
+                params, batch)
+        params, opt_state, metrics = opt_mod.update(
+            ocfg, params, grads, opt_state)
+        return params, opt_state, {"loss": loss, **metrics}
+    return train_step
+
+
+def init_sharded(cfg: ModelConfig, tcfg: TrainConfig, mesh=None):
+    """Init params + optimizer, placed per the sharding rules when a mesh is
+    given.  Returns (params, opt_state, shardings dict)."""
+    key = jax.random.PRNGKey(tcfg.seed)
+    tagged = T.init_model(key, cfg)
+    params, axes_tree = L.split_params(tagged)
+    if mesh is None:
+        return params, opt_mod.init(params), None
+
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    strategy = tcfg.strategy or rules.default_strategy(cfg)
+    pspecs = rules.param_specs(axes_tree, params, strategy, sizes)
+    oshard = rules.opt_state_specs(pspecs, params, strategy, sizes)
+    to_named = lambda tree, specs: jax.tree.map(
+        lambda x, sp: jax.device_put(x, NamedSharding(mesh, sp)), tree, specs)
+    params = to_named(params, pspecs)
+    opt_state = opt_mod.OptState(
+        m=to_named(jax.tree.map(jnp.zeros_like, params), oshard),
+        v=to_named(jax.tree.map(jnp.zeros_like, params), oshard),
+        step=jnp.zeros((), jnp.int32))
+    return params, opt_state, {"params": pspecs, "opt": oshard}
+
+
+def train(cfg: ModelConfig, data_iter, tcfg: TrainConfig, *, mesh=None,
+          restore: bool = True) -> dict:
+    """Run the loop; returns summary metrics.  Handles restart-from-latest
+    checkpoint, preemption checkpointing, and straggler logging."""
+    params, opt_state, _ = init_sharded(cfg, tcfg, mesh)
+    step_fn = jax.jit(make_train_step(cfg, tcfg.opt, tcfg.kernel_mode),
+                      donate_argnums=(0, 1))
+
+    ckpt = Checkpointer(tcfg.checkpoint_dir) if tcfg.checkpoint_dir else None
+    start_step = 0
+    if ckpt and restore and ckpt.latest_step() is not None:
+        s = ckpt.latest_step()
+        state = ckpt.restore(s, {"params": params, "opt": opt_state})
+        params, opt_state = state["params"], state["opt"]
+        start_step = s
+        log.info("restored checkpoint at step %d", s)
+
+    guard = PreemptionGuard()
+    detector = StragglerDetector(
+        on_straggler=lambda st, sec, mean: log.warning(
+            "straggler: step %d took %.3fs (mean %.3fs)", st, sec, mean))
+
+    losses = []
+    it = iter(data_iter)
+    t_start = time.perf_counter()
+    step = start_step
+    for step in range(start_step, tcfg.steps):
+        batch = {k: jnp.asarray(v) for k, v in next(it).items()}
+        with StepTimer() as timer:
+            params, opt_state, metrics = step_fn(params, opt_state, batch)
+            loss = float(metrics["loss"])   # sync point = step boundary
+        detector.observe(step, timer.seconds)
+        losses.append(loss)
+        if step % tcfg.log_every == 0:
+            log.info("step %d loss %.4f (%.3fs)", step, loss, timer.seconds)
+        if ckpt and (step + 1) % tcfg.checkpoint_every == 0:
+            ckpt.save(step + 1, {"params": params, "opt": opt_state})
+        if guard.requested:
+            log.warning("preemption requested: checkpointing at step %d", step + 1)
+            if ckpt:
+                ckpt.save(step + 1, {"params": params, "opt": opt_state},
+                          blocking=True)
+            break
+    if ckpt:
+        ckpt.save(tcfg.steps, {"params": params, "opt": opt_state},
+                  blocking=True)
+    guard.uninstall()
+    wall = time.perf_counter() - t_start
+    return {
+        "final_loss": losses[-1] if losses else float("nan"),
+        "first_loss": losses[0] if losses else float("nan"),
+        "losses": losses,
+        "steps": step + 1 - start_step,
+        "wall_seconds": wall,
+        "straggler_events": detector.events,
+        "params": params,
+        "opt_state": opt_state,
+    }

@@ -1,0 +1,2 @@
+from . import hlo
+__all__ = ["hlo"]

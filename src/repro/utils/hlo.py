@@ -1,0 +1,337 @@
+"""HLO text analysis: collective-byte accounting for the roofline.
+
+`compiled.as_text()` is the per-device SPMD program, so shapes on collective
+ops are already per-chip.  We sum the output bytes of every collective
+instruction; methodology notes:
+  * all-gather / all-to-all: output bytes ≈ bytes received per chip — the
+    quantity that crosses links into this chip;
+  * reduce-scatter: output is the reduced shard; bytes moved per chip is
+    (n-1)/n · input ≈ input for large n — we use input bytes when parseable,
+    else output;
+  * all-reduce (ring) moves ≈ 2·bytes per chip; we count 2× output;
+  * collective-permute: output bytes.
+This is a consistent, reproducible estimator — the roofline compares terms
+across configurations, not against a wire-level simulator.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """Total bytes of all array shapes in a (possibly tuple) shape string."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _computations(hlo_text: str) -> dict[str, str]:
+    """Split module text into computation bodies keyed by name."""
+    comps: dict[str, str] = {}
+    name = None
+    buf: list[str] = []
+    for line in hlo_text.splitlines():
+        m = re.match(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->\s*.*\{\s*$",
+                     line)
+        if m:
+            name = m.group(1)
+            buf = []
+            continue
+        if line.startswith("}") and name is not None:
+            comps[name] = "\n".join(buf)
+            name = None
+            continue
+        if name is not None:
+            buf.append(line)
+    return comps
+
+
+def _multipliers(comps: dict[str, str], entry: str | None = None) -> dict[str, float]:
+    """Execution-count multiplier per computation.
+
+    While bodies execute `known_trip_count` times (jax scan/while emit this
+    backend_config); call/conditional/reduce sub-computations inherit the
+    caller's multiplier.  Without this, everything inside a
+    scan-over-layers body is undercounted by ~n_layers — the single largest
+    error source in naive HLO roofline accounting."""
+    mult: dict[str, float] = defaultdict(float)
+    # entry computations: ones nothing references
+    referenced = set()
+    refs: dict[str, list[tuple[str, float]]] = defaultdict(list)
+    for name, body in comps.items():
+        for m in re.finditer(r"body=%?([\w.\-]+)", body):
+            # trip count lives on the same instruction line
+            line_start = body.rfind("\n", 0, m.start()) + 1
+            line_end = body.find("\n", m.start())
+            line = body[line_start:line_end if line_end >= 0 else None]
+            tc = re.search(r'known_trip_count":\{"n":"(\d+)"', line)
+            n = float(tc.group(1)) if tc else 1.0
+            refs[name].append((m.group(1), n))
+            referenced.add(m.group(1))
+        for pat in (r"condition=%?([\w.\-]+)", r"to_apply=%?([\w.\-]+)",
+                    r"calls=%?([\w.\-]+)",
+                    r"branch_computations=\{([^}]*)\}"):
+            for m in re.finditer(pat, body):
+                for target in re.split(r",\s*", m.group(1)):
+                    target = target.strip().lstrip("%")
+                    if target:
+                        refs[name].append((target, 1.0))
+                        referenced.add(target)
+
+    roots = [n for n in comps if n not in referenced]
+    for r in roots:
+        mult[r] = 1.0
+    # propagate (computations form a DAG; iterate to fixed point)
+    for _ in range(len(comps)):
+        changed = False
+        for caller, targets in refs.items():
+            if mult.get(caller, 0.0) <= 0:
+                continue
+            for target, w in targets:
+                want = mult[caller] * w
+                if mult.get(target, 0.0) < want:
+                    mult[target] = want
+                    changed = True
+        if not changed:
+            break
+    return mult
+
+
+def collective_bytes(hlo_text: str) -> dict[str, int]:
+    """Per-collective-kind byte totals (per chip), trip-count corrected."""
+    comps = _computations(hlo_text)
+    mult = _multipliers(comps)
+    out: dict[str, float] = defaultdict(float)
+    counts: dict[str, float] = defaultdict(float)
+    for cname, body in comps.items():
+        k = mult.get(cname, 1.0)
+        for line in body.splitlines():
+            line = line.strip()
+            m = re.match(r"^(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(.+?)\s+([\w\-]+)\(",
+                         line)
+            if not m:
+                continue
+            shape_str, op = m.groups()
+            kind = None
+            for c in _COLLECTIVES:
+                if op == c or op.startswith(c + "-start"):
+                    kind = c
+                    break
+            if kind is None or op.endswith("-done"):
+                continue
+            nbytes = _shape_bytes(shape_str)
+            if kind == "all-reduce":
+                nbytes *= 2          # ring all-reduce moves ~2x per chip
+            out[kind] += nbytes * k
+            counts[kind + "_count"] += k
+    result = {kk: int(v) for kk, v in out.items()}
+    result.update({kk: int(v) for kk, v in counts.items()})
+    result["total_bytes"] = int(sum(out.values()))
+    return result
+
+
+def while_trip_counts(hlo_text: str) -> list[int]:
+    return [int(n) for n in
+            re.findall(r'known_trip_count":\{"n":"(\d+)"', hlo_text)]
+
+
+def op_census(hlo_text: str, ops=("fusion", "while", "custom-call",
+                                  "convolution", "dot")) -> dict[str, int]:
+    """Rough op histogram — used to spot remat recompute & layout thrash."""
+    counts: dict[str, int] = defaultdict(int)
+    for line in hlo_text.splitlines():
+        m = re.match(r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*.+?\s+([\w\-]+)\(",
+                     line)
+        if m:
+            op = m.group(1)
+            for o in ops:
+                if op.startswith(o):
+                    counts[o] += 1
+    return dict(counts)
+
+
+# ---------------------------------------------------------------------------
+# Trip-count-corrected FLOP / memory-traffic accounting
+# ---------------------------------------------------------------------------
+# XLA's compiled cost_analysis() visits every computation ONCE — a While body
+# (jax scan-over-layers) is counted a single time regardless of trip count,
+# undercounting a 95-layer model's FLOPs by ~n_layers.  The functions below
+# re-derive both terms from the HLO text using the same execution-count
+# multipliers as the collective accounting above.
+
+_INSTR_RE = re.compile(
+    r"^(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.+?)\s+([\w\-]+)\((.*?)\)", )
+
+_MEM_SKIP_OPS = frozenset({
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "partition-id", "replica-id", "while", "conditional",
+    "call",
+})
+
+
+def _first_shape_dims(s: str):
+    m = _SHAPE_RE.search(s)
+    if not m:
+        return None
+    dims = [int(d) for d in m.group(2).split(",") if d] if m.group(2) else []
+    return dims
+
+
+def _parse_instructions(comps):
+    """[(comp, name, out_shape_str, op, operand_str, full_line)] + name->shape
+    maps (per computation, with a module-wide fallback)."""
+    instrs = []
+    shapes_by_comp: dict[str, dict[str, str]] = {}
+    shapes_global: dict[str, str] = {}
+    for cname, body in comps.items():
+        local: dict[str, str] = {}
+        for raw in body.splitlines():
+            line = raw.strip()
+            m = _INSTR_RE.match(line)
+            if not m:
+                # parameter decls in the header do not appear as body lines;
+                # but plain "%name = shape parameter(0)" lines do match above
+                continue
+            name, out_shape, op, operands = m.groups()
+            local[name] = out_shape
+            shapes_global.setdefault(name, out_shape)
+            instrs.append((cname, name, out_shape, op, operands, line))
+        shapes_by_comp[cname] = local
+    return instrs, shapes_by_comp, shapes_global
+
+
+def dot_flops(hlo_text: str) -> dict[str, float]:
+    """Matmul FLOPs per chip, execution-count corrected.
+
+    flops(dot) = 2 * prod(output dims) * prod(lhs contracting dim sizes);
+    batch dims appear once in the output so the formula covers batched dots.
+    """
+    comps = _computations(hlo_text)
+    mult = _multipliers(comps)
+    instrs, shapes_by_comp, shapes_global = _parse_instructions(comps)
+    total = 0.0
+    n_dots = 0.0
+    for cname, name, out_shape, op, operands, line in instrs:
+        if op != "dot":
+            continue
+        k = mult.get(cname, 1.0)
+        out_dims = _first_shape_dims(out_shape)
+        if out_dims is None:
+            continue
+        out_elems = 1
+        for d in out_dims:
+            out_elems *= d
+        cd = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", line)
+        cdims = [int(x) for x in cd.group(1).split(",") if x] if cd else []
+        lhs_tok = operands.split(",")[0].strip()
+        if "[" in lhs_tok:
+            lhs_dims = _first_shape_dims(lhs_tok)
+        else:
+            lhs_name = lhs_tok.lstrip("%")
+            shape_str = shapes_by_comp.get(cname, {}).get(
+                lhs_name, shapes_global.get(lhs_name, ""))
+            lhs_dims = _first_shape_dims(shape_str)
+        if lhs_dims is None:
+            continue
+        contraction = 1
+        for i in cdims:
+            if i < len(lhs_dims):
+                contraction *= lhs_dims[i]
+        total += 2.0 * out_elems * contraction * k
+        n_dots += k
+    return {"dot_flops": total, "dot_count": n_dots}
+
+
+def bytes_accessed(hlo_text: str) -> float:
+    """HBM traffic estimate per chip, execution-count corrected.
+
+    Per instruction: output bytes + operand bytes (operands resolved through
+    the name table).  Fusion BODIES are skipped — a fusion executes as one
+    kernel whose traffic is its operands + outputs, which the fusion
+    *instruction* line accounts for.  Scalar reducer bodies likewise.
+    """
+    comps = _computations(hlo_text)
+    mult = _multipliers(comps)
+    instrs, shapes_by_comp, shapes_global = _parse_instructions(comps)
+
+    # computations that execute inside another kernel
+    inner: set[str] = set()
+    for cname, name, out_shape, op, operands, line in instrs:
+        if op.startswith("fusion") or op in ("reduce", "reduce-window",
+                                             "scatter", "sort", "map",
+                                             "select-and-scatter",
+                                             "all-reduce", "reduce-scatter"):
+            for m in re.finditer(r"(?:calls|to_apply)=%?([\w.\-]+)", line):
+                inner.add(m.group(1))
+
+    total = 0.0
+    for cname, name, out_shape, op, operands, line in instrs:
+        if cname in inner or op in _MEM_SKIP_OPS:
+            continue
+        k = mult.get(cname, 1.0)
+        local = shapes_by_comp.get(cname, {})
+        opnd_bytes = []
+        for tok in operands.split(","):
+            tok = tok.strip()
+            if not tok:
+                continue
+            if "[" in tok:
+                opnd_bytes.append(_shape_bytes(tok))
+            elif tok.startswith("%"):
+                opnd_bytes.append(_shape_bytes(
+                    local.get(tok[1:], shapes_global.get(tok[1:], ""))))
+        nbytes = _instr_traffic(op, line, _shape_bytes(out_shape), opnd_bytes)
+        total += nbytes * k
+    return total
+
+
+def _instr_traffic(op: str, line: str, out_bytes: int,
+                   opnd_bytes: list) -> float:
+    """HBM traffic model for one instruction.
+
+    In-place slice updates are the big correction: XLA aliases
+    dynamic-update-slice (scan carries, stacked activations, KV caches), so
+    the op reads the UPDATE slice and writes a slice — NOT the whole
+    buffer.  Counting the full carried buffer every iteration overstates a
+    4096-step scan's traffic by ~4096x.  dynamic-slice likewise only reads
+    what it returns.  Detection covers both raw ops and fusions whose
+    op_name metadata marks them as slice updates.
+    """
+    is_dus = (op.startswith("dynamic-update-slice")
+              or "dynamic_update_slice" in line[:0])  # raw op form
+    is_ds = op.startswith("dynamic-slice")
+    if not (is_dus or is_ds) and op.startswith("fusion"):
+        m = _META_OPNAME_RE.search(line)
+        tail = m.group(1).rsplit("/", 1)[-1] if m else ""
+        is_dus = "dynamic_update_slice" in tail or "dynamic-update-slice" in tail
+        is_ds = tail.startswith("dynamic_slice") or tail.startswith("dynamic-slice")
+    if is_dus:
+        # multi-DUS fusions carry SEVERAL aliased buffers (scan saving k
+        # stacked tensors): traffic = the slice-sized operands only
+        big = max(opnd_bytes, default=0)
+        small = sum(b for b in opnd_bytes if b < 0.5 * big)
+        return 2.0 * max(small, 1)       # read updates (+aux), write slices
+    if is_ds:
+        return 2.0 * out_bytes           # read slice, write slice
+    return out_bytes + sum(opnd_bytes)
+
+
+_META_OPNAME_RE = re.compile(r'op_name="([^"]*)"')

@@ -1,0 +1,144 @@
+"""Subprocess helper: verify the SPMD executor path numerically.
+
+Run with XLA_FLAGS=--xla_force_host_platform_device_count=4 (the parent test
+sets this; it must be set before jax initialises, hence a subprocess — the
+main pytest process must keep seeing 1 device).
+
+Checks that the IDENTICAL engine code produces identical results through
+  * LocalExchange  (single device, exchange = axis transpose), and
+  * SpmdExchange   (shard_map over a 4-device 'parts' mesh,
+                    exchange = lax.all_to_all),
+for (a) one mrTriplets, (b) a full 10-superstep PageRank with incremental
+view maintenance, (c) a collection reduce_by_key.
+Prints OK on success.
+"""
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=4")
+
+import dataclasses
+import sys
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as PS
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core import Graph, SpmdExchange, algorithms as alg  # noqa: E402
+from repro.core.mrtriplets import mr_triplets  # noqa: E402
+from repro.core.pregel import _superstep  # noqa: E402
+from repro.data import rmat  # noqa: E402
+
+P = 4
+
+
+def shard_specs(tree):
+    return jax.tree.map(
+        lambda x: PS(*(("parts",) + (None,) * (x.ndim - 1))), tree)
+
+
+def main():
+    assert jax.device_count() >= P, jax.device_count()
+    gd = rmat(6, 4, seed=0)
+    g = Graph.from_edges(gd.src, gd.dst, num_partitions=P)
+    g = alg.attach_out_degree(g, kernel_mode="ref")
+    g = g.mapV(lambda vid, v: {**v, "pr": jnp.float32(1.0)})
+
+    def send(sv, ev, dv):
+        return {"m": sv["pr"] / sv["deg"] * ev["w"]}
+
+    def vprog(vid, v, msg):
+        return {**v, "pr": 0.15 + 0.85 * msg["m"]}
+
+    # ---- local reference --------------------------------------------------
+    vals_local, exists_local, _, _ = mr_triplets(g, send, "sum",
+                                                 kernel_mode="ref")
+
+    g_local = g
+    cache = None
+    for _ in range(10):
+        g_local, cache, _, _ = _superstep(
+            g_local, cache, vprog=vprog, send_msg=send, gather="sum",
+            default_msg={"m": jnp.float32(0.0)}, skip_stale=None,
+            changed_fn=None, kernel_mode="ref", use_cache=True)
+    pr_local = np.asarray(g_local.vdata["pr"])
+
+    # ---- SPMD run ----------------------------------------------------------
+    mesh = jax.make_mesh((P,), ("parts",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    g_spmd = dataclasses.replace(g, ex=SpmdExchange(p=P, axis_name="parts"),
+                                 host=None)
+    gspecs = shard_specs(g_spmd)
+
+    def one_mrt(gg):
+        vals, exists, _, _ = mr_triplets(gg, send, "sum", kernel_mode="ref")
+        return vals, exists
+
+    fn1 = jax.jit(jax.shard_map(one_mrt, mesh=mesh, in_specs=(gspecs,),
+                                out_specs=(shard_specs(vals_local),
+                                           PS("parts")),
+                                check_vma=False))
+    vals_spmd, exists_spmd = fn1(g_spmd)
+    np.testing.assert_allclose(np.asarray(vals_spmd["m"]),
+                               np.asarray(vals_local["m"]), rtol=1e-6)
+    np.testing.assert_array_equal(np.asarray(exists_spmd),
+                                  np.asarray(exists_local))
+
+    def pr10(gg):
+        out, cache = gg, None
+        for _ in range(10):
+            out, cache, live, _ = _superstep(
+                out, cache, vprog=vprog, send_msg=send, gather="sum",
+                default_msg={"m": jnp.float32(0.0)}, skip_stale=None,
+                changed_fn=None, kernel_mode="ref", use_cache=True)
+        return out.vdata["pr"]
+
+    fn2 = jax.jit(jax.shard_map(pr10, mesh=mesh, in_specs=(gspecs,),
+                                out_specs=PS("parts"), check_vma=False))
+    pr_spmd = np.asarray(fn2(g_spmd))
+    np.testing.assert_allclose(pr_spmd, pr_local, rtol=1e-5)
+
+    # ---- collection shuffle under SPMD -------------------------------------
+    from repro.core import Col
+    from repro.core.collections import shuffle_by_key
+
+    keys = np.arange(64, dtype=np.int32) % 13
+    vals = np.arange(64, dtype=np.float32)
+    col = Col.from_numpy(keys, {"v": vals}, p=P)
+    red_local, ovf_l = col.reduce_by_key("sum")
+    kl, vl = red_local.to_numpy()
+    want = {int(k): float(vals[keys == k].sum()) for k in set(keys.tolist())}
+    got_local = dict(zip(kl.tolist(), vl["v"].tolist()))
+    assert got_local == want and int(ovf_l) == 0
+
+    ex = SpmdExchange(p=P, axis_name="parts")
+
+    def red_spmd(k, v, m):
+        kk, vv, mm, ovf = shuffle_by_key(k, v, m, ex, capacity=128)
+        return kk, vv, mm, ovf
+
+    fn3 = jax.jit(jax.shard_map(
+        red_spmd, mesh=mesh,
+        in_specs=(PS("parts"), shard_specs(col.values), PS("parts")),
+        out_specs=(PS("parts"), shard_specs(col.values), PS("parts"), PS()),
+        check_vma=False))
+    kk, vv, mm, ovf = fn3(col.keys, col.values, col.mask)
+    assert int(ovf) == 0
+    # same multiset of (key, value) pairs routed to the same partitions
+    kk_l, vv_l, mm_l, _ = shuffle_by_key(col.keys, col.values, col.mask,
+                                         col.ex, 128)
+    m_np = np.asarray(mm)
+    got = sorted(zip(np.asarray(kk)[m_np].tolist(),
+                     np.asarray(vv["v"])[m_np].tolist()))
+    m_np_l = np.asarray(mm_l)
+    want = sorted(zip(np.asarray(kk_l)[m_np_l].tolist(),
+                      np.asarray(vv_l["v"])[m_np_l].tolist()))
+    assert got == want
+
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

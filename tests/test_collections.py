@@ -1,0 +1,111 @@
+"""Distributed collection semantics vs plain-python oracles (hypothesis)."""
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import Col, LocalExchange
+
+
+def kv_strategy(max_n=60):
+    return st.lists(
+        st.tuples(st.integers(0, 20), st.integers(-100, 100)),
+        min_size=1, max_size=max_n)
+
+
+def make_col(pairs, p=4):
+    ks = np.array([k for k, _ in pairs], np.int32)
+    vs = np.array([v for _, v in pairs], np.float32)
+    return Col.from_numpy(ks, {"x": vs}, p=p)
+
+
+@settings(max_examples=40, deadline=None)
+@given(kv_strategy())
+def test_count_and_roundtrip(pairs):
+    col = make_col(pairs)
+    assert int(col.count()) == len(pairs)
+    k, v = col.to_numpy()
+    assert sorted(k.tolist()) == sorted(kk for kk, _ in pairs)
+
+
+@settings(max_examples=40, deadline=None)
+@given(kv_strategy(), st.sampled_from(["sum", "min", "max"]))
+def test_reduce_by_key_matches_dict(pairs, op):
+    col = make_col(pairs)
+    red, ovf = col.reduce_by_key(op)
+    assert int(ovf) == 0
+    k, v = red.to_numpy()
+    got = dict(zip(k.tolist(), v["x"].tolist()))
+    want: dict = {}
+    fn = {"sum": lambda a, b: a + b, "min": min, "max": max}[op]
+    for kk, vv in pairs:
+        want[kk] = fn(want[kk], vv) if kk in want else vv
+    assert set(got) == set(want)
+    for kk in want:
+        np.testing.assert_allclose(got[kk], want[kk], rtol=1e-5)
+
+
+@settings(max_examples=30, deadline=None)
+@given(kv_strategy())
+def test_map_filter_local(pairs):
+    col = make_col(pairs)
+    doubled = col.map_values(lambda v: {"x": v["x"] * 2})
+    kept = doubled.filter(lambda k, v: v["x"] >= 0)
+    k, v = kept.to_numpy()
+    want = [(kk, vv * 2) for kk, vv in pairs if vv * 2 >= 0]
+    assert sorted(zip(k.tolist(), v["x"].tolist())) == sorted(
+        (kk, float(vv)) for kk, vv in want)
+
+
+@settings(max_examples=25, deadline=None)
+@given(kv_strategy(max_n=30), kv_strategy(max_n=30))
+def test_left_join_matches_dict(left, right):
+    # right side must be unique-keyed (vertex-property collections are)
+    rdict = {}
+    for k, v in right:
+        rdict[k] = v
+    rcol = make_col(list(rdict.items())) if rdict else make_col([(0, 0)])
+    if not rdict:
+        rdict = {0: 0}
+    lcol = make_col(left)
+    joined, ovf = lcol.left_join(rcol)
+    assert int(ovf) == 0
+    k, v = joined.to_numpy()
+    vl, vr, hit = v
+    for kk, lv, rv, h in zip(k.tolist(), vl["x"].tolist(),
+                             vr["x"].tolist(), hit.tolist()):
+        assert h == (kk in rdict)
+        if h:
+            np.testing.assert_allclose(rv, rdict[kk], rtol=1e-6)
+
+
+def test_generic_reduce_fn():
+    col = make_col([(1, 2), (1, 3), (2, 5)])
+    red, ovf = col.reduce_by_key(lambda a, b: a * b)  # custom monoid
+    k, v = red.to_numpy()
+    got = dict(zip(k.tolist(), v["x"].tolist()))
+    assert got[1] == 6.0 and got[2] == 5.0
+
+
+def test_overflow_reported():
+    pairs = [(7, i) for i in range(40)]   # all to one partition
+    col = make_col(pairs, p=4)
+    _, ovf = col.reduce_by_key("sum", capacity=4)
+    assert int(ovf) > 0
+
+
+def test_compact_preserves_content():
+    import numpy as np
+    keys = np.arange(40, dtype=np.int32)
+    vals = {"v": (keys * 2).astype(np.float32)}
+    col = Col.from_numpy(keys, vals, p=4)
+    red, ovf = col.reduce_by_key("sum")      # wide shuffle output
+    assert int(ovf) == 0
+    narrow, dropped = red.compact(16)
+    assert int(dropped) == 0
+    k1, v1 = red.to_numpy()
+    k2, v2 = narrow.to_numpy()
+    assert sorted(zip(k1.tolist(), v1["v"].tolist())) == \
+        sorted(zip(k2.tolist(), v2["v"].tolist()))
+    # over-tight width reports drops instead of silent loss
+    _, d2 = red.compact(1)
+    assert int(d2) > 0

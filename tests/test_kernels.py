@@ -1,0 +1,188 @@
+"""Per-kernel shape/dtype sweeps: pallas interpret mode vs ref.py oracles."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.segment_sum import segment_sum
+from repro.kernels import spmv as spmv_mod
+from repro.kernels.flash_attention import flash_attention
+
+RNG = np.random.default_rng(0)
+
+
+# ---------------------------------------------------------------- segment_sum
+@pytest.mark.parametrize("e,v,d", [(100, 30, 1), (1000, 300, 16),
+                                   (513, 128, 8), (8, 4, 4), (2048, 64, 128)])
+@pytest.mark.parametrize("dtype", [np.float32, jnp.bfloat16])
+def test_segment_sum_sweep(e, v, d, dtype):
+    ids = np.sort(RNG.integers(0, v, e)).astype(np.int32)
+    msgs = RNG.normal(size=(e, d)).astype(dtype)
+    out = segment_sum(jnp.asarray(msgs), jnp.asarray(ids), v,
+                      edge_block=128, vertex_block=128, interpret=True)
+    want = ref.segment_sum(jnp.asarray(msgs), jnp.asarray(ids), v)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=2e-2 if dtype == jnp.bfloat16 else 1e-5,
+                               atol=1e-2 if dtype == jnp.bfloat16 else 1e-5)
+
+
+def test_segment_sum_unsorted_and_oob():
+    # unsorted ids + padding ids >= V must be dropped, not crash
+    ids = RNG.permutation(np.concatenate(
+        [RNG.integers(0, 20, 50), np.full(14, 99)])).astype(np.int32)
+    msgs = RNG.normal(size=(64, 4)).astype(np.float32)
+    out = segment_sum(jnp.asarray(msgs), jnp.asarray(ids), 20,
+                      edge_block=16, vertex_block=16, interpret=True)
+    want = ref.segment_sum(jnp.asarray(msgs), jnp.asarray(ids), 20)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), rtol=1e-5)
+
+
+def test_segment_sum_empty_segments():
+    ids = np.full(32, 7, np.int32)
+    msgs = np.ones((32, 2), np.float32)
+    out = segment_sum(jnp.asarray(msgs), jnp.asarray(ids), 16,
+                      edge_block=8, vertex_block=8, interpret=True)
+    assert float(out[7, 0]) == 32.0
+    assert float(np.abs(np.asarray(out)).sum()) == 64.0
+
+
+# ----------------------------------------------------------------------- spmv
+@pytest.mark.parametrize("e,v,d,eb,vb", [
+    (500, 100, 1, 128, 64), (2000, 500, 8, 256, 128), (64, 16, 4, 32, 16)])
+def test_spmv_sweep(e, v, d, eb, vb):
+    src = RNG.integers(0, v, e).astype(np.int32)
+    dst = RNG.integers(0, v, e).astype(np.int32)
+    mask = RNG.random(e) > 0.15
+    w = (RNG.normal(size=e) * mask).astype(np.float32)
+    x = RNG.normal(size=(v, d)).astype(np.float32)
+    tiles = spmv_mod.build_tiles(src, dst, mask, v, eb=eb, vb=vb)
+    out = spmv_mod.spmv(
+        jnp.asarray(x), jnp.asarray(w), jnp.asarray(src), jnp.asarray(dst),
+        jnp.asarray(tiles["perm"]), jnp.asarray(tiles["chunk_dst"]),
+        jnp.asarray(tiles["chunk_src"]), None, v, eb=eb, vb=vb,
+        interpret=True)
+    want = ref.fused_gather_segment_sum(
+        jnp.asarray(x), jnp.asarray(w), jnp.asarray(src), jnp.asarray(dst), v)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_spmv_active_block_skip():
+    """skipStale at block level: stale source blocks contribute nothing."""
+    v, e = 128, 400
+    src = RNG.integers(0, v, e).astype(np.int32)
+    dst = RNG.integers(0, v, e).astype(np.int32)
+    w = np.ones(e, np.float32)
+    x = RNG.normal(size=(v, 2)).astype(np.float32)
+    tiles = spmv_mod.build_tiles(src, dst, np.ones(e, bool), v, eb=64, vb=32)
+    n_src_blocks = -(-v // 32)
+    active = np.zeros(n_src_blocks, bool)
+    active[0] = True   # only sources in block 0 are fresh
+    out = spmv_mod.spmv(
+        jnp.asarray(x), jnp.asarray(w), jnp.asarray(src), jnp.asarray(dst),
+        jnp.asarray(tiles["perm"]), jnp.asarray(tiles["chunk_dst"]),
+        jnp.asarray(tiles["chunk_src"]), jnp.asarray(active), v,
+        eb=64, vb=32, interpret=True)
+    w_masked = w * (src < 32)
+    want = ref.fused_gather_segment_sum(
+        jnp.asarray(x), jnp.asarray(w_masked), jnp.asarray(src),
+        jnp.asarray(dst), v)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), rtol=1e-4)
+
+
+# ------------------------------------------------------------------ flash
+@pytest.mark.parametrize("b,hq,hkv,lq,lk,dh,causal,off", [
+    (2, 4, 2, 64, 64, 32, True, 0),
+    (1, 8, 1, 100, 100, 64, True, 0),
+    (1, 4, 4, 1, 300, 32, True, 299),
+    (2, 2, 2, 48, 96, 16, True, 48),
+    (1, 2, 1, 64, 64, 32, False, 0),
+    (1, 2, 2, 40, 72, 128, False, 0),
+])
+@pytest.mark.parametrize("dtype", [np.float32, jnp.bfloat16])
+def test_flash_sweep(b, hq, hkv, lq, lk, dh, causal, off, dtype):
+    q = RNG.normal(size=(b, hq, lq, dh)).astype(dtype)
+    k = RNG.normal(size=(b, hkv, lk, dh)).astype(dtype)
+    v = RNG.normal(size=(b, hkv, lk, dh)).astype(dtype)
+    out = flash_attention(jnp.asarray(q), jnp.asarray(k), jnp.asarray(v),
+                          causal=causal, kv_offset=off,
+                          block_q=32, block_kv=32, interpret=True)
+    want = ref.flash_attention(jnp.asarray(q), jnp.asarray(k),
+                               jnp.asarray(v), causal=causal, kv_offset=off)
+    tol = 3e-2 if dtype == jnp.bfloat16 else 3e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_flash_block_sizes_agree():
+    q = RNG.normal(size=(1, 2, 128, 32)).astype(np.float32)
+    k = RNG.normal(size=(1, 2, 128, 32)).astype(np.float32)
+    v = RNG.normal(size=(1, 2, 128, 32)).astype(np.float32)
+    outs = [np.asarray(flash_attention(
+        jnp.asarray(q), jnp.asarray(k), jnp.asarray(v), causal=True,
+        block_q=bq, block_kv=bk, interpret=True))
+        for bq, bk in ((16, 16), (32, 64), (128, 128))]
+    for o in outs[1:]:
+        np.testing.assert_allclose(outs[0], o, rtol=2e-5, atol=2e-5)
+
+
+# ------------------------------------------------------- chunked (jnp flash)
+@pytest.mark.parametrize("b,hq,hkv,lq,lk,dh,causal,off", [
+    (2, 4, 2, 64, 64, 32, True, 0),
+    (1, 8, 1, 100, 300, 64, True, 200),
+    (1, 2, 2, 48, 96, 16, False, 0),
+    (2, 2, 1, 1, 257, 32, True, 256),
+])
+def test_chunked_flash_matches_dense(b, hq, hkv, lq, lk, dh, causal, off):
+    q = RNG.normal(size=(b, hq, lq, dh)).astype(np.float32)
+    k = RNG.normal(size=(b, hkv, lk, dh)).astype(np.float32)
+    v = RNG.normal(size=(b, hkv, lk, dh)).astype(np.float32)
+    got = ref.flash_attention_chunked(jnp.asarray(q), jnp.asarray(k),
+                                      jnp.asarray(v), causal=causal,
+                                      kv_offset=off, block_kv=32)
+    want = ref.flash_attention(jnp.asarray(q), jnp.asarray(k), jnp.asarray(v),
+                               causal=causal, kv_offset=off)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+# ----------------------------------------------------------------- mLSTM
+@pytest.mark.parametrize("b,h,l,dh,chunk", [
+    (1, 2, 64, 16, 16),
+    (2, 1, 128, 32, 32),
+    (1, 4, 96, 8, 48),
+    (2, 2, 32, 64, 32),     # single chunk
+])
+def test_mlstm_kernel_matches_ref(b, h, l, dh, chunk):
+    from repro.kernels.mlstm import mlstm_chunked as kern
+    q = RNG.normal(size=(b, h, l, dh)).astype(np.float32) * 0.5
+    k = RNG.normal(size=(b, h, l, dh)).astype(np.float32) * 0.5
+    v = RNG.normal(size=(b, h, l, dh)).astype(np.float32)
+    logi = np.clip(RNG.normal(size=(b, h, l)), -8, 4).astype(np.float32)
+    logf = (-np.abs(RNG.normal(size=(b, h, l))) * 0.2).astype(np.float32)
+    got = kern(jnp.asarray(q), jnp.asarray(k), jnp.asarray(v),
+               jnp.asarray(logi), jnp.asarray(logf), chunk=chunk,
+               interpret=True)
+    want = ref.mlstm_chunked(jnp.asarray(q), jnp.asarray(k), jnp.asarray(v),
+                             jnp.asarray(logi), jnp.asarray(logf),
+                             chunk=chunk)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_mlstm_kernel_chunk_sizes_agree():
+    from repro.kernels.mlstm import mlstm_chunked as kern
+    b, h, l, dh = 1, 2, 128, 16
+    q = RNG.normal(size=(b, h, l, dh)).astype(np.float32) * 0.3
+    k = RNG.normal(size=(b, h, l, dh)).astype(np.float32) * 0.3
+    v = RNG.normal(size=(b, h, l, dh)).astype(np.float32)
+    logi = np.zeros((b, h, l), np.float32)
+    logf = np.full((b, h, l), -0.1, np.float32)
+    outs = [np.asarray(kern(jnp.asarray(q), jnp.asarray(k), jnp.asarray(v),
+                            jnp.asarray(logi), jnp.asarray(logf),
+                            chunk=c, interpret=True)) for c in (16, 64, 128)]
+    for o in outs[1:]:
+        np.testing.assert_allclose(outs[0], o, rtol=1e-3, atol=1e-3)

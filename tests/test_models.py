@@ -1,0 +1,206 @@
+"""Per-arch smoke tests (reduced configs) + model-layer unit tests."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+import repro.configs as C
+from repro.configs.base import SHAPES, shape_applicable
+from repro.models import (init_model, forward, loss_fn, split_params,
+                          param_count, init_decode_state, decode_step)
+from repro.models import layers as L
+from repro.models import recurrent as R
+from repro.models.moe import moe_block, init_moe
+
+KEY = jax.random.PRNGKey(0)
+
+
+def smoke_batch(cfg, b=2, s=32):
+    batch = {"tokens": jnp.arange(b * s, dtype=jnp.int32).reshape(b, s) % cfg.vocab,
+             "labels": jnp.ones((b, s), jnp.int32)}
+    if cfg.n_context_tokens:
+        batch["context"] = jnp.full(
+            (b, cfg.n_context_tokens, cfg.d_model), 0.1, jnp.float32)
+    return batch
+
+
+@pytest.mark.parametrize("arch", C.all_archs())
+def test_arch_smoke_forward_and_train_step(arch):
+    """Assignment requirement: reduced config, one forward/train step on
+    CPU, output shapes + no NaNs."""
+    cfg = C.get(arch, smoke=True)
+    params, _ = split_params(init_model(KEY, cfg))
+    batch = smoke_batch(cfg)
+    logits = forward(params, batch, cfg, mode="ref")
+    assert logits.shape == (2, 32, cfg.vocab)
+    assert bool(jnp.isfinite(logits).all())
+    loss, grads = jax.value_and_grad(
+        lambda p: loss_fn(p, batch, cfg, mode="ref"))(params)
+    assert bool(jnp.isfinite(loss))
+    assert all(bool(jnp.isfinite(g).all()) for g in jax.tree.leaves(grads))
+
+
+@pytest.mark.parametrize("arch", C.all_archs())
+def test_arch_smoke_decode_step(arch):
+    cfg = C.get(arch, smoke=True)
+    params, _ = split_params(init_model(KEY, cfg))
+    ctx = (jnp.full((2, cfg.n_context_tokens, cfg.d_model), 0.1)
+           if cfg.n_context_tokens else None)
+    state = init_decode_state(cfg, 2, 16)
+    tok = jnp.zeros((2, 1), jnp.int32)
+    for pos in range(3):
+        logits, state = decode_step(params, state, tok, jnp.int32(pos), cfg,
+                                    cross_ctx=ctx, mode="ref")
+    assert logits.shape == (2, 1, cfg.vocab)
+    assert bool(jnp.isfinite(logits).all())
+
+
+def test_decode_matches_forward_for_attention_lm():
+    """Teacher-forced decode over a prompt must reproduce forward logits
+    (KV-cache correctness)."""
+    cfg = C.get("stablelm-1.6b", smoke=True)
+    params, _ = split_params(init_model(KEY, cfg))
+    b, s = 2, 12
+    toks = jax.random.randint(KEY, (b, s), 0, cfg.vocab)
+    full = forward(params, {"tokens": toks}, cfg, mode="ref", remat=False)
+    state = init_decode_state(cfg, b, s)
+    outs = []
+    for pos in range(s):
+        lg, state = decode_step(params, state, toks[:, pos:pos + 1],
+                                jnp.int32(pos), cfg, mode="ref")
+        outs.append(lg)
+    dec = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(full),
+                               rtol=3e-2, atol=3e-2)
+
+
+def test_decode_matches_forward_for_recurrent():
+    """Same equivalence through mLSTM/sLSTM state (chunked vs stepwise)."""
+    cfg = C.get("xlstm-350m", smoke=True)
+    params, _ = split_params(init_model(KEY, cfg))
+    b, s = 1, 16
+    toks = jax.random.randint(KEY, (b, s), 0, cfg.vocab)
+    full = forward(params, {"tokens": toks}, cfg, mode="ref", remat=False)
+    state = init_decode_state(cfg, b, s)
+    outs = []
+    for pos in range(s):
+        lg, state = decode_step(params, state, toks[:, pos:pos + 1],
+                                jnp.int32(pos), cfg, mode="ref")
+        outs.append(lg)
+    dec = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(full),
+                               rtol=5e-2, atol=5e-2)
+
+
+def test_windowed_attention_matches_banded_reference():
+    b, h, l, dh, w = 1, 2, 64, 16, 16
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.normal(size=(b, h, l, dh)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(b, h, l, dh)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, h, l, dh)), jnp.float32)
+    got = L._windowed_attention(q, k, v, w, "ref")
+    # banded mask reference: i attends to j in (i-w, i]
+    scores = jnp.einsum("bhid,bhjd->bhij", q, k) * dh ** -0.5
+    i = jnp.arange(l)[:, None]
+    j = jnp.arange(l)[None, :]
+    mask = (j <= i) & (j > i - w - 1) & (j >= i - w)
+    # chunked local attn: query i sees its chunk + previous chunk =>
+    # visibility (i // w - 1) * w <= j <= i
+    mask = (j <= i) & (j >= (i // w - 1) * w)
+    scores = jnp.where(mask[None, None], scores, -jnp.inf)
+    want = jnp.einsum("bhij,bhjd->bhid", jax.nn.softmax(scores, -1), v)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_mlstm_chunk_sizes_agree():
+    cfg = C.get("xlstm-350m", smoke=True)
+    p = R.init_mlstm(KEY, cfg)
+    vals, _ = split_params(p)
+    x = jax.random.normal(KEY, (2, 32, cfg.d_model))
+    a = R.mlstm_block(vals, x, chunk=8)
+    b = R.mlstm_block(vals, x, chunk=32)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=2e-2, atol=2e-2)
+
+
+def test_rglru_parallel_scan_matches_sequential():
+    cfg = C.get("recurrentgemma-2b", smoke=True)
+    vals, _ = split_params(R.init_rglru(KEY, cfg))
+    x = jax.random.normal(KEY, (1, 16, cfg.d_model)) * 0.3
+    full = R.rglru_block(vals, x)
+    st = R.rglru_init_state(1, cfg.d_recurrent)
+    outs = []
+    for t in range(16):
+        y, st = R.rglru_step(vals, x[:, t:t + 1], st)
+        outs.append(y)
+    seq = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(full), np.asarray(seq),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_moe_routing_conservation():
+    cfg = C.get("moonshot-v1-16b-a3b", smoke=True)
+    vals, _ = split_params(init_moe(KEY, cfg))
+    x = jax.random.normal(KEY, (2, 16, cfg.d_model)) * 0.5
+    out, stats = moe_block(vals, x, cfg, capacity_factor=4.0)
+    assert out.shape == x.shape
+    assert int(stats["dropped"]) == 0          # generous capacity
+    assert bool(jnp.isfinite(out).all())
+
+
+def test_moe_capacity_drops_reported():
+    cfg = C.get("moonshot-v1-16b-a3b", smoke=True)
+    vals, _ = split_params(init_moe(KEY, cfg))
+    x = jax.random.normal(KEY, (2, 64, cfg.d_model))
+    out, stats = moe_block(vals, x, cfg, capacity_factor=0.05)
+    assert int(stats["dropped"]) > 0
+    assert bool(jnp.isfinite(out).all())
+
+
+def test_shape_applicability_rules():
+    assert shape_applicable(C.get("xlstm-350m"), SHAPES["long_500k"])[0]
+    assert shape_applicable(C.get("recurrentgemma-2b"), SHAPES["long_500k"])[0]
+    ok, reason = shape_applicable(C.get("deepseek-67b"), SHAPES["long_500k"])
+    assert not ok and "quadratic" in reason
+
+
+def test_full_configs_match_assignment():
+    """Exact numbers from the assignment table."""
+    rows = {
+        "llama-3.2-vision-11b": (40, 4096, 32, 8, 14336, 128256),
+        "xlstm-350m": (24, 1024, 4, 4, 0, 50304),
+        "seamless-m4t-medium": (12, 1024, 16, 16, 4096, 256206),
+        "deepseek-67b": (95, 8192, 64, 8, 22016, 102400),
+        "starcoder2-15b": (40, 6144, 48, 4, 24576, 49152),
+        "stablelm-1.6b": (24, 2048, 32, 32, 5632, 100352),
+        "granite-3-8b": (40, 4096, 32, 8, 12800, 49155),
+        "moonshot-v1-16b-a3b": (48, 2048, 16, 16, 0, 163840),
+        "arctic-480b": (35, 7168, 56, 8, 4864, 32000),
+        "recurrentgemma-2b": (26, 2560, 10, 1, 7680, 256000),
+    }
+    for arch, (nl, dm, nh, kv, dff, vocab) in rows.items():
+        cfg = C.get(arch)
+        assert (cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                cfg.d_ff, cfg.vocab) == (nl, dm, nh, kv, dff, vocab), arch
+    assert C.get("moonshot-v1-16b-a3b").n_experts == 64
+    assert C.get("moonshot-v1-16b-a3b").top_k == 6
+    assert C.get("arctic-480b").n_experts == 128
+    assert C.get("arctic-480b").top_k == 2
+    assert C.get("arctic-480b").dense_residual
+    assert C.get("recurrentgemma-2b").window == 2048
+
+
+def test_moe_grouped_matches_global_when_capacity_ample():
+    """Group-local routing (perf knob) == global routing when nothing
+    drops; per-group capacity only changes WHICH tokens drop."""
+    from repro.models import perf
+    cfg = C.get("moonshot-v1-16b-a3b", smoke=True)
+    vals, _ = split_params(init_moe(KEY, cfg))
+    x = jax.random.normal(KEY, (4, 8, cfg.d_model)) * 0.5
+    out_g, stats_g = moe_block(vals, x, cfg, capacity_factor=8.0)
+    with perf.options(moe_groups=True):
+        out_l, stats_l = moe_block(vals, x, cfg, capacity_factor=8.0)
+    assert int(stats_g["dropped"]) == 0 and int(stats_l["dropped"]) == 0
+    np.testing.assert_allclose(np.asarray(out_l), np.asarray(out_g),
+                               rtol=2e-2, atol=2e-2)

@@ -1,0 +1,125 @@
+"""Sharding rules: divisibility, axis-uniqueness, strategy behaviour."""
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+import repro.configs as C
+from repro.models import init_model, split_params
+from repro.sharding import rules
+
+SIZES = {"data": 16, "model": 16}
+SIZES_POD = {"pod": 2, "data": 16, "model": 16}
+
+
+def _flat_spec_shape_pairs(arch, strategy, sizes, with_axes=False):
+    cfg = C.get(arch)
+    p_struct = jax.eval_shape(lambda: init_model(jax.random.PRNGKey(0), cfg))
+    vals, axes = split_params(p_struct)
+    specs = rules.param_specs(axes, vals, strategy, sizes)
+    triple = (jax.tree.leaves(vals),
+              jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P)),
+              jax.tree.leaves(axes, is_leaf=rules._is_axes))
+    return list(zip(*triple)) if with_axes else list(zip(*triple[:2]))
+
+
+@pytest.mark.parametrize("arch", C.all_archs())
+@pytest.mark.parametrize("strategy", ["tp", "tp_fsdp"])
+def test_specs_divide_shapes_and_axes_unique(arch, strategy):
+    for leaf, spec in _flat_spec_shape_pairs(arch, strategy, SIZES):
+        used = []
+        for dim, s in zip(leaf.shape, tuple(spec) + (None,) * leaf.ndim):
+            if s is None:
+                continue
+            for ax in (s if isinstance(s, tuple) else (s,)):
+                assert dim % SIZES[ax] == 0, (arch, leaf.shape, spec)
+                used.append(ax)
+        assert len(used) == len(set(used)), (arch, spec)
+
+
+@pytest.mark.parametrize("arch", ["deepseek-67b", "arctic-480b"])
+def test_big_models_get_model_parallel_matmuls(arch):
+    """Every large 2D+ matmul weight is model-sharded UNLESS it is an
+    attention tensor whose head axes do not divide the model axis — those
+    are model-replicated by the head-guard (sharding a QK^T contraction dim
+    costs an O(S^2) all-reduce per layer; DESIGN.md §8.1) and sharded over
+    "data" for storage under fsdp instead."""
+    hit, total, exempt = 0, 0, 0
+    tp = SIZES["model"]
+    for leaf, spec, axes in _flat_spec_shape_pairs(arch, "tp", SIZES,
+                                                   with_axes=True):
+        if leaf.ndim >= 2 and leaf.size >= 2**22:
+            total += 1
+            head_dims = [d for a, d in zip(axes, leaf.shape)
+                         if a in ("heads", "kv_heads")]
+            if head_dims and all(d % tp != 0 for d in head_dims):
+                exempt += 1
+                continue
+            flat = [a for s in spec if s is not None
+                    for a in (s if isinstance(s, tuple) else (s,))]
+            if "model" in flat:
+                hit += 1
+    assert total > 0 and hit == total - exempt, (arch, hit, total, exempt)
+    # head-guard exemptions must be storage-sharded over data under fsdp
+    for leaf, spec, axes in _flat_spec_shape_pairs(arch, "tp_fsdp", SIZES,
+                                                   with_axes=True):
+        if leaf.ndim >= 2 and leaf.size >= 2**22:
+            head_dims = [d for a, d in zip(axes, leaf.shape)
+                         if a in ("heads", "kv_heads")]
+            if head_dims and all(d % tp != 0 for d in head_dims):
+                flat = [a for s in spec if s is not None
+                        for a in (s if isinstance(s, tuple) else (s,))]
+                assert "data" in flat, (arch, leaf.shape, spec)
+
+
+def test_fsdp_shards_params_over_data():
+    n_data_sharded = 0
+    for leaf, spec in _flat_spec_shape_pairs("deepseek-67b", "tp_fsdp", SIZES):
+        flat = [a for s in spec if s is not None
+                for a in (s if isinstance(s, tuple) else (s,))]
+        if "data" in flat:
+            n_data_sharded += 1
+    assert n_data_sharded > 0
+
+
+def test_zero1_shards_moments_not_params():
+    cfg = C.get("stablelm-1.6b")
+    p_struct = jax.eval_shape(lambda: init_model(jax.random.PRNGKey(0), cfg))
+    vals, axes = split_params(p_struct)
+    pspecs = rules.param_specs(axes, vals, "tp_zero1", SIZES)
+    ospecs = rules.opt_state_specs(pspecs, vals, "tp_zero1", SIZES)
+    more = 0
+    for ps, os_, leaf in zip(
+            jax.tree.leaves(pspecs, is_leaf=lambda x: isinstance(x, P)),
+            jax.tree.leaves(ospecs, is_leaf=lambda x: isinstance(x, P)),
+            jax.tree.leaves(vals)):
+        p_axes = [a for s in ps if s is not None
+                  for a in (s if isinstance(s, tuple) else (s,))]
+        o_axes = [a for s in os_ if s is not None
+                  for a in (s if isinstance(s, tuple) else (s,))]
+        assert "data" not in p_axes
+        if "data" in o_axes:
+            more += 1
+            # divisibility of the chosen dim
+            i = list(os_).index("data")
+            assert leaf.shape[i] % SIZES["data"] == 0
+    assert more > 0
+
+
+def test_default_strategy_choices():
+    assert rules.default_strategy(C.get("arctic-480b")) == "tp_fsdp"
+    assert rules.default_strategy(C.get("deepseek-67b")) == "tp_fsdp"
+    assert rules.default_strategy(C.get("stablelm-1.6b")) == "tp_zero1"
+    assert rules.default_strategy(C.get("xlstm-350m")) == "tp_zero1"
+
+
+def test_decode_state_specs_divide():
+    fn = rules.decode_state_spec_fn(SIZES_POD)
+    kv = jax.ShapeDtypeStruct((128, 8, 32768, 128), jnp.bfloat16)
+    spec = fn(kv)
+    assert spec[0] == ("pod", "data")      # batch sharded
+    flat = [a for s in spec if s is not None
+            for a in (s if isinstance(s, tuple) else (s,))]
+    assert "model" in flat                  # some feature dim model-sharded
+    tiny = jax.ShapeDtypeStruct((1, 4), jnp.float32)
+    assert fn(tiny) == P()                  # nothing divisible -> replicated
