@@ -99,11 +99,13 @@ def naive_pagerank(gd, num_iters: int = 10, p: int = 4,
 
 
 def engine_pagerank_seconds(gd, num_iters: int = 10, p: int = 4,
-                            iters: int = 3) -> tuple[float, object]:
+                            iters: int = 3,
+                            kernel_mode: str = "auto") -> tuple[float, object]:
     g = Graph.from_edges(gd.src, gd.dst, num_partitions=p)
 
     def run():
-        return alg.pagerank(g, num_iters=num_iters).graph.vdata["pr"]
+        return alg.pagerank(g, num_iters=num_iters,
+                            kernel_mode=kernel_mode).graph.vdata["pr"]
 
     sec = timeit(run, iters=iters, warmup=1)
     return sec, g

@@ -24,6 +24,8 @@ def run(quick: bool = True) -> list[dict]:
     for name, gd in datasets(quick).items():
         pr_iters = 10
         eng_s, g = engine_pagerank_seconds(gd, pr_iters, iters=iters)
+        unfused_s, _ = engine_pagerank_seconds(gd, pr_iters, iters=iters,
+                                               kernel_mode="unfused")
         naive_s = naive_pagerank_seconds(gd, pr_iters, iters=iters)
 
         # correctness cross-check: both must match the numpy oracle
@@ -38,6 +40,8 @@ def run(quick: bool = True) -> list[dict]:
 
         rows.append({"benchmark": "fig7_pagerank", "dataset": name,
                      "engine_s": round(eng_s, 3),
+                     "engine_unfused_s": round(unfused_s, 3),
+                     "fused_speedup": round(unfused_s / eng_s, 2),
                      "naive_dataflow_s": round(naive_s, 3),
                      "speedup": round(naive_s / eng_s, 2),
                      "edges": gd.num_edges})

@@ -89,6 +89,29 @@ def run(quick: bool = True) -> list[dict]:
                  "jnp_ref_s": round(ref_s, 4),
                  "note": "pallas kernel timed on TPU only; interpret mode "
                          "validates semantics in tests/test_kernels.py"})
+
+    # ---- fused vs unfused triplet sweep (DESIGN.md §2.3) -------------------
+    # Same mrTriplets, two physical plans: the fused path runs gather + map +
+    # block-local segment reduce in one kernel sweep (one HBM pass, §4.6
+    # chunk skipping); the unfused path materialises the [E, D] message
+    # array between the gather and the reduce.  On CPU both lower through
+    # jnp, so the delta isolates the fusion's memory-traffic structure; the
+    # compiled-kernel gap requires TPU hardware.
+    fused_step = step          # identical jitted computation from above
+    unfused_step = jax.jit(lambda gg: mr_triplets(gg, send, "sum",
+                                                  kernel_mode="unfused")[0]["m"])
+    fused_s = timeit(fused_step, g, iters=3)
+    unfused_s = timeit(unfused_step, g, iters=3)
+    np.testing.assert_allclose(np.asarray(fused_step(g)),
+                               np.asarray(unfused_step(g)), rtol=1e-5)
+    _, _, _, m_plan = mr_triplets(g, send, "sum", kernel_mode="ref")
+    rows.append({"benchmark": "op_micro", "op": "fused_vs_unfused_triplets",
+                 "fused_s": round(fused_s, 4),
+                 "unfused_s": round(unfused_s, 4),
+                 "speedup": round(unfused_s / fused_s, 2),
+                 "plan": m_plan["plan"],
+                 "note": "general fused triplet kernel vs "
+                         "gather->vmap->segment-sum (results cross-checked)"})
     return rows
 
 

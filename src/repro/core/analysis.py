@@ -34,6 +34,11 @@ class TripletDeps:
     uses_edge: bool
     src_leaves: tuple[bool, ...] | None = None
     dst_leaves: tuple[bool, ...] | None = None
+    # pytree of ShapeDtypeStructs of the UDF's output — captured from the
+    # same trace as the dependency analysis so downstream plan selection
+    # (fused-kernel eligibility) never re-traces the UDF.  None = trace
+    # failed.
+    msg_spec: Any = None
 
     @property
     def n_way(self) -> int:
@@ -76,7 +81,10 @@ def analyze_message_fn(
         flat_src, _ = jax.tree.flatten(src_example)
         flat_edge, _ = jax.tree.flatten(edge_example)
         flat_dst, _ = jax.tree.flatten(dst_example)
-        closed = jax.make_jaxpr(fn)(src_example, edge_example, dst_example)
+        closed, out_shape = jax.make_jaxpr(fn, return_shape=True)(
+            src_example, edge_example, dst_example)
+        msg_spec = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype), out_shape)
     except Exception:
         return TripletDeps(True, True, True)
 
@@ -100,4 +108,5 @@ def analyze_message_fn(
         uses_edge=any_used(edge_vars),
         src_leaves=tuple(used(v) for v in src_vars),
         dst_leaves=tuple(used(v) for v in dst_vars),
+        msg_spec=msg_spec,
     )

@@ -85,6 +85,12 @@ class StructArrays:
             num_edges=s.num_edges)
 
 
+def _degree_msg(sv, ev, dv):
+    """Stable module-level UDF: fused-path caches (tile_fn, kernel compiles)
+    key on the UDF's object identity, so per-call lambdas would defeat them."""
+    return {"deg": jnp.float32(1.0)}
+
+
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass(frozen=True)
 class Graph:
@@ -316,7 +322,9 @@ class Graph:
     def reverse(self) -> "Graph":
         """Transpose the graph: swap src/dst slots.  Edges were stored
         dst-sorted, so the *new* src side is already sorted (src_perm =
-        identity); the src/dst routing tables swap roles."""
+        identity); the src/dst routing tables swap roles.  The host structure
+        transposes alongside so fused-kernel tilings derived from it
+        (mrtriplets._host_tiles) stay consistent with the device view."""
         ident = jnp.broadcast_to(
             jnp.arange(self.s.e_blk, dtype=jnp.int32), self.s.src_perm.shape)
         s = dataclasses.replace(
@@ -324,13 +332,41 @@ class Graph:
             src_perm=ident,
             routes={"src": self.s.routes["dst"], "dst": self.s.routes["src"],
                     "both": self.s.routes["both"]})
-        return self.replace(s=s)
+        host = self.host
+        if host is not None:
+            # memoised: GraphStructure is identity-compared static jit
+            # metadata, so reverse() must return the SAME transposed host
+            # every time (and reverse().reverse() the original) or every
+            # jitted caller recompiles per call.
+            cached = getattr(host, "_reversed", None)
+            if cached is None:
+                cached = dataclasses.replace(
+                    host, src_slot=host.dst_slot, dst_slot=host.src_slot,
+                    src_perm=np.tile(np.arange(host.e_blk, dtype=np.int32),
+                                     (host.num_partitions, 1)),
+                    routes={"src": host.routes["dst"],
+                            "dst": host.routes["src"],
+                            "both": host.routes["both"]})
+                cached._reversed = host
+                host._reversed = cached
+            host = cached
+        return self.replace(s=s, host=host)
 
     # ------------------------------------------------------------ mrTriplets
     def mrTriplets(self, map_fn: Callable, reduce: str = "sum", *,
                    to: str = "dst", skip_stale: str | None = None,
                    cache: ViewCache | None = None, kernel_mode: str = "auto",
                    force_need: str | None = None):
+        """See repro.core.mrtriplets.mr_triplets.
+
+        kernel_mode selects the physical execution strategy:
+          "auto"      — fused triplet kernel when eligible (sum/min/max over
+                        flat float payloads; Pallas on TPU, jnp oracle on
+                        CPU), unfused otherwise;
+          "pallas" / "interpret" / "ref"
+                      — force that execution backend (fused when eligible);
+          "unfused"   — always take the gather -> vmap -> segment-sum path.
+        """
         return mr_triplets(self, map_fn, reduce, to=to, skip_stale=skip_stale,
                            cache=cache, kernel_mode=kernel_mode,
                            force_need=force_need)
@@ -340,8 +376,7 @@ class Graph:
         0-way-join example, §4.5.2)."""
         to = "dst" if direction == "in" else "src"
         vals, exists, _, metrics = self.mrTriplets(
-            lambda sv, ev, dv: {"deg": jnp.float32(1.0)}, "sum", to=to,
-            kernel_mode=kernel_mode)
+            _degree_msg, "sum", to=to, kernel_mode=kernel_mode)
         deg = jnp.where(exists, vals["deg"], 0.0)
         return deg, metrics
 

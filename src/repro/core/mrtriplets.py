@@ -30,6 +30,7 @@ import dataclasses
 import functools
 from typing import Any, Callable
 
+import numpy as np
 import jax
 import jax.numpy as jnp
 
@@ -38,6 +39,15 @@ from .exchange import Exchange
 from .tree import (bmask, elem_spec, gather_rows, nbytes_of, tree_where,
                    tree_zeros_like_elem, vmap2)
 from ..kernels import ops as kops
+from ..kernels.triplet import build_triplet_tiles
+
+# Tile geometry of the fused triplet kernel (DESIGN.md §2.3).
+FUSED_EDGE_BLOCK = 512
+FUSED_VERTEX_BLOCK = 512
+# min/max reduce unrolls one [Eb, Vb] masked matrix per message column in
+# VMEM (kernels/triplet.py); cap the width so the unroll stays well inside
+# the ~16 MiB/core budget — wider payloads fall back to the unfused plan.
+FUSED_MINMAX_MAX_WIDTH = 16
 
 _REDUCE_IDENTITY = {
     "sum": lambda dt: jnp.zeros((), dt),
@@ -249,6 +259,193 @@ def _segment_aggregate(msgs: Any, ids: jnp.ndarray, valid: jnp.ndarray,
     return partial, had_msg
 
 
+# ---------------------------------------------------------------------------
+# Fused triplet path (§4.6 executed inside one Pallas kernel, DESIGN.md §2.3)
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class _FusedPlan:
+    """Static packing layout for the fused triplet kernel."""
+
+    v_used: tuple[bool, ...]      # union: vdata leaves packed into the x matrix
+    src_used: tuple[bool, ...]    # leaves the UDF reads through the SRC side
+    dst_used: tuple[bool, ...]    # leaves the UDF reads through the DST side
+    e_used: bool                  # whether the edge payload packs at all
+    dm: int                       # message width (flattened)
+    msg_shape: tuple[int, ...]    # message element shape
+    msg_dtype: Any
+    msg_treedef: Any
+
+
+def _fused_leaf_ok(spec) -> bool:
+    """The kernel packs flat float payloads: rank ≤ 1, inexact dtype."""
+    return (jnp.issubdtype(spec.dtype, jnp.floating)
+            and len(spec.shape) <= 1)
+
+
+def _plan_fused(g, map_fn, deps, need, reduce, force_need,
+                vex, eex) -> _FusedPlan | None:
+    """Decide whether this mrTriplets can run fused; None -> unfused path.
+
+    Eligibility: sum/min/max reduce, a single flat float message leaf, flat
+    float vertex/edge payloads on the sides the UDF reads, host structure
+    available, and the full partition view resident (nl == P — inside
+    shard_map each device sees ONE local partition while the static tiling
+    covers all P, so the fused path falls back there)."""
+    if reduce not in ("sum", "min", "max") or g.host is None:
+        return None
+    if g.vmask.shape[0] != g.s.p:
+        return None
+    msg_spec = deps.msg_spec     # captured by the join-elimination trace
+    if msg_spec is None:         # UDF untraceable -> no fused plan
+        return None
+    msg_leaves, msg_treedef = jax.tree.flatten(msg_spec)
+    if len(msg_leaves) != 1 or not _fused_leaf_ok(msg_leaves[0]):
+        return None
+
+    vleaves = jax.tree.leaves(vex)
+    n = len(vleaves)
+    if need is None:
+        src_used = dst_used = (False,) * n
+    elif (force_need is None and deps.src_leaves is not None
+          and len(deps.src_leaves) == n):
+        src_used, dst_used = deps.src_leaves, deps.dst_leaves
+    else:  # forced join / unknown leaves: whole sides named by `need`
+        src_used = (need in ("src", "both"),) * n
+        dst_used = (need in ("dst", "both"),) * n
+    v_used = tuple(su or du for su, du in zip(src_used, dst_used))
+    if not all(_fused_leaf_ok(l) for l, u in zip(vleaves, v_used) if u):
+        return None
+
+    eleaves = jax.tree.leaves(eex)
+    e_used = bool(eleaves) and (deps.uses_edge or force_need is not None)
+    if e_used and not all(_fused_leaf_ok(l) for l in eleaves):
+        return None
+
+    m = msg_leaves[0]
+    dm = int(np.prod(m.shape, dtype=np.int64)) if m.shape else 1
+    if reduce != "sum" and dm > FUSED_MINMAX_MAX_WIDTH:
+        return None
+    return _FusedPlan(v_used=v_used, src_used=src_used, dst_used=dst_used,
+                      e_used=e_used, dm=dm,
+                      msg_shape=tuple(m.shape), msg_dtype=m.dtype,
+                      msg_treedef=msg_treedef)
+
+
+@functools.lru_cache(maxsize=256)
+def _make_tile_fn(map_fn, vspecs, vdef, especs, edef, plan: _FusedPlan):
+    """Tile-level message function for the kernel: unpack the column-packed
+    endpoint/edge matrices back into the UDF's pytrees, vmap the UDF over the
+    edge axis, flatten the message leaf.  Pure jnp — traced into the kernel.
+
+    Memoised on (UDF identity, specs, plan): the returned closure is a STATIC
+    jit argument of kernels/triplet.fused_triplet, so handing back the same
+    object for repeated eager calls is what lets the kernel's jit cache hit
+    (a fresh closure per call would recompile every superstep)."""
+    vleaves, eleaves = list(vspecs), list(especs)
+
+    def unpack(mat, specs, packed, used, treedef):
+        """Column offsets advance over the PACKED (union) leaves; a leaf is
+        read from the matrix only if this SIDE uses it.  A side that reads
+        nothing never touches `mat` — which is what lets fused_triplet
+        stream a width-1 dummy tile for that side."""
+        out, off = [], 0
+        for spec, p, u in zip(specs, packed, used):
+            size = int(np.prod(spec.shape, dtype=np.int64)) if spec.shape else 1
+            if p and u:
+                col = mat[:, off:off + size]
+                out.append(col.reshape((mat.shape[0],) + tuple(spec.shape)))
+            else:  # provably unread by the UDF (join elimination) -> zeros
+                out.append(jnp.zeros((mat.shape[0],) + tuple(spec.shape),
+                                     jnp.float32))
+            if p:
+                off += size
+        return jax.tree.unflatten(treedef, out)
+
+    e_packed = (plan.e_used,) * len(eleaves)
+
+    def tile_fn(sv, ev, dv):
+        s_tree = unpack(sv, vleaves, plan.v_used, plan.src_used, vdef)
+        d_tree = unpack(dv, vleaves, plan.v_used, plan.dst_used, vdef)
+        e_tree = unpack(ev, eleaves, e_packed, e_packed, edef)
+        msg = jax.vmap(map_fn)(s_tree, e_tree, d_tree)
+        leaf = jax.tree.leaves(msg)[0]
+        return leaf.reshape(leaf.shape[0], -1).astype(jnp.float32)
+
+    return tile_fn
+
+
+def _pack_cols(tree, used, rows: int) -> jnp.ndarray:
+    """Column-pack the used leaves of a [nl, N, ...] pytree into [rows, D]."""
+    leaves = jax.tree.leaves(tree) if tree is not None else []
+    cols = [l.reshape(rows, -1).astype(jnp.float32)
+            for l, u in zip(leaves, used) if u]
+    if not cols:
+        return jnp.zeros((rows, 0), jnp.float32)
+    return jnp.concatenate(cols, axis=-1)
+
+
+def _host_tiles(host, to: str, eb: int, vb: int) -> dict:
+    """(out_block, in_block)-grouped chunk tiling over the flattened
+    [P * E_blk] edge space, cached per (graph structure, aggregation side).
+    Host-side numpy on the immutable structure — §4.3 index reuse."""
+    cache = getattr(host, "_fused_tiles", None)
+    if cache is None:
+        cache = {}
+        host._fused_tiles = cache
+    key = (to, eb, vb)
+    if key not in cache:
+        p, v_mir = host.num_partitions, host.v_mir
+        off = (np.arange(p, dtype=np.int64) * v_mir)[:, None]
+        fs = (host.src_slot.astype(np.int64) + off).reshape(-1)
+        fd = (host.dst_slot.astype(np.int64) + off).reshape(-1)
+        fm = host.edge_mask.reshape(-1)
+        out_s, in_s = (fd, fs) if to == "dst" else (fs, fd)
+        cache[key] = build_triplet_tiles(out_s, in_s, fm, p * v_mir,
+                                         eb=eb, vb=vb)
+    return cache[key]
+
+
+def _fused_aggregate(g, mirror_tree, map_fn, live, to, reduce, kernel_mode,
+                     plan: _FusedPlan, vex, eex):
+    """Steps 4a-4c of the physical plan in one kernel sweep: gather both
+    endpoint views, run the map UDF, segment-reduce into mirror slots."""
+    s = g.s
+    nl = live.shape[0]
+    seg = nl * s.v_mir
+    x = _pack_cols(mirror_tree, plan.v_used, seg)
+    n_eleaves = len(jax.tree.leaves(g.edata))
+    ev = _pack_cols(g.edata, (plan.e_used,) * n_eleaves, nl * s.e_blk)
+    off = (jnp.arange(nl, dtype=jnp.int32) * s.v_mir)[:, None]
+    fsrc = (s.src_slot + off).reshape(-1)
+    fdst = (s.dst_slot + off).reshape(-1)
+    # the jnp oracle ignores the chunk tiling — don't pay the O(E log E)
+    # host build for it (the default CPU path).
+    tiles = (None if kops.resolve_mode(kernel_mode) == "ref"
+             else _host_tiles(g.host, to, FUSED_EDGE_BLOCK,
+                              FUSED_VERTEX_BLOCK))
+    tile_fn = _make_tile_fn(map_fn,
+                            tuple(jax.tree.leaves(vex)), jax.tree.structure(vex),
+                            tuple(jax.tree.leaves(eex)), jax.tree.structure(eex),
+                            plan)
+    out, cnt = kops.triplet(
+        x, ev, fsrc, fdst, live.reshape(-1), tiles, tile_fn, seg, plan.dm,
+        to=to, reduce=reduce, use_src=any(plan.src_used),
+        use_dst=any(plan.dst_used), mode=kernel_mode,
+        eb=FUSED_EDGE_BLOCK, vb=FUSED_VERTEX_BLOCK)
+    leaf = out.reshape((nl, s.v_mir) + plan.msg_shape)
+    had_msg = cnt.reshape(nl, s.v_mir) > 0
+    if reduce != "sum":
+        # the kernel's identity is finfo(f32); re-assert the ENGINE identity
+        # in the message dtype so a narrow leaf (bf16) holds its own finite
+        # finfo extreme at empty slots instead of the f32 max overflowing
+        # to inf on the cast below.
+        ident = _REDUCE_IDENTITY[reduce](plan.msg_dtype).astype(jnp.float32)
+        leaf = jnp.where(bmask(had_msg, leaf), leaf, ident)
+    leaf = leaf.astype(plan.msg_dtype)
+    partial = jax.tree.unflatten(plan.msg_treedef, [leaf])
+    return partial, had_msg
+
+
 def mr_triplets(
     g,                               # Graph (duck-typed)
     map_fn: Callable,                # f(src_val, edge_val, dst_val) -> msg pytree
@@ -264,6 +461,15 @@ def mr_triplets(
 
     values: pytree [P, V_blk, ...] aggregated at vertex homes;
     exists:  [P, V_blk] bool ("WHERE sum IS NOT null", §3.2).
+
+    kernel_mode: "auto" (fused triplet kernel when eligible — Pallas on TPU,
+    jnp oracle on CPU — else unfused), "pallas"/"interpret"/"ref" (force a
+    backend, still fused when eligible), or "unfused" (always take the
+    gather -> vmap -> segment-reduce path).
+
+    Fused-path caches key on `map_fn`'s OBJECT IDENTITY (like jax.jit):
+    eager host loops should pass the same function object every call, not a
+    lambda rebuilt per iteration, or the kernel recompiles each time.
     """
     s, ex = g.s, g.ex
     nl = g.vmask.shape[0]   # local partition count (1 inside shard_map)
@@ -325,15 +531,13 @@ def mr_triplets(
         metrics["fwd"] = ShipMetrics(0, jnp.int32(0), jnp.int32(0))
 
     # --- 4: edge-parallel message computation -------------------------------
-    zeros_elem = tree_zeros_like_elem(g.vdata, (nl, s.e_blk))
     mirror_tree = rebuild_mirror(view.mirror) if need is not None else None
-    svals = gather_rows(mirror_tree, s.src_slot) if uses_src else zeros_elem
-    dvals = gather_rows(mirror_tree, s.dst_slot) if uses_dst else zeros_elem
-    msgs = vmap2(map_fn)(svals, g.edata, dvals)
 
     # skipStale (§3.2 / §4.6): drop edges whose relevant endpoint did not
     # change since the last ship.  "out" skips stale sources, "in" stale
-    # destinations, "both" requires either endpoint fresh.
+    # destinations, "both" requires either endpoint fresh.  Both physical
+    # plans below mask the SAME per-edge live bits, so fused vs unfused is a
+    # pure execution-strategy choice, never a semantics change.
     live = g.emask
     if skip_stale is not None:
         take_active = jax.vmap(lambda a, i: jnp.take(a, i, mode="clip"))
@@ -344,19 +548,41 @@ def mr_triplets(
         live = live & fresh
     metrics["live_edges"] = live.sum()
 
-    # --- aggregation toward the requested side ------------------------------
-    if to == "dst":
-        ids = s.dst_slot
-        agg_msgs, agg_valid = msgs, live
-    else:  # "src": pre-sorted permutation keeps segment ids ordered
-        perm = s.src_perm
-        agg_msgs = jax.tree.map(
-            lambda mm: jax.vmap(lambda x, i: jnp.take(x, i, axis=0))(mm, perm), msgs)
-        ids = jax.vmap(lambda x, i: jnp.take(x, i))(s.src_slot, perm)
-        agg_valid = jax.vmap(lambda x, i: jnp.take(x, i))(live, perm)
+    # physical plan selection: the fused triplet kernel performs the gather,
+    # the map UDF, and the block-local segment reduction in one sweep with
+    # §4.6 chunk skipping; ineligible shapes (non-flat / non-float payloads,
+    # exotic reduces, shard_map-local views) take the unfused path, as does
+    # kernel_mode="unfused".
+    plan = None
+    if kernel_mode != "unfused":
+        plan = _plan_fused(g, map_fn, deps, need, reduce, force_need, vex, eex)
+    metrics["plan"] = "fused" if plan is not None else "unfused"
 
-    partial, had_msg = _segment_aggregate(agg_msgs, ids, agg_valid,
-                                          s.v_mir, reduce, kernel_mode)
+    if plan is not None:
+        partial, had_msg = _fused_aggregate(
+            g, mirror_tree, map_fn, live, to, reduce, kernel_mode, plan,
+            vex, eex)
+    else:
+        zeros_elem = tree_zeros_like_elem(g.vdata, (nl, s.e_blk))
+        svals = gather_rows(mirror_tree, s.src_slot) if uses_src else zeros_elem
+        dvals = gather_rows(mirror_tree, s.dst_slot) if uses_dst else zeros_elem
+        msgs = vmap2(map_fn)(svals, g.edata, dvals)
+        sub_mode = "auto" if kernel_mode == "unfused" else kernel_mode
+
+        # aggregation toward the requested side
+        if to == "dst":
+            ids = s.dst_slot
+            agg_msgs, agg_valid = msgs, live
+        else:  # "src": pre-sorted permutation keeps segment ids ordered
+            perm = s.src_perm
+            agg_msgs = jax.tree.map(
+                lambda mm: jax.vmap(lambda x, i: jnp.take(x, i, axis=0))(mm, perm),
+                msgs)
+            ids = jax.vmap(lambda x, i: jnp.take(x, i))(s.src_slot, perm)
+            agg_valid = jax.vmap(lambda x, i: jnp.take(x, i))(live, perm)
+
+        partial, had_msg = _segment_aggregate(agg_msgs, ids, agg_valid,
+                                              s.v_mir, reduce, sub_mode)
 
     # --- 5: return aggregates to vertex homes --------------------------------
     # Aggregates flow back along the routing table of the side they were

@@ -12,7 +12,11 @@ Differences from classic Pregel, following the paper:
   * change tracking drives both skipStale edge skipping and incremental
     replicated-view maintenance (§4.5.1) via the carried ViewCache;
   * vprog runs on every visible vertex each superstep with a default message
-    where none arrived — exactly `g.leftJoin(msgs).mapV(vprog)` of Listing 5.
+    where none arrived — exactly `g.leftJoin(msgs).mapV(vprog)` of Listing 5;
+  * `kernel_mode` threads through to mrTriplets' physical-plan choice:
+    "auto" runs the fused triplet kernel (DESIGN.md §2.3) whenever the
+    send/gather pair is eligible (sum/min/max over flat float payloads),
+    "unfused" pins the gather -> vmap -> segment-reduce plan.
 
 Two drivers:
   * `pregel` — host loop, jitted superstep, per-step metrics (benchmarks);

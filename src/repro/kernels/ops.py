@@ -18,6 +18,7 @@ import jax.numpy as jnp
 from . import ref
 from . import segment_sum as _segsum
 from . import spmv as _spmv
+from . import triplet as _triplet
 from . import flash_attention as _flash
 
 Mode = Literal["auto", "pallas", "interpret", "ref", "chunked"]
@@ -31,6 +32,11 @@ def _resolve(mode: Mode) -> str:
     if mode != "auto":
         return mode
     return "pallas" if _backend_is_tpu() else "ref"
+
+
+# public: callers that prepare kernel-only inputs (e.g. chunk tilings) use
+# this to skip the work when the mode resolves to the jnp oracle.
+resolve_mode = _resolve
 
 
 def segment_sum(msgs, seg_ids, num_segments: int, *, mode: Mode = "auto",
@@ -56,6 +62,23 @@ def spmv(x, w, src_slot, dst_slot, tiles, active_src_blocks, v_mir: int, *,
 
 
 build_tiles = _spmv.build_tiles
+build_triplet_tiles = _triplet.build_triplet_tiles
+
+
+def triplet(x, ev, src_slot, dst_slot, live, tiles, tile_fn,
+            num_segments: int, dm: int, *, to: str = "dst",
+            reduce: str = "sum", use_src: bool = True, use_dst: bool = True,
+            mode: Mode = "auto", eb: int = 512, vb: int = 512):
+    """General fused mrTriplets sweep: gather(src,dst) + map + segment-reduce
+    in one pass.  Returns (out [S, dm] f32, cnt [S] f32)."""
+    m = _resolve(mode)
+    if m == "ref":
+        return ref.fused_triplet(x, ev, src_slot, dst_slot, live, tile_fn,
+                                 num_segments, to=to, reduce=reduce)
+    return _triplet.fused_triplet(
+        x, ev, src_slot, dst_slot, live, tiles, tile_fn, num_segments, dm,
+        to=to, reduce=reduce, use_src=use_src, use_dst=use_dst,
+        eb=eb, vb=vb, interpret=(m == "interpret"))
 
 
 def flash_attention(q, k, v, *, causal: bool = True, scale: float | None = None,

@@ -40,6 +40,56 @@ def fused_gather_segment_sum(
     return segment_sum(msgs, dst_slot, num_segments)
 
 
+# The finite (finfo-extreme) identity convention shared with the kernel —
+# single source of truth so oracle and kernel stay bit-identical on empty
+# segments (triplet.py imports nothing back from this module).
+from .triplet import REDUCE_IDENTITY as _TRIPLET_IDENTITY  # noqa: E402
+
+
+def fused_triplet(
+    x: jnp.ndarray,          # [S, Dx] packed mirror matrix
+    ev: jnp.ndarray,         # [E, De] packed edge payload
+    src_slot: jnp.ndarray,   # [E] int32 in [0, S)
+    dst_slot: jnp.ndarray,   # [E] int32 in [0, S)
+    live: jnp.ndarray,       # [E] bool
+    tile_fn,                 # ([E,Dx],[E,De],[E,Dx]) -> [E,Dm] f32
+    num_segments: int,
+    *,
+    to: str = "dst",
+    reduce: str = "sum",
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Oracle for kernels/triplet.fused_triplet — the general fused mrTriplets
+    sweep (gather both endpoints, map, segment-reduce toward `to`) in plain
+    jnp.  Empty segments hold the finite reduce identity; returns
+    (out [S, Dm] f32, cnt [S] f32 live message counts)."""
+    s = x.shape[0]
+    xf = x.astype(jnp.float32).reshape(s, -1)
+    if xf.shape[1] == 0:
+        xf = jnp.zeros((s, 1), jnp.float32)
+    evf = ev.astype(jnp.float32).reshape(ev.shape[0], -1)
+    if evf.shape[1] == 0:
+        evf = jnp.zeros((ev.shape[0], 1), jnp.float32)
+    sv = xf[jnp.clip(src_slot, 0, s - 1)]
+    dv = xf[jnp.clip(dst_slot, 0, s - 1)]
+    msgs = tile_fn(sv, evf, dv)                                  # [E, Dm]
+
+    ids = src_slot if to == "src" else dst_slot
+    seg = jnp.where(live, ids, num_segments)                     # dead -> OOB
+    ident = _TRIPLET_IDENTITY[reduce]
+    cnt = jax.ops.segment_sum(live.astype(jnp.float32), seg,
+                              num_segments=num_segments + 1)[:num_segments]
+    if reduce == "sum":
+        m = jnp.where(live[:, None], msgs, 0.0)
+        out = jax.ops.segment_sum(m, seg,
+                                  num_segments=num_segments + 1)[:num_segments]
+    else:
+        fn = jax.ops.segment_min if reduce == "min" else jax.ops.segment_max
+        m = jnp.where(live[:, None], msgs, ident)
+        out = fn(m, seg, num_segments=num_segments + 1)[:num_segments]
+        out = jnp.where(cnt[:, None] > 0, out, ident)            # finite ident
+    return out, cnt
+
+
 def flash_attention(
     q: jnp.ndarray,  # [B, Hq, Lq, Dh]
     k: jnp.ndarray,  # [B, Hkv, Lk, Dh]

@@ -1,33 +1,27 @@
-"""Pallas TPU kernel: fused block-CSR SpMV — PageRank's inner loop.
+"""SpMV — the degenerate scalar instance of the fused triplet kernel.
 
 mrTriplets with a *linear* message (msg = w·x[src], reduce = sum) is SpMV.
-The Spark implementation streams a CSR scan with hash-map lookups; the
-TPU-native rethink (DESIGN.md §2) turns both the gather and the scatter into
-one-hot matmuls so the whole edge sweep runs on the MXU with the operand
-tiles resident in VMEM:
+Historically this module carried its own Pallas kernel; the general fused
+triplet kernel (kernels/triplet.py, DESIGN.md §2.3) now subsumes it — the
+one-hot-matmul gather/scatter strategy and the (dst_block, src_block) chunk
+tiling both live there.  This wrapper keeps the established SpMV surface:
 
-    out_tile  +=  onehot_dstᵀ @ ((onehot_src @ x_tile) * w)
-                  [Vb,Eb]        [Eb,Vb]    [Vb,D]      [Eb,1]
+    out[v] = Σ_{e: dst(e)=v} w[e]·x[src(e)]
 
-Edges are re-sorted at build time into fixed-size chunks grouped by
-(dst_block, src_block); per-chunk scalars (which src tile, whether any live
-edge) arrive via scalar prefetch so the x BlockSpec can be *indirected*
-per-chunk — the Pallas analog of GraphX's routing-table join-site lookup.
-
-Grid = (num_dst_blocks, num_chunks); dst axis outermost so each output tile
-accumulates in VMEM across its chunk sweep.  Chunks belonging to other dst
-blocks are skipped via `pl.when` (band skip), and chunks whose sources are
-all stale are skipped via the active flag (skipStale, §4.5.1/§4.6).
+with `active_src_blocks` giving the historical BLOCK-granular skipStale
+(§4.5.1/§4.6): every edge whose source block is stale is dropped, realised
+as a per-edge live mask so the general kernel's chunk skip stays exact.
 """
 from __future__ import annotations
 
-import functools
-
-import numpy as np
-import jax
 import jax.numpy as jnp
-from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+
+from .triplet import build_triplet_tiles, fused_triplet
+
+
+def _linear_message(sv, ev, dv):
+    """msg = w · x[src] — the PageRank message, tile-level."""
+    return sv * ev[:, :1]
 
 
 # ----------------------------------------------------------------------------
@@ -44,83 +38,19 @@ def build_tiles(
 ) -> dict[str, np.ndarray]:
     """Group edges into Eb-sized chunks sorted by (dst_block, src_block).
 
-    Returns device-ready arrays:
-      perm        [n_chunks*eb]  gather order of edges (padding -> E, OOB)
-      chunk_dst   [n_chunks]     dst block id of each chunk
-      chunk_src   [n_chunks]     src block id of each chunk
+    Back-compat view over build_triplet_tiles (dst is the aggregation side).
     """
-    e = int(src_slot.shape[0])
-    live = np.flatnonzero(edge_mask)
-    sb = src_slot[live] // vb
-    db = dst_slot[live] // vb
-    order = np.lexsort((sb, db))          # dst-block major, src-block minor
-    live = live[order]
-    sb, db = sb[order], db[order]
-
-    # split runs of identical (db, sb) into eb-sized chunks
-    perm_chunks: list[np.ndarray] = []
-    cdst: list[int] = []
-    csrc: list[int] = []
-    if live.size:
-        boundaries = np.flatnonzero((np.diff(db) != 0) | (np.diff(sb) != 0)) + 1
-        for seg in np.split(np.arange(live.size), boundaries):
-            for off in range(0, seg.size, eb):
-                chunk = live[seg[off:off + eb]]
-                pad = np.full(eb - chunk.size, e, dtype=np.int64)  # OOB pad
-                perm_chunks.append(np.concatenate([chunk, pad]))
-                cdst.append(int(db[seg[0]]))
-                csrc.append(int(sb[seg[0]]))
-    if not perm_chunks:  # empty graph
-        perm_chunks.append(np.full(eb, e, dtype=np.int64))
-        cdst.append(0)
-        csrc.append(0)
+    t = build_triplet_tiles(dst_slot, src_slot, edge_mask, v_mir, eb=eb, vb=vb)
     return dict(
-        perm=np.concatenate(perm_chunks).astype(np.int32),
-        chunk_dst=np.asarray(cdst, dtype=np.int32),
-        chunk_src=np.asarray(csrc, dtype=np.int32),
-        eb=np.int32(eb),
-        vb=np.int32(vb),
-        n_dst_blocks=np.int32(max(-(-v_mir // vb), 1)),
+        perm=t["perm"],
+        chunk_dst=t["chunk_out"],
+        chunk_src=t["chunk_in"],
+        eb=t["eb"],
+        vb=t["vb"],
+        n_dst_blocks=t["n_blocks"],
     )
 
 
-# ----------------------------------------------------------------------------
-# Kernel
-# ----------------------------------------------------------------------------
-def _kernel(chunk_dst_ref, chunk_src_ref, chunk_act_ref,
-            sloc_ref, dloc_ref, w_ref, x_ref, out_ref):
-    i = pl.program_id(0)      # dst block
-    c = pl.program_id(1)      # chunk
-
-    @pl.when(c == 0)
-    def _init():
-        out_ref[...] = jnp.zeros_like(out_ref)
-
-    mine = chunk_dst_ref[c] == i
-    active = chunk_act_ref[c]
-
-    @pl.when(jnp.logical_and(mine, active))
-    def _accumulate():
-        vb = x_ref.shape[0]
-        eb = sloc_ref.shape[0]
-        sloc = sloc_ref[...]                      # [Eb] src slot local to tile
-        dloc = dloc_ref[...]                      # [Eb] dst slot local to tile
-        cols = jax.lax.broadcasted_iota(jnp.int32, (eb, vb), 1)
-        oh_src = (sloc[:, None] == cols).astype(jnp.float32)   # [Eb, Vb]
-        oh_dst = (dloc[:, None] == cols).astype(jnp.float32)   # [Eb, Vb]
-        x = x_ref[...].astype(jnp.float32)                     # [Vb, D]
-        msgs = jax.lax.dot_general(                             # gather = matmul
-            oh_src, x, (((1,), (0,)), ((), ())),
-            preferred_element_type=jnp.float32,
-        ) * w_ref[...].astype(jnp.float32)[:, None]             # [Eb, D]
-        out_ref[...] += jax.lax.dot_general(                    # scatter-add
-            oh_dst, msgs, (((0,), (0,)), ((), ())),
-            preferred_element_type=jnp.float32,
-        )
-
-
-@functools.partial(
-    jax.jit, static_argnames=("v_mir", "eb", "vb", "interpret"))
 def spmv(
     x: jnp.ndarray,           # [V_mir, D] mirror values
     w: jnp.ndarray,           # [E] edge weights (0 for masked edges)
@@ -137,51 +67,14 @@ def spmv(
     interpret: bool = False,
 ) -> jnp.ndarray:
     """out[v] = Σ_{e: dst(e)=v} w[e]·x[src(e)]  over live chunks. f32 out."""
-    d = x.shape[1]
-    n_chunks = chunk_dst.shape[0]
-    n_db = max(-(-v_mir // vb), 1)
-    v_pad = n_db * vb
-
-    xp = jnp.pad(x, ((0, v_pad - x.shape[0]), (0, 0)))
-    wp = jnp.concatenate([w.astype(jnp.float32), jnp.zeros((1,), jnp.float32)])
-    sp = jnp.concatenate([src_slot, jnp.zeros((1,), jnp.int32)])
-    dp = jnp.concatenate([dst_slot, jnp.zeros((1,), jnp.int32)])
-
-    # chunk-ordered edge streams, slots localised to their tile
-    cs = sp[perm].reshape(n_chunks, eb) - (chunk_src * vb)[:, None]
-    cd = dp[perm].reshape(n_chunks, eb) - (chunk_dst * vb)[:, None]
-    cw = wp[perm].reshape(n_chunks, eb)
-    oob = perm.reshape(n_chunks, eb) >= w.shape[0]
-    cs = jnp.where(oob, vb, cs).astype(jnp.int32)   # never matches a column
-    cd = jnp.where(oob, vb, cd).astype(jnp.int32)
-    cw = jnp.where(oob, 0.0, cw)
-
+    e = w.shape[0]
     if active_src_blocks is None:
-        act = jnp.ones((n_chunks,), jnp.bool_)
+        live = jnp.ones((e,), bool)
     else:                                            # skipStale at block level
-        act = active_src_blocks[chunk_src]
-    act = jnp.logical_and(act, jnp.logical_not(oob.all(axis=1)))
-
-    grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=3,                       # chunk_dst, chunk_src, act
-        grid=(n_db, n_chunks),
-        in_specs=[
-            pl.BlockSpec((1, eb), lambda i, c, cdst, csrc, a: (c, 0)),   # sloc
-            pl.BlockSpec((1, eb), lambda i, c, cdst, csrc, a: (c, 0)),   # dloc
-            pl.BlockSpec((1, eb), lambda i, c, cdst, csrc, a: (c, 0)),   # w
-            pl.BlockSpec((vb, d), lambda i, c, cdst, csrc, a: (csrc[c], 0)),  # x tile
-        ],
-        out_specs=pl.BlockSpec((vb, d), lambda i, c, cdst, csrc, a: (i, 0)),
-    )
-
-    def kern(cdst_ref, csrc_ref, act_ref, sloc_ref, dloc_ref, w_ref, x_ref, out_ref):
-        _kernel(cdst_ref, csrc_ref, act_ref,
-                sloc_ref[0], dloc_ref[0], w_ref[0], x_ref, out_ref)
-
-    out = pl.pallas_call(
-        kern,
-        grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((v_pad, d), jnp.float32),
-        interpret=interpret,
-    )(chunk_dst, chunk_src, act, cs, cd, cw, xp)
-    return out[:v_mir]
+        live = active_src_blocks[src_slot // vb]
+    tiles = {"perm": perm, "chunk_out": chunk_dst, "chunk_in": chunk_src}
+    out, _ = fused_triplet(
+        x, w[:, None], src_slot, dst_slot, live, tiles, _linear_message,
+        v_mir, x.shape[1], to="dst", reduce="sum", use_dst=False,
+        eb=eb, vb=vb, interpret=interpret)
+    return out

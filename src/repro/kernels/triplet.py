@@ -1,0 +1,280 @@
+"""Pallas TPU kernel: the general fused mrTriplets sweep (DESIGN.md §2.3).
+
+mrTriplets' hot loop is a three-way join (edges ⋈ vertices(src) ⋈
+vertices(dst)) followed by a per-vertex reduction.  The unfused engine path
+materialises the [E, D] message array in HBM between the gather and the
+reduce; this kernel performs mirror-row gather (src and/or dst), the per-edge
+message computation, and the block-local segment reduction in ONE kernel, so
+the edge sweep never leaves VMEM:
+
+    sv  = onehot_src @ x[src_tile]            # gather  = MXU matmul
+    dv  = onehot_dst @ x[dst_tile]
+    msg = tile_fn(sv, ev, dv)                 # the (vmapped) map UDF, traced
+    out += onehot_outᵀ @ (msg · live)         # reduce 'sum' = MXU matmul
+    out  = min/max(out, colwise-reduce(msg))  # reduce 'min'/'max' on the VPU
+
+Edges are re-sorted at build time into fixed-size chunks grouped by
+(out_block, in_block) — the §4.2 clustered index — so each chunk touches one
+aggregation-side tile and one gather-side tile; per-chunk scalars arrive via
+scalar prefetch and *indirect* both vertex BlockSpecs (the Pallas analog of
+GraphX's routing-table join-site lookup).  The same mirror matrix is passed
+twice with different index maps, once per endpoint role.
+
+§4.6-style index scan: chunks with no live edge are skipped via `pl.when`
+on a per-chunk any-live flag.  `live` is per-EDGE, so the skipping is a pure
+optimisation — results are identical to the unfused path's edge-granular
+skipStale masking, while whole stale tiles cost nothing.
+
+The scalar SpMV kernel (kernels/spmv.py) is the degenerate instance of this
+kernel: linear message, sum reduce, src-only gather.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+# Reduction identities — finite (finfo extremes, not ±inf) so they match the
+# engine's _REDUCE_IDENTITY convention bit-for-bit on empty segments.
+REDUCE_IDENTITY = {
+    "sum": 0.0,
+    "min": float(np.finfo(np.float32).max),
+    "max": float(np.finfo(np.float32).min),
+}
+
+
+# ----------------------------------------------------------------------------
+# Build-time tiling metadata (numpy; structure is immutable so this runs once
+# per (graph, aggregation side) and is cached by the engine).
+# ----------------------------------------------------------------------------
+def build_triplet_tiles(
+    out_slot: np.ndarray,     # [E] slot of the aggregation-side endpoint
+    in_slot: np.ndarray,      # [E] slot of the gather-side endpoint
+    edge_mask: np.ndarray,    # [E] structural validity
+    num_slots: int,           # size of the flat slot space (both sides)
+    *,
+    eb: int = 512,
+    vb: int = 512,
+) -> dict[str, np.ndarray]:
+    """Group structurally-live edges into eb-sized chunks sorted by
+    (out_block, in_block).
+
+    Returns device-ready arrays:
+      perm       [n_chunks*eb]  gather order of edges (padding -> E, OOB)
+      chunk_out  [n_chunks]     aggregation-side block id of each chunk
+      chunk_in   [n_chunks]     gather-side block id of each chunk
+    """
+    e = int(out_slot.shape[0])
+    live = np.flatnonzero(edge_mask)
+    ob = out_slot[live] // vb
+    ib = in_slot[live] // vb
+    order = np.lexsort((ib, ob))          # out-block major, in-block minor
+    live = live[order]
+    ob, ib = ob[order], ib[order]
+
+    # split runs of identical (ob, ib) into eb-sized chunks
+    perm_chunks: list[np.ndarray] = []
+    couts: list[int] = []
+    cins: list[int] = []
+    if live.size:
+        boundaries = np.flatnonzero((np.diff(ob) != 0) | (np.diff(ib) != 0)) + 1
+        for seg in np.split(np.arange(live.size), boundaries):
+            for off in range(0, seg.size, eb):
+                chunk = live[seg[off:off + eb]]
+                pad = np.full(eb - chunk.size, e, dtype=np.int64)  # OOB pad
+                perm_chunks.append(np.concatenate([chunk, pad]))
+                couts.append(int(ob[seg[0]]))
+                cins.append(int(ib[seg[0]]))
+    if not perm_chunks:  # empty graph
+        perm_chunks.append(np.full(eb, e, dtype=np.int64))
+        couts.append(0)
+        cins.append(0)
+    return dict(
+        perm=np.concatenate(perm_chunks).astype(np.int32),
+        chunk_out=np.asarray(couts, dtype=np.int32),
+        chunk_in=np.asarray(cins, dtype=np.int32),
+        eb=np.int32(eb),
+        vb=np.int32(vb),
+        n_blocks=np.int32(max(-(-num_slots // vb), 1)),
+    )
+
+
+# ----------------------------------------------------------------------------
+# Kernel
+# ----------------------------------------------------------------------------
+def _make_kernel(tile_fn: Callable, reduce: str, dm: int):
+    ident = REDUCE_IDENTITY[reduce]
+
+    def kernel(cout_ref, csrc_ref, cdst_ref, act_ref,
+               sloc_ref, dloc_ref, oloc_ref, live_ref, ev_ref,
+               xs_ref, xd_ref, out_ref, cnt_ref):
+        i = pl.program_id(0)      # aggregation-side block
+        c = pl.program_id(1)      # chunk
+
+        @pl.when(c == 0)
+        def _init():
+            out_ref[...] = jnp.full_like(out_ref, ident)
+            cnt_ref[...] = jnp.zeros_like(cnt_ref)
+
+        mine = cout_ref[c] == i
+        # chunk skip (§4.6): a chunk whose edges are all dead — masked,
+        # skipStale, or padding — never touches the tile pair.
+        @pl.when(jnp.logical_and(mine, act_ref[c]))
+        def _accumulate():
+            vb = out_ref.shape[0]
+            eb = sloc_ref.shape[0]
+            live = live_ref[...]                                 # [Eb] 0/1
+            cols = jax.lax.broadcasted_iota(jnp.int32, (eb, vb), 1)
+            oh_s = (sloc_ref[...][:, None] == cols).astype(jnp.float32)
+            oh_d = (dloc_ref[...][:, None] == cols).astype(jnp.float32)
+            sv = jax.lax.dot_general(                            # gather src
+                oh_s, xs_ref[...].astype(jnp.float32),
+                (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32)              # [Eb, Dx]
+            dv = jax.lax.dot_general(                            # gather dst
+                oh_d, xd_ref[...].astype(jnp.float32),
+                (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32)
+            msgs = tile_fn(sv, ev_ref[...].astype(jnp.float32), dv)  # [Eb, Dm]
+            # dead rows (padding / masked / stale) gathered ZERO endpoint
+            # values, so the UDF may have produced NaN/inf there (0/0 in
+            # PageRank's pr/deg).  Mask by SUBSTITUTION before any matmul —
+            # multiplying by the 0/1 one-hot would turn 0·NaN into NaN and
+            # poison the whole output block.
+            msgs = jnp.where(live[:, None] > 0.0, msgs, 0.0)
+
+            oh_o = (oloc_ref[...][:, None] == cols).astype(jnp.float32)
+            oh_live = oh_o * live[:, None]                       # [Eb, Vb]
+            cnt_ref[...] += jnp.sum(oh_live, axis=0)[:, None]
+            if reduce == "sum":
+                out_ref[...] += jax.lax.dot_general(             # scatter-add
+                    oh_live, msgs, (((0,), (0,)), ((), ())),
+                    preferred_element_type=jnp.float32)
+            else:
+                sel = jnp.minimum if reduce == "min" else jnp.maximum
+                mask = oh_live > 0.0
+                reds = []
+                for d in range(dm):                              # static unroll
+                    col = jnp.where(mask, msgs[:, d:d + 1], ident)
+                    reds.append(col.min(axis=0) if reduce == "min"
+                                else col.max(axis=0))            # [Vb]
+                out_ref[...] = sel(out_ref[...],
+                                   jnp.stack(reds, axis=1))      # [Vb, Dm]
+
+    return kernel
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("tile_fn", "num_segments", "dm", "to", "reduce",
+                     "use_src", "use_dst", "eb", "vb", "interpret"))
+def fused_triplet(
+    x: jnp.ndarray,           # [S, Dx] packed mirror matrix (any float dtype)
+    ev: jnp.ndarray,          # [E, De] packed edge payload
+    src_slot: jnp.ndarray,    # [E] int32 in [0, S)
+    dst_slot: jnp.ndarray,    # [E] int32 in [0, S)
+    live: jnp.ndarray,        # [E] bool — edge contributes a message
+    tiles: dict,              # from build_triplet_tiles (grouped by `to` side)
+    tile_fn: Callable,        # ([Eb,Dx],[Eb,De],[Eb,Dx]) -> [Eb,Dm] f32
+    num_segments: int,        # = S
+    dm: int,                  # message width
+    *,
+    to: str = "dst",
+    reduce: str = "sum",
+    use_src: bool = True,
+    use_dst: bool = True,
+    eb: int = 512,
+    vb: int = 512,
+    interpret: bool = False,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """out[v] = reduce_{live e: out(e)=v} tile_fn(x[src(e)], ev[e], x[dst(e)])
+
+    use_src / use_dst: whether tile_fn reads that endpoint's values.  An
+    unused side streams a width-1 zero tile instead of the packed mirror
+    matrix, halving vertex-tile VMEM/DMA for one-sided messages (PageRank
+    reads only src) — tile_fn must not touch the dummy (the engine's
+    side-aware unpack guarantees this).
+
+    Returns (out [S, dm] f32 — reduce identity at empty slots,
+             cnt [S] f32 — live message count per slot).
+    """
+    e = src_slot.shape[0]
+    dx = max(x.shape[1], 1)
+    de = max(ev.shape[1], 1)
+    perm = jnp.asarray(tiles["perm"])
+    chunk_out = jnp.asarray(tiles["chunk_out"])
+    chunk_in = jnp.asarray(tiles["chunk_in"])
+    n_chunks = chunk_out.shape[0]
+    n_vb = max(-(-num_segments // vb), 1)
+    v_pad = n_vb * vb
+
+    xp = jnp.pad(x.astype(jnp.float32).reshape(x.shape[0], -1),
+                 ((0, v_pad - x.shape[0]), (0, max(1 - x.shape[1], 0))))
+    dummy = jnp.zeros((v_pad, 1), jnp.float32)
+    xs_in, dxs = (xp, dx) if use_src else (dummy, 1)
+    xd_in, dxd = (xp, dx) if use_dst else (dummy, 1)
+    evp = jnp.concatenate(
+        [ev.astype(jnp.float32).reshape(e, -1),
+         jnp.zeros((1, ev.shape[1]), jnp.float32)])
+    if ev.shape[1] == 0:
+        evp = jnp.zeros((e + 1, 1), jnp.float32)
+    sp = jnp.concatenate([src_slot.astype(jnp.int32), jnp.zeros((1,), jnp.int32)])
+    dp = jnp.concatenate([dst_slot.astype(jnp.int32), jnp.zeros((1,), jnp.int32)])
+    lp = jnp.concatenate([live, jnp.zeros((1,), bool)])
+
+    # chunk-ordered edge streams; endpoint roles resolved from the grouping
+    chunk_src = chunk_out if to == "src" else chunk_in
+    chunk_dst = chunk_out if to == "dst" else chunk_in
+    pc = perm.reshape(n_chunks, eb)
+    oob = pc >= e
+    cs = jnp.where(oob, vb, sp[perm].reshape(n_chunks, eb)
+                   - (chunk_src * vb)[:, None]).astype(jnp.int32)
+    cd = jnp.where(oob, vb, dp[perm].reshape(n_chunks, eb)
+                   - (chunk_dst * vb)[:, None]).astype(jnp.int32)
+    co = cs if to == "src" else cd
+    clive = lp[perm].reshape(n_chunks, eb) & ~oob
+    cev = evp[perm].reshape(n_chunks, eb, de)
+    act = clive.any(axis=1)                       # chunk skip flag (dynamic)
+    clive_f = clive.astype(jnp.float32)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=4,                    # chunk_out/src/dst + act
+        grid=(n_vb, n_chunks),
+        in_specs=[
+            pl.BlockSpec((1, eb), lambda i, c, co_, cs_, cd_, a: (c, 0)),
+            pl.BlockSpec((1, eb), lambda i, c, co_, cs_, cd_, a: (c, 0)),
+            pl.BlockSpec((1, eb), lambda i, c, co_, cs_, cd_, a: (c, 0)),
+            pl.BlockSpec((1, eb), lambda i, c, co_, cs_, cd_, a: (c, 0)),
+            pl.BlockSpec((1, eb, de), lambda i, c, co_, cs_, cd_, a: (c, 0, 0)),
+            pl.BlockSpec((vb, dxs), lambda i, c, co_, cs_, cd_, a: (cs_[c], 0)),
+            pl.BlockSpec((vb, dxd), lambda i, c, co_, cs_, cd_, a: (cd_[c], 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((vb, dm), lambda i, c, co_, cs_, cd_, a: (i, 0)),
+            pl.BlockSpec((vb, 1), lambda i, c, co_, cs_, cd_, a: (i, 0)),
+        ],
+    )
+
+    inner = _make_kernel(tile_fn, reduce, dm)
+
+    def kern(co_ref, cs_ref, cd_ref, a_ref,
+             sloc_ref, dloc_ref, oloc_ref, live_ref, ev_ref,
+             xs_ref, xd_ref, out_ref, cnt_ref):
+        inner(co_ref, cs_ref, cd_ref, a_ref,
+              sloc_ref[0], dloc_ref[0], oloc_ref[0], live_ref[0], ev_ref[0],
+              xs_ref, xd_ref, out_ref, cnt_ref)
+
+    out, cnt = pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct((v_pad, dm), jnp.float32),
+                   jax.ShapeDtypeStruct((v_pad, 1), jnp.float32)],
+        interpret=interpret,
+    )(chunk_out, chunk_src, chunk_dst, act,
+      cs, cd, co, clive_f, cev, xs_in, xd_in)
+    return out[:num_segments], cnt[:num_segments, 0]

@@ -195,6 +195,31 @@ def _first_shape_dims(s: str):
     return dims
 
 
+def _split_operands(s: str) -> list[str]:
+    """Split an HLO operand list on TOP-LEVEL commas only.
+
+    Recent XLA prints operand shapes inline — `dot(f32[64,128]{1,0} %a,
+    f32[128,256]{1,0} %b)` — so a naive split(',') severs every
+    multi-dimensional shape at its first dim."""
+    out: list[str] = []
+    depth = 0
+    buf: list[str] = []
+    for ch in s:
+        if ch in "[{(":
+            depth += 1
+        elif ch in "]})":
+            depth -= 1
+        if ch == "," and depth == 0:
+            out.append("".join(buf).strip())
+            buf = []
+        else:
+            buf.append(ch)
+    tail = "".join(buf).strip()
+    if tail:
+        out.append(tail)
+    return out
+
+
 def _parse_instructions(comps):
     """[(comp, name, out_shape_str, op, operand_str, full_line)] + name->shape
     maps (per computation, with a module-wide fallback)."""
@@ -241,7 +266,7 @@ def dot_flops(hlo_text: str) -> dict[str, float]:
             out_elems *= d
         cd = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", line)
         cdims = [int(x) for x in cd.group(1).split(",") if x] if cd else []
-        lhs_tok = operands.split(",")[0].strip()
+        lhs_tok = _split_operands(operands)[0]
         if "[" in lhs_tok:
             lhs_dims = _first_shape_dims(lhs_tok)
         else:
@@ -289,8 +314,7 @@ def bytes_accessed(hlo_text: str) -> float:
         k = mult.get(cname, 1.0)
         local = shapes_by_comp.get(cname, {})
         opnd_bytes = []
-        for tok in operands.split(","):
-            tok = tok.strip()
+        for tok in _split_operands(operands):
             if not tok:
                 continue
             if "[" in tok:

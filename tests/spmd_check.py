@@ -39,6 +39,25 @@ def shard_specs(tree):
         lambda x: PS(*(("parts",) + (None,) * (x.ndim - 1))), tree)
 
 
+def make_mesh(shape, names):
+    """jax.make_mesh across API generations (axis_types landed post-0.4)."""
+    try:
+        return jax.make_mesh(shape, names,
+                             axis_types=(jax.sharding.AxisType.Auto,))
+    except (AttributeError, TypeError):
+        return jax.make_mesh(shape, names)
+
+
+def shard_map(fn, mesh, in_specs, out_specs):
+    """jax.shard_map (check_vma) or jax.experimental's (check_rep)."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(fn, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False)
+    from jax.experimental.shard_map import shard_map as sm
+    return sm(fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+              check_rep=False)
+
+
 def main():
     assert jax.device_count() >= P, jax.device_count()
     gd = rmat(6, 4, seed=0)
@@ -66,8 +85,7 @@ def main():
     pr_local = np.asarray(g_local.vdata["pr"])
 
     # ---- SPMD run ----------------------------------------------------------
-    mesh = jax.make_mesh((P,), ("parts",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh((P,), ("parts",))
     g_spmd = dataclasses.replace(g, ex=SpmdExchange(p=P, axis_name="parts"),
                                  host=None)
     gspecs = shard_specs(g_spmd)
@@ -76,10 +94,8 @@ def main():
         vals, exists, _, _ = mr_triplets(gg, send, "sum", kernel_mode="ref")
         return vals, exists
 
-    fn1 = jax.jit(jax.shard_map(one_mrt, mesh=mesh, in_specs=(gspecs,),
-                                out_specs=(shard_specs(vals_local),
-                                           PS("parts")),
-                                check_vma=False))
+    fn1 = jax.jit(shard_map(one_mrt, mesh, (gspecs,),
+                            (shard_specs(vals_local), PS("parts"))))
     vals_spmd, exists_spmd = fn1(g_spmd)
     np.testing.assert_allclose(np.asarray(vals_spmd["m"]),
                                np.asarray(vals_local["m"]), rtol=1e-6)
@@ -95,8 +111,7 @@ def main():
                 changed_fn=None, kernel_mode="ref", use_cache=True)
         return out.vdata["pr"]
 
-    fn2 = jax.jit(jax.shard_map(pr10, mesh=mesh, in_specs=(gspecs,),
-                                out_specs=PS("parts"), check_vma=False))
+    fn2 = jax.jit(shard_map(pr10, mesh, (gspecs,), PS("parts")))
     pr_spmd = np.asarray(fn2(g_spmd))
     np.testing.assert_allclose(pr_spmd, pr_local, rtol=1e-5)
 
@@ -119,11 +134,10 @@ def main():
         kk, vv, mm, ovf = shuffle_by_key(k, v, m, ex, capacity=128)
         return kk, vv, mm, ovf
 
-    fn3 = jax.jit(jax.shard_map(
-        red_spmd, mesh=mesh,
-        in_specs=(PS("parts"), shard_specs(col.values), PS("parts")),
-        out_specs=(PS("parts"), shard_specs(col.values), PS("parts"), PS()),
-        check_vma=False))
+    fn3 = jax.jit(shard_map(
+        red_spmd, mesh,
+        (PS("parts"), shard_specs(col.values), PS("parts")),
+        (PS("parts"), shard_specs(col.values), PS("parts"), PS())))
     kk, vv, mm, ovf = fn3(col.keys, col.values, col.mask)
     assert int(ovf) == 0
     # same multiset of (key, value) pairs routed to the same partitions

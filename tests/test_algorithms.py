@@ -13,7 +13,9 @@ def graph_of(gd, p=4, weights=None):
     return Graph.from_edges(gd.src, gd.dst, edge_values=ev, num_partitions=p)
 
 
-@pytest.mark.parametrize("seed,p", [(0, 2), (1, 4), (2, 6)])
+@pytest.mark.parametrize("seed,p", [
+    (0, 2), pytest.param(1, 4, marks=pytest.mark.slow),
+    pytest.param(2, 6, marks=pytest.mark.slow)])
 def test_pagerank_matches_reference(seed, p):
     gd = rmat(6, 4, seed=seed)
     res = alg.pagerank(graph_of(gd, p), num_iters=15)
@@ -84,6 +86,7 @@ def test_label_propagation_two_cliques():
     assert all(labels[v] == 1 for v in range(5, 10))
 
 
+@pytest.mark.slow
 def test_pregel_fused_equals_host_loop():
     gd = rmat(6, 4, seed=7)
     g = alg.attach_out_degree(graph_of(gd))
@@ -106,6 +109,7 @@ def test_pregel_fused_equals_host_loop():
                                np.asarray(fused_g.vdata["pr"]), rtol=1e-5)
 
 
+@pytest.mark.slow
 def test_coarsen_listing7():
     """Contract edges within same 'domain' (vid // 4); Listing 7 pipeline."""
     gd = symmetrize(rmat(5, 3, seed=9))
@@ -127,6 +131,7 @@ def test_coarsen_listing7():
     assert len(cvids) < gd.num_vertices
 
 
+@pytest.mark.slow
 def test_triangle_count_matches_bruteforce():
     gd = symmetrize(rmat(5, 3, seed=11))
     g = graph_of(gd, p=4)
@@ -139,6 +144,7 @@ def test_triangle_count_matches_bruteforce():
                                float(total), rtol=1e-6)
 
 
+@pytest.mark.slow
 def test_triangle_count_clique_and_star():
     # K4: 4 triangles; star: none
     edges = [(a, b) for a in range(4) for b in range(4) if a != b]

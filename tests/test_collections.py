@@ -1,6 +1,9 @@
 """Distributed collection semantics vs plain-python oracles (hypothesis)."""
 import numpy as np
 import jax.numpy as jnp
+import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import Col, LocalExchange

@@ -1,7 +1,6 @@
 """Graph operator semantics (Listing 4) + consistency invariants."""
 import numpy as np
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
 
 from repro.core import Graph, Col
 from repro.data import rmat

@@ -7,14 +7,265 @@ import pytest
 from repro.kernels import ref
 from repro.kernels.segment_sum import segment_sum
 from repro.kernels import spmv as spmv_mod
+from repro.kernels import triplet as triplet_mod
 from repro.kernels.flash_attention import flash_attention
 
 RNG = np.random.default_rng(0)
 
 
+# -------------------------------------------------------------- fused triplet
+def _flat_graph(e, v, dx, de, seed=0, int_valued=True):
+    """Random flat-slot-space triplet workload.  Integer-valued floats make
+    f32 sums order-independent, so kernel-vs-oracle compares are EXACT."""
+    rng = np.random.default_rng(seed)
+    src = rng.integers(0, v, e).astype(np.int32)
+    dst = rng.integers(0, v, e).astype(np.int32)
+    live = rng.random(e) > 0.3
+    if int_valued:
+        x = rng.integers(-4, 5, (v, dx)).astype(np.float32)
+        ev = rng.integers(1, 4, (e, de)).astype(np.float32)
+    else:
+        x = rng.normal(size=(v, dx)).astype(np.float32)
+        ev = rng.normal(size=(e, de)).astype(np.float32)
+    return src, dst, live, x, ev
+
+
+def _affine_msg(sv, evv, dv):
+    return sv * evv[:, :1] + dv * evv[:, 1:2]
+
+
+@pytest.mark.parametrize("reduce", ["sum", "min", "max"])
+@pytest.mark.parametrize("to", ["dst", "src"])
+@pytest.mark.parametrize("e,v,dx,eb,vb", [
+    (400, 100, 3, 64, 32),
+    pytest.param(1000, 256, 1, 128, 128, marks=pytest.mark.slow),
+    (64, 16, 4, 32, 16)])
+def test_triplet_kernel_matches_oracle(reduce, to, e, v, dx, eb, vb):
+    src, dst, live, x, ev = _flat_graph(e, v, dx, 2, seed=e + dx)
+    out_s, in_s = (dst, src) if to == "dst" else (src, dst)
+    tiles = triplet_mod.build_triplet_tiles(out_s, in_s, np.ones(e, bool), v,
+                                            eb=eb, vb=vb)
+    got, cnt = triplet_mod.fused_triplet(
+        jnp.asarray(x), jnp.asarray(ev), jnp.asarray(src), jnp.asarray(dst),
+        jnp.asarray(live), tiles, _affine_msg, v, dx, to=to, reduce=reduce,
+        eb=eb, vb=vb, interpret=True)
+    want, cnt_want = ref.fused_triplet(
+        jnp.asarray(x), jnp.asarray(ev), jnp.asarray(src), jnp.asarray(dst),
+        jnp.asarray(live), _affine_msg, v, to=to, reduce=reduce)
+    np.testing.assert_array_equal(np.asarray(cnt), np.asarray(cnt_want))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_triplet_kernel_dead_edges_and_empty_segments():
+    e, v = 128, 32
+    src, dst, _, x, ev = _flat_graph(e, v, 2, 2, seed=7)
+    live = np.zeros(e, bool)                      # everything stale
+    tiles = triplet_mod.build_triplet_tiles(dst, src, np.ones(e, bool), v,
+                                            eb=32, vb=16)
+    for reduce in ("sum", "min", "max"):
+        out, cnt = triplet_mod.fused_triplet(
+            jnp.asarray(x), jnp.asarray(ev), jnp.asarray(src),
+            jnp.asarray(dst), jnp.asarray(live), tiles, _affine_msg, v, 2,
+            reduce=reduce, eb=32, vb=16, interpret=True)
+        assert float(np.asarray(cnt).sum()) == 0.0
+        ident = triplet_mod.REDUCE_IDENTITY[reduce]
+        np.testing.assert_array_equal(np.asarray(out),
+                                      np.full((v, 2), ident, np.float32))
+
+
+def _build_engine_graph(seed=0, p=4, scale=6, ef=4, payload_dim=0):
+    from repro.core import Graph
+    from repro.data import rmat
+    g = rmat(scale, ef, seed=seed)
+    n = g.num_vertices
+    rng = np.random.default_rng(seed)
+    vids = np.arange(n, dtype=np.int64)
+    vvals = {"x": (vids % 17 + 1).astype(np.float32)}
+    dflt = {"x": np.float32(0)}
+    if payload_dim:
+        vvals["vec"] = rng.integers(-3, 4, (n, payload_dim)).astype(np.float32)
+        dflt["vec"] = np.zeros(payload_dim, np.float32)
+    return Graph.from_edges(
+        g.src, g.dst,
+        edge_values={"w": (np.arange(g.num_edges) % 5 + 1).astype(np.float32)},
+        vertex_keys=vids, vertex_values=vvals, default_vertex=dflt,
+        num_partitions=p), g
+
+
+_NEED_FNS = {
+    "src":  lambda sv, ev, dv: {"m": sv["x"] * ev["w"]},
+    "dst":  lambda sv, ev, dv: {"m": dv["x"] + ev["w"]},
+    "both": lambda sv, ev, dv: {"m": sv["x"] * ev["w"] + dv["x"]},
+    "none": lambda sv, ev, dv: {"m": jnp.float32(1.0)},
+}
+
+
+@pytest.mark.parametrize("reduce", ["sum", "min", "max"])
+@pytest.mark.parametrize("need", ["src", "dst", "both", "none"])
+def test_fused_engine_matches_unfused(reduce, need):
+    """The tentpole differential: the fused physical plan must be a pure
+    execution-strategy change.  Integer-valued f32 payloads -> bit-for-bit."""
+    from repro.core.mrtriplets import mr_triplets
+    gr, _ = _build_engine_graph()
+    f = _NEED_FNS[need]
+    a, ea, _, ma = mr_triplets(gr, f, reduce, kernel_mode="unfused")
+    b, eb_, _, mb = mr_triplets(gr, f, reduce, kernel_mode="ref")
+    assert ma["plan"] == "unfused" and mb["plan"] == "fused"
+    assert bool(jnp.all(ea == eb_))
+    mask = np.asarray(ea)
+    np.testing.assert_array_equal(np.asarray(a["m"])[mask],
+                                  np.asarray(b["m"])[mask])
+
+
+def _div_msg(sv, ev, dv):
+    """PageRank-shaped message: divides by a gathered value.  On dead/padded
+    edge rows the gather yields zeros, so this produces 0/0 = NaN there —
+    the kernel must mask by substitution, not by multiplying the one-hot."""
+    return {"m": sv["x"] / jnp.maximum(sv["x"], 0.0) * ev["w"]}
+
+
+@pytest.mark.parametrize("reduce,need", [("sum", "both"), ("min", "src"),
+                                         ("max", "dst"), ("sum", "div")])
+def test_fused_engine_interpret_matches_unfused(reduce, need):
+    """Same sweep through the actual Pallas kernel (interpret mode).  The
+    'div' case produces NaN on zero-gathered dead rows (PageRank's pr/deg
+    shape) and guards the substitution masking in the kernel."""
+    from repro.core.mrtriplets import mr_triplets
+    gr, _ = _build_engine_graph(scale=5, ef=3)
+    f = _div_msg if need == "div" else _NEED_FNS[need]
+    a, ea, _, _ = mr_triplets(gr, f, reduce, kernel_mode="unfused")
+    c, ec, _, mc = mr_triplets(gr, f, reduce, kernel_mode="interpret")
+    assert mc["plan"] == "fused"
+    assert bool(jnp.all(ea == ec))
+    mask = np.asarray(ea)
+    got = np.asarray(c["m"])[mask]
+    assert np.isfinite(got).all()
+    np.testing.assert_array_equal(np.asarray(a["m"])[mask], got)
+
+
+def test_fused_engine_vector_payload_to_src():
+    """Vector messages aggregate toward the SOURCE side, fused vs unfused."""
+    from repro.core.mrtriplets import mr_triplets
+    gr, _ = _build_engine_graph(payload_dim=4)
+    f = lambda sv, ev, dv: {"m": sv["vec"] * ev["w"] + dv["vec"]}
+    a, ea, _, _ = mr_triplets(gr, f, "sum", to="src", kernel_mode="unfused")
+    b, eb_, _, mb = mr_triplets(gr, f, "sum", to="src", kernel_mode="ref")
+    assert mb["plan"] == "fused"
+    assert bool(jnp.all(ea == eb_))
+    mask = np.asarray(ea)
+    np.testing.assert_array_equal(np.asarray(a["m"])[mask],
+                                  np.asarray(b["m"])[mask])
+
+
+@pytest.mark.parametrize("skip_stale", ["out", "in", "both"])
+def test_fused_skip_stale_matches_unfused(skip_stale):
+    """skipStale masks per-edge live bits identically under both plans: the
+    fused kernel's chunk skip is an optimisation, not a semantics change."""
+    from repro.core.mrtriplets import mr_triplets
+    gr, _ = _build_engine_graph()
+    f = _NEED_FNS["src"]
+    _, _, cache, _ = mr_triplets(gr, f, "sum", kernel_mode="ref")
+    changed = (gr.s.home_vid % 5 == 0) & gr.vmask
+    g2 = gr.replace(
+        vdata={"x": jnp.where(changed, gr.vdata["x"] + 2.0, gr.vdata["x"])},
+        active=changed)
+    a, ea, _, ma = mr_triplets(g2, f, "sum", cache=cache,
+                               skip_stale=skip_stale, kernel_mode="unfused")
+    b, eb_, _, mb = mr_triplets(g2, f, "sum", cache=cache,
+                                skip_stale=skip_stale, kernel_mode="ref")
+    assert int(ma["live_edges"]) == int(mb["live_edges"])
+    assert bool(jnp.all(ea == eb_))
+    mask = np.asarray(ea)
+    np.testing.assert_array_equal(np.asarray(a["m"])[mask],
+                                  np.asarray(b["m"])[mask])
+
+
+def test_fused_bf16_wire_within_tolerance():
+    """bf16 wire dtype: fused upcasts the packed view to f32 before the map,
+    the unfused path computes in bf16 — results agree within bf16 tolerance."""
+    from repro.core import pack_bf16
+    from repro.core.mrtriplets import mr_triplets
+    gr, _ = _build_engine_graph()
+    gr16 = gr.replace(ex=pack_bf16(gr.ex))
+    f = _NEED_FNS["both"]
+    a, ea, _, _ = mr_triplets(gr16, f, "sum", kernel_mode="unfused")
+    b, eb_, _, mb = mr_triplets(gr16, f, "sum", kernel_mode="ref")
+    assert mb["plan"] == "fused"
+    assert bool(jnp.all(ea == eb_))
+    mask = np.asarray(ea)
+    np.testing.assert_allclose(np.asarray(a["m"], np.float32)[mask],
+                               np.asarray(b["m"], np.float32)[mask],
+                               rtol=2e-2, atol=1e-1)
+
+
+def test_fused_bf16_payload_min_keeps_finite_identity():
+    """Narrow (bf16) message dtype with min/max reduce: empty slots must hold
+    the finite finfo(bf16) identity under BOTH plans — never inf from casting
+    the kernel's f32 identity down."""
+    from repro.core.mrtriplets import mr_triplets
+    gr, _ = _build_engine_graph(scale=5, ef=3)
+    gr = gr.mapV(lambda vid, v: {"x": v["x"].astype(jnp.bfloat16)})
+    f = lambda sv, ev, dv: {"m": sv["x"]}
+    for reduce in ("min", "max"):
+        a, ea, _, _ = mr_triplets(gr, f, reduce, kernel_mode="unfused")
+        b, eb_, _, mb = mr_triplets(gr, f, reduce, kernel_mode="ref")
+        assert mb["plan"] == "fused"
+        assert bool(jnp.all(ea == eb_))
+        assert np.isfinite(np.asarray(b["m"], np.float32)).all()
+        np.testing.assert_allclose(np.asarray(a["m"], np.float32),
+                                   np.asarray(b["m"], np.float32),
+                                   rtol=2e-2, atol=1e-1)
+
+
+def test_fused_tile_fn_and_kernel_cache_reuse():
+    """Repeated eager mrTriplets with the same UDF must reuse one compiled
+    fused kernel (tile_fn is memoised; it is a static jit argument)."""
+    from repro.core.mrtriplets import mr_triplets
+    from repro.kernels.triplet import fused_triplet
+    gr, _ = _build_engine_graph(scale=5, ef=3)
+    f = _NEED_FNS["src"]
+    before = fused_triplet._cache_size()
+    for _ in range(3):
+        mr_triplets(gr, f, "sum", kernel_mode="interpret")
+    assert fused_triplet._cache_size() <= before + 1
+
+
+def test_fused_fallback_on_ineligible_payloads():
+    """Int payloads / multi-leaf messages / exotic reduces stay unfused."""
+    from repro.core import Graph
+    from repro.core.mrtriplets import mr_triplets
+    from repro.data import rmat
+    g = rmat(5, 3, seed=3)
+    vids = np.arange(g.num_vertices, dtype=np.int64)
+    gr = Graph.from_edges(
+        g.src, g.dst, vertex_keys=vids,
+        vertex_values={"label": (vids % 7).astype(np.int32)},
+        default_vertex={"label": np.int32(0)}, num_partitions=4)
+    # int vertex payload read by the UDF -> unfused
+    _, _, _, m1 = mr_triplets(
+        gr, lambda sv, ev, dv: {"m": sv["label"].astype(jnp.float32)},
+        "sum", kernel_mode="auto")
+    assert m1["plan"] == "unfused"
+    # multi-leaf message -> unfused
+    gr2, _ = _build_engine_graph(scale=5, ef=3)
+    _, _, _, m2 = mr_triplets(
+        gr2, lambda sv, ev, dv: {"a": sv["x"], "b": dv["x"]},
+        "sum", kernel_mode="auto")
+    assert m2["plan"] == "unfused"
+    # wide payload with min/max (per-column VMEM unroll) -> unfused
+    gr3, _ = _build_engine_graph(scale=5, ef=3, payload_dim=32)
+    f3 = lambda sv, ev, dv: {"m": sv["vec"]}
+    _, _, _, m3 = mr_triplets(gr3, f3, "min", kernel_mode="auto")
+    assert m3["plan"] == "unfused"
+    _, _, _, m4 = mr_triplets(gr3, f3, "sum", kernel_mode="auto")
+    assert m4["plan"] == "fused"    # sum path has no width cap
+
+
 # ---------------------------------------------------------------- segment_sum
 @pytest.mark.parametrize("e,v,d", [(100, 30, 1), (1000, 300, 16),
-                                   (513, 128, 8), (8, 4, 4), (2048, 64, 128)])
+                                   (513, 128, 8), (8, 4, 4),
+                                   pytest.param(2048, 64, 128,
+                                                marks=pytest.mark.slow)])
 @pytest.mark.parametrize("dtype", [np.float32, jnp.bfloat16])
 def test_segment_sum_sweep(e, v, d, dtype):
     ids = np.sort(RNG.integers(0, v, e)).astype(np.int32)
@@ -101,6 +352,7 @@ def test_spmv_active_block_skip():
     (1, 2, 1, 64, 64, 32, False, 0),
     (1, 2, 2, 40, 72, 128, False, 0),
 ])
+@pytest.mark.slow
 @pytest.mark.parametrize("dtype", [np.float32, jnp.bfloat16])
 def test_flash_sweep(b, hq, hkv, lq, lk, dh, causal, off, dtype):
     q = RNG.normal(size=(b, hq, lq, dh)).astype(dtype)
@@ -117,6 +369,7 @@ def test_flash_sweep(b, hq, hkv, lq, lk, dh, causal, off, dtype):
                                rtol=tol, atol=tol)
 
 
+@pytest.mark.slow
 def test_flash_block_sizes_agree():
     q = RNG.normal(size=(1, 2, 128, 32)).astype(np.float32)
     k = RNG.normal(size=(1, 2, 128, 32)).astype(np.float32)
@@ -136,6 +389,7 @@ def test_flash_block_sizes_agree():
     (1, 2, 2, 48, 96, 16, False, 0),
     (2, 2, 1, 1, 257, 32, True, 256),
 ])
+@pytest.mark.slow
 def test_chunked_flash_matches_dense(b, hq, hkv, lq, lk, dh, causal, off):
     q = RNG.normal(size=(b, hq, lq, dh)).astype(np.float32)
     k = RNG.normal(size=(b, hkv, lk, dh)).astype(np.float32)
@@ -156,6 +410,7 @@ def test_chunked_flash_matches_dense(b, hq, hkv, lq, lk, dh, causal, off):
     (1, 4, 96, 8, 48),
     (2, 2, 32, 64, 32),     # single chunk
 ])
+@pytest.mark.slow
 def test_mlstm_kernel_matches_ref(b, h, l, dh, chunk):
     from repro.kernels.mlstm import mlstm_chunked as kern
     q = RNG.normal(size=(b, h, l, dh)).astype(np.float32) * 0.5
@@ -173,6 +428,7 @@ def test_mlstm_kernel_matches_ref(b, h, l, dh, chunk):
                                rtol=2e-4, atol=2e-4)
 
 
+@pytest.mark.slow
 def test_mlstm_kernel_chunk_sizes_agree():
     from repro.kernels.mlstm import mlstm_chunked as kern
     b, h, l, dh = 1, 2, 128, 16

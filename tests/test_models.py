@@ -12,6 +12,8 @@ from repro.models import layers as L
 from repro.models import recurrent as R
 from repro.models.moe import moe_block, init_moe
 
+pytestmark = pytest.mark.slow   # minutes of XLA compiles; see pytest.ini
+
 KEY = jax.random.PRNGKey(0)
 
 

@@ -3,7 +3,6 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.core import Graph, analyze_message_fn
 from repro.core.mrtriplets import mr_triplets
@@ -62,7 +61,7 @@ def test_mrtriplets_matches_oracle(reduce, to):
 
 
 def test_kernel_and_ref_agree():
-    gr, g, vals = build(scale=7, ef=4)
+    gr, g, vals = build(scale=6, ef=4)
     f = lambda sv, ev, dv: {"m": sv["x"] * ev["w"]}
     a, ea, _, _ = mr_triplets(gr, f, "sum", kernel_mode="ref")
     b, eb, _, _ = mr_triplets(gr, f, "sum", kernel_mode="interpret")
@@ -87,7 +86,7 @@ def test_join_elimination_detection():
 
 
 def test_join_elimination_reduces_wire_bytes():
-    gr, _, _ = build(scale=7)
+    gr, _, _ = build(scale=6)
     _, _, _, m_src = mr_triplets(gr, lambda s, e, d: {"m": s["x"]},
                                  "sum", kernel_mode="ref")
     _, _, _, m_both = mr_triplets(gr, lambda s, e, d: {"m": s["x"]},

@@ -1,6 +1,8 @@
 """Partitioner + routing-table invariants (unit + hypothesis property tests)."""
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import partition as pm

@@ -8,6 +8,8 @@ import repro.configs as C
 from repro.models import init_model, split_params
 from repro.sharding import rules
 
+pytestmark = pytest.mark.slow   # LM-substrate sharding specs; see pytest.ini
+
 SIZES = {"data": 16, "model": 16}
 SIZES_POD = {"pod": 2, "data": 16, "model": 16}
 

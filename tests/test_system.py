@@ -19,6 +19,8 @@ from repro.core import Graph, Col, algorithms as alg, pack_bf16
 from repro.core.mrtriplets import mr_triplets
 from repro.data import rmat, symmetrize
 
+pytestmark = pytest.mark.slow   # subprocess SPMD runs + end-to-end pipelines
+
 HERE = os.path.dirname(__file__)
 
 

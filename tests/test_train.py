@@ -14,6 +14,8 @@ from repro.train.checkpoint import Checkpointer
 from repro.train.fault import StragglerDetector, PreemptionGuard
 from repro.train.train_loop import TrainConfig, train
 
+pytestmark = pytest.mark.slow   # minutes of XLA compiles; see pytest.ini
+
 
 def test_adamw_minimises_quadratic():
     cfg = opt.AdamWConfig(lr=0.1, weight_decay=0.0, warmup_steps=0,
