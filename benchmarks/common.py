@@ -119,6 +119,80 @@ def naive_pagerank_seconds(gd, num_iters: int = 10, p: int = 4,
     return timeit(run, iters=iters, warmup=1)
 
 
+# ---------------------------------------------------------------------------
+# SPMD (shard_map) execution — fused vs unfused under the real executor
+# ---------------------------------------------------------------------------
+def spmd_mrt_seconds(gd, *, p: int = 4, iters: int = 3,
+                     kernel_modes: tuple = ("auto", "unfused")):
+    """Median seconds of ONE PageRank-shaped mrTriplets under
+    jit(shard_map) with SpmdExchange, for each requested kernel_mode
+    against the SAME prebuilt graph (the O(E log E) structure + tile-table
+    build runs once, not per mode).
+
+    Returns {mode: (seconds, plan)} — or None when fewer than `p` devices
+    are visible (benchmarks/run.py forces 4 simulated host devices)."""
+    if jax.device_count() < p:
+        return None
+    import dataclasses
+    from jax.sharding import PartitionSpec as PS
+    from repro.core import SpmdExchange
+    from repro.core.mrtriplets import mr_triplets, plan_of
+    from repro.utils.spmd import make_mesh, shard_map
+
+    g = alg.attach_out_degree(Graph.from_edges(gd.src, gd.dst,
+                                               num_partitions=p),
+                              kernel_mode="ref")
+    g = g.mapV(lambda vid, v: {**v, "pr": jnp.float32(1.0)})
+
+    def send(sv, ev, dv):
+        return {"m": sv["pr"] / sv["deg"] * ev["w"]}
+
+    mesh = make_mesh((p,), ("parts",))
+    gs = dataclasses.replace(g, ex=SpmdExchange(p=p, axis_name="parts"),
+                             host=None)
+    specs = jax.tree.map(
+        lambda x: PS(*(("parts",) + (None,) * (x.ndim - 1))), gs)
+
+    out = {}
+    for mode in kernel_modes:
+        def step(gg, _m=mode):
+            vals, _, _, _ = mr_triplets(gg, send, "sum", kernel_mode=_m)
+            return vals["m"]
+
+        fn = jax.jit(shard_map(step, mesh, (specs,), PS("parts")))
+        out[mode] = (timeit(fn, gs, iters=iters),
+                     plan_of(g, send, "sum", kernel_mode=mode))
+    return out
+
+
+def cc_fused_vs_unfused(gd, *, p: int = 4, max_supersteps: int = 50) -> dict:
+    """Time connected components (the int32 min-label workload) to
+    convergence under both physical plans on the symmetrised graph.
+
+    The TIMED runs carry the metrics, so the reported plan is the executed
+    one by construction (tracking overhead is identical on both sides).
+    Shared by op_micro and fig7 so their CC rows cannot drift."""
+    import time
+    sgd = symmetrize(gd)
+    sg = Graph.from_edges(sgd.src, sgd.dst, num_partitions=p)
+    t0 = time.perf_counter()
+    res = alg.connected_components(sg, max_supersteps=max_supersteps,
+                                   track_metrics=True)
+    fused_s = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    res_u = alg.connected_components(sg, max_supersteps=max_supersteps,
+                                     kernel_mode="unfused",
+                                     track_metrics=True)
+    unfused_s = time.perf_counter() - t0
+    return {"fused_s": round(fused_s, 4),
+            "unfused_s": round(unfused_s, 4),
+            "speedup": round(unfused_s / fused_s, 2),
+            "plan": res.metrics[0]["plan"],
+            "unfused_plan": res_u.metrics[0]["plan"],
+            "supersteps": res.supersteps,
+            "edges": sgd.num_edges}
+
+
 def fmt_bytes(n: float) -> str:
     for unit in ("B", "KiB", "MiB", "GiB"):
         if abs(n) < 1024:

@@ -25,7 +25,7 @@ import jax.numpy as jnp
 from repro.core import Col, Graph, algorithms as alg
 from repro.core.mrtriplets import mr_triplets
 
-from .common import datasets, timeit
+from .common import cc_fused_vs_unfused, datasets, spmd_mrt_seconds, timeit
 
 
 def run(quick: bool = True) -> list[dict]:
@@ -112,6 +112,31 @@ def run(quick: bool = True) -> list[dict]:
                  "plan": m_plan["plan"],
                  "note": "general fused triplet kernel vs "
                          "gather->vmap->segment-sum (results cross-checked)"})
+
+    # ---- SAME comparison under the SPMD executor (shard_map + all_to_all) --
+    # The device-resident tile tables shard with the graph, so the fused
+    # plan now holds inside shard_map; this row tracks that path per PR.
+    spmd = spmd_mrt_seconds(gd, iters=3)
+    if spmd is None:
+        rows.append({"benchmark": "op_micro", "op": "spmd_fused_vs_unfused",
+                     "note": "skipped: needs >= 4 devices "
+                             "(benchmarks/run.py forces 4 host devices)"})
+    else:
+        (spmd_fused_s, spmd_plan), (spmd_unfused_s, _) = (
+            spmd["auto"], spmd["unfused"])
+        rows.append({"benchmark": "op_micro", "op": "spmd_fused_vs_unfused",
+                     "fused_s": round(spmd_fused_s, 4),
+                     "unfused_s": round(spmd_unfused_s, 4),
+                     "speedup": round(spmd_unfused_s / spmd_fused_s, 2),
+                     "plan": spmd_plan,
+                     "note": "one mrTriplets under jit(shard_map) with "
+                             "SpmdExchange, 4 simulated devices"})
+
+    # ---- CC: the integer (int32 min-label) workload --------------------------
+    # Fused via exact f32 staging since this PR; unfused is the old plan.
+    rows.append({"benchmark": "op_micro", "op": "cc_int32_fused_vs_unfused",
+                 **cc_fused_vs_unfused(gd),
+                 "note": "int32 min-label Pregel loop (exact f32 staging)"})
     return rows
 
 

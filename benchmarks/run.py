@@ -17,6 +17,11 @@ import os
 import time
 import traceback
 
+# The SpmdExchange fused-vs-unfused columns (op_micro, fig7) need >= 4
+# devices; simulate 4 host-platform devices unless the operator provided
+# their own flags.  Must happen before any benchmark module imports jax.
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=4")
+
 MODULES = [
     "fig4_incremental",
     "fig5_join_elim",

@@ -48,6 +48,12 @@ class StructArrays:
     home_vid: jnp.ndarray
     home_mask: jnp.ndarray
     routes: dict            # need -> (send_idx, recv_slot)
+    # tiles[side]: per-partition [P, n_chunks, ...] chunk tables for the
+    # fused triplet kernel (kernels/triplet.build_triplet_tiles).  Pytree
+    # CHILDREN, so they shard with the graph: inside shard_map each device
+    # carries exactly its own local tiling — what lets the fused plan run
+    # under the SPMD executor.  None only for shape-spec dry-run structures.
+    tiles: dict = None
     # static metadata
     p: int = dataclasses.field(default=0)
     e_blk: int = 0
@@ -55,13 +61,14 @@ class StructArrays:
     v_blk: int = 0
     num_vertices: int = 0
     num_edges: int = 0
+    max_vid: int = 0        # fused planner's int-staging guard (partition.py)
 
     def tree_flatten(self):
         children = (self.src_slot, self.dst_slot, self.src_perm,
                     self.edge_mask, self.mirror_vid, self.home_vid,
-                    self.home_mask, self.routes)
+                    self.home_mask, self.routes, self.tiles)
         aux = (self.p, self.e_blk, self.v_mir, self.v_blk,
-               self.num_vertices, self.num_edges)
+               self.num_vertices, self.num_edges, self.max_vid)
         return children, aux
 
     @classmethod
@@ -80,9 +87,12 @@ class StructArrays:
             home_mask=jnp.asarray(s.home_mask),
             routes={k: (jnp.asarray(v[0]), jnp.asarray(v[1]))
                     for k, v in s.routes.items()},
+            tiles=(None if s.tiles is None else
+                   {side: {k: jnp.asarray(v) for k, v in t.items()}
+                    for side, t in s.tiles.items()}),
             p=s.num_partitions, e_blk=s.e_blk, v_mir=s.v_mir,
             v_blk=s.v_blk, num_vertices=s.num_vertices,
-            num_edges=s.num_edges)
+            num_edges=s.num_edges, max_vid=s.max_vid)
 
 
 def _degree_msg(sv, ev, dv):
@@ -104,14 +114,20 @@ class Graph:
     active: jnp.ndarray      # [P, V_blk] changed-since-last-ship (§4.5.1)
     ex: Exchange = dataclasses.field(default=None)          # static
     host: part_mod.GraphStructure = dataclasses.field(default=None)  # static
+    # STATIC "vmask == home_mask" certificate: True only for graphs whose
+    # vmask is structurally the full home mask (set by from_edges, cleared
+    # by subgraph/innerJoin).  Rides in the pytree aux, so it survives jit
+    # tracing — unlike any check on the vmask values or object identity.
+    # Defaults to False: hand-rolled Graphs safely take the general path.
+    vmask_full: bool = dataclasses.field(default=False)     # static
 
     def tree_flatten(self):
         return ((self.s, self.vdata, self.edata, self.vmask, self.emask,
-                 self.active), (self.ex, self.host))
+                 self.active), (self.ex, self.host, self.vmask_full))
 
     @classmethod
     def tree_unflatten(cls, aux, children):
-        return cls(*children, ex=aux[0], host=aux[1])
+        return cls(*children, ex=aux[0], host=aux[1], vmask_full=aux[2])
 
     def replace(self, **kw) -> "Graph":
         return dataclasses.replace(self, **kw)
@@ -183,10 +199,11 @@ class Graph:
         s = StructArrays.from_host(host)
         return Graph(
             s=s, vdata=vdata, edata=edata,
-            vmask=jnp.asarray(host.home_mask),
-            emask=jnp.asarray(host.edge_mask),
+            vmask=s.home_mask,
+            emask=s.edge_mask,
             active=jnp.asarray(host.home_mask),
-            ex=ex or LocalExchange(p), host=host)
+            ex=ex or LocalExchange(p), host=host,
+            vmask_full=True)
 
     # ------------------------------------------------------ collection views
     @property
@@ -215,8 +232,14 @@ class Graph:
         return svid, dvid, svals, edata, dvals, mask & vis
 
     def _edge_visibility(self, view=None) -> jnp.ndarray:
-        """Edges whose endpoints are both visible under the vertex bitmask."""
-        if bool(jnp.all(self.vmask == self.s.home_mask)):
+        """Edges whose endpoints are both visible under the vertex bitmask.
+
+        The fast path is STRUCTURAL, not value-based: `vmask_full` is static
+        pytree metadata (True from from_edges, cleared by the two operators
+        that restrict vmask), so it keeps deciding inside jit where array
+        values are tracers (a `bool(jnp.all(...))` here would raise
+        TracerBoolConversionError) and object identity is lost."""
+        if self.vmask_full:
             return self.emask
         vis_view, _ = ship_to_mirrors(
             self.s, {"vis": self.vmask}, "both", self.ex)
@@ -273,7 +296,8 @@ class Graph:
         if f is None:
             f = lambda v, o, hit: (v, o)
         new = vmap2(lambda v, o, hit: f(v, o, hit))(self.vdata, ovals, found)
-        return self.replace(vdata=new, vmask=self.vmask & found)
+        return self.replace(vdata=new, vmask=self.vmask & found,
+                            vmask_full=False)
 
     def _join_to_homes(self, other: Col, capacity: int | None):
         """Shuffle `other` by vid-home hash; merge-join on sorted home_vid."""
@@ -317,21 +341,26 @@ class Graph:
             dvals = gather_rows(view.mirror, self.s.dst_slot)
             emask = emask & vmap2(epred)(svals, self.edata, dvals)
 
-        return self.replace(vmask=vmask, emask=emask, active=self.active & vmask)
+        return self.replace(vmask=vmask, emask=emask,
+                            active=self.active & vmask,
+                            vmask_full=self.vmask_full and vpred is None)
 
     def reverse(self) -> "Graph":
         """Transpose the graph: swap src/dst slots.  Edges were stored
         dst-sorted, so the *new* src side is already sorted (src_perm =
-        identity); the src/dst routing tables swap roles.  The host structure
-        transposes alongside so fused-kernel tilings derived from it
-        (mrtriplets._host_tiles) stay consistent with the device view."""
+        identity); the src/dst routing tables swap roles, and so do the
+        fused-kernel tile tables (the "dst" tiling of the transpose IS the
+        "src" tiling of the original — same (out_block, in_block) grouping
+        with the endpoint roles flipped)."""
         ident = jnp.broadcast_to(
             jnp.arange(self.s.e_blk, dtype=jnp.int32), self.s.src_perm.shape)
         s = dataclasses.replace(
             self.s, src_slot=self.s.dst_slot, dst_slot=self.s.src_slot,
             src_perm=ident,
             routes={"src": self.s.routes["dst"], "dst": self.s.routes["src"],
-                    "both": self.s.routes["both"]})
+                    "both": self.s.routes["both"]},
+            tiles=(None if self.s.tiles is None else
+                   {"dst": self.s.tiles["src"], "src": self.s.tiles["dst"]}))
         host = self.host
         if host is not None:
             # memoised: GraphStructure is identity-compared static jit
@@ -346,7 +375,10 @@ class Graph:
                                      (host.num_partitions, 1)),
                     routes={"src": host.routes["dst"],
                             "dst": host.routes["src"],
-                            "both": host.routes["both"]})
+                            "both": host.routes["both"]},
+                    tiles=(None if host.tiles is None else
+                           {"dst": host.tiles["src"],
+                            "src": host.tiles["dst"]}))
                 cached._reversed = host
                 host._reversed = cached
             host = cached
@@ -361,11 +393,21 @@ class Graph:
 
         kernel_mode selects the physical execution strategy:
           "auto"      — fused triplet kernel when eligible (sum/min/max over
-                        flat float payloads; Pallas on TPU, jnp oracle on
-                        CPU), unfused otherwise;
+                        flat float or exactly-stageable int payloads; Pallas
+                        on TPU, jnp oracle on CPU), unfused otherwise;
           "pallas" / "interpret" / "ref"
                       — force that execution backend (fused when eligible);
           "unfused"   — always take the gather -> vmap -> segment-sum path.
+
+        CONVENTION for integer payloads (DESIGN.md §2.3.1): the fused plan
+        stages them through f32 and admits signed 32-bit ints as ID-VALUED
+        (labels/parents, bounded by the graph's max vertex id < 2^24) —
+        that covers the property values AND the messages the UDF computes
+        from them.  int32 properties holding arbitrary large values
+        (timestamps, counters), or UDFs whose integer arithmetic amplifies
+        ids past the bound, violate the assumption — pass
+        kernel_mode="unfused" for those.  Unsigned 32-bit ints (bitsets)
+        never fuse.
         """
         return mr_triplets(self, map_fn, reduce, to=to, skip_stale=skip_stale,
                            cache=cache, kernel_mode=kernel_mode,

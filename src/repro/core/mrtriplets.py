@@ -39,11 +39,13 @@ from .exchange import Exchange
 from .tree import (bmask, elem_spec, gather_rows, nbytes_of, tree_where,
                    tree_zeros_like_elem, vmap2)
 from ..kernels import ops as kops
-from ..kernels.triplet import build_triplet_tiles
+from ..kernels.triplet import (DEFAULT_EDGE_BLOCK, DEFAULT_VERTEX_BLOCK,
+                               flatten_tiles)
 
-# Tile geometry of the fused triplet kernel (DESIGN.md §2.3).
-FUSED_EDGE_BLOCK = 512
-FUSED_VERTEX_BLOCK = 512
+# Tile geometry of the fused triplet kernel (DESIGN.md §2.3) — shared with
+# the build-time table construction in kernels/triplet.py via partition.py.
+FUSED_EDGE_BLOCK = DEFAULT_EDGE_BLOCK
+FUSED_VERTEX_BLOCK = DEFAULT_VERTEX_BLOCK
 # min/max reduce unrolls one [Eb, Vb] masked matrix per message column in
 # VMEM (kernels/triplet.py); cap the width so the unroll stays well inside
 # the ~16 MiB/core budget — wider payloads fall back to the unfused plan.
@@ -270,36 +272,90 @@ class _FusedPlan:
     src_used: tuple[bool, ...]    # leaves the UDF reads through the SRC side
     dst_used: tuple[bool, ...]    # leaves the UDF reads through the DST side
     e_used: bool                  # whether the edge payload packs at all
-    dm: int                       # message width (flattened)
-    msg_shape: tuple[int, ...]    # message element shape
-    msg_dtype: Any
+    dm: int                       # TOTAL packed message width (all leaves)
+    msg_widths: tuple[int, ...]   # per-leaf flattened column widths
+    msg_shapes: tuple[tuple[int, ...], ...]   # per-leaf element shapes
+    msg_dtypes: tuple[Any, ...]   # per-leaf dtypes (staging casts back)
     msg_treedef: Any
 
 
-def _fused_leaf_ok(spec) -> bool:
-    """The kernel packs flat float payloads: rank ≤ 1, inexact dtype."""
-    return (jnp.issubdtype(spec.dtype, jnp.floating)
-            and len(spec.shape) <= 1)
+# f32 mantissa: integers round-trip the kernel's f32 staging exactly below
+# this bound.
+_INT_STAGE_BOUND = 1 << 24
+
+
+def _fused_int_ok(dtype, max_vid: int) -> bool:
+    """Can integer values of `dtype` ride the kernel's f32 staging exactly?
+
+    Narrow ints (≤ 16 bits) are bounded by their own dtype.  Signed 32-bit
+    ints are admitted when the graph's id space is below the 24-bit mantissa
+    bound: the engine treats them as id-valued — CC labels, LP labels, SSSP
+    parents, every §3.3 integer payload — whose values are vertex ids.  The
+    same assumption extends to int MESSAGE leaves: the UDF is expected to
+    propagate ids, not amplify them (a map like `label * 3` can push values
+    past the bound and silently round under f32 staging — such UDFs must
+    pass kernel_mode="unfused").  Unsigned 32-bit ints are NOT admitted: by
+    convention they carry bit patterns (triangle counting's neighbourhood
+    bitsets), which f32 staging would silently truncate."""
+    info = np.iinfo(np.dtype(dtype))
+    if info.bits <= 16:
+        return True
+    return info.bits <= 32 and info.kind == "i" and max_vid < _INT_STAGE_BOUND
+
+
+def _fused_leaf_ok(spec, max_vid: int, reduce: str,
+                   message: bool = False) -> bool:
+    """The kernel packs flat payloads (rank ≤ 1) staged through f32.
+
+    Floats always qualify (staging widens).  Integers qualify under the
+    exact-round-trip guard (_fused_int_ok); integer MESSAGE leaves
+    additionally require a value-preserving reduce — min/max never invent
+    values, while f32-staged sums can escape the 24-bit mantissa even when
+    every addend fits it."""
+    if len(spec.shape) > 1:
+        return False
+    dt = spec.dtype
+    if jnp.issubdtype(dt, jnp.floating):
+        return True
+    if jnp.issubdtype(dt, jnp.integer):
+        if message and reduce == "sum":
+            return False
+        return _fused_int_ok(dt, max_vid)
+    return False
+
+
+def _derive_need(deps, force_need: str | None) -> str | None:
+    """Which vertex side(s) the physical join must ship — the ONE place the
+    need set is derived (mr_triplets, plan_of, and pregel's metrics must
+    agree or reported plans drift from executed ones)."""
+    if force_need is not None:
+        return force_need
+    return ("both" if (deps.uses_src and deps.uses_dst)
+            else "src" if deps.uses_src
+            else "dst" if deps.uses_dst else None)
 
 
 def _plan_fused(g, map_fn, deps, need, reduce, force_need,
                 vex, eex) -> _FusedPlan | None:
     """Decide whether this mrTriplets can run fused; None -> unfused path.
 
-    Eligibility: sum/min/max reduce, a single flat float message leaf, flat
-    float vertex/edge payloads on the sides the UDF reads, host structure
-    available, and the full partition view resident (nl == P — inside
-    shard_map each device sees ONE local partition while the static tiling
-    covers all P, so the fused path falls back there)."""
-    if reduce not in ("sum", "min", "max") or g.host is None:
-        return None
-    if g.vmask.shape[0] != g.s.p:
+    Eligibility: sum/min/max reduce; flat float-or-exact-int message leaves
+    (multi-leaf messages column-pack into one kernel matrix); flat
+    float-or-exact-int vertex/edge payloads on the sides the UDF reads; and
+    device-resident tile tables on the structure (built at from_edges —
+    absent only for shape-spec dry-run graphs).  The tables are per-partition
+    pytree children, so the plan holds both under LocalExchange (nl == P)
+    and inside shard_map (nl == 1, each device sweeps its own tiling)."""
+    if reduce not in ("sum", "min", "max") or g.s.tiles is None:
         return None
     msg_spec = deps.msg_spec     # captured by the join-elimination trace
     if msg_spec is None:         # UDF untraceable -> no fused plan
         return None
+    max_vid = g.s.max_vid
     msg_leaves, msg_treedef = jax.tree.flatten(msg_spec)
-    if len(msg_leaves) != 1 or not _fused_leaf_ok(msg_leaves[0]):
+    if not msg_leaves or not all(
+            _fused_leaf_ok(m, max_vid, reduce, message=True)
+            for m in msg_leaves):
         return None
 
     vleaves = jax.tree.leaves(vex)
@@ -313,21 +369,25 @@ def _plan_fused(g, map_fn, deps, need, reduce, force_need,
         src_used = (need in ("src", "both"),) * n
         dst_used = (need in ("dst", "both"),) * n
     v_used = tuple(su or du for su, du in zip(src_used, dst_used))
-    if not all(_fused_leaf_ok(l) for l, u in zip(vleaves, v_used) if u):
+    if not all(_fused_leaf_ok(l, max_vid, reduce)
+               for l, u in zip(vleaves, v_used) if u):
         return None
 
     eleaves = jax.tree.leaves(eex)
     e_used = bool(eleaves) and (deps.uses_edge or force_need is not None)
-    if e_used and not all(_fused_leaf_ok(l) for l in eleaves):
+    if e_used and not all(_fused_leaf_ok(l, max_vid, reduce)
+                          for l in eleaves):
         return None
 
-    m = msg_leaves[0]
-    dm = int(np.prod(m.shape, dtype=np.int64)) if m.shape else 1
+    widths = tuple(int(np.prod(m.shape, dtype=np.int64)) if m.shape else 1
+                   for m in msg_leaves)
+    dm = sum(widths)
     if reduce != "sum" and dm > FUSED_MINMAX_MAX_WIDTH:
         return None
     return _FusedPlan(v_used=v_used, src_used=src_used, dst_used=dst_used,
-                      e_used=e_used, dm=dm,
-                      msg_shape=tuple(m.shape), msg_dtype=m.dtype,
+                      e_used=e_used, dm=dm, msg_widths=widths,
+                      msg_shapes=tuple(tuple(m.shape) for m in msg_leaves),
+                      msg_dtypes=tuple(m.dtype for m in msg_leaves),
                       msg_treedef=msg_treedef)
 
 
@@ -347,16 +407,23 @@ def _make_tile_fn(map_fn, vspecs, vdef, especs, edef, plan: _FusedPlan):
         """Column offsets advance over the PACKED (union) leaves; a leaf is
         read from the matrix only if this SIDE uses it.  A side that reads
         nothing never touches `mat` — which is what lets fused_triplet
-        stream a width-1 dummy tile for that side."""
+        stream a width-1 dummy tile for that side.
+
+        Float leaves stay in the f32 staging dtype (deliberate upcast);
+        integer leaves cast BACK to their declared dtype, so the UDF sees
+        the same integer arithmetic as the unfused path — exact, because
+        the planner's round-trip guard admitted the values."""
         out, off = [], 0
         for spec, p, u in zip(specs, packed, used):
             size = int(np.prod(spec.shape, dtype=np.int64)) if spec.shape else 1
+            is_int = jnp.issubdtype(spec.dtype, jnp.integer)
+            dt = spec.dtype if is_int else jnp.float32
             if p and u:
                 col = mat[:, off:off + size]
-                out.append(col.reshape((mat.shape[0],) + tuple(spec.shape)))
+                out.append(col.reshape((mat.shape[0],) + tuple(spec.shape))
+                           .astype(dt))
             else:  # provably unread by the UDF (join elimination) -> zeros
-                out.append(jnp.zeros((mat.shape[0],) + tuple(spec.shape),
-                                     jnp.float32))
+                out.append(jnp.zeros((mat.shape[0],) + tuple(spec.shape), dt))
             if p:
                 off += size
         return jax.tree.unflatten(treedef, out)
@@ -368,61 +435,56 @@ def _make_tile_fn(map_fn, vspecs, vdef, especs, edef, plan: _FusedPlan):
         d_tree = unpack(dv, vleaves, plan.v_used, plan.dst_used, vdef)
         e_tree = unpack(ev, eleaves, e_packed, e_packed, edef)
         msg = jax.vmap(map_fn)(s_tree, e_tree, d_tree)
-        leaf = jax.tree.leaves(msg)[0]
-        return leaf.reshape(leaf.shape[0], -1).astype(jnp.float32)
+        # multi-leaf messages column-pack into one [Eb, dm] matrix; the
+        # engine splits the kernel output back along plan.msg_widths.
+        cols = [l.reshape(l.shape[0], -1).astype(jnp.float32)
+                for l in jax.tree.leaves(msg)]
+        return cols[0] if len(cols) == 1 else jnp.concatenate(cols, axis=-1)
 
     return tile_fn
 
 
-def _pack_cols(tree, used, rows: int) -> jnp.ndarray:
-    """Column-pack the used leaves of a [nl, N, ...] pytree into [rows, D]."""
+def _pack_cols(tree, used, nl: int, n: int) -> jnp.ndarray:
+    """Column-pack the used leaves of a [nl, N, ...] pytree into [nl, N, D]
+    (f32 staging; exact for the integer leaves the planner admitted)."""
     leaves = jax.tree.leaves(tree) if tree is not None else []
-    cols = [l.reshape(rows, -1).astype(jnp.float32)
+    cols = [l.reshape(nl, n, -1).astype(jnp.float32)
             for l, u in zip(leaves, used) if u]
     if not cols:
-        return jnp.zeros((rows, 0), jnp.float32)
+        return jnp.zeros((nl, n, 0), jnp.float32)
     return jnp.concatenate(cols, axis=-1)
-
-
-def _host_tiles(host, to: str, eb: int, vb: int) -> dict:
-    """(out_block, in_block)-grouped chunk tiling over the flattened
-    [P * E_blk] edge space, cached per (graph structure, aggregation side).
-    Host-side numpy on the immutable structure — §4.3 index reuse."""
-    cache = getattr(host, "_fused_tiles", None)
-    if cache is None:
-        cache = {}
-        host._fused_tiles = cache
-    key = (to, eb, vb)
-    if key not in cache:
-        p, v_mir = host.num_partitions, host.v_mir
-        off = (np.arange(p, dtype=np.int64) * v_mir)[:, None]
-        fs = (host.src_slot.astype(np.int64) + off).reshape(-1)
-        fd = (host.dst_slot.astype(np.int64) + off).reshape(-1)
-        fm = host.edge_mask.reshape(-1)
-        out_s, in_s = (fd, fs) if to == "dst" else (fs, fd)
-        cache[key] = build_triplet_tiles(out_s, in_s, fm, p * v_mir,
-                                         eb=eb, vb=vb)
-    return cache[key]
 
 
 def _fused_aggregate(g, mirror_tree, map_fn, live, to, reduce, kernel_mode,
                      plan: _FusedPlan, vex, eex):
     """Steps 4a-4c of the physical plan in one kernel sweep: gather both
-    endpoint views, run the map UDF, segment-reduce into mirror slots."""
+    endpoint views, run the map UDF, segment-reduce into mirror slots.
+
+    The chunk tables come from the structure itself (s.tiles — device-
+    resident, per-partition, built once at from_edges): each partition's
+    LOCAL tiling is mapped onto the stacked flat space by `flatten_tiles`
+    with the partition's slot space padded to whole vertex blocks, so the
+    SAME code serves LocalExchange (nl == P) and shard_map (nl == 1, every
+    device sweeping its own slice of the tables)."""
     s = g.s
     nl = live.shape[0]
-    seg = nl * s.v_mir
-    x = _pack_cols(mirror_tree, plan.v_used, seg)
+    vb = FUSED_VERTEX_BLOCK
+    n_vb = max(-(-s.v_mir // vb), 1)
+    v_pad = n_vb * vb            # per-partition slot space, block-aligned
+    seg = nl * v_pad
+    x = _pack_cols(mirror_tree, plan.v_used, nl, s.v_mir)
+    x = jnp.pad(x, ((0, 0), (0, v_pad - s.v_mir), (0, 0)))
+    x = x.reshape(seg, x.shape[-1])
     n_eleaves = len(jax.tree.leaves(g.edata))
-    ev = _pack_cols(g.edata, (plan.e_used,) * n_eleaves, nl * s.e_blk)
-    off = (jnp.arange(nl, dtype=jnp.int32) * s.v_mir)[:, None]
+    ev = _pack_cols(g.edata, (plan.e_used,) * n_eleaves, nl, s.e_blk)
+    ev = ev.reshape(nl * s.e_blk, ev.shape[-1])
+    off = (jnp.arange(nl, dtype=jnp.int32) * v_pad)[:, None]
     fsrc = (s.src_slot + off).reshape(-1)
     fdst = (s.dst_slot + off).reshape(-1)
-    # the jnp oracle ignores the chunk tiling — don't pay the O(E log E)
-    # host build for it (the default CPU path).
+    # the jnp oracle ignores the chunk tiling — skip the flattening work on
+    # the default CPU path.
     tiles = (None if kops.resolve_mode(kernel_mode) == "ref"
-             else _host_tiles(g.host, to, FUSED_EDGE_BLOCK,
-                              FUSED_VERTEX_BLOCK))
+             else flatten_tiles(s.tiles[to], e_blk=s.e_blk, n_vb=n_vb))
     tile_fn = _make_tile_fn(map_fn,
                             tuple(jax.tree.leaves(vex)), jax.tree.structure(vex),
                             tuple(jax.tree.leaves(eex)), jax.tree.structure(eex),
@@ -432,17 +494,25 @@ def _fused_aggregate(g, mirror_tree, map_fn, live, to, reduce, kernel_mode,
         to=to, reduce=reduce, use_src=any(plan.src_used),
         use_dst=any(plan.dst_used), mode=kernel_mode,
         eb=FUSED_EDGE_BLOCK, vb=FUSED_VERTEX_BLOCK)
-    leaf = out.reshape((nl, s.v_mir) + plan.msg_shape)
-    had_msg = cnt.reshape(nl, s.v_mir) > 0
-    if reduce != "sum":
-        # the kernel's identity is finfo(f32); re-assert the ENGINE identity
-        # in the message dtype so a narrow leaf (bf16) holds its own finite
-        # finfo extreme at empty slots instead of the f32 max overflowing
-        # to inf on the cast below.
-        ident = _REDUCE_IDENTITY[reduce](plan.msg_dtype).astype(jnp.float32)
-        leaf = jnp.where(bmask(had_msg, leaf), leaf, ident)
-    leaf = leaf.astype(plan.msg_dtype)
-    partial = jax.tree.unflatten(plan.msg_treedef, [leaf])
+    out = out.reshape(nl, v_pad, plan.dm)[:, :s.v_mir]
+    had_msg = cnt.reshape(nl, v_pad)[:, :s.v_mir] > 0
+    # split the packed kernel columns back into the message leaves, casting
+    # each out of the f32 staging into its own dtype.
+    leaves, col = [], 0
+    for width, shape, dtype in zip(plan.msg_widths, plan.msg_shapes,
+                                   plan.msg_dtypes):
+        leaf = out[..., col:col + width].reshape((nl, s.v_mir) + shape)
+        col += width
+        # empty slots hold the kernel's f32 identity (finfo extremes), which
+        # must NOT ride the cast below: a narrow float would overflow to inf
+        # and an int would wrap.  Park a safe 0 there first, cast, then
+        # re-assert the ENGINE identity in the leaf's own dtype.
+        leaf = jnp.where(bmask(had_msg, leaf), leaf, 0.0).astype(dtype)
+        if reduce != "sum":
+            leaf = jnp.where(bmask(had_msg, leaf), leaf,
+                             _REDUCE_IDENTITY[reduce](dtype))
+        leaves.append(leaf)
+    partial = jax.tree.unflatten(plan.msg_treedef, leaves)
     return partial, had_msg
 
 
@@ -476,14 +546,12 @@ def mr_triplets(
 
     vex, eex = elem_spec(g.vdata), elem_spec(g.edata)
     deps = analysis.analyze_message_fn(map_fn, vex, eex, vex)
+    need = _derive_need(deps, force_need)
     if force_need is not None:
-        need = force_need
         uses_src = uses_dst = True
         arity = 1 + (need in ("src", "both")) + (need in ("dst", "both"))
     else:
         uses_src, uses_dst = deps.uses_src, deps.uses_dst
-        need = ("both" if (uses_src and uses_dst)
-                else "src" if uses_src else "dst" if uses_dst else None)
         arity = deps.n_way
 
     metrics: dict[str, Any] = {"join_arity": arity, "need": need or "none"}
@@ -550,9 +618,10 @@ def mr_triplets(
 
     # physical plan selection: the fused triplet kernel performs the gather,
     # the map UDF, and the block-local segment reduction in one sweep with
-    # §4.6 chunk skipping; ineligible shapes (non-flat / non-float payloads,
-    # exotic reduces, shard_map-local views) take the unfused path, as does
-    # kernel_mode="unfused".
+    # §4.6 chunk skipping — under LocalExchange AND inside shard_map (the
+    # tile tables shard with the graph).  Ineligible shapes (non-flat
+    # payloads, ints outside the f32-staging guard, exotic reduces) take the
+    # unfused path, as does kernel_mode="unfused".
     plan = None
     if kernel_mode != "unfused":
         plan = _plan_fused(g, map_fn, deps, need, reduce, force_need, vex, eex)
@@ -592,3 +661,20 @@ def mr_triplets(
     metrics["back"] = m_back
 
     return values, exists, view, metrics
+
+
+def plan_of(g, map_fn: Callable, reduce: str = "sum", *,
+            kernel_mode: str = "auto", force_need: str | None = None) -> str:
+    """The static physical-plan decision for this mrTriplets WITHOUT
+    executing it: "fused" | "unfused".
+
+    The decision is a trace-time constant, so it cannot cross a jit/shard_map
+    boundary as a value — drivers (pregel's metrics, benchmarks) call this to
+    report which plan their jitted supersteps took."""
+    if kernel_mode == "unfused":
+        return "unfused"
+    vex, eex = elem_spec(g.vdata), elem_spec(g.edata)
+    deps = analysis.analyze_message_fn(map_fn, vex, eex, vex)
+    need = _derive_need(deps, force_need)
+    plan = _plan_fused(g, map_fn, deps, need, reduce, force_need, vex, eex)
+    return "fused" if plan is not None else "unfused"

@@ -103,10 +103,18 @@ class GraphStructure:
     # routes[need] for need in {"src", "dst", "both"}:
     #   (route_send_idx [P,P,K], route_recv_slot [P,P,K], K)
     routes: dict = None  # type: ignore[assignment]
+    # tiles[side] for side in {"dst", "src"}: per-partition chunk tables for
+    # the fused triplet kernel (kernels/triplet.build_triplet_tiles), built
+    # once here so they ship to the device as part of StructArrays and shard
+    # with the graph — the fused path's §4.3 "index reuse" at kernel level.
+    tiles: dict = None  # type: ignore[assignment]
     stats: PartitionStats = None  # type: ignore[assignment]
     # placement of the i-th INPUT edge: partition + row within the slab
     edge_part: np.ndarray = None  # [E] int32  # type: ignore[assignment]
     edge_row: np.ndarray = None   # [E] int32  # type: ignore[assignment]
+    # largest global vertex id (static): the fused planner's integer-staging
+    # guard — id-valued payloads round-trip f32 exactly iff max_vid < 2^24.
+    max_vid: int = 0
 
     @property
     def route_send_idx(self) -> np.ndarray:   # back-compat: union route
@@ -288,6 +296,20 @@ def build_structure(
     routes = {need: build_route(flags) for need, flags in need_flags.items()}
     k_route = routes["both"][2]
 
+    # ---- fused-kernel tile tables (one per aggregation side, §2.3) --------
+    # Built eagerly with the rest of the structural index: graphs are
+    # immutable, so the O(E log E) grouping runs once and the tables ride to
+    # the device as per-partition arrays that shard with the graph.  Eager
+    # and unconditional on purpose — kernel_mode is a per-CALL choice and
+    # the tables must already be pytree children when the graph enters
+    # shard_map, so there is no later point at which a lazy host build
+    # could still reach every device.
+    from ..kernels.triplet import build_triplet_tiles
+    tiles = {
+        "dst": build_triplet_tiles(dst_slot, src_slot, edge_mask, v_mir),
+        "src": build_triplet_tiles(src_slot, dst_slot, edge_mask, v_mir),
+    }
+
     stats = PartitionStats(
         num_vertices=n_vertices,
         num_edges=n_edges,
@@ -310,9 +332,11 @@ def build_structure(
         home_vid=home_vid,
         home_mask=home_mask,
         routes=routes,
+        tiles=tiles,
         stats=stats,
         edge_part=edge_part,
         edge_row=edge_row,
+        max_vid=int(all_vids.max()) if n_vertices else 0,
     )
 
 

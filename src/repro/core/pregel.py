@@ -90,15 +90,18 @@ def pregel(
         changed_fn=changed_fn, kernel_mode=kernel_mode,
         use_cache=incremental))
 
-    # static join-elimination facts, derived once (also in metrics)
+    # static join-elimination + physical-plan facts, derived once from the
+    # INITIAL graph's specs (vprog may retype properties, but every §3.3
+    # algorithm keeps the message shape fixed across supersteps)
     from .tree import elem_spec
     from . import analysis
+    from .mrtriplets import _derive_need, plan_of
     deps = analysis.analyze_message_fn(
         send_msg, elem_spec(g.vdata), elem_spec(g.edata), elem_spec(g.vdata))
     static_info = {"join_arity": deps.n_way,
-                   "need": ("both" if deps.uses_src and deps.uses_dst else
-                            "src" if deps.uses_src else
-                            "dst" if deps.uses_dst else "none")}
+                   "need": _derive_need(deps, None) or "none",
+                   "plan": plan_of(g, send_msg, gather,
+                                   kernel_mode=kernel_mode)}
 
     cache = None
     all_metrics: list[dict] = []

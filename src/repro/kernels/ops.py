@@ -63,6 +63,7 @@ def spmv(x, w, src_slot, dst_slot, tiles, active_src_blocks, v_mir: int, *,
 
 build_tiles = _spmv.build_tiles
 build_triplet_tiles = _triplet.build_triplet_tiles
+flatten_tiles = _triplet.flatten_tiles
 
 
 def triplet(x, ev, src_slot, dst_slot, live, tiles, tile_fn,
@@ -70,7 +71,9 @@ def triplet(x, ev, src_slot, dst_slot, live, tiles, tile_fn,
             reduce: str = "sum", use_src: bool = True, use_dst: bool = True,
             mode: Mode = "auto", eb: int = 512, vb: int = 512):
     """General fused mrTriplets sweep: gather(src,dst) + map + segment-reduce
-    in one pass.  Returns (out [S, dm] f32, cnt [S] f32)."""
+    in one pass.  `tiles` is the flat device-resident table dict
+    (build_triplet_tiles -> flatten_tiles); the jnp oracle ignores it (pass
+    None).  Returns (out [S, dm] f32, cnt [S] f32)."""
     m = _resolve(mode)
     if m == "ref":
         return ref.fused_triplet(x, ev, src_slot, dst_slot, live, tile_fn,

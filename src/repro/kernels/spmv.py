@@ -14,9 +14,10 @@ as a per-edge live mask so the general kernel's chunk skip stays exact.
 """
 from __future__ import annotations
 
+import numpy as np
 import jax.numpy as jnp
 
-from .triplet import build_triplet_tiles, fused_triplet
+from .triplet import build_triplet_tiles, flatten_tiles, fused_triplet
 
 
 def _linear_message(sv, ev, dv):
@@ -38,16 +39,20 @@ def build_tiles(
 ) -> dict[str, np.ndarray]:
     """Group edges into Eb-sized chunks sorted by (dst_block, src_block).
 
-    Back-compat view over build_triplet_tiles (dst is the aggregation side).
+    Back-compat FLAT view over the per-partition build_triplet_tiles (dst is
+    the aggregation side; single-partition callers get the identity
+    flattening).
     """
     t = build_triplet_tiles(dst_slot, src_slot, edge_mask, v_mir, eb=eb, vb=vb)
+    flat = flatten_tiles(t, e_blk=int(np.asarray(dst_slot).shape[-1]),
+                         n_vb=max(-(-v_mir // vb), 1))
     return dict(
-        perm=t["perm"],
-        chunk_dst=t["chunk_out"],
-        chunk_src=t["chunk_in"],
-        eb=t["eb"],
-        vb=t["vb"],
-        n_dst_blocks=t["n_blocks"],
+        perm=np.asarray(flat["perm"]),
+        chunk_dst=np.asarray(flat["chunk_out"]),
+        chunk_src=np.asarray(flat["chunk_in"]),
+        eb=np.int32(eb),
+        vb=np.int32(vb),
+        n_dst_blocks=np.int32(max(-(-v_mir // vb), 1)),
     )
 
 

@@ -48,60 +48,112 @@ REDUCE_IDENTITY = {
 }
 
 
+# Default tile geometry of the fused triplet kernel (DESIGN.md §2.3); the
+# engine and the build-time table construction must agree on these, so they
+# live next to the kernel.
+DEFAULT_EDGE_BLOCK = 512
+DEFAULT_VERTEX_BLOCK = 512
+
+
 # ----------------------------------------------------------------------------
 # Build-time tiling metadata (numpy; structure is immutable so this runs once
-# per (graph, aggregation side) and is cached by the engine).
+# per (graph, aggregation side) at `build_structure` time).
 # ----------------------------------------------------------------------------
 def build_triplet_tiles(
-    out_slot: np.ndarray,     # [E] slot of the aggregation-side endpoint
-    in_slot: np.ndarray,      # [E] slot of the gather-side endpoint
-    edge_mask: np.ndarray,    # [E] structural validity
-    num_slots: int,           # size of the flat slot space (both sides)
+    out_slot: np.ndarray,     # [P, E_blk] (or [E]) aggregation-side slots
+    in_slot: np.ndarray,      # [P, E_blk] (or [E]) gather-side slots
+    edge_mask: np.ndarray,    # [P, E_blk] (or [E]) structural validity
+    num_slots: int,           # LOCAL slot space size (v_mir), both sides
     *,
-    eb: int = 512,
-    vb: int = 512,
+    eb: int = DEFAULT_EDGE_BLOCK,
+    vb: int = DEFAULT_VERTEX_BLOCK,
 ) -> dict[str, np.ndarray]:
-    """Group structurally-live edges into eb-sized chunks sorted by
-    (out_block, in_block).
+    """Per-partition tile tables: group each partition's structurally-live
+    edges into eb-sized chunks sorted by (out_block, in_block), padded to a
+    UNIFORM chunk count across partitions so the tables stack into regular
+    [P, n_chunks, ...] arrays.
 
-    Returns device-ready arrays:
-      perm       [n_chunks*eb]  gather order of edges (padding -> E, OOB)
-      chunk_out  [n_chunks]     aggregation-side block id of each chunk
-      chunk_in   [n_chunks]     gather-side block id of each chunk
+    Everything is partition-LOCAL — edge indices in [0, E_blk), block ids
+    over the local slot space — so the tables are legal pytree children that
+    shard with the graph: inside `shard_map` each device holds its own
+    [1, n_chunks, ...] slice and `flatten_tiles` maps it onto the kernel's
+    flat space with nl == 1.  1-D inputs are treated as a single partition.
+
+    Returns numpy arrays:
+      perm       [P, n_chunks, eb]  per-chunk edge gather lists
+                                    (padding -> E_blk, locally OOB)
+      chunk_out  [P, n_chunks]      LOCAL aggregation-side block ids
+      chunk_in   [P, n_chunks]      LOCAL gather-side block ids
     """
-    e = int(out_slot.shape[0])
-    live = np.flatnonzero(edge_mask)
-    ob = out_slot[live] // vb
-    ib = in_slot[live] // vb
-    order = np.lexsort((ib, ob))          # out-block major, in-block minor
-    live = live[order]
-    ob, ib = ob[order], ib[order]
+    out_slot = np.atleast_2d(np.asarray(out_slot))
+    in_slot = np.atleast_2d(np.asarray(in_slot))
+    edge_mask = np.atleast_2d(np.asarray(edge_mask))
+    p, e_blk = out_slot.shape
+    if edge_mask.any():
+        hi = max(int(out_slot[edge_mask].max()), int(in_slot[edge_mask].max()))
+        if hi >= num_slots:
+            raise ValueError(
+                f"slot {hi} outside the declared slot space [0, {num_slots})")
 
-    # split runs of identical (ob, ib) into eb-sized chunks
-    perm_chunks: list[np.ndarray] = []
-    couts: list[int] = []
-    cins: list[int] = []
-    if live.size:
-        boundaries = np.flatnonzero((np.diff(ob) != 0) | (np.diff(ib) != 0)) + 1
-        for seg in np.split(np.arange(live.size), boundaries):
-            for off in range(0, seg.size, eb):
-                chunk = live[seg[off:off + eb]]
-                pad = np.full(eb - chunk.size, e, dtype=np.int64)  # OOB pad
-                perm_chunks.append(np.concatenate([chunk, pad]))
-                couts.append(int(ob[seg[0]]))
-                cins.append(int(ib[seg[0]]))
-    if not perm_chunks:  # empty graph
-        perm_chunks.append(np.full(eb, e, dtype=np.int64))
-        couts.append(0)
-        cins.append(0)
+    per_perm: list[list[np.ndarray]] = []
+    per_out: list[list[int]] = []
+    per_in: list[list[int]] = []
+    for q in range(p):
+        live = np.flatnonzero(edge_mask[q])
+        ob = out_slot[q][live] // vb
+        ib = in_slot[q][live] // vb
+        order = np.lexsort((ib, ob))      # out-block major, in-block minor
+        live = live[order]
+        ob, ib = ob[order], ib[order]
+
+        # split runs of identical (ob, ib) into eb-sized chunks
+        perm_chunks: list[np.ndarray] = []
+        couts: list[int] = []
+        cins: list[int] = []
+        if live.size:
+            boundaries = np.flatnonzero(
+                (np.diff(ob) != 0) | (np.diff(ib) != 0)) + 1
+            for seg in np.split(np.arange(live.size), boundaries):
+                for off in range(0, seg.size, eb):
+                    chunk = live[seg[off:off + eb]]
+                    pad = np.full(eb - chunk.size, e_blk, dtype=np.int64)
+                    perm_chunks.append(np.concatenate([chunk, pad]))
+                    couts.append(int(ob[seg[0]]))
+                    cins.append(int(ib[seg[0]]))
+        per_perm.append(perm_chunks)
+        per_out.append(couts)
+        per_in.append(cins)
+
+    # pad every partition to the same chunk count; padding chunks are fully
+    # OOB so their any-live flag is false and the kernel skips them.
+    n_chunks = max(1, max(len(c) for c in per_out))
+    perm = np.full((p, n_chunks, eb), e_blk, dtype=np.int32)
+    chunk_out = np.zeros((p, n_chunks), dtype=np.int32)
+    chunk_in = np.zeros((p, n_chunks), dtype=np.int32)
+    for q in range(p):
+        for c, (pc, co, ci) in enumerate(zip(per_perm[q], per_out[q],
+                                             per_in[q])):
+            perm[q, c] = pc
+            chunk_out[q, c] = co
+            chunk_in[q, c] = ci
+    return dict(perm=perm, chunk_out=chunk_out, chunk_in=chunk_in)
+
+
+def flatten_tiles(tiles, *, e_blk: int, n_vb: int) -> dict:
+    """Map per-partition [P, n_chunks, ...] tile tables onto the kernel's
+    flat stacked space: edge i of partition q -> q*e_blk + i, local block b
+    of partition q -> q*n_vb + b (the caller pads each partition's slot
+    space to n_vb*vb slots).  Pure jnp on device arrays — traced, so it runs
+    on each device's OWN [1, ...] slice inside `shard_map`."""
+    perm = jnp.asarray(tiles["perm"])
+    p, n_chunks, eb = perm.shape
+    off_e = (jnp.arange(p, dtype=jnp.int32) * e_blk).reshape(p, 1, 1)
+    flat_perm = jnp.where(perm >= e_blk, p * e_blk, perm + off_e)
+    off_b = (jnp.arange(p, dtype=jnp.int32) * n_vb).reshape(p, 1)
     return dict(
-        perm=np.concatenate(perm_chunks).astype(np.int32),
-        chunk_out=np.asarray(couts, dtype=np.int32),
-        chunk_in=np.asarray(cins, dtype=np.int32),
-        eb=np.int32(eb),
-        vb=np.int32(vb),
-        n_blocks=np.int32(max(-(-num_slots // vb), 1)),
-    )
+        perm=flat_perm.reshape(p * n_chunks * eb),
+        chunk_out=(jnp.asarray(tiles["chunk_out"]) + off_b).reshape(-1),
+        chunk_in=(jnp.asarray(tiles["chunk_in"]) + off_b).reshape(-1))
 
 
 # ----------------------------------------------------------------------------
@@ -179,7 +231,8 @@ def fused_triplet(
     src_slot: jnp.ndarray,    # [E] int32 in [0, S)
     dst_slot: jnp.ndarray,    # [E] int32 in [0, S)
     live: jnp.ndarray,        # [E] bool — edge contributes a message
-    tiles: dict,              # from build_triplet_tiles (grouped by `to` side)
+    tiles: dict,              # FLAT tables over the stacked slot/edge space:
+                              # build_triplet_tiles(...) -> flatten_tiles(...)
     tile_fn: Callable,        # ([Eb,Dx],[Eb,De],[Eb,Dx]) -> [Eb,Dm] f32
     num_segments: int,        # = S
     dm: int,                  # message width

@@ -1,0 +1,28 @@
+"""jax-version compatibility shims for SPMD execution.
+
+One home for the two API seams that moved across jax releases, shared by the
+SPMD test lane (tests/spmd_check.py) and the benchmark harness
+(benchmarks/common.py) so the next API change is fixed in exactly one place.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_mesh(shape, names):
+    """jax.make_mesh across API generations (axis_types landed post-0.4)."""
+    try:
+        return jax.make_mesh(shape, names,
+                             axis_types=(jax.sharding.AxisType.Auto,))
+    except (AttributeError, TypeError):
+        return jax.make_mesh(shape, names)
+
+
+def shard_map(fn, mesh, in_specs, out_specs):
+    """jax.shard_map (check_vma) or jax.experimental's (check_rep)."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(fn, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False)
+    from jax.experimental.shard_map import shard_map as sm
+    return sm(fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+              check_rep=False)

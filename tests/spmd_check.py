@@ -1,15 +1,22 @@
 """Subprocess helper: verify the SPMD executor path numerically.
 
 Run with XLA_FLAGS=--xla_force_host_platform_device_count=4 (the parent test
-sets this; it must be set before jax initialises, hence a subprocess — the
-main pytest process must keep seeing 1 device).
+tests/test_spmd.py sets this; it must be set before jax initialises, hence a
+subprocess — the main pytest process must keep seeing 1 device).
 
 Checks that the IDENTICAL engine code produces identical results through
   * LocalExchange  (single device, exchange = axis transpose), and
   * SpmdExchange   (shard_map over a 4-device 'parts' mesh,
                     exchange = lax.all_to_all),
-for (a) one mrTriplets, (b) a full 10-superstep PageRank with incremental
-view maintenance, (c) a collection reduce_by_key.
+for (a) one mrTriplets across the kernel_mode matrix — "unfused", "ref" and
+"auto" (both of which select the FUSED physical plan inside shard_map: the
+per-partition tile tables shard with the graph) plus one "interpret" step
+that drives the actual Pallas kernel over each device's local tiling —
+(b) a full 10-superstep PageRank with incremental view maintenance,
+(c) a connected-components min-label loop on int32 labels (fused via exact
+f32 staging) against the union-find oracle, and (d) a collection
+reduce_by_key.  Everything is compared against the LocalExchange UNFUSED
+baseline, so plan selection, executor, and backend are all crossed.
 Prints OK on success.
 """
 import os
@@ -39,23 +46,7 @@ def shard_specs(tree):
         lambda x: PS(*(("parts",) + (None,) * (x.ndim - 1))), tree)
 
 
-def make_mesh(shape, names):
-    """jax.make_mesh across API generations (axis_types landed post-0.4)."""
-    try:
-        return jax.make_mesh(shape, names,
-                             axis_types=(jax.sharding.AxisType.Auto,))
-    except (AttributeError, TypeError):
-        return jax.make_mesh(shape, names)
-
-
-def shard_map(fn, mesh, in_specs, out_specs):
-    """jax.shard_map (check_vma) or jax.experimental's (check_rep)."""
-    if hasattr(jax, "shard_map"):
-        return jax.shard_map(fn, mesh=mesh, in_specs=in_specs,
-                             out_specs=out_specs, check_vma=False)
-    from jax.experimental.shard_map import shard_map as sm
-    return sm(fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
-              check_rep=False)
+from repro.utils.spmd import make_mesh, shard_map  # noqa: E402
 
 
 def main():
@@ -71,49 +62,101 @@ def main():
     def vprog(vid, v, msg):
         return {**v, "pr": 0.15 + 0.85 * msg["m"]}
 
-    # ---- local reference --------------------------------------------------
-    vals_local, exists_local, _, _ = mr_triplets(g, send, "sum",
-                                                 kernel_mode="ref")
-
-    g_local = g
-    cache = None
-    for _ in range(10):
-        g_local, cache, _, _ = _superstep(
-            g_local, cache, vprog=vprog, send_msg=send, gather="sum",
-            default_msg={"m": jnp.float32(0.0)}, skip_stale=None,
-            changed_fn=None, kernel_mode="ref", use_cache=True)
-    pr_local = np.asarray(g_local.vdata["pr"])
-
-    # ---- SPMD run ----------------------------------------------------------
-    mesh = make_mesh((P,), ("parts",))
-    g_spmd = dataclasses.replace(g, ex=SpmdExchange(p=P, axis_name="parts"),
-                                 host=None)
-    gspecs = shard_specs(g_spmd)
-
-    def one_mrt(gg):
-        vals, exists, _, _ = mr_triplets(gg, send, "sum", kernel_mode="ref")
-        return vals, exists
-
-    fn1 = jax.jit(shard_map(one_mrt, mesh, (gspecs,),
-                            (shard_specs(vals_local), PS("parts"))))
-    vals_spmd, exists_spmd = fn1(g_spmd)
-    np.testing.assert_allclose(np.asarray(vals_spmd["m"]),
-                               np.asarray(vals_local["m"]), rtol=1e-6)
-    np.testing.assert_array_equal(np.asarray(exists_spmd),
-                                  np.asarray(exists_local))
-
-    def pr10(gg):
+    def pr_loop(gg, kernel_mode):
         out, cache = gg, None
         for _ in range(10):
             out, cache, live, _ = _superstep(
                 out, cache, vprog=vprog, send_msg=send, gather="sum",
                 default_msg={"m": jnp.float32(0.0)}, skip_stale=None,
-                changed_fn=None, kernel_mode="ref", use_cache=True)
+                changed_fn=None, kernel_mode=kernel_mode, use_cache=True)
         return out.vdata["pr"]
 
-    fn2 = jax.jit(shard_map(pr10, mesh, (gspecs,), PS("parts")))
+    # ---- local UNFUSED baseline (the physical plan every other
+    # (executor, plan, backend) combination must reproduce) ------------------
+    vals_local, exists_local, _, m_base = mr_triplets(
+        g, send, "sum", kernel_mode="unfused")
+    assert m_base["plan"] == "unfused"
+    pr_local = np.asarray(pr_loop(g, "unfused"))
+
+    # ---- SPMD runs across the kernel_mode matrix ---------------------------
+    mesh = make_mesh((P,), ("parts",))
+    g_spmd = dataclasses.replace(g, ex=SpmdExchange(p=P, axis_name="parts"),
+                                 host=None)
+    gspecs = shard_specs(g_spmd)
+
+    # "ref"/"auto" must select the FUSED plan inside shard_map now that the
+    # tile tables are device-resident pytree children ("auto" resolves to
+    # the jnp oracle backend on CPU); "interpret" drives the actual Pallas
+    # kernel over each device's local tiling.  The plan string is a
+    # trace-time constant, so capture it via closure.
+    for mode, want_plan in (("unfused", "unfused"), ("ref", "fused"),
+                            ("auto", "fused"), ("interpret", "fused")):
+        seen = {}
+
+        def one_mrt(gg, _mode=mode, _seen=seen):
+            vals, exists, _, m = mr_triplets(gg, send, "sum",
+                                             kernel_mode=_mode)
+            _seen["plan"] = m["plan"]
+            return vals, exists
+
+        fn1 = jax.jit(shard_map(one_mrt, mesh, (gspecs,),
+                                (shard_specs(vals_local), PS("parts"))))
+        vals_spmd, exists_spmd = fn1(g_spmd)
+        assert seen["plan"] == want_plan, (mode, seen)
+        np.testing.assert_allclose(np.asarray(vals_spmd["m"]),
+                                   np.asarray(vals_local["m"]), rtol=1e-6)
+        np.testing.assert_array_equal(np.asarray(exists_spmd),
+                                      np.asarray(exists_local))
+
+    # ("ref" would lower the identical program on CPU — auto covers it)
+    fn2 = jax.jit(shard_map(lambda gg: pr_loop(gg, "auto"),
+                            mesh, (gspecs,), PS("parts")))
     pr_spmd = np.asarray(fn2(g_spmd))
     np.testing.assert_allclose(pr_spmd, pr_local, rtol=1e-5)
+
+    # ---- connected components: int32 labels fused under shard_map ----------
+    from repro.data import symmetrize
+    sgd = symmetrize(rmat(5, 3, seed=2))
+    sg = Graph.from_edges(sgd.src, sgd.dst, num_partitions=P)
+    sg = sg.mapV(lambda vid, v: {"cc": vid})
+    IMAX = jnp.int32(2**31 - 1)
+
+    def cc_send(sv, ev, dv):
+        return {"m": sv["cc"]}
+
+    def cc_vprog(vid, v, msg):
+        return {"cc": jnp.minimum(v["cc"], msg["m"])}
+
+    def cc_loop(gg, kernel_mode):
+        out, cache = gg, None
+        for _ in range(10):
+            out, cache, _, m = _superstep(
+                out, cache, vprog=cc_vprog, send_msg=cc_send, gather="min",
+                default_msg={"m": IMAX}, skip_stale="out",
+                changed_fn=None, kernel_mode=kernel_mode, use_cache=True)
+        return out.vdata["cc"]
+
+    cc_local = np.asarray(cc_loop(sg, "unfused"))
+    cc_seen = {}
+
+    def cc_spmd_fn(gg, _seen=cc_seen):
+        _, _, _, m = mr_triplets(gg, cc_send, "min", kernel_mode="auto")
+        _seen["plan"] = m["plan"]
+        return cc_loop(gg, "auto")
+
+    sg_spmd = dataclasses.replace(sg, ex=SpmdExchange(p=P, axis_name="parts"),
+                                  host=None)
+    fn3 = jax.jit(shard_map(cc_spmd_fn, mesh, (shard_specs(sg_spmd),),
+                            PS("parts")))
+    cc_spmd = np.asarray(fn3(sg_spmd))
+    assert cc_seen["plan"] == "fused", cc_seen
+    np.testing.assert_array_equal(cc_spmd, cc_local)
+    # ... and both match the union-find host oracle exactly
+    mask = np.asarray(sg.vmask)
+    vids = np.asarray(sg.s.home_vid)[mask]
+    want = alg.connected_components_reference(sgd.src, sgd.dst, vids)
+    got = dict(zip(vids.tolist(), cc_spmd[mask].tolist()))
+    assert got == want
 
     # ---- collection shuffle under SPMD -------------------------------------
     from repro.core import Col

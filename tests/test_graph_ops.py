@@ -40,6 +40,41 @@ def test_triplets_is_three_way_join():
     np.testing.assert_allclose(np.asarray(dvals["x"])[m], vals[d_ids])
 
 
+def test_triplets_and_subgraph_under_jit():
+    """Regression: `_edge_visibility`'s fast path must be a STRUCTURAL check
+    (the static `vmask_full` pytree-aux flag), never `bool(jnp.all(...))` —
+    that raises TracerBoolConversionError as soon as triplets()/subgraph()
+    run inside jax.jit."""
+    import jax
+    gr, g, vals = build()
+
+    # the certificate is static metadata: set by from_edges, cleared by the
+    # restricting operators, and it SURVIVES a jit boundary (pytree aux)
+    assert gr.vmask_full
+    assert not gr.subgraph(vpred=lambda vid, v: v["x"] > 3).vmask_full
+    assert gr.subgraph(epred=lambda sv, ev, dv: ev["w"] > 0).vmask_full
+    assert jax.jit(lambda gg: gg)(gr).vmask_full
+
+    @jax.jit
+    def trip_masked_count(gg):
+        *_, mask = gg.triplets()
+        return mask.sum()
+
+    # unrestricted graph: the flag keeps the fast path alive under jit
+    assert int(trip_masked_count(gr)) == g.num_edges
+
+    @jax.jit
+    def sub_then_triplets(gg):
+        sub = gg.subgraph(vpred=lambda vid, v: v["x"] > 3)
+        *_, mask = sub.triplets()
+        return mask.sum()
+
+    # restricted graph (general path); matches the eager computation
+    eager = gr.subgraph(vpred=lambda vid, v: v["x"] > 3)
+    *_, eager_mask = eager.triplets()
+    assert int(sub_then_triplets(gr)) == int(eager_mask.sum())
+
+
 def test_mapv_and_mape():
     gr, g, vals = build()
     g2 = gr.mapV(lambda vid, v: {"x": v["x"] * 2})

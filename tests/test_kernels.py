@@ -34,6 +34,13 @@ def _affine_msg(sv, evv, dv):
     return sv * evv[:, :1] + dv * evv[:, 1:2]
 
 
+def _flat_tiles(out_s, in_s, mask, v, *, eb, vb):
+    """Per-partition tables -> flat kernel operands (single partition)."""
+    t = triplet_mod.build_triplet_tiles(out_s, in_s, mask, v, eb=eb, vb=vb)
+    return triplet_mod.flatten_tiles(t, e_blk=int(np.shape(out_s)[-1]),
+                                     n_vb=max(-(-v // vb), 1))
+
+
 @pytest.mark.parametrize("reduce", ["sum", "min", "max"])
 @pytest.mark.parametrize("to", ["dst", "src"])
 @pytest.mark.parametrize("e,v,dx,eb,vb", [
@@ -43,8 +50,7 @@ def _affine_msg(sv, evv, dv):
 def test_triplet_kernel_matches_oracle(reduce, to, e, v, dx, eb, vb):
     src, dst, live, x, ev = _flat_graph(e, v, dx, 2, seed=e + dx)
     out_s, in_s = (dst, src) if to == "dst" else (src, dst)
-    tiles = triplet_mod.build_triplet_tiles(out_s, in_s, np.ones(e, bool), v,
-                                            eb=eb, vb=vb)
+    tiles = _flat_tiles(out_s, in_s, np.ones(e, bool), v, eb=eb, vb=vb)
     got, cnt = triplet_mod.fused_triplet(
         jnp.asarray(x), jnp.asarray(ev), jnp.asarray(src), jnp.asarray(dst),
         jnp.asarray(live), tiles, _affine_msg, v, dx, to=to, reduce=reduce,
@@ -60,8 +66,7 @@ def test_triplet_kernel_dead_edges_and_empty_segments():
     e, v = 128, 32
     src, dst, _, x, ev = _flat_graph(e, v, 2, 2, seed=7)
     live = np.zeros(e, bool)                      # everything stale
-    tiles = triplet_mod.build_triplet_tiles(dst, src, np.ones(e, bool), v,
-                                            eb=32, vb=16)
+    tiles = _flat_tiles(dst, src, np.ones(e, bool), v, eb=32, vb=16)
     for reduce in ("sum", "min", "max"):
         out, cnt = triplet_mod.fused_triplet(
             jnp.asarray(x), jnp.asarray(ev), jnp.asarray(src),
@@ -71,6 +76,51 @@ def test_triplet_kernel_dead_edges_and_empty_segments():
         ident = triplet_mod.REDUCE_IDENTITY[reduce]
         np.testing.assert_array_equal(np.asarray(out),
                                       np.full((v, 2), ident, np.float32))
+
+
+def test_triplet_tiles_per_partition_flatten():
+    """The tentpole contract: per-partition [P, n_chunks, ...] tables padded
+    to a uniform chunk count, flattened onto the stacked block space, must
+    reproduce P independent single-partition sweeps."""
+    p, e_blk, v_mir, dx = 3, 96, 24, 2
+    eb, vb = 32, 16
+    n_vb = -(-v_mir // vb)
+    v_pad = n_vb * vb
+    rng = np.random.default_rng(42)
+    src = rng.integers(0, v_mir, (p, e_blk)).astype(np.int32)
+    dst = rng.integers(0, v_mir, (p, e_blk)).astype(np.int32)
+    # partition 2 is almost empty -> exercises the uniform-chunk padding
+    mask = rng.random((p, e_blk)) > 0.2
+    mask[2, 4:] = False
+    live = mask & (rng.random((p, e_blk)) > 0.3)
+    x = rng.integers(-4, 5, (p, v_mir, dx)).astype(np.float32)
+    ev = rng.integers(1, 4, (p, e_blk, 1)).astype(np.float32)
+
+    tiles = triplet_mod.build_triplet_tiles(dst, src, mask, v_mir,
+                                            eb=eb, vb=vb)
+    assert tiles["perm"].shape[0] == p
+    assert tiles["perm"].shape[1] == tiles["chunk_out"].shape[1]
+    flat = triplet_mod.flatten_tiles(tiles, e_blk=e_blk, n_vb=n_vb)
+
+    xpad = np.zeros((p, v_pad, dx), np.float32)
+    xpad[:, :v_mir] = x
+    off = (np.arange(p, dtype=np.int32) * v_pad)[:, None]
+    msg = lambda sv, evv, dv: sv * evv[:, :1] + dv
+    for reduce in ("sum", "min"):
+        got, cnt = triplet_mod.fused_triplet(
+            jnp.asarray(xpad.reshape(p * v_pad, dx)), jnp.asarray(ev.reshape(-1, 1)),
+            jnp.asarray((src + off).reshape(-1)), jnp.asarray((dst + off).reshape(-1)),
+            jnp.asarray(live.reshape(-1)), flat, msg, p * v_pad, dx,
+            reduce=reduce, eb=eb, vb=vb, interpret=True)
+        got = np.asarray(got).reshape(p, v_pad, dx)[:, :v_mir]
+        cnt = np.asarray(cnt).reshape(p, v_pad)[:, :v_mir]
+        for q in range(p):   # each partition == its own single-device sweep
+            want, cwant = ref.fused_triplet(
+                jnp.asarray(x[q]), jnp.asarray(ev[q]), jnp.asarray(src[q]),
+                jnp.asarray(dst[q]), jnp.asarray(live[q]), msg, v_mir,
+                reduce=reduce)
+            np.testing.assert_array_equal(got[q], np.asarray(want))
+            np.testing.assert_array_equal(cnt[q], np.asarray(cwant))
 
 
 def _build_engine_graph(seed=0, p=4, scale=6, ef=4, payload_dim=0):
@@ -230,35 +280,117 @@ def test_fused_tile_fn_and_kernel_cache_reuse():
     assert fused_triplet._cache_size() <= before + 1
 
 
-def test_fused_fallback_on_ineligible_payloads():
-    """Int payloads / multi-leaf messages / exotic reduces stay unfused."""
+def _build_int_graph(seed=3, p=4, scale=5, ef=3, dtype=np.int32,
+                     extra_vid=None):
     from repro.core import Graph
-    from repro.core.mrtriplets import mr_triplets
     from repro.data import rmat
-    g = rmat(5, 3, seed=3)
+    g = rmat(scale, ef, seed=seed)
     vids = np.arange(g.num_vertices, dtype=np.int64)
-    gr = Graph.from_edges(
+    if extra_vid is not None:   # widen the id space past the staging bound
+        vids = np.concatenate([vids, [extra_vid]])
+    return Graph.from_edges(
         g.src, g.dst, vertex_keys=vids,
-        vertex_values={"label": (vids % 7).astype(np.int32)},
-        default_vertex={"label": np.int32(0)}, num_partitions=4)
-    # int vertex payload read by the UDF -> unfused
-    _, _, _, m1 = mr_triplets(
+        vertex_values={"label": (vids % 7).astype(dtype)},
+        default_vertex={"label": dtype(0)}, num_partitions=p)
+
+
+@pytest.mark.parametrize("reduce", ["min", "max"])
+def test_fused_engine_int32_payload(reduce):
+    """int32 payloads ride the kernel via exact f32 staging (the CC
+    min-label shape): fused vs unfused agree bit-for-bit and the output
+    keeps the integer dtype."""
+    from repro.core.mrtriplets import mr_triplets
+    gr = _build_int_graph()
+    f = lambda sv, ev, dv: {"m": sv["label"]}
+    a, ea, _, ma = mr_triplets(gr, f, reduce, kernel_mode="unfused")
+    b, eb_, _, mb = mr_triplets(gr, f, reduce, kernel_mode="ref")
+    c, ec, _, mc = mr_triplets(gr, f, reduce, kernel_mode="interpret")
+    assert ma["plan"] == "unfused" and mb["plan"] == "fused" \
+        and mc["plan"] == "fused"
+    assert b["m"].dtype == jnp.asarray(a["m"]).dtype == gr.vdata["label"].dtype
+    assert bool(jnp.all(ea == eb_)) and bool(jnp.all(ea == ec))
+    mask = np.asarray(ea)
+    np.testing.assert_array_equal(np.asarray(a["m"])[mask],
+                                  np.asarray(b["m"])[mask])
+    np.testing.assert_array_equal(np.asarray(a["m"])[mask],
+                                  np.asarray(c["m"])[mask])
+
+
+@pytest.mark.parametrize("reduce", ["sum", "min"])
+def test_fused_engine_multi_leaf_message(reduce):
+    """Multi-leaf messages column-pack into one kernel matrix and split back
+    exactly (per-leaf widths/dtypes)."""
+    from repro.core.mrtriplets import mr_triplets
+    gr, _ = _build_engine_graph(scale=5, ef=3, payload_dim=3)
+    f = lambda sv, ev, dv: {"a": sv["x"] * ev["w"], "b": dv["vec"],
+                            "c": sv["x"] + dv["x"]}
+    a, ea, _, ma = mr_triplets(gr, f, reduce, kernel_mode="unfused")
+    c, ec, _, mc = mr_triplets(gr, f, reduce, kernel_mode="interpret")
+    assert ma["plan"] == "unfused" and mc["plan"] == "fused"
+    assert bool(jnp.all(ea == ec))
+    mask = np.asarray(ea)
+    for k in ("a", "b", "c"):
+        np.testing.assert_array_equal(np.asarray(a[k])[mask],
+                                      np.asarray(c[k])[mask])
+
+
+def test_fused_engine_mixed_int_float_leaves():
+    """A message mixing an int32 leaf with a float leaf fuses for min/max
+    and splits back into per-leaf dtypes."""
+    from repro.core.mrtriplets import mr_triplets
+    gr = _build_int_graph()
+    gr = gr.mapV(lambda vid, v: {**v, "x": v["label"].astype(jnp.float32)
+                                 * 1.5})
+    f = lambda sv, ev, dv: {"lab": sv["label"], "x": sv["x"]}
+    a, ea, _, ma = mr_triplets(gr, f, "min", kernel_mode="unfused")
+    c, ec, _, mc = mr_triplets(gr, f, "min", kernel_mode="interpret")
+    assert ma["plan"] == "unfused" and mc["plan"] == "fused"
+    assert c["lab"].dtype == jnp.int32 and c["x"].dtype == jnp.float32
+    mask = np.asarray(ea)
+    np.testing.assert_array_equal(np.asarray(a["lab"])[mask],
+                                  np.asarray(c["lab"])[mask])
+    np.testing.assert_array_equal(np.asarray(a["x"])[mask],
+                                  np.asarray(c["x"])[mask])
+
+
+def test_fused_fallback_on_ineligible_payloads():
+    """Shapes outside the staging guard stay unfused."""
+    from repro.core.mrtriplets import mr_triplets
+    gr = _build_int_graph()
+    # int MESSAGE with sum reduce -> unfused (f32-staged sums can escape
+    # the 24-bit mantissa even when every addend fits it)
+    _, _, _, m1 = mr_triplets(gr, lambda sv, ev, dv: {"m": sv["label"]},
+                              "sum", kernel_mode="auto")
+    assert m1["plan"] == "unfused"
+    # ...but an int INPUT feeding a float message sums fused (staging of
+    # the id-bounded inputs is exact; the sum itself runs in f32 either way)
+    _, _, _, m1b = mr_triplets(
         gr, lambda sv, ev, dv: {"m": sv["label"].astype(jnp.float32)},
         "sum", kernel_mode="auto")
-    assert m1["plan"] == "unfused"
-    # multi-leaf message -> unfused
-    gr2, _ = _build_engine_graph(scale=5, ef=3)
-    _, _, _, m2 = mr_triplets(
-        gr2, lambda sv, ev, dv: {"a": sv["x"], "b": dv["x"]},
-        "sum", kernel_mode="auto")
+    assert m1b["plan"] == "fused"
+    # unsigned 32-bit payloads are bit patterns (triangle bitsets): unfused
+    gru = _build_int_graph(dtype=np.uint32)
+    _, _, _, m2 = mr_triplets(gru, lambda sv, ev, dv: {"m": sv["label"]},
+                              "min", kernel_mode="auto")
     assert m2["plan"] == "unfused"
+    # id space past the f32 mantissa bound -> int32 staging not exact
+    grbig = _build_int_graph(extra_vid=(1 << 25))
+    _, _, _, m3 = mr_triplets(grbig, lambda sv, ev, dv: {"m": sv["label"]},
+                              "min", kernel_mode="auto")
+    assert m3["plan"] == "unfused"
+    # rank-2 message leaf -> unfused
+    gr2, _ = _build_engine_graph(scale=5, ef=3)
+    _, _, _, m4 = mr_triplets(
+        gr2, lambda sv, ev, dv: {"m": jnp.zeros((2, 2)) + sv["x"]},
+        "sum", kernel_mode="auto")
+    assert m4["plan"] == "unfused"
     # wide payload with min/max (per-column VMEM unroll) -> unfused
     gr3, _ = _build_engine_graph(scale=5, ef=3, payload_dim=32)
     f3 = lambda sv, ev, dv: {"m": sv["vec"]}
-    _, _, _, m3 = mr_triplets(gr3, f3, "min", kernel_mode="auto")
-    assert m3["plan"] == "unfused"
-    _, _, _, m4 = mr_triplets(gr3, f3, "sum", kernel_mode="auto")
-    assert m4["plan"] == "fused"    # sum path has no width cap
+    _, _, _, m5 = mr_triplets(gr3, f3, "min", kernel_mode="auto")
+    assert m5["plan"] == "unfused"
+    _, _, _, m6 = mr_triplets(gr3, f3, "sum", kernel_mode="auto")
+    assert m6["plan"] == "fused"    # sum path has no width cap
 
 
 # ---------------------------------------------------------------- segment_sum

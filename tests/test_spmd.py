@@ -1,0 +1,29 @@
+"""Tier-1 lane for the SPMD executor: run tests/spmd_check.py in a
+subprocess with 4 simulated host devices.
+
+XLA_FLAGS must be set before jax initialises, and the main pytest process
+must keep seeing a single device — hence the subprocess.  The check crosses
+executors (LocalExchange vs shard_map/SpmdExchange), physical plans
+(fused vs unfused — the device-resident tile tables make the fused plan
+legal inside shard_map) and backends (jnp oracle vs Pallas interpret); see
+spmd_check.py's docstring for the exact matrix.
+"""
+import os
+import subprocess
+import sys
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+
+
+def test_spmd_check_four_devices():
+    env = dict(os.environ)
+    flags = env.get("XLA_FLAGS", "")
+    env["XLA_FLAGS"] = (flags +
+                        " --xla_force_host_platform_device_count=4").strip()
+    proc = subprocess.run(
+        [sys.executable, os.path.join(HERE, "spmd_check.py")],
+        env=env, capture_output=True, text=True, timeout=900)
+    assert proc.returncode == 0, (
+        f"spmd_check failed\n--- stdout ---\n{proc.stdout}"
+        f"\n--- stderr ---\n{proc.stderr}")
+    assert "OK" in proc.stdout, proc.stdout
