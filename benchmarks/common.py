@@ -165,6 +165,84 @@ def spmd_mrt_seconds(gd, *, p: int = 4, iters: int = 3,
     return out
 
 
+# ---------------------------------------------------------------------------
+# Wire codec rows (DESIGN.md §2.1) — codec x delta, bytes_on_wire column
+# ---------------------------------------------------------------------------
+def wire_codec_rows(gd, *, p: int = 4, pr_iters: int = 10,
+                    codecs: tuple = ("f32", "bf16", "int8", "fp8_e4m3"),
+                    deltas: tuple = (False, True)) -> list[dict]:
+    """PageRank under every wire codec x delta setting, plus the packed-int
+    CC cell.  Reports `bytes_on_wire` (codec-aware wire volume summed over
+    supersteps), wall seconds, and rank error vs the f32 wire.
+
+    Delta rows run the tol>0 *delta* PageRank (the GraphX formulation whose
+    active set shrinks as ranks converge) so active-set delta shipping has
+    stale blocks to skip; non-delta rows run the static formulation."""
+    from repro.core import with_wire
+
+    g = Graph.from_edges(gd.src, gd.dst, num_partitions=p)
+    mask = np.asarray(g.vmask)
+    rows = []
+    ref: dict = {}
+    for delta in deltas:
+        for codec in codecs:
+            gg = g.replace(ex=with_wire(g.ex, codec, delta=delta or None))
+
+            def run(_g=gg, _d=delta):
+                kw = dict(num_iters=pr_iters, track_metrics=True)
+                if _d:
+                    kw["tol"] = 1e-3
+                return alg.pagerank(_g, **kw)
+
+            jax.block_until_ready(run().graph.vdata["pr"])   # compile warmup
+            t0 = time.perf_counter()
+            res = run()
+            jax.block_until_ready(res.graph.vdata["pr"])
+            sec = time.perf_counter() - t0
+            pr = np.asarray(res.graph.vdata["pr"])[mask]
+            prn = pr / pr.sum()
+            if codec == "f32":
+                ref[delta] = prn
+            bow = float(sum(m["bytes_on_wire"] for m in res.metrics))
+            rows.append({
+                "benchmark": "wire_codec", "workload": "pagerank",
+                "wire": codec, "delta": delta,
+                "bytes_on_wire": round(bow),
+                "seconds": round(sec, 4),
+                "supersteps": res.supersteps,
+                "max_rank_err_vs_f32": float(np.abs(prn - ref[delta]).max()),
+            })
+
+    # the integer workload: CC labels packed losslessly (int16 under the
+    # default id bound) — bit-exactness is asserted, not hoped for
+    sgd = symmetrize(gd)
+    sg = Graph.from_edges(sgd.src, sgd.dst, num_partitions=p)
+    cc_ref = None
+    for delta in deltas:
+        sgw = sg.replace(ex=with_wire(sg.ex, "int8", delta=delta or None))
+        jax.block_until_ready(
+            alg.connected_components(sgw).graph.vdata["cc"])
+        t0 = time.perf_counter()
+        res = alg.connected_components(sgw, track_metrics=True)
+        jax.block_until_ready(res.graph.vdata["cc"])
+        sec = time.perf_counter() - t0
+        cc = np.asarray(res.graph.vdata["cc"])
+        if cc_ref is None:
+            cc_ref = np.asarray(
+                alg.connected_components(sg).graph.vdata["cc"])
+        assert np.array_equal(cc, cc_ref), "packed-int CC must be bit-exact"
+        rows.append({
+            "benchmark": "wire_codec", "workload": "cc_int32",
+            "wire": "packed-int", "delta": delta,
+            "bytes_on_wire": round(float(
+                sum(m["bytes_on_wire"] for m in res.metrics))),
+            "seconds": round(sec, 4),
+            "supersteps": res.supersteps,
+            "bit_exact": True,
+        })
+    return rows
+
+
 def cc_fused_vs_unfused(gd, *, p: int = 4, max_supersteps: int = 50) -> dict:
     """Time connected components (the int32 min-label workload) to
     convergence under both physical plans on the symmetrised graph.

@@ -15,7 +15,7 @@ from repro.core import algorithms as alg
 
 from .common import (cc_fused_vs_unfused, datasets, engine_pagerank_seconds,
                      naive_pagerank, naive_pagerank_seconds,
-                     spmd_mrt_seconds)
+                     spmd_mrt_seconds, wire_codec_rows)
 
 
 def run(quick: bool = True) -> list[dict]:
@@ -62,6 +62,14 @@ def run(quick: bool = True) -> list[dict]:
         # f32 staging landed (vs the always-unfused plan it had before)
         rows.append({"benchmark": "fig7_connected_components",
                      "dataset": name, **cc_fused_vs_unfused(gd)})
+
+        # wire codec rows (§2.1): same workloads, quantized/packed/delta
+        # wire, bytes_on_wire next to the timing columns
+        for wrow in wire_codec_rows(gd, pr_iters=pr_iters,
+                                    codecs=("f32", "int8"),
+                                    deltas=(False, True)):
+            rows.append({**wrow, "benchmark": "fig7_wire_codec",
+                         "dataset": name})
     return rows
 
 

@@ -25,7 +25,8 @@ import jax.numpy as jnp
 from repro.core import Col, Graph, algorithms as alg
 from repro.core.mrtriplets import mr_triplets
 
-from .common import cc_fused_vs_unfused, datasets, spmd_mrt_seconds, timeit
+from .common import (cc_fused_vs_unfused, datasets, spmd_mrt_seconds, timeit,
+                     wire_codec_rows)
 
 
 def run(quick: bool = True) -> list[dict]:
@@ -137,6 +138,12 @@ def run(quick: bool = True) -> list[dict]:
     rows.append({"benchmark": "op_micro", "op": "cc_int32_fused_vs_unfused",
                  **cc_fused_vs_unfused(gd),
                  "note": "int32 min-label Pregel loop (exact f32 staging)"})
+
+    # ---- wire codec matrix (DESIGN.md §2.1) --------------------------------
+    # f32/bf16/int8/fp8 x delta on/off with the bytes_on_wire column: the
+    # per-block-scale int8 wire must ship <= 1/3 of the f32 bytes (asserted
+    # in the tier-1 fast lane, tests/test_wire.py) at <= 1e-3 rank error.
+    rows.extend(wire_codec_rows(gd, pr_iters=5 if quick else 10))
     return rows
 
 

@@ -1,16 +1,19 @@
 """GraphX core: unified data-parallel + graph-parallel engine in JAX."""
 from .collections import Col, shuffle_by_key
-from .exchange import Exchange, LocalExchange, SpmdExchange, pack_bf16
+from .exchange import (Exchange, LocalExchange, SpmdExchange, pack_bf16,
+                       with_wire)
 from .graph import Graph, StructArrays
 from .mrtriplets import ViewCache, mr_triplets, ship_to_mirrors
 from .partition import GraphStructure, build_structure, PARTITIONERS
 from .pregel import pregel, pregel_fused, PregelResult
+from .wire import WireCodec, make_codec, CODEC_NAMES
 from . import algorithms
 from .analysis import analyze_message_fn, TripletDeps
 
 __all__ = [
     "Col", "shuffle_by_key", "Exchange", "LocalExchange", "SpmdExchange",
-    "pack_bf16", "Graph", "StructArrays", "ViewCache", "mr_triplets",
+    "pack_bf16", "with_wire", "WireCodec", "make_codec", "CODEC_NAMES",
+    "Graph", "StructArrays", "ViewCache", "mr_triplets",
     "ship_to_mirrors", "GraphStructure", "build_structure", "PARTITIONERS",
     "pregel", "pregel_fused", "PregelResult", "algorithms",
     "analyze_message_fn", "TripletDeps",

@@ -20,6 +20,13 @@ This is the JAX analog of GraphX-on-Spark's shuffle layer (§4.1): the
 engine never talks to the network directly, only to this interface — which is
 what lets the identical mrTriplets/Pregel code be verified on 1 CPU device
 and lowered onto a 512-chip mesh.
+
+On-wire representation is delegated to the codec layer (`core/wire.py`,
+DESIGN.md §2.1): `ship()` encodes each payload on the send side (per-block
+scaled int8/fp8 quantization, lossless small-int packing, plain bf16
+narrowing), moves the narrow payload plus its block scales through the
+collective, and decodes on the receive side — both conversions behind
+`optimization_barrier` so XLA cannot re-widen the collective.
 """
 from __future__ import annotations
 
@@ -27,6 +34,9 @@ import dataclasses
 
 import jax
 import jax.numpy as jnp
+
+from . import wire as wire_mod
+from .wire import WireCodec, make_codec
 
 
 class Exchange:
@@ -40,27 +50,49 @@ class Exchange:
     def tree_transpose(self, tree):
         return jax.tree.map(self.transpose, tree)
 
-    # Wire-format hooks (DESIGN.md §2: §4.7 analog — dtype narrowing on the
-    # wire).  Executors may compress payloads before the collective.
+    # Wire-format hooks (DESIGN.md §2.1).  `wire` is the codec; `wire_dtype`
+    # is the pre-codec field, kept working as plain float narrowing.
+    wire: WireCodec | None = None
     wire_dtype: jnp.dtype | None = None
 
-    def ship(self, x: jnp.ndarray) -> jnp.ndarray:
-        """transpose() with optional dtype narrowing for inexact data.
+    @property
+    def codec(self) -> WireCodec | None:
+        """The resolved wire codec (legacy `wire_dtype` included)."""
+        if self.wire is not None:
+            return self.wire
+        if self.wire_dtype is not None:
+            return wire_mod.legacy_codec(self.wire_dtype)
+        return None
 
-        The result STAYS narrow (the mirror view stores the wire dtype and
-        accumulation upcasts at the consumer): upcasting right after the
-        collective lets XLA hoist the convert to the send side and run the
-        collective wide again — measured on the PageRank cell's a2a."""
-        if self.wire_dtype is not None and jnp.issubdtype(x.dtype, jnp.floating):
-            # the barrier stops XLA's algebraic simplifier from commuting
-            # the narrowing convert back across the collective (observed:
-            # convert(a2a(convert(x))) -> a2a(x), re-widening the wire)
-            return self.transpose(
-                jax.lax.optimization_barrier(x.astype(self.wire_dtype)))
-        return self.transpose(x)
+    def ship(self, x: jnp.ndarray, *, active: jnp.ndarray | None = None,
+             bound: int | None = None) -> jnp.ndarray:
+        """transpose() through the wire codec.
 
-    def tree_ship(self, tree):
-        return jax.tree.map(self.ship, tree)
+        active: [nl, P, K] per-entry freshness flags (the superstep's changed
+        mask routed onto this buffer) — stale entries are zero-substituted
+        before quantization so they cannot pollute block scales or wrap an
+        exact int cast; bound: static |value| bound for lossless integer
+        narrowing (§2.3.1 id-valued convention).
+
+        Plain dtype narrowing (bf16) STAYS narrow on return — the mirror
+        view stores the wire dtype and accumulation upcasts at the consumer:
+        upcasting right after the collective would let XLA hoist the convert
+        to the send side and run the collective wide again (measured on the
+        PageRank cell's a2a; hence the barriers in wire.py).  Scaled and
+        packed-int payloads decode back to their original dtype — dequant is
+        a separately-shipped per-block exponent multiply, which XLA cannot
+        commute across the collective."""
+        enc = wire_mod.encode_leaf(x, self.codec, bound=bound, active=active)
+        if enc is None:
+            return self.transpose(x)
+        payload = self.transpose(enc.payload)
+        scale = None if enc.scale is None else self.transpose(enc.scale)
+        return wire_mod.decode_leaf(enc.kind, payload, scale, x, self.codec)
+
+    def tree_ship(self, tree, *, active: jnp.ndarray | None = None,
+                  bound: int | None = None):
+        return jax.tree.map(
+            lambda x: self.ship(x, active=active, bound=bound), tree)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -69,6 +101,7 @@ class LocalExchange(Exchange):
 
     p: int
     wire_dtype: jnp.dtype | None = None
+    wire: WireCodec | None = None
 
     def transpose(self, x: jnp.ndarray) -> jnp.ndarray:
         assert x.shape[0] == self.p and x.shape[1] == self.p, x.shape
@@ -89,6 +122,7 @@ class SpmdExchange(Exchange):
     p: int
     axis_name: str = "parts"
     wire_dtype: jnp.dtype | None = None
+    wire: WireCodec | None = None
 
     def transpose(self, x: jnp.ndarray) -> jnp.ndarray:
         # local x: [P_loc=1, P, ...].  Tiled all_to_all over axis 1: device p
@@ -99,6 +133,20 @@ class SpmdExchange(Exchange):
         )
 
 
+def with_wire(ex: Exchange, codec, *, delta: bool | None = None,
+              block: int | None = None,
+              pack_ints: bool | None = None) -> Exchange:
+    """Return a copy of `ex` shipping through the given wire codec.
+
+    codec: a WireCodec, a registry name ("f32" | "bf16" | "int8" |
+    "fp8_e4m3" | "fp8_e5m2"), or None to strip the codec.  Keyword overrides
+    tweak the resolved codec (delta shipping, scale block size, int
+    packing)."""
+    resolved = make_codec(codec, delta=delta, block=block,
+                          pack_ints=pack_ints)
+    return dataclasses.replace(ex, wire=resolved)  # type: ignore[arg-type]
+
+
 def pack_bf16(ex: Exchange) -> Exchange:
-    """Return a copy of `ex` that ships floating payloads as bfloat16."""
-    return dataclasses.replace(ex, wire_dtype=jnp.bfloat16)  # type: ignore[arg-type]
+    """Deprecated shim: `with_wire(ex, "bf16")`."""
+    return with_wire(ex, "bf16")

@@ -388,7 +388,8 @@ class Graph:
     def mrTriplets(self, map_fn: Callable, reduce: str = "sum", *,
                    to: str = "dst", skip_stale: str | None = None,
                    cache: ViewCache | None = None, kernel_mode: str = "auto",
-                   force_need: str | None = None):
+                   force_need: str | None = None,
+                   payload_bound: int | None = None):
         """See repro.core.mrtriplets.mr_triplets.
 
         kernel_mode selects the physical execution strategy:
@@ -403,15 +404,17 @@ class Graph:
         stages them through f32 and admits signed 32-bit ints as ID-VALUED
         (labels/parents, bounded by the graph's max vertex id < 2^24) —
         that covers the property values AND the messages the UDF computes
-        from them.  int32 properties holding arbitrary large values
-        (timestamps, counters), or UDFs whose integer arithmetic amplifies
-        ids past the bound, violate the assumption — pass
-        kernel_mode="unfused" for those.  Unsigned 32-bit ints (bitsets)
-        never fuse.
+        from them.  `payload_bound=` overrides that default with a caller-
+        certified |value| bound (timestamps, counters, UDFs whose integer
+        arithmetic amplifies ids): it gates BOTH the fused staging guard and
+        the wire codec's lossless int8/int16 packing width (§2.1).  Payloads
+        with no certifiable bound should pass kernel_mode="unfused" and a
+        codec without int packing.  Unsigned 32-bit ints (bitsets) never
+        fuse and never narrow.
         """
         return mr_triplets(self, map_fn, reduce, to=to, skip_stale=skip_stale,
                            cache=cache, kernel_mode=kernel_mode,
-                           force_need=force_need)
+                           force_need=force_need, payload_bound=payload_bound)
 
     def degrees(self, direction: str = "in", kernel_mode: str = "auto"):
         """Vertex degrees via a join-eliminated mrTriplets (the paper's

@@ -35,6 +35,7 @@ import jax
 import jax.numpy as jnp
 
 from . import analysis
+from . import wire as wire_mod
 from .exchange import Exchange
 from .tree import (bmask, elem_spec, gather_rows, nbytes_of, tree_where,
                    tree_zeros_like_elem, vmap2)
@@ -83,9 +84,14 @@ class ShipMetrics:
     wire_bytes: int                 # static bytes moved by the collective
     effective_bytes: jnp.ndarray    # data actually needed (Fig 4 quantity)
     n_shipped: jnp.ndarray
+    # codec-aware wire volume: what a zero-run-compressing transport moves
+    # under active-set delta shipping (== wire_bytes without a delta codec).
+    bytes_on_wire: jnp.ndarray = dataclasses.field(
+        default_factory=lambda: jnp.float32(0))
 
     def tree_flatten(self):
-        return (self.effective_bytes, self.n_shipped), (self.wire_bytes,)
+        return ((self.effective_bytes, self.n_shipped, self.bytes_on_wire),
+                (self.wire_bytes,))
 
     @classmethod
     def tree_unflatten(cls, aux, children):
@@ -100,6 +106,7 @@ def ship_to_mirrors(
     *,
     active: jnp.ndarray | None = None,   # [P, V_blk] bool — ship only these
     cache: ViewCache | None = None,
+    bound: int | None = None,            # |value| bound for int wire packing
 ) -> tuple[ViewCache, ShipMetrics]:
     """Materialise the replicated vertex view for one need set."""
     send_idx, recv_slot = s.routes[need]          # [nl, P, K] each
@@ -119,7 +126,9 @@ def ship_to_mirrors(
         values)
     sendbuf = tree_where(flags, sendbuf, jax.tree.map(jnp.zeros_like, sendbuf))
 
-    recvbuf = ex.tree_ship(sendbuf)               # [P(pe), P(q), K, ...]
+    # flags double as the wire's active set: the codec zero-substitutes and
+    # delta-accounts stale entries (§4.5.1 reaching the physical wire).
+    recvbuf = ex.tree_ship(sendbuf, active=flags, bound=bound)
     if active is None and cache is None:
         # full ship: the flag pattern is STRUCTURAL (route padding), already
         # known at the receiver as recv_slot validity — skip the flags
@@ -147,27 +156,14 @@ def ship_to_mirrors(
         filled = cache.filled | shipped
 
     elem_bytes = nbytes_of(jax.tree.map(lambda v: v[0, 0], values))
+    codec = ex.codec
     metrics = ShipMetrics(
-        wire_bytes=_wire_bytes(sendbuf, ex),
+        wire_bytes=wire_mod.static_wire_bytes(sendbuf, codec, bound),
         effective_bytes=flags.sum() * elem_bytes,
         n_shipped=flags.sum(),
+        bytes_on_wire=wire_mod.bytes_on_wire(sendbuf, codec, flags, bound),
     )
     return ViewCache(mirror=mirror, filled=filled, active=shipped), metrics
-
-
-def _wire_bytes(tree, ex: Exchange) -> int:
-    """Static bytes the exchange moves, honouring on-wire dtype narrowing.
-
-    (The CPU dry-run backend float-normalises bf16 collectives back to f32
-    — a backend artifact; TPU runs them native, so the engine metric is the
-    truthful wire count.)"""
-    total = 0
-    for x in jax.tree.leaves(tree):
-        item = x.dtype.itemsize
-        if ex.wire_dtype is not None and jnp.issubdtype(x.dtype, jnp.floating):
-            item = min(item, jnp.dtype(ex.wire_dtype).itemsize)
-        total += x.size * item
-    return total
 
 
 def ship_aggregates_home(
@@ -177,6 +173,8 @@ def ship_aggregates_home(
     need: str,
     reduce: str,
     ex: Exchange,
+    *,
+    bound: int | None = None,
 ) -> tuple[Any, jnp.ndarray, ShipMetrics]:
     """Return partial aggregates to vertex homes and combine (reduce UDF is
     commutative-associative, §3.2, so cross-partition combining is a
@@ -194,7 +192,19 @@ def ship_aggregates_home(
         had_msg, recv_slot.reshape(nl, -1)).reshape(nl, p, k)
     backflags &= recv_slot < s.v_mir
 
-    recv = ex.tree_ship(backbuf)                  # [P(q), P(pe), K, ...]
+    # backflags as the wire's active set: positions the receiver will
+    # discard (empty mirror slots holding the reduce identity, route
+    # padding) are zero-substituted BEFORE the codec — an int32 identity
+    # (2^31-1) would otherwise wrap a lossless int16 cast and a float
+    # identity would blow up a quantization block's absmax.
+    #
+    # The int-packing bound certifies individual message VALUES; min/max
+    # aggregates preserve it, but partial SUMS can exceed it — no lossless
+    # narrowing on the return wire for sum reduces (float quantization is
+    # value-adaptive and stays on).
+    if reduce == "sum":
+        bound = None
+    recv = ex.tree_ship(backbuf, active=backflags, bound=bound)
     rflags = ex.transpose(backflags)
 
     v_blk = s.home_mask.shape[1]
@@ -220,10 +230,13 @@ def ship_aggregates_home(
         rflags.reshape(nl, -1).astype(jnp.int32)) > 0
 
     elem_bytes = nbytes_of(jax.tree.map(lambda v: v[0, 0], partial))
+    codec = ex.codec
     metrics = ShipMetrics(
-        wire_bytes=_wire_bytes(backbuf, ex),
+        wire_bytes=wire_mod.static_wire_bytes(backbuf, codec, bound),
         effective_bytes=backflags.sum() * elem_bytes,
         n_shipped=backflags.sum(),
+        bytes_on_wire=wire_mod.bytes_on_wire(backbuf, codec, backflags,
+                                             bound),
     )
     return out, exists, metrics
 
@@ -284,26 +297,28 @@ class _FusedPlan:
 _INT_STAGE_BOUND = 1 << 24
 
 
-def _fused_int_ok(dtype, max_vid: int) -> bool:
+def _fused_int_ok(dtype, bound: int) -> bool:
     """Can integer values of `dtype` ride the kernel's f32 staging exactly?
 
     Narrow ints (≤ 16 bits) are bounded by their own dtype.  Signed 32-bit
-    ints are admitted when the graph's id space is below the 24-bit mantissa
-    bound: the engine treats them as id-valued — CC labels, LP labels, SSSP
-    parents, every §3.3 integer payload — whose values are vertex ids.  The
-    same assumption extends to int MESSAGE leaves: the UDF is expected to
-    propagate ids, not amplify them (a map like `label * 3` can push values
-    past the bound and silently round under f32 staging — such UDFs must
-    pass kernel_mode="unfused").  Unsigned 32-bit ints are NOT admitted: by
-    convention they carry bit patterns (triangle counting's neighbourhood
-    bitsets), which f32 staging would silently truncate."""
+    ints are admitted when the payload's static |value| bound is below the
+    24-bit mantissa bound.  The bound is either user-supplied
+    (`payload_bound=` on mrTriplets/pregel — timestamps, counters, any
+    value-range the caller can certify) or defaults to the graph's
+    `max_vid`: the id-valued convention covering CC labels, LP labels, SSSP
+    parents, every §3.3 integer payload.  Either way the bound must also
+    cover the int MESSAGE leaves the UDF computes (a map like `label * 3`
+    can escape a bound its inputs satisfy — such UDFs need a wider
+    payload_bound or kernel_mode="unfused").  Unsigned 32-bit ints are NOT
+    admitted: by convention they carry bit patterns (triangle counting's
+    neighbourhood bitsets), which f32 staging would silently truncate."""
     info = np.iinfo(np.dtype(dtype))
     if info.bits <= 16:
         return True
-    return info.bits <= 32 and info.kind == "i" and max_vid < _INT_STAGE_BOUND
+    return info.bits <= 32 and info.kind == "i" and bound < _INT_STAGE_BOUND
 
 
-def _fused_leaf_ok(spec, max_vid: int, reduce: str,
+def _fused_leaf_ok(spec, bound: int, reduce: str,
                    message: bool = False) -> bool:
     """The kernel packs flat payloads (rank ≤ 1) staged through f32.
 
@@ -320,7 +335,7 @@ def _fused_leaf_ok(spec, max_vid: int, reduce: str,
     if jnp.issubdtype(dt, jnp.integer):
         if message and reduce == "sum":
             return False
-        return _fused_int_ok(dt, max_vid)
+        return _fused_int_ok(dt, bound)
     return False
 
 
@@ -336,7 +351,8 @@ def _derive_need(deps, force_need: str | None) -> str | None:
 
 
 def _plan_fused(g, map_fn, deps, need, reduce, force_need,
-                vex, eex) -> _FusedPlan | None:
+                vex, eex, payload_bound: int | None = None
+                ) -> _FusedPlan | None:
     """Decide whether this mrTriplets can run fused; None -> unfused path.
 
     Eligibility: sum/min/max reduce; flat float-or-exact-int message leaves
@@ -345,13 +361,16 @@ def _plan_fused(g, map_fn, deps, need, reduce, force_need,
     device-resident tile tables on the structure (built at from_edges —
     absent only for shape-spec dry-run graphs).  The tables are per-partition
     pytree children, so the plan holds both under LocalExchange (nl == P)
-    and inside shard_map (nl == 1, each device sweeps its own tiling)."""
+    and inside shard_map (nl == 1, each device sweeps its own tiling).
+
+    Integer staging is guarded by `payload_bound` when supplied, else by the
+    graph's max_vid (the id-valued convention, §2.3.1)."""
     if reduce not in ("sum", "min", "max") or g.s.tiles is None:
         return None
     msg_spec = deps.msg_spec     # captured by the join-elimination trace
     if msg_spec is None:         # UDF untraceable -> no fused plan
         return None
-    max_vid = g.s.max_vid
+    max_vid = (payload_bound if payload_bound is not None else g.s.max_vid)
     msg_leaves, msg_treedef = jax.tree.flatten(msg_spec)
     if not msg_leaves or not all(
             _fused_leaf_ok(m, max_vid, reduce, message=True)
@@ -445,14 +464,20 @@ def _make_tile_fn(map_fn, vspecs, vdef, especs, edef, plan: _FusedPlan):
 
 
 def _pack_cols(tree, used, nl: int, n: int) -> jnp.ndarray:
-    """Column-pack the used leaves of a [nl, N, ...] pytree into [nl, N, D]
-    (f32 staging; exact for the integer leaves the planner admitted)."""
+    """Column-pack the used leaves of a [nl, N, ...] pytree into [nl, N, D].
+
+    Staging dtype: when EVERY packed leaf is bfloat16 (a narrow-wire mirror,
+    §2.1) the packed matrix stays bf16 — the kernel and the jnp oracle both
+    upcast tiles to f32 at the accumulator, so results are bit-identical to
+    f32 staging while the packed matrix's HBM reads halve.  Any other mix
+    stages through f32 (exact for the integer leaves the planner admitted)."""
     leaves = jax.tree.leaves(tree) if tree is not None else []
-    cols = [l.reshape(nl, n, -1).astype(jnp.float32)
-            for l, u in zip(leaves, used) if u]
+    cols = [l.reshape(nl, n, -1) for l, u in zip(leaves, used) if u]
     if not cols:
         return jnp.zeros((nl, n, 0), jnp.float32)
-    return jnp.concatenate(cols, axis=-1)
+    stage = (jnp.bfloat16 if all(c.dtype == jnp.bfloat16 for c in cols)
+             else jnp.float32)
+    return jnp.concatenate([c.astype(stage) for c in cols], axis=-1)
 
 
 def _fused_aggregate(g, mirror_tree, map_fn, live, to, reduce, kernel_mode,
@@ -526,6 +551,7 @@ def mr_triplets(
     cache: ViewCache | None = None,
     kernel_mode: str = "auto",
     force_need: str | None = None,   # override join elimination (benchmarks)
+    payload_bound: int | None = None,
 ):
     """Execute one mrTriplets. Returns (values, exists, new_cache, metrics).
 
@@ -537,12 +563,29 @@ def mr_triplets(
     backend, still fused when eligible), or "unfused" (always take the
     gather -> vmap -> segment-reduce path).
 
+    payload_bound: static |value| bound certified by the caller for every
+    integer payload and message this mrTriplets touches.  Drives BOTH the
+    fused kernel's f32 staging guard (admits int32 under bound < 2^24) and
+    the wire codec's lossless narrowing width (int8 under 127, int16 under
+    32767).  Defaults to the graph's max_vid — the §2.3.1 id-valued
+    convention.
+
     Fused-path caches key on `map_fn`'s OBJECT IDENTITY (like jax.jit):
     eager host loops should pass the same function object every call, not a
     lambda rebuilt per iteration, or the kernel recompiles each time.
     """
     s, ex = g.s, g.ex
     nl = g.vmask.shape[0]   # local partition count (1 inside shard_map)
+    # wire-packing bound: an explicit payload_bound certifies EVERY signed
+    # int payload.  The id-valued default (max_vid) only speaks for int32
+    # ids — ints of <= 16 bits are bounded by their own dtype, nothing
+    # tighter (same rule as _fused_int_ok) — so it is floored at int16's
+    # own range: int32 still narrows to int16, narrower dtypes never
+    # narrow on a default bound.  max_vid == 0 means "unknown" (shape-spec
+    # dry-run structures) -> no narrowing.
+    bound = (payload_bound if payload_bound is not None
+             else (max(s.max_vid, np.iinfo(np.int16).max)
+                   if s.max_vid > 0 else None))
 
     vex, eex = elem_spec(g.vdata), elem_spec(g.edata)
     deps = analysis.analyze_message_fn(map_fn, vex, eex, vex)
@@ -589,14 +632,16 @@ def mr_triplets(
     if need is not None:
         ship_active = g.active if cache is not None else None
         view, m_fwd = ship_to_mirrors(s, ship_values(), need, ex,
-                                      active=ship_active, cache=cache)
+                                      active=ship_active, cache=cache,
+                                      bound=bound)
         metrics["fwd"] = m_fwd
     else:
         view = cache or ViewCache(
             mirror=tree_zeros_like_elem(g.vdata, (nl, s.v_mir)),
             filled=jnp.zeros((nl, s.v_mir), bool),
             active=jnp.ones((nl, s.v_mir), bool))
-        metrics["fwd"] = ShipMetrics(0, jnp.int32(0), jnp.int32(0))
+        metrics["fwd"] = ShipMetrics(0, jnp.int32(0), jnp.int32(0),
+                                     jnp.float32(0))
 
     # --- 4: edge-parallel message computation -------------------------------
     mirror_tree = rebuild_mirror(view.mirror) if need is not None else None
@@ -624,7 +669,8 @@ def mr_triplets(
     # unfused path, as does kernel_mode="unfused".
     plan = None
     if kernel_mode != "unfused":
-        plan = _plan_fused(g, map_fn, deps, need, reduce, force_need, vex, eex)
+        plan = _plan_fused(g, map_fn, deps, need, reduce, force_need,
+                           vex, eex, payload_bound)
     metrics["plan"] = "fused" if plan is not None else "unfused"
 
     if plan is not None:
@@ -657,14 +703,19 @@ def mr_triplets(
     # Aggregates flow back along the routing table of the side they were
     # aggregated on (structural, independent of which sides were shipped).
     values, exists, m_back = ship_aggregates_home(
-        s, partial, had_msg, to, reduce, ex)
+        s, partial, had_msg, to, reduce, ex, bound=bound)
     metrics["back"] = m_back
+    # the headline codec metric: forward + return wire volume after
+    # narrowing, quantization, and (with a delta codec) zero-block skipping.
+    metrics["bytes_on_wire"] = (metrics["fwd"].bytes_on_wire
+                                + m_back.bytes_on_wire)
 
     return values, exists, view, metrics
 
 
 def plan_of(g, map_fn: Callable, reduce: str = "sum", *,
-            kernel_mode: str = "auto", force_need: str | None = None) -> str:
+            kernel_mode: str = "auto", force_need: str | None = None,
+            payload_bound: int | None = None) -> str:
     """The static physical-plan decision for this mrTriplets WITHOUT
     executing it: "fused" | "unfused".
 
@@ -676,5 +727,6 @@ def plan_of(g, map_fn: Callable, reduce: str = "sum", *,
     vex, eex = elem_spec(g.vdata), elem_spec(g.edata)
     deps = analysis.analyze_message_fn(map_fn, vex, eex, vex)
     need = _derive_need(deps, force_need)
-    plan = _plan_fused(g, map_fn, deps, need, reduce, force_need, vex, eex)
+    plan = _plan_fused(g, map_fn, deps, need, reduce, force_need,
+                       vex, eex, payload_bound)
     return "fused" if plan is not None else "unfused"

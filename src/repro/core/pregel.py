@@ -45,10 +45,12 @@ class PregelResult:
 
 
 def _superstep(g: Graph, cache, *, vprog, send_msg, gather, default_msg,
-               skip_stale, changed_fn, kernel_mode, use_cache):
+               skip_stale, changed_fn, kernel_mode, use_cache,
+               payload_bound=None):
     msgs, exists, view, metrics = mr_triplets(
         g, send_msg, gather, to="dst", skip_stale=skip_stale,
-        cache=cache if use_cache else None, kernel_mode=kernel_mode)
+        cache=cache if use_cache else None, kernel_mode=kernel_mode,
+        payload_bound=payload_bound)
     # strip static (non-array) entries: they are not jit-returnable and are
     # re-derivable from the UDF analysis in the driver
     metrics = {k: v for k, v in metrics.items()
@@ -81,14 +83,23 @@ def pregel(
     changed_fn: Callable | None = None,
     kernel_mode: str = "auto",
     track_metrics: bool = False,
+    payload_bound: int | None = None,
 ) -> PregelResult:
-    """Host-driven BSP loop with a jitted superstep."""
+    """Host-driven BSP loop with a jitted superstep.
+
+    payload_bound certifies a static |value| bound for integer payloads and
+    messages (see mr_triplets) — it widens or narrows both the fused
+    kernel's staging guard and the wire codec's lossless int width.  The
+    per-superstep metrics carry `bytes_on_wire`, the codec-aware wire
+    volume: with a delta codec the changed mask the vote-to-halt loop
+    already maintains reaches the physical wire, so converged regions stop
+    paying bytes."""
 
     step = jax.jit(functools.partial(
         _superstep, vprog=vprog, send_msg=send_msg, gather=gather,
         default_msg=default_msg, skip_stale=skip_stale,
         changed_fn=changed_fn, kernel_mode=kernel_mode,
-        use_cache=incremental))
+        use_cache=incremental, payload_bound=payload_bound))
 
     # static join-elimination + physical-plan facts, derived once from the
     # INITIAL graph's specs (vprog may retype properties, but every §3.3
@@ -100,8 +111,11 @@ def pregel(
         send_msg, elem_spec(g.vdata), elem_spec(g.edata), elem_spec(g.vdata))
     static_info = {"join_arity": deps.n_way,
                    "need": _derive_need(deps, None) or "none",
+                   "wire": (g.ex.codec.name if g.ex.codec is not None
+                            else "f32"),
                    "plan": plan_of(g, send_msg, gather,
-                                   kernel_mode=kernel_mode)}
+                                   kernel_mode=kernel_mode,
+                                   payload_bound=payload_bound)}
 
     cache = None
     all_metrics: list[dict] = []
@@ -131,6 +145,7 @@ def pregel_fused(
     incremental: bool = True,
     changed_fn: Callable | None = None,
     kernel_mode: str = "auto",
+    payload_bound: int | None = None,
 ):
     """Entire Pregel run as one `lax.while_loop` XLA program.
 
@@ -143,7 +158,7 @@ def pregel_fused(
         _superstep, vprog=vprog, send_msg=send_msg, gather=gather,
         default_msg=default_msg, skip_stale=skip_stale,
         changed_fn=changed_fn, kernel_mode=kernel_mode,
-        use_cache=incremental)
+        use_cache=incremental, payload_bound=payload_bound)
 
     # materialise an initial cache with one full ship so the carry has
     # static structure

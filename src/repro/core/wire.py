@@ -1,0 +1,317 @@
+"""Wire codec: what the exchange actually puts on the network (DESIGN.md §2.1).
+
+GraphX's replicated vertex view is an incrementally maintained materialized
+view — each superstep ships only what changed, as narrow as the data allows.
+This module is the codec half of that contract; `Exchange.ship` is the
+transport half.  Three orthogonal mechanisms, combinable per `WireCodec`:
+
+  * **Per-block scaled quantization** (`scaled=True`).  Each float payload is
+    cut into `block`-element tiles along the flattened per-destination axis;
+    every tile ships as int8 or fp8 (e4m3/e5m2) plus ONE shared scale.  The
+    scale is snapped to a power of two and shipped as a signed 8-bit exponent
+    (the OCP "microscaling" / E8M0 layout: 32-element blocks, 1-byte shared
+    exponent) — so dequantization is an exact exponent shift, and
+    integer-valued float payloads (degree counts) with block absmax ≤ qmax
+    round-trip EXACTLY.  int8 wire: 33 bytes per 32 f32 values = 25.8%.
+
+  * **Exact small-int packing** (`pack_ints=True`).  Signed integer payloads
+    whose static bound fits ship as int8/int16 losslessly and widen back on
+    receive.  An explicit `payload_bound` certifies every signed int payload;
+    the id-valued default (§2.3.1, the graph's `max_vid`) only speaks for
+    int32 ids, so the engine floors it at int16's own range — narrower
+    dtypes never narrow on a default bound — and sum-reduce aggregates never
+    pack (sums escape a per-value bound; see ship_aggregates_home).
+    Unsigned ints carry bit patterns (bitsets) and never narrow; ints with no
+    static bound pass through at full width.
+
+  * **Active-set delta accounting** (`delta=True`).  The engine already
+    zero-substitutes stale entries before the collective (§4.5.1 incremental
+    maintenance); `bytes_on_wire` additionally reports the volume a
+    zero-run-compressing transport would move — `block`-granular: a tile
+    with no active entry costs nothing.  The dense all_to_all itself keeps
+    its static shape (SPMD collectives cannot shrink at runtime), so this is
+    the metric the benchmarks and the roofline read, not a runtime saving on
+    the simulated wire.
+
+Encode runs on the SEND side behind `optimization_barrier`; decode runs on
+the RECEIVE side behind another barrier.  Without the barriers XLA's
+algebraic simplifier commutes the narrowing converts across the collective
+and re-widens the wire (observed on the PageRank cell's all_to_all).
+Dequantized leaves come back in their ORIGINAL dtype, so the mirror view and
+the ViewCache keep a stable pytree structure across supersteps; plain
+dtype-narrowing codecs (bf16) stay narrow in the mirror and upcast at the
+accumulator, exactly as before.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from .tree import bmask
+
+# Per-block scale on the wire: one signed 8-bit power-of-two exponent.
+SCALE_BYTES = 1
+
+_FP8_E4M3 = getattr(jnp, "float8_e4m3fn", None)
+_FP8_E5M2 = getattr(jnp, "float8_e5m2", None)
+
+
+@dataclasses.dataclass(frozen=True)
+class WireCodec:
+    """Static wire-format description.  Hashable: rides in `Exchange`, which
+    is static jit metadata (Graph pytree aux)."""
+
+    name: str
+    fdtype: Any = None        # on-wire dtype for floating leaves; None = keep
+    scaled: bool = False      # per-block shared-exponent scale rides along
+    block: int = 32           # elements per scale block (flattened payload)
+    pack_ints: bool = True    # signed ints narrow losslessly under the bound
+    delta: bool = False       # active-set zero-block compression accounting
+
+    def replace(self, **kw) -> "WireCodec":
+        return dataclasses.replace(self, **kw)
+
+
+def _registry() -> dict:
+    table = {
+        "f32": WireCodec("f32"),
+        "bf16": WireCodec("bf16", fdtype=jnp.bfloat16),
+        "int8": WireCodec("int8", fdtype=jnp.int8, scaled=True),
+    }
+    if _FP8_E4M3 is not None:
+        table["fp8_e4m3"] = WireCodec("fp8_e4m3", fdtype=_FP8_E4M3,
+                                      scaled=True)
+    if _FP8_E5M2 is not None:
+        table["fp8_e5m2"] = WireCodec("fp8_e5m2", fdtype=_FP8_E5M2,
+                                      scaled=True)
+    return table
+
+
+CODEC_NAMES = tuple(_registry())
+
+
+def make_codec(spec, *, delta: bool | None = None, block: int | None = None,
+               pack_ints: bool | None = None) -> WireCodec | None:
+    """Resolve a codec spec: None | "f32" | "bf16" | "int8" | "fp8_e4m3" |
+    "fp8_e5m2" | WireCodec, with optional field overrides."""
+    if spec is None or spec == "none":
+        return None
+    if isinstance(spec, WireCodec):
+        codec = spec
+    else:
+        try:
+            codec = _registry()[spec]
+        except KeyError:
+            raise ValueError(
+                f"unknown wire codec {spec!r}; one of {CODEC_NAMES}")
+    kw = {}
+    if delta is not None:
+        kw["delta"] = delta
+    if block is not None:
+        kw["block"] = block
+    if pack_ints is not None:
+        kw["pack_ints"] = pack_ints
+    return codec.replace(**kw) if kw else codec
+
+
+def legacy_codec(wire_dtype) -> WireCodec:
+    """The pre-codec `wire_dtype=` field as a codec: plain float narrowing,
+    integers untouched (exactly the old `Exchange.ship` behavior)."""
+    return WireCodec(f"legacy:{jnp.dtype(wire_dtype).name}",
+                     fdtype=wire_dtype, pack_ints=False)
+
+
+# ---------------------------------------------------------------------------
+# Integer width derivation (the §2.3.1 staging machinery, generalized from
+# max_vid to a user-suppliable payload bound)
+# ---------------------------------------------------------------------------
+def int_wire_dtype(dtype, bound: int | None) -> np.dtype:
+    """Narrowest SIGNED width holding [-bound, bound]; never widens, never
+    touches unsigned/bool dtypes, full width when the bound is unknown."""
+    dt = np.dtype(dtype)
+    if bound is None or bound <= 0 or dt.kind != "i":
+        return dt
+    for cand in (np.int8, np.int16):
+        c = np.dtype(cand)
+        if c.itemsize < dt.itemsize and bound <= np.iinfo(c).max:
+            return c
+    return dt
+
+
+def _qmax(wdtype) -> float:
+    if jnp.issubdtype(wdtype, jnp.integer):
+        return float(jnp.iinfo(wdtype).max)
+    return float(jnp.finfo(wdtype).max)
+
+
+# ---------------------------------------------------------------------------
+# Leaf encode / decode
+# ---------------------------------------------------------------------------
+class Encoded(NamedTuple):
+    kind: str                     # "narrow" | "scaled" | "int"
+    payload: jnp.ndarray          # wire dtype, barrier'd on the send side
+    scale: jnp.ndarray | None     # int8 block exponents ("scaled" only)
+
+
+def encode_leaf(x: jnp.ndarray, codec: WireCodec | None,
+                *, bound: int | None = None,
+                active: jnp.ndarray | None = None) -> Encoded | None:
+    """Encode one [nl, P, ...] exchange buffer for the wire; None means the
+    leaf ships as-is.  `active` ([nl, P, K] bool, K = x.shape[2]) zero-
+    substitutes stale entries BEFORE quantization — load-bearing twice over:
+    stale junk must not inflate a block's absmax, and out-of-bound junk at
+    discarded positions (reduce identities on the aggregate return path)
+    must not wrap a lossless int cast."""
+    if codec is None or x.size == 0 or x.ndim < 2:
+        return None
+    if jnp.issubdtype(x.dtype, jnp.floating) and codec.fdtype is not None:
+        if active is not None:
+            x = jnp.where(bmask(active, x), x, jnp.zeros_like(x))
+        if not codec.scaled:
+            if jnp.dtype(codec.fdtype).itemsize >= x.dtype.itemsize:
+                return None
+            return Encoded("narrow", jax.lax.optimization_barrier(
+                x.astype(codec.fdtype)), None)
+        payload, sexp = _encode_scaled(x, codec)
+        return Encoded("scaled", jax.lax.optimization_barrier(payload), sexp)
+    wdt = (int_wire_dtype(x.dtype, bound) if codec.pack_ints
+           else np.dtype(x.dtype))
+    if wdt.itemsize < np.dtype(x.dtype).itemsize:
+        if active is not None:
+            x = jnp.where(bmask(active, x), x, jnp.zeros_like(x))
+        return Encoded("int", jax.lax.optimization_barrier(
+            x.astype(jnp.dtype(wdt))), None)
+    return None
+
+
+def decode_leaf(kind: str, payload: jnp.ndarray,
+                scale: jnp.ndarray | None, like: jnp.ndarray,
+                codec: WireCodec) -> jnp.ndarray:
+    """Invert encode_leaf after the collective.  `like` is the send buffer
+    (transpose preserves shape/dtype).  "narrow" leaves STAY narrow — the
+    mirror stores the wire dtype and accumulation upcasts at the consumer;
+    "scaled"/"int" leaves decode back to the original dtype so the mirror
+    view and ViewCache keep a stable structure."""
+    if kind == "narrow":
+        return payload
+    payload = jax.lax.optimization_barrier(payload)
+    if kind == "int":
+        return payload.astype(like.dtype)
+    assert kind == "scaled" and scale is not None
+    exp_e = _spread_exponents(scale, payload.shape[-1], codec.block)
+    deq = payload.astype(jnp.float32) * jnp.exp2(exp_e)
+    return deq.reshape(like.shape).astype(like.dtype)
+
+
+def _spread_exponents(exp: jnp.ndarray, k: int, block: int) -> jnp.ndarray:
+    """[nl, P, nb] int8 block exponents -> [nl, P, k] f32 per-element."""
+    e = jnp.repeat(exp.astype(jnp.float32), block, axis=-1)
+    return e[..., :k]
+
+
+def _encode_scaled(x: jnp.ndarray, codec: WireCodec):
+    """Per-block absmax quantization with power-of-two (E8M0) scales.
+
+    scale = 2^ceil(log2(absmax / qmax)) maps each block into ±qmax with at
+    most one extra bit of error vs the optimal scale — in exchange the
+    dequant multiply is exact, the scale wire is 1 byte/block, and integer-
+    valued blocks with absmax ≤ qmax (degree counts, small ids staged as
+    floats) round-trip exactly.  fp8 payloads saturate at ±qmax by the clip
+    (e4m3fn would otherwise round past-max values to NaN).  The payload
+    ships UNPADDED ([nl, P, k] flat) — only the scale array is per-block,
+    so a trailing partial block costs its true element count."""
+    wdtype = codec.fdtype
+    qmax = min(_qmax(wdtype), float(np.finfo(np.float32).max))
+    nl, p = x.shape[:2]
+    flat = x.astype(jnp.float32).reshape(nl, p, -1)
+    k = flat.shape[-1]
+    nb = max(-(-k // codec.block), 1)
+    padded = jnp.pad(flat, ((0, 0), (0, 0), (0, nb * codec.block - k)))
+    absmax = jnp.max(jnp.abs(padded.reshape(nl, p, nb, codec.block)), axis=-1)
+    exp = jnp.ceil(jnp.log2(jnp.maximum(absmax, 1e-30) / qmax))
+    exp = jnp.clip(jnp.where(absmax > 0, exp, 0.0), -126, 126)
+    exp = exp.astype(jnp.int8)
+    q = jnp.clip(flat * jnp.exp2(-_spread_exponents(exp, k, codec.block)),
+                 -qmax, qmax)
+    if jnp.issubdtype(wdtype, jnp.integer):
+        # round, but never TO zero from a nonzero input: a block with large
+        # dynamic range must not flush its small values — consumers divide
+        # by shipped properties (PageRank's deg) and 1/0 poisons the sweep.
+        q = jnp.where(flat != 0,
+                      jnp.sign(flat) * jnp.maximum(jnp.round(jnp.abs(q)), 1.0),
+                      0.0)
+    return q.astype(wdtype), exp
+
+
+# ---------------------------------------------------------------------------
+# Byte accounting (ShipMetrics.wire_bytes / .bytes_on_wire)
+# ---------------------------------------------------------------------------
+def _leaf_layout(x, codec: WireCodec | None, bound: int | None):
+    """(bytes per element on the wire, scale bytes per block or 0)."""
+    item = x.dtype.itemsize
+    if codec is None:
+        return item, 0
+    if jnp.issubdtype(x.dtype, jnp.floating) and codec.fdtype is not None:
+        w = jnp.dtype(codec.fdtype).itemsize
+        if codec.scaled:
+            return w, SCALE_BYTES
+        return min(item, w), 0
+    if codec.pack_ints:
+        return int_wire_dtype(x.dtype, bound).itemsize, 0
+    return item, 0
+
+
+def static_wire_bytes(tree, codec: WireCodec | None,
+                      bound: int | None = None) -> int:
+    """Static bytes the collective moves, honouring the codec: narrowed or
+    quantized payload plus per-block scale exponents, blocks padded to the
+    codec's block size.  (The CPU dry-run backend float-normalises narrow
+    collectives back to f32 — a backend artifact; TPU runs them native, so
+    this engine metric is the truthful wire count.)"""
+    total = 0
+    for x in jax.tree.leaves(tree):
+        w, sb = _leaf_layout(x, codec, bound)
+        total += x.size * w
+        if sb and x.ndim >= 2 and x.size:
+            nl, p = x.shape[:2]
+            k = x.size // max(nl * p, 1)
+            total += nl * p * max(-(-k // codec.block), 1) * sb
+    return int(total)
+
+
+def bytes_on_wire(tree, codec: WireCodec | None,
+                  active: jnp.ndarray | None = None,
+                  bound: int | None = None) -> jnp.ndarray:
+    """Traced f32 scalar: the volume a zero-run-compressing transport moves.
+
+    Without a delta codec (or without an active mask — full ships) this is
+    the static wire count.  With `codec.delta`, only blocks containing at
+    least one active entry pay their payload+scale bytes — the Fig. 4
+    "effective wire" quantity at the codec's block granularity.  `active` is
+    the per-route-entry [nl, P, K] flag matrix the engine derived from the
+    superstep's changed mask (§4.5.1)."""
+    static = jnp.float32(static_wire_bytes(tree, codec, bound))
+    if codec is None or not codec.delta or active is None:
+        return static
+    total = jnp.float32(0)
+    for x in jax.tree.leaves(tree):
+        if x.size == 0 or x.ndim < 3:
+            continue
+        w, sb = _leaf_layout(x, codec, bound)
+        nl, p, kk = x.shape[:3]
+        elems = int(np.prod(x.shape[3:], dtype=np.int64))
+        ae = jnp.broadcast_to(active[..., None],
+                              active.shape + (elems,)).reshape(nl, p, -1)
+        k = ae.shape[-1]
+        nb = max(-(-k // codec.block), 1)
+        ae = jnp.pad(ae, ((0, 0), (0, 0), (0, nb * codec.block - k)))
+        blk_active = ae.reshape(nl, p, nb, codec.block).any(axis=-1)
+        # true per-block element counts (the payload ships unpadded)
+        sizes = np.full(nb, codec.block, np.float32)
+        sizes[-1] = k - (nb - 1) * codec.block
+        total += (blk_active * jnp.asarray(sizes * w + sb)).sum()
+    return total

@@ -61,12 +61,15 @@ def fused_triplet(
     """Oracle for kernels/triplet.fused_triplet — the general fused mrTriplets
     sweep (gather both endpoints, map, segment-reduce toward `to`) in plain
     jnp.  Operands follow the kernel's packing contract: `x`/`ev` are
-    column-packed f32 staging matrices (multi-leaf payloads concatenated;
-    integers staged exactly under the engine's round-trip guard) and
-    `tile_fn` returns the column-packed [*, Dm] message matrix that the
-    engine splits back per leaf.  No chunk tables here — the oracle sweeps
-    the flat edge space directly.  Empty segments hold the finite reduce
-    identity; returns (out [S, Dm] f32, cnt [S] f32 live message counts)."""
+    column-packed staging matrices — f32, or bf16 when the engine packed a
+    narrow-wire mirror (§2.1); both the oracle and the kernel upcast to f32
+    at the accumulator, so the two stagings are bit-identical.  Multi-leaf
+    payloads concatenate; integers stage exactly under the engine's
+    round-trip guard.  `tile_fn` returns the column-packed [*, Dm] message
+    matrix that the engine splits back per leaf.  No chunk tables here —
+    the oracle sweeps the flat edge space directly.  Empty segments hold
+    the finite reduce identity; returns (out [S, Dm] f32, cnt [S] f32 live
+    message counts)."""
     s = x.shape[0]
     xf = x.astype(jnp.float32).reshape(s, -1)
     if xf.shape[1] == 0:

@@ -266,14 +266,17 @@ def fused_triplet(
     n_vb = max(-(-num_segments // vb), 1)
     v_pad = n_vb * vb
 
-    xp = jnp.pad(x.astype(jnp.float32).reshape(x.shape[0], -1),
+    # Tiles stream in the CALLER's staging dtype (f32, or bf16 when the
+    # engine packed a narrow-wire mirror, §2.1) — the kernel body upcasts
+    # each tile to f32 in VMEM, so narrow mirrors halve the vertex-tile
+    # HBM/DMA traffic while the accumulator math is unchanged.
+    xp = jnp.pad(x.reshape(x.shape[0], -1),
                  ((0, v_pad - x.shape[0]), (0, max(1 - x.shape[1], 0))))
     dummy = jnp.zeros((v_pad, 1), jnp.float32)
     xs_in, dxs = (xp, dx) if use_src else (dummy, 1)
     xd_in, dxd = (xp, dx) if use_dst else (dummy, 1)
     evp = jnp.concatenate(
-        [ev.astype(jnp.float32).reshape(e, -1),
-         jnp.zeros((1, ev.shape[1]), jnp.float32)])
+        [ev.reshape(e, -1), jnp.zeros((1, ev.shape[1]), ev.dtype)])
     if ev.shape[1] == 0:
         evp = jnp.zeros((e + 1, 1), jnp.float32)
     sp = jnp.concatenate([src_slot.astype(jnp.int32), jnp.zeros((1,), jnp.int32)])

@@ -43,6 +43,15 @@ from .mesh import make_production_mesh, make_graph_mesh, mesh_axis_sizes
 REPORT_PATH = "reports/dryrun.json"
 
 
+def _cost_dict(compiled) -> dict:
+    """compiled.cost_analysis() across jax generations (<=0.4 returns
+    [dict], newer returns the dict)."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        return cost[0] if cost else {}
+    return cost
+
+
 # ---------------------------------------------------------------------------
 # Input specs (ShapeDtypeStruct stand-ins — never allocated)
 # ---------------------------------------------------------------------------
@@ -196,7 +205,7 @@ def lower_cell(arch: str, shape_name: str, mesh, *, strategy: str | None = None,
     compile_s = time.time() - t0
 
     mem = compiled.memory_analysis()
-    cost = compiled.cost_analysis()
+    cost = _cost_dict(compiled)
     txt = compiled.as_text()
     coll = hlo_utils.collective_bytes(txt)
     # Trip-count-corrected terms (see utils/hlo.py): XLA cost_analysis counts
@@ -241,13 +250,19 @@ def lower_cell(arch: str, shape_name: str, mesh, *, strategy: str | None = None,
 # ---------------------------------------------------------------------------
 def lower_graph_cell(mesh, *, n_vertices=41_652_230, n_edges=1_468_365_182,
                      supersteps: int = 1, return_hlo: bool = False,
-                     wire_dtype=None, mirror_factor: float = 2.0,
+                     wire_dtype=None, wire: str | None = None,
+                     wire_delta: bool = False, mirror_factor: float = 2.0,
                      contrib_form: bool = False):
     """PageRank superstep on a Twitter-scale graph (paper Table 1), SPMD over
     the flat parts axis.  Structure arrays are ShapeDtypeStructs sized by the
-    2D-cut replication model."""
+    2D-cut replication model.
+
+    wire: codec name ("f32"/"bf16"/"int8"/"fp8_e4m3"/"fp8_e5m2") for the
+    mirror exchange (DESIGN.md §2.1); wire_delta enables active-set delta
+    accounting.  wire_dtype is the pre-codec narrowing knob, kept for
+    existing callers."""
     from ..core import partition as pm
-    from ..core.exchange import SpmdExchange
+    from ..core.exchange import SpmdExchange, with_wire
     from ..core.graph import Graph, StructArrays
     from ..core.pregel import _superstep
 
@@ -284,6 +299,9 @@ def lower_graph_cell(mesh, *, n_vertices=41_652_230, n_edges=1_468_365_182,
         # home-computed property, so property-level join elimination ships
         # a single float per mirror instead of the whole struct.
         vdata_sds["contrib"] = sds((p, v_blk), jnp.float32, pp)
+    ex = SpmdExchange(p=p, axis_name="parts", wire_dtype=wire_dtype)
+    if wire is not None:
+        ex = with_wire(ex, wire, delta=wire_delta or None)
     g_sds = Graph(
         s=s,
         vdata=vdata_sds,
@@ -291,7 +309,7 @@ def lower_graph_cell(mesh, *, n_vertices=41_652_230, n_edges=1_468_365_182,
         vmask=sds((p, v_blk), jnp.bool_, pp),
         emask=sds((p, e_blk), jnp.bool_, pp),
         active=sds((p, v_blk), jnp.bool_, pp),
-        ex=SpmdExchange(p=p, axis_name="parts", wire_dtype=wire_dtype),
+        ex=ex,
         host=None)
 
     if contrib_form:
@@ -320,16 +338,15 @@ def lower_graph_cell(mesh, *, n_vertices=41_652_230, n_edges=1_468_365_182,
     in_specs = jax.tree.map(lambda x: P(*(("parts",) + (None,) * (len(x.shape) - 1))),
                             g_sds, is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
     out_specs = (in_specs, P())
-    fn = jax.jit(jax.shard_map(pr_superstep, mesh=mesh,
-                               in_specs=(in_specs,), out_specs=out_specs,
-                               check_vma=False))
+    from ..utils.spmd import shard_map as _shard_map
+    fn = jax.jit(_shard_map(pr_superstep, mesh, (in_specs,), out_specs))
     t0 = time.time()
     lowered = fn.lower(g_sds)
     compiled = lowered.compile()
     compile_s = time.time() - t0
 
     mem = compiled.memory_analysis()
-    cost = compiled.cost_analysis()
+    cost = _cost_dict(compiled)
     txt = compiled.as_text()
     coll = hlo_utils.collective_bytes(txt)
     dots = hlo_utils.dot_flops(txt)
@@ -357,7 +374,8 @@ def lower_graph_cell(mesh, *, n_vertices=41_652_230, n_edges=1_468_365_182,
             "alias_bytes": mem.alias_size_in_bytes,
         },
         "graph": {"vertices": n_vertices, "edges": n_edges,
-                  "e_blk": e_blk, "v_mir": v_mir, "k_route": k},
+                  "e_blk": e_blk, "v_mir": v_mir, "k_route": k,
+                  "wire": (ex.codec.name if ex.codec is not None else "f32")},
     }
     return (rec, txt) if return_hlo else rec
 
@@ -406,6 +424,11 @@ def main() -> None:
     ap.add_argument("--moe-cap", type=float, default=None)
     ap.add_argument("--moe-groups", action="store_true")
     ap.add_argument("--wire-bf16", action="store_true")
+    ap.add_argument("--wire", default=None,
+                    choices=["f32", "bf16", "int8", "fp8_e4m3", "fp8_e5m2"],
+                    help="graph cell: wire codec for the mirror exchange")
+    ap.add_argument("--wire-delta", action="store_true",
+                    help="graph cell: active-set delta shipping accounting")
     ap.add_argument("--mirror-factor", type=float, default=2.0)
     ap.add_argument("--contrib-form", action="store_true")
     ap.add_argument("--state-bf16", action="store_true")
@@ -449,6 +472,7 @@ def main() -> None:
             gmesh = make_graph_mesh(multi_pod=mp)
             rec = lower_graph_cell(
                 gmesh, wire_dtype=jnp.bfloat16 if args.wire_bf16 else None,
+                wire=args.wire, wire_delta=args.wire_delta,
                 mirror_factor=args.mirror_factor,
                 contrib_form=args.contrib_form)
             if args.variant:

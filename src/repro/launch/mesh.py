@@ -8,6 +8,8 @@ from __future__ import annotations
 
 import jax
 
+from ..utils.spmd import make_mesh as _make_mesh  # jax-version seam, one home
+
 
 def make_production_mesh(*, multi_pod: bool = False):
     """16x16 single-pod (256 chips) or 2x16x16 multi-pod (512 chips)."""
@@ -21,8 +23,7 @@ def make_production_mesh(*, multi_pod: bool = False):
         raise RuntimeError(
             f"mesh {shape} needs {n} devices, have {len(devices)} — the "
             "dry-run must set xla_force_host_platform_device_count first")
-    return jax.make_mesh(shape, axes, devices=devices,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return _make_mesh(shape, axes, devices)
 
 
 def make_graph_mesh(*, multi_pod: bool = False):
@@ -30,12 +31,8 @@ def make_graph_mesh(*, multi_pod: bool = False):
     (graph work is throughput work; the pod axis replicates the graph for
     independent subgraph analyses / fault tolerance — DESIGN.md §4)."""
     if multi_pod:
-        devices = jax.devices()[:512]
-        return jax.make_mesh((2, 256), ("pod", "parts"), devices=devices,
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
-    devices = jax.devices()[:256]
-    return jax.make_mesh((256,), ("parts",), devices=devices,
-                         axis_types=(jax.sharding.AxisType.Auto,))
+        return _make_mesh((2, 256), ("pod", "parts"), jax.devices()[:512])
+    return _make_mesh((256,), ("parts",), jax.devices()[:256])
 
 
 def mesh_axis_sizes(mesh) -> dict[str, int]:

@@ -141,6 +141,12 @@ def main():
                     help="group-local (GShard-style) MoE routing")
     ap.add_argument("--wire-bf16", action="store_true",
                     help="graph cell: bf16 on-wire shipping")
+    ap.add_argument("--wire", default=None,
+                    choices=["f32", "bf16", "int8", "fp8_e4m3", "fp8_e5m2"],
+                    help="graph cell: wire codec for the mirror exchange "
+                         "(per-block scaled int8/fp8, DESIGN.md §2.1)")
+    ap.add_argument("--wire-delta", action="store_true",
+                    help="graph cell: active-set delta shipping accounting")
     ap.add_argument("--mirror-factor", type=float, default=2.0)
     ap.add_argument("--dp-over-model", action="store_true")
     ap.add_argument("--batch-shard", action="store_true",
@@ -160,6 +166,7 @@ def main():
         rec, txt = dryrun.lower_graph_cell(
             mesh, return_hlo=True,
             wire_dtype=jnp.bfloat16 if args.wire_bf16 else None,
+            wire=args.wire, wire_delta=args.wire_delta,
             mirror_factor=args.mirror_factor,
             contrib_form=args.contrib_form)
     else:

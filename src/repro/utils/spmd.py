@@ -9,13 +9,15 @@ from __future__ import annotations
 import jax
 
 
-def make_mesh(shape, names):
+def make_mesh(shape, names, devices=None):
     """jax.make_mesh across API generations (axis_types landed post-0.4)."""
+    kw = {} if devices is None else {"devices": devices}
     try:
         return jax.make_mesh(shape, names,
-                             axis_types=(jax.sharding.AxisType.Auto,))
+                             axis_types=(jax.sharding.AxisType.Auto,)
+                             * len(names), **kw)
     except (AttributeError, TypeError):
-        return jax.make_mesh(shape, names)
+        return jax.make_mesh(shape, names, **kw)
 
 
 def shard_map(fn, mesh, in_specs, out_specs):

@@ -17,7 +17,13 @@ that drives the actual Pallas kernel over each device's local tiling —
 f32 staging) against the union-find oracle, and (d) a collection
 reduce_by_key.  Everything is compared against the LocalExchange UNFUSED
 baseline, so plan selection, executor, and backend are all crossed.
-Prints OK on success.
+
+Wire codec (DESIGN.md §2.1), same 4-device mesh: (e) PageRank through the
+int8 per-block-scale codec — fused AND unfused — must match the f32-wire
+reference to <= 1e-3 on the rank distribution while `bytes_on_wire`
+(psummed over the mesh) reports <= 1/3 of the f32 baseline, the collective
+really moving int8; (f) the packed-int CC loop with delta shipping stays
+bit-exact against the union-find oracle.  Prints OK on success.
 """
 import os
 
@@ -157,6 +163,40 @@ def main():
     want = alg.connected_components_reference(sgd.src, sgd.dst, vids)
     got = dict(zip(vids.tolist(), cc_spmd[mask].tolist()))
     assert got == want
+
+    # ---- wire codec: int8 per-block scales under shard_map -----------------
+    from repro.core import with_wire
+
+    g8 = dataclasses.replace(g_spmd, ex=with_wire(g_spmd.ex, "int8"))
+    g8specs = shard_specs(g8)
+    for mode in ("auto", "unfused"):
+        fn8 = jax.jit(shard_map(lambda gg, _m=mode: pr_loop(gg, _m),
+                                mesh, (g8specs,), PS("parts")))
+        pr8 = np.asarray(fn8(g8))
+        n_ref = pr_local / pr_local.sum()
+        n_8 = pr8 / pr8.sum()
+        err = np.abs(n_ref - n_8).max()
+        assert err <= 1e-3, (mode, err)
+
+    # bytes_on_wire: psum the per-device codec metric; the int8 wire must
+    # ship <= 1/3 of the f32 wire for the same mrTriplets
+    def bow(gg):
+        _, _, _, m = mr_triplets(gg, send, "sum", kernel_mode="auto")
+        return jax.lax.psum(m["bytes_on_wire"], "parts")
+
+    bytes_f32 = float(jax.jit(shard_map(bow, mesh, (gspecs,), PS()))(g_spmd))
+    bytes_i8 = float(jax.jit(shard_map(bow, mesh, (g8specs,), PS()))(g8))
+    assert 0 < bytes_i8 <= bytes_f32 / 3, (bytes_i8, bytes_f32)
+
+    # ---- packed-int CC with delta shipping under shard_map -----------------
+    sg8 = dataclasses.replace(
+        sg_spmd, ex=with_wire(sg_spmd.ex, "int8", delta=True))
+    fn_cc8 = jax.jit(shard_map(lambda gg: cc_loop(gg, "auto"),
+                               mesh, (shard_specs(sg8),), PS("parts")))
+    cc8 = np.asarray(fn_cc8(sg8))
+    np.testing.assert_array_equal(cc8, cc_local)
+    got8 = dict(zip(vids.tolist(), cc8[mask].tolist()))
+    assert got8 == want
 
     # ---- collection shuffle under SPMD -------------------------------------
     from repro.core import Col

@@ -5,8 +5,10 @@ XLA_FLAGS must be set before jax initialises, and the main pytest process
 must keep seeing a single device — hence the subprocess.  The check crosses
 executors (LocalExchange vs shard_map/SpmdExchange), physical plans
 (fused vs unfused — the device-resident tile tables make the fused plan
-legal inside shard_map) and backends (jnp oracle vs Pallas interpret); see
-spmd_check.py's docstring for the exact matrix.
+legal inside shard_map), backends (jnp oracle vs Pallas interpret), and
+wire codecs (f32 vs int8 per-block scales and packed-int delta CC, with the
+<= 1/3 bytes_on_wire regression — DESIGN.md §2.1); see spmd_check.py's
+docstring for the exact matrix.
 """
 import os
 import subprocess

@@ -1,0 +1,376 @@
+"""Wire codec tests (DESIGN.md §2.1): per-block scaled quantization,
+exact small-int packing, active-set delta accounting, and the end-to-end
+differential sweeps under LocalExchange.
+
+The SpmdExchange half of the matrix (shard_map + all_to_all on 4 simulated
+devices) lives in tests/spmd_check.py, driven by tests/test_spmd.py.
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (Graph, LocalExchange, algorithms as alg, pack_bf16,
+                        with_wire)
+from repro.core.mrtriplets import mr_triplets, plan_of
+from repro.core import wire as W
+from repro.data import rmat, symmetrize
+
+
+def _graph(k=6, d=4, seed=0, p=4):
+    gd = rmat(k, d, seed=seed)
+    return Graph.from_edges(gd.src, gd.dst, num_partitions=p), gd
+
+
+# ---------------------------------------------------------------------------
+# Codec registry / constructor / shim
+# ---------------------------------------------------------------------------
+def test_registry_and_with_wire():
+    ex = LocalExchange(4)
+    assert ex.codec is None
+    for name in W.CODEC_NAMES:
+        ex2 = with_wire(ex, name)
+        assert ex2.codec is not None and ex2.codec.name == name
+    ex3 = with_wire(ex, "int8", delta=True, block=16)
+    assert ex3.codec.delta and ex3.codec.block == 16
+    # stripping the codec
+    assert with_wire(ex3, None).codec is None
+    with pytest.raises(ValueError):
+        with_wire(ex, "int4")
+
+
+def test_pack_bf16_shim_matches_with_wire():
+    """The deprecated helper is with_wire(ex, "bf16"): floats narrow, the
+    result STAYS bf16 in the shipped buffer (mirror stores the wire dtype)."""
+    ex = pack_bf16(LocalExchange(4))
+    assert ex.codec.name == "bf16" and ex.codec.fdtype == jnp.bfloat16
+    x = jnp.asarray(np.random.default_rng(0).normal(size=(4, 4, 8))
+                    .astype(np.float32))
+    shipped = ex.ship(x)
+    assert shipped.dtype == jnp.bfloat16
+    np.testing.assert_array_equal(
+        np.asarray(shipped.astype(jnp.float32)),
+        np.asarray(jnp.swapaxes(x, 0, 1).astype(jnp.bfloat16)
+                   .astype(jnp.float32)))
+
+
+def test_legacy_wire_dtype_field_still_narrows():
+    ex = LocalExchange(4, wire_dtype=jnp.bfloat16)
+    assert ex.codec is not None and not ex.codec.pack_ints
+    assert ex.ship(jnp.ones((4, 4, 8), jnp.float32)).dtype == jnp.bfloat16
+    # legacy field never touches integers
+    ids = jnp.ones((4, 4, 8), jnp.int32)
+    assert ex.ship(ids, bound=100).dtype == jnp.int32
+
+
+# ---------------------------------------------------------------------------
+# Roundtrip properties: absmax scaling, fp8 saturation, int exactness
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("shape", [(4, 4, 7), (4, 4, 32), (4, 4, 40, 3),
+                                   (4, 4, 129)])
+@pytest.mark.parametrize("scale_mag", [1e-3, 1.0, 1e4])
+def test_int8_roundtrip_error_bound(shape, scale_mag):
+    """Per-block absmax int8: |decode - x| <= 2^exp / 2 + nonzero-guard,
+    with exp the snapped block exponent — i.e. error tracks each BLOCK's
+    absmax, not the tensor's."""
+    rng = np.random.default_rng(1)
+    x = (rng.normal(size=shape) * scale_mag).astype(np.float32)
+    codec = W.make_codec("int8")
+    enc = W.encode_leaf(jnp.asarray(x), codec)
+    assert enc.kind == "scaled" and enc.payload.dtype == jnp.int8
+    dec = np.asarray(W.decode_leaf(enc.kind, enc.payload, enc.scale,
+                                   jnp.asarray(x), codec))
+    flat = x.reshape(shape[0], shape[1], -1)
+    dflat = dec.reshape(flat.shape)
+    k = flat.shape[-1]
+    nb = -(-k // codec.block)
+    exps = np.asarray(enc.scale, np.float32)
+    for b in range(nb):
+        sl = slice(b * codec.block, min((b + 1) * codec.block, k))
+        blk_err = np.abs(flat[..., sl] - dflat[..., sl])
+        # half-ulp of the block scale; the round-away-from-zero guard can
+        # push a tiny nonzero value up to one full scale step
+        bound = np.exp2(exps[..., b]) * 1.001
+        assert (blk_err <= bound[..., None]).all()
+    # zero inputs decode to exactly zero
+    z = W.encode_leaf(jnp.zeros((4, 4, 8), jnp.float32), codec)
+    assert not np.asarray(W.decode_leaf(
+        z.kind, z.payload, z.scale, jnp.zeros((4, 4, 8), jnp.float32),
+        codec)).any()
+
+
+def test_int8_integer_valued_floats_roundtrip_exactly():
+    """Power-of-two scale snapping: integer-valued float payloads (degree
+    counts) with block absmax <= 127 survive the int8 wire bit-exactly."""
+    rng = np.random.default_rng(2)
+    deg = rng.integers(0, 128, size=(4, 4, 50)).astype(np.float32)
+    codec = W.make_codec("int8")
+    enc = W.encode_leaf(jnp.asarray(deg), codec)
+    dec = W.decode_leaf(enc.kind, enc.payload, enc.scale, jnp.asarray(deg),
+                        codec)
+    np.testing.assert_array_equal(np.asarray(dec), deg)
+
+
+@pytest.mark.parametrize("name", ["fp8_e4m3", "fp8_e5m2"])
+def test_fp8_saturation_and_relative_error(name):
+    """fp8 payloads saturate at the block scale (never NaN/inf — e4m3fn
+    would round past-max values to NaN without the clip) and carry RELATIVE
+    error per element, so large-dynamic-range blocks keep their small
+    values — the reason fp8 beats int8 on skewed rank vectors."""
+    if W.make_codec(name) is None:   # jax without fp8 dtypes
+        pytest.skip("fp8 dtypes unavailable")
+    rng = np.random.default_rng(3)
+    # 6 orders of magnitude inside one block, plus exact-boundary values
+    x = np.concatenate([
+        rng.normal(size=100) * np.repeat([1e-3, 1, 1e3], [34, 33, 33]),
+        [0.0, 1.0, -1.0, 3.4e38, -3.4e38]]).astype(np.float32)
+    x = np.resize(x, (4, 4, 32)).astype(np.float32)
+    codec = W.make_codec(name)
+    enc = W.encode_leaf(jnp.asarray(x), codec)
+    dec = np.asarray(W.decode_leaf(enc.kind, enc.payload, enc.scale,
+                                   jnp.asarray(x), codec))
+    assert np.isfinite(dec).all()
+    rel = 2.0 ** (-3 if name == "fp8_e5m2" else -4)
+    flat, dflat = x.reshape(4, 4, 32), dec.reshape(4, 4, 32)
+    absmax = np.abs(flat).max(-1, keepdims=True)
+    # error per element: fp8 relative error on the value, floored by the
+    # smallest representable step of the block scale
+    bound = np.maximum(np.abs(flat) * rel * 1.01, absmax * 2.0 ** -9)
+    assert (np.abs(flat - dflat) <= bound).all()
+
+
+def test_int_packing_exact_and_width_selection():
+    rng = np.random.default_rng(4)
+    codec = W.make_codec("int8")   # pack_ints defaults on
+    for bound, want in ((100, jnp.int8), (30_000, jnp.int16),
+                        (1 << 20, jnp.int32)):
+        ids = jnp.asarray(rng.integers(0, bound + 1, size=(4, 4, 20))
+                          .astype(np.int32))
+        enc = W.encode_leaf(ids, codec, bound=bound)
+        if want == jnp.int32:
+            assert enc is None          # no narrowing possible -> passthrough
+            continue
+        assert enc.kind == "int" and enc.payload.dtype == want
+        dec = W.decode_leaf(enc.kind, enc.payload, None, ids, codec)
+        assert dec.dtype == jnp.int32
+        np.testing.assert_array_equal(np.asarray(dec), np.asarray(ids))
+    # unsigned (bitsets) and unbounded ints never narrow
+    bits = jnp.ones((4, 4, 8), jnp.uint32)
+    assert W.encode_leaf(bits, codec, bound=3) is None
+    assert W.encode_leaf(jnp.ones((4, 4, 8), jnp.int32), codec) is None
+    assert W.int_wire_dtype(np.int16, 100) == np.int8   # narrows further
+    assert W.int_wire_dtype(np.int8, 3) == np.int8      # never widens
+
+
+def test_ship_equals_transpose_of_decode():
+    """Exchange.ship through a scaled codec == transpose(decode(encode)):
+    the collective moves the narrow payload, consumers see dequant values."""
+    rng = np.random.default_rng(5)
+    x = jnp.asarray(rng.normal(size=(4, 4, 21)).astype(np.float32))
+    ex = with_wire(LocalExchange(4), "int8")
+    codec = ex.codec
+    enc = W.encode_leaf(x, codec)
+    want = W.decode_leaf(enc.kind, jnp.swapaxes(enc.payload, 0, 1),
+                         jnp.swapaxes(enc.scale, 0, 1), x, codec)
+    np.testing.assert_array_equal(np.asarray(ex.ship(x)), np.asarray(want))
+
+
+# ---------------------------------------------------------------------------
+# Byte accounting
+# ---------------------------------------------------------------------------
+def test_static_wire_bytes_layout():
+    x = {"a": jnp.zeros((4, 4, 40), jnp.float32),
+         "i": jnp.zeros((4, 4, 40), jnp.int32)}
+    f32 = W.static_wire_bytes(x, None)
+    assert f32 == 2 * 4 * 4 * 40 * 4
+    c8 = W.make_codec("int8")
+    got = W.static_wire_bytes(x, c8, bound=100)
+    # float leaf: 1 B/elem + 2 scale exponents per (q, p) pair; int leaf
+    # packs to int8 under bound=100
+    assert got == (4 * 4 * (40 + 2)) + (4 * 4 * 40 * 1)
+    assert W.static_wire_bytes(x, c8, bound=None) == \
+        (4 * 4 * (40 + 2)) + (4 * 4 * 40 * 4)
+    # bf16: floats halve, ints untouched
+    assert W.static_wire_bytes(x, W.make_codec("bf16")) == \
+        (4 * 4 * 40 * 2) + (4 * 4 * 40 * 4)
+
+
+def test_bytes_on_wire_delta_block_granularity():
+    x = {"a": jnp.ones((2, 2, 64), jnp.float32)}
+    cd = W.make_codec("int8", delta=True)
+    full = W.bytes_on_wire(x, cd, active=jnp.ones((2, 2, 64), bool))
+    assert float(full) == float(W.static_wire_bytes(x, cd))
+    # one active entry -> exactly one 32-element block (+1 scale byte) per
+    # (q, p) pair pays bytes
+    one = jnp.zeros((2, 2, 64), bool).at[:, :, 0].set(True)
+    got = float(W.bytes_on_wire(x, cd, active=one))
+    assert got == 2 * 2 * (32 * 1 + 1)
+    # all-stale ships nothing
+    assert float(W.bytes_on_wire(
+        x, cd, active=jnp.zeros((2, 2, 64), bool))) == 0.0
+    # without the delta flag the mask is ignored (static shape wire)
+    cnd = W.make_codec("int8")
+    assert float(W.bytes_on_wire(x, cnd, active=one)) == \
+        float(W.static_wire_bytes(x, cnd))
+
+
+# ---------------------------------------------------------------------------
+# payload_bound: the generalized staging guard
+# ---------------------------------------------------------------------------
+def test_payload_bound_drives_staging_guard():
+    g, _ = _graph()
+    g = g.mapV(lambda vid, v: {"lab": vid.astype(jnp.int32)})
+
+    def send(sv, ev, dv):
+        return {"m": sv["lab"]}
+
+    # id-valued default (max_vid < 2^24) -> fused
+    assert plan_of(g, send, "min") == "fused"
+    # caller certifies a bound past the f32 mantissa -> guard must bail
+    assert plan_of(g, send, "min", payload_bound=1 << 30) == "unfused"
+    # and a tight explicit bound keeps it fused
+    assert plan_of(g, send, "min", payload_bound=1000) == "fused"
+
+    # execution matches the plan and both plans agree bit-for-bit
+    v_f, e_f, _, m_f = mr_triplets(g, send, "min", payload_bound=1000)
+    v_u, e_u, _, m_u = mr_triplets(g, send, "min", payload_bound=1 << 30)
+    assert m_f["plan"] == "fused" and m_u["plan"] == "unfused"
+    np.testing.assert_array_equal(np.asarray(v_f["m"]), np.asarray(v_u["m"]))
+    np.testing.assert_array_equal(np.asarray(e_f), np.asarray(e_u))
+
+
+def test_payload_bound_drives_wire_width():
+    """The same bound picks the lossless wire width: int16 under the default
+    id bound here (256 vertices -> max_vid > 127), int8 under an explicit
+    tiny bound — results identical."""
+    g, _ = _graph(k=8, d=3)
+    g = g.mapV(lambda vid, v: {"lab": jnp.minimum(vid, 100).astype(jnp.int32)})
+
+    def send(sv, ev, dv):
+        return {"m": sv["lab"]}
+
+    g8 = g.replace(ex=with_wire(g.ex, "int8"))
+    v_ref, _, _, m_ref = mr_triplets(g, send, "min")
+    v_16, _, _, m_16 = mr_triplets(g8, send, "min")
+    v_8, _, _, m_8 = mr_triplets(g8, send, "min", payload_bound=100)
+    np.testing.assert_array_equal(np.asarray(v_ref["m"]), np.asarray(v_16["m"]))
+    np.testing.assert_array_equal(np.asarray(v_ref["m"]), np.asarray(v_8["m"]))
+    assert m_8["fwd"].wire_bytes < m_16["fwd"].wire_bytes \
+        < m_ref["fwd"].wire_bytes
+
+
+# ---------------------------------------------------------------------------
+# End-to-end differentials under LocalExchange (SPMD half in spmd_check.py)
+# ---------------------------------------------------------------------------
+def _norm_ranks(res):
+    pr = np.asarray(res.graph.vdata["pr"])[np.asarray(res.graph.vmask)]
+    return pr / pr.sum()
+
+
+def test_pagerank_int8_wire_error_and_bytes_regression():
+    """The tier-1 fast-lane regression: the int8 per-block-scale codec must
+    match the f32 wire to <= 1e-3 on the rank distribution while shipping
+    <= 1/3 of the f32 bytes (forward + aggregate-return, scales included)."""
+    g, _ = _graph()
+    r0 = alg.pagerank(g, num_iters=10, track_metrics=True)
+    g8 = g.replace(ex=with_wire(g.ex, "int8"))
+    r8 = alg.pagerank(g8, num_iters=10, track_metrics=True)
+    err = np.abs(_norm_ranks(r0) - _norm_ranks(r8)).max()
+    assert err <= 1e-3, err
+    b0 = sum(m["bytes_on_wire"] for m in r0.metrics)
+    b8 = sum(m["bytes_on_wire"] for m in r8.metrics)
+    assert b8 <= b0 / 3, (b8, b0)
+    assert r8.metrics[0]["wire"] == "int8"
+    assert r0.metrics[0]["wire"] == "f32"
+
+
+@pytest.mark.parametrize("mode", ["auto", "unfused"])
+def test_pagerank_wire_matrix_fused_and_unfused(mode):
+    """codec x physical-plan: quantization happens at the exchange, so the
+    fused kernel and the unfused gather plan see IDENTICAL mirror values —
+    their results under the same codec must agree to f32 tolerance."""
+    g, _ = _graph()
+    g8 = g.replace(ex=with_wire(g.ex, "int8"))
+    r = alg.pagerank(g8, num_iters=5, kernel_mode=mode, track_metrics=True)
+    want_plan = "fused" if mode == "auto" else "unfused"
+    assert r.metrics[0]["plan"] == want_plan
+    r_other = alg.pagerank(
+        g8, num_iters=5,
+        kernel_mode="unfused" if mode == "auto" else "auto")
+    np.testing.assert_allclose(
+        np.asarray(r.graph.vdata["pr"]),
+        np.asarray(r_other.graph.vdata["pr"]), rtol=1e-5, atol=1e-6)
+
+
+def test_cc_packed_int_delta_bit_exact():
+    """Packed-int CC under delta shipping: int16 wire (id bound) is
+    lossless, the delta contract with vote-to-halt preserves convergence,
+    labels are bit-exact vs the plain wire AND the union-find oracle, and
+    settled regions stop paying wire bytes."""
+    gd = symmetrize(rmat(6, 4, seed=2))
+    sg = Graph.from_edges(gd.src, gd.dst, num_partitions=4)
+    r0 = alg.connected_components(sg, track_metrics=True)
+    sgd_ = sg.replace(ex=with_wire(sg.ex, "int8", delta=True))
+    r8 = alg.connected_components(sgd_, track_metrics=True)
+    np.testing.assert_array_equal(np.asarray(r0.graph.vdata["cc"]),
+                                  np.asarray(r8.graph.vdata["cc"]))
+    mask = np.asarray(sg.vmask)
+    vids = np.asarray(sg.s.home_vid)[mask]
+    want = alg.connected_components_reference(gd.src, gd.dst, vids)
+    got = dict(zip(vids.tolist(),
+                   np.asarray(r8.graph.vdata["cc"])[mask].tolist()))
+    assert got == want
+    # delta shipping: converged supersteps ship fewer bytes than the first
+    bows = [m["bytes_on_wire"] for m in r8.metrics]
+    b0s = [m["bytes_on_wire"] for m in r0.metrics]
+    assert bows[-1] < bows[0]
+    assert bows[0] < b0s[0]          # and packing beats the f32 wire anyway
+
+
+def test_sum_aggregates_never_pack_on_return_wire():
+    """payload_bound certifies message VALUES; partial sums escape it.  A
+    star graph funnels ~150 unit messages per partition into one vertex —
+    packing the return wire at the per-message bound would wrap int8."""
+    src = np.arange(1, 301, dtype=np.int64) % 512
+    dst = np.zeros(300, np.int64)
+    g = Graph.from_edges(src, dst, num_partitions=4)
+    g = g.mapV(lambda vid, v: {"one": jnp.int32(1)})
+
+    def send(sv, ev, dv):
+        return {"m": sv["one"]}
+
+    want, _, _, _ = mr_triplets(g, send, "sum", kernel_mode="unfused",
+                                payload_bound=1)
+    g8 = g.replace(ex=with_wire(g.ex, "int8"))
+    got, _, _, m = mr_triplets(g8, send, "sum", kernel_mode="unfused",
+                               payload_bound=1)
+    np.testing.assert_array_equal(np.asarray(got["m"]), np.asarray(want["m"]))
+    assert int(np.asarray(want["m"]).max()) > 127   # the wrap would show
+
+
+def test_narrow_int_dtypes_ignore_default_id_bound():
+    """An int16 property is bounded by its own dtype, not by max_vid: on a
+    64-vertex graph (max_vid < 127) the default bound must NOT narrow it to
+    int8 — value 300 would wrap.  An explicit payload_bound still may."""
+    g, _ = _graph()            # 64 vertices
+    g = g.mapV(lambda vid, v: {"c": jnp.int16(300)})
+
+    def send(sv, ev, dv):
+        return {"m": sv["c"]}
+
+    want, _, _, _ = mr_triplets(g, send, "max")
+    g8 = g.replace(ex=with_wire(g.ex, "int8"))
+    got, _, _, _ = mr_triplets(g8, send, "max")
+    np.testing.assert_array_equal(np.asarray(got["m"]), np.asarray(want["m"]))
+    assert int(np.asarray(want["m"]).max()) == 300
+
+
+def test_bf16_wire_unchanged_by_codec_layer():
+    """The legacy bf16 path must produce numerically identical results
+    through the codec layer (regression vs the pre-codec Exchange.ship)."""
+    g, _ = _graph()
+    r_new = alg.pagerank(g.replace(ex=pack_bf16(g.ex)), num_iters=5)
+    r_leg = alg.pagerank(g.replace(
+        ex=LocalExchange(4, wire_dtype=jnp.bfloat16)), num_iters=5)
+    np.testing.assert_array_equal(np.asarray(r_new.graph.vdata["pr"]),
+                                  np.asarray(r_leg.graph.vdata["pr"]))
