@@ -170,16 +170,25 @@ def spmd_mrt_seconds(gd, *, p: int = 4, iters: int = 3,
 # ---------------------------------------------------------------------------
 def wire_codec_rows(gd, *, p: int = 4, pr_iters: int = 10,
                     codecs: tuple = ("f32", "bf16", "int8", "fp8_e4m3"),
-                    deltas: tuple = (False, True)) -> list[dict]:
+                    deltas: tuple = (False, True),
+                    transports: tuple = ("dense", "auto")) -> list[dict]:
     """PageRank under every wire codec x delta setting, plus the packed-int
-    CC cell.  Reports `bytes_on_wire` (codec-aware wire volume summed over
-    supersteps), wall seconds, and rank error vs the f32 wire.
+    CC cell.  Reports `bytes_on_wire` (the §2.1 ACCOUNTED wire volume
+    summed over supersteps), `bytes_shipped` (what the selected transport's
+    collectives really moved — §2.1.1), wall seconds, and rank error vs
+    the f32 wire.
 
     Delta rows run the tol>0 *delta* PageRank (the GraphX formulation whose
     active set shrinks as ranks converge) so active-set delta shipping has
-    stale blocks to skip; non-delta rows run the static formulation."""
-    from repro.core import with_wire
+    stale blocks to skip, and each delta row additionally runs under every
+    requested transport: "auto" rows show the accounted number becoming
+    REAL bytes once the ragged collective compacts the shrunk active set.
+    Non-delta rows run the static formulation (dense transport only — a
+    full active set leaves nothing to compact)."""
+    from repro.core import TransportPolicy, with_wire
 
+    tp_auto = TransportPolicy("auto", cap_rounding=8, enter_frac=0.95,
+                              exit_frac=0.97)
     g = Graph.from_edges(gd.src, gd.dst, num_partitions=p)
     mask = np.asarray(g.vmask)
     rows = []
@@ -187,31 +196,39 @@ def wire_codec_rows(gd, *, p: int = 4, pr_iters: int = 10,
     for delta in deltas:
         for codec in codecs:
             gg = g.replace(ex=with_wire(g.ex, codec, delta=delta or None))
+            for transport in (transports if delta else ("dense",)):
+                tp = tp_auto if transport == "auto" else None
 
-            def run(_g=gg, _d=delta):
-                kw = dict(num_iters=pr_iters, track_metrics=True)
-                if _d:
-                    kw["tol"] = 1e-3
-                return alg.pagerank(_g, **kw)
+                def run(_g=gg, _d=delta, _tp=tp):
+                    kw = dict(num_iters=pr_iters, track_metrics=True,
+                              transport=_tp)
+                    if _d:
+                        kw["tol"] = 1e-3
+                    return alg.pagerank(_g, **kw)
 
-            jax.block_until_ready(run().graph.vdata["pr"])   # compile warmup
-            t0 = time.perf_counter()
-            res = run()
-            jax.block_until_ready(res.graph.vdata["pr"])
-            sec = time.perf_counter() - t0
-            pr = np.asarray(res.graph.vdata["pr"])[mask]
-            prn = pr / pr.sum()
-            if codec == "f32":
-                ref[delta] = prn
-            bow = float(sum(m["bytes_on_wire"] for m in res.metrics))
-            rows.append({
-                "benchmark": "wire_codec", "workload": "pagerank",
-                "wire": codec, "delta": delta,
-                "bytes_on_wire": round(bow),
-                "seconds": round(sec, 4),
-                "supersteps": res.supersteps,
-                "max_rank_err_vs_f32": float(np.abs(prn - ref[delta]).max()),
-            })
+                jax.block_until_ready(run().graph.vdata["pr"])  # warmup
+                t0 = time.perf_counter()
+                res = run()
+                jax.block_until_ready(res.graph.vdata["pr"])
+                sec = time.perf_counter() - t0
+                pr = np.asarray(res.graph.vdata["pr"])[mask]
+                prn = pr / pr.sum()
+                if codec == "f32" and transport == "dense":
+                    ref[delta] = prn
+                bow = float(sum(m["bytes_on_wire"] for m in res.metrics))
+                shipped = float(sum(m["bytes_shipped"] for m in res.metrics))
+                rows.append({
+                    "benchmark": "wire_codec", "workload": "pagerank",
+                    "wire": codec, "delta": delta, "transport": transport,
+                    "bytes_on_wire": round(bow),
+                    "bytes_shipped": round(shipped),
+                    "ragged_supersteps": sum(
+                        int(m["ragged"]) for m in res.metrics),
+                    "seconds": round(sec, 4),
+                    "supersteps": res.supersteps,
+                    "max_rank_err_vs_f32": float(
+                        np.abs(prn - ref[delta]).max()),
+                })
 
     # the integer workload: CC labels packed losslessly (int16 under the
     # default id bound) — bit-exactness is asserted, not hoped for
@@ -219,27 +236,36 @@ def wire_codec_rows(gd, *, p: int = 4, pr_iters: int = 10,
     sg = Graph.from_edges(sgd.src, sgd.dst, num_partitions=p)
     cc_ref = None
     for delta in deltas:
-        sgw = sg.replace(ex=with_wire(sg.ex, "int8", delta=delta or None))
-        jax.block_until_ready(
-            alg.connected_components(sgw).graph.vdata["cc"])
-        t0 = time.perf_counter()
-        res = alg.connected_components(sgw, track_metrics=True)
-        jax.block_until_ready(res.graph.vdata["cc"])
-        sec = time.perf_counter() - t0
-        cc = np.asarray(res.graph.vdata["cc"])
-        if cc_ref is None:
-            cc_ref = np.asarray(
-                alg.connected_components(sg).graph.vdata["cc"])
-        assert np.array_equal(cc, cc_ref), "packed-int CC must be bit-exact"
-        rows.append({
-            "benchmark": "wire_codec", "workload": "cc_int32",
-            "wire": "packed-int", "delta": delta,
-            "bytes_on_wire": round(float(
-                sum(m["bytes_on_wire"] for m in res.metrics))),
-            "seconds": round(sec, 4),
-            "supersteps": res.supersteps,
-            "bit_exact": True,
-        })
+        for transport in (transports if delta else ("dense",)):
+            tp = tp_auto if transport == "auto" else None
+            sgw = sg.replace(ex=with_wire(sg.ex, "int8", delta=delta or None))
+            jax.block_until_ready(
+                alg.connected_components(sgw, transport=tp)
+                .graph.vdata["cc"])
+            t0 = time.perf_counter()
+            res = alg.connected_components(sgw, track_metrics=True,
+                                           transport=tp)
+            jax.block_until_ready(res.graph.vdata["cc"])
+            sec = time.perf_counter() - t0
+            cc = np.asarray(res.graph.vdata["cc"])
+            if cc_ref is None:
+                cc_ref = np.asarray(
+                    alg.connected_components(sg).graph.vdata["cc"])
+            assert np.array_equal(cc, cc_ref), \
+                "packed-int CC must be bit-exact"
+            rows.append({
+                "benchmark": "wire_codec", "workload": "cc_int32",
+                "wire": "packed-int", "delta": delta, "transport": transport,
+                "bytes_on_wire": round(float(
+                    sum(m["bytes_on_wire"] for m in res.metrics))),
+                "bytes_shipped": round(float(
+                    sum(m["bytes_shipped"] for m in res.metrics))),
+                "ragged_supersteps": sum(
+                    int(m["ragged"]) for m in res.metrics),
+                "seconds": round(sec, 4),
+                "supersteps": res.supersteps,
+                "bit_exact": True,
+            })
     return rows
 
 

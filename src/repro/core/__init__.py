@@ -6,6 +6,8 @@ from .graph import Graph, StructArrays
 from .mrtriplets import ViewCache, mr_triplets, ship_to_mirrors
 from .partition import GraphStructure, build_structure, PARTITIONERS
 from .pregel import pregel, pregel_fused, PregelResult
+from .transport import (TransportPolicy, resolve_transport, ship_transport,
+                        TRANSPORT_NAMES)
 from .wire import WireCodec, make_codec, CODEC_NAMES
 from . import algorithms
 from .analysis import analyze_message_fn, TripletDeps
@@ -13,6 +15,8 @@ from .analysis import analyze_message_fn, TripletDeps
 __all__ = [
     "Col", "shuffle_by_key", "Exchange", "LocalExchange", "SpmdExchange",
     "pack_bf16", "with_wire", "WireCodec", "make_codec", "CODEC_NAMES",
+    "TransportPolicy", "resolve_transport", "ship_transport",
+    "TRANSPORT_NAMES",
     "Graph", "StructArrays", "ViewCache", "mr_triplets",
     "ship_to_mirrors", "GraphStructure", "build_structure", "PARTITIONERS",
     "pregel", "pregel_fused", "PregelResult", "algorithms",

@@ -35,7 +35,8 @@ def attach_out_degree(g: Graph, kernel_mode: str = "auto") -> Graph:
 def pagerank(g: Graph, *, num_iters: int = 20, reset: float = 0.15,
              tol: float = 0.0, kernel_mode: str = "auto",
              incremental: bool = True, track_metrics: bool = False,
-             force_need: str | None = None) -> PregelResult:
+             force_need: str | None = None,
+             transport=None) -> PregelResult:
     """PageRank via Pregel-on-GAS.  The send UDF reads ONLY the source
     attributes, so the jaxpr analyzer drops the dst side of the join —
     the paper's headline join-elimination example (Fig. 5).
@@ -63,7 +64,7 @@ def pagerank(g: Graph, *, num_iters: int = 20, reset: float = 0.15,
             g, vprog, send, "sum", default_msg={"m": jnp.float32(0.0)},
             max_supersteps=num_iters, skip_stale=None,
             incremental=incremental, kernel_mode=kernel_mode,
-            track_metrics=track_metrics)
+            track_metrics=track_metrics, transport=transport)
 
     # delta formulation: pr0 = reset, delta0 = reset
     g = g.mapV(lambda vid, v: {**v, "pr": jnp.float32(reset),
@@ -82,7 +83,8 @@ def pagerank(g: Graph, *, num_iters: int = 20, reset: float = 0.15,
         g, vprog, send, "sum", default_msg={"m": jnp.float32(0.0)},
         max_supersteps=num_iters, skip_stale="out",
         incremental=incremental, changed_fn=changed_fn,
-        kernel_mode=kernel_mode, track_metrics=track_metrics)
+        kernel_mode=kernel_mode, track_metrics=track_metrics,
+        transport=transport)
 
 
 def pagerank_reference(src: np.ndarray, dst: np.ndarray, n: int,
@@ -103,7 +105,8 @@ def pagerank_reference(src: np.ndarray, dst: np.ndarray, n: int,
 # --------------------------------------------------------------------------
 def connected_components(g: Graph, *, max_supersteps: int = 100,
                          kernel_mode: str = "auto", incremental: bool = True,
-                         track_metrics: bool = False) -> PregelResult:
+                         track_metrics: bool = False,
+                         transport=None) -> PregelResult:
     """Min-id label diffusion.  Undirected semantics: each edge carries the
     lower id both ways, so we run two mrTriplets per superstep via a
     symmetric send on the doubled graph — here realised by 'min' gather over
@@ -126,7 +129,7 @@ def connected_components(g: Graph, *, max_supersteps: int = 100,
         g, vprog, send, "min", default_msg={"m": IMAX},
         max_supersteps=max_supersteps, skip_stale="out",
         incremental=incremental, kernel_mode=kernel_mode,
-        track_metrics=track_metrics)
+        track_metrics=track_metrics, transport=transport)
 
 
 def connected_components_reference(src, dst, vids) -> dict[int, int]:

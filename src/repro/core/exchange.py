@@ -31,10 +31,12 @@ collective, and decodes on the receive side — both conversions behind
 from __future__ import annotations
 
 import dataclasses
+import warnings
 
 import jax
 import jax.numpy as jnp
 
+from . import transport as transport_mod
 from . import wire as wire_mod
 from .wire import WireCodec, make_codec
 
@@ -50,8 +52,18 @@ class Exchange:
     def tree_transpose(self, tree):
         return jax.tree.map(self.transpose, tree)
 
+    def psum(self, x: jnp.ndarray) -> jnp.ndarray:
+        """Mesh-global sum of a per-executor quantity.  LocalExchange holds
+        the whole array, so the local value IS global; SpmdExchange psums
+        over the partition axis.  The transport layer's plan decisions
+        (active fraction, overflow) go through this so they are uniform
+        across the mesh — a device-divergent dense/ragged choice would give
+        the collectives mismatched shapes."""
+        return x
+
     # Wire-format hooks (DESIGN.md §2.1).  `wire` is the codec; `wire_dtype`
-    # is the pre-codec field, kept working as plain float narrowing.
+    # is the pre-codec LEGACY field — plain float narrowing only, no
+    # quantization/packing/delta; prefer `with_wire(ex, codec)`.
     wire: WireCodec | None = None
     wire_dtype: jnp.dtype | None = None
 
@@ -65,14 +77,18 @@ class Exchange:
         return None
 
     def ship(self, x: jnp.ndarray, *, active: jnp.ndarray | None = None,
-             bound: int | None = None) -> jnp.ndarray:
-        """transpose() through the wire codec.
+             bound: int | None = None, transport=None) -> jnp.ndarray:
+        """transpose() through the wire codec and the selected transport.
 
         active: [nl, P, K] per-entry freshness flags (the superstep's changed
         mask routed onto this buffer) — stale entries are zero-substituted
         before quantization so they cannot pollute block scales or wrap an
         exact int cast; bound: static |value| bound for lossless integer
-        narrowing (§2.3.1 id-valued convention).
+        narrowing (§2.3.1 id-valued convention); transport: a
+        `core.transport` plan (None | "dense" | "ragged" | "auto" |
+        TransportPolicy) deciding HOW the buffer moves — ragged plans
+        compact the active entries per destination (§2.1.1), so stale
+        positions come back as zeros rather than shipped values.
 
         Plain dtype narrowing (bf16) STAYS narrow on return — the mirror
         view stores the wire dtype and accumulation upcasts at the consumer:
@@ -82,6 +98,11 @@ class Exchange:
         packed-int payloads decode back to their original dtype — dequant is
         a separately-shipped per-block exponent multiply, which XLA cannot
         commute across the collective."""
+        tp = transport_mod.ragged_plan(transport, active)
+        if tp is not None:
+            recv, _, _ = transport_mod.ship_transport(
+                self, x, active, bound=bound, policy=tp)
+            return recv
         enc = wire_mod.encode_leaf(x, self.codec, bound=bound, active=active)
         if enc is None:
             return self.transpose(x)
@@ -90,7 +111,12 @@ class Exchange:
         return wire_mod.decode_leaf(enc.kind, payload, scale, x, self.codec)
 
     def tree_ship(self, tree, *, active: jnp.ndarray | None = None,
-                  bound: int | None = None):
+                  bound: int | None = None, transport=None):
+        tp = transport_mod.ragged_plan(transport, active)
+        if tp is not None:
+            recv, _, _ = transport_mod.ship_transport(
+                self, tree, active, bound=bound, policy=tp)
+            return recv
         return jax.tree.map(
             lambda x: self.ship(x, active=active, bound=bound), tree)
 
@@ -132,6 +158,9 @@ class SpmdExchange(Exchange):
             x, self.axis_name, split_axis=1, concat_axis=1, tiled=True
         )
 
+    def psum(self, x: jnp.ndarray) -> jnp.ndarray:
+        return jax.lax.psum(x, self.axis_name)
+
 
 def with_wire(ex: Exchange, codec, *, delta: bool | None = None,
               block: int | None = None,
@@ -148,5 +177,12 @@ def with_wire(ex: Exchange, codec, *, delta: bool | None = None,
 
 
 def pack_bf16(ex: Exchange) -> Exchange:
-    """Deprecated shim: `with_wire(ex, "bf16")`."""
+    """DEPRECATED shim for `with_wire(ex, "bf16")` — use that instead.
+
+    Both this helper and the raw `wire_dtype=` field predate the codec
+    layer (DESIGN.md §2.1) and only express plain float narrowing; the
+    codec registry (`with_wire`) subsumes them and adds per-block scaled
+    quantization, lossless int packing, and delta shipping."""
+    warnings.warn("pack_bf16(ex) is deprecated; use with_wire(ex, 'bf16')",
+                  DeprecationWarning, stacklevel=2)
     return with_wire(ex, "bf16")

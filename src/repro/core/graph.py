@@ -389,7 +389,8 @@ class Graph:
                    to: str = "dst", skip_stale: str | None = None,
                    cache: ViewCache | None = None, kernel_mode: str = "auto",
                    force_need: str | None = None,
-                   payload_bound: int | None = None):
+                   payload_bound: int | None = None,
+                   transport=None, transport_state=None):
         """See repro.core.mrtriplets.mr_triplets.
 
         kernel_mode selects the physical execution strategy:
@@ -411,10 +412,19 @@ class Graph:
         with no certifiable bound should pass kernel_mode="unfused" and a
         codec without int packing.  Unsigned 32-bit ints (bitsets) never
         fuse and never narrow.
+
+        transport (core/transport.py, §2.1.1) picks HOW the exchange
+        buffers move: None/"dense" (static all_to_all), "ragged"
+        (capacity-bounded compaction of the active entries, overflow falls
+        back dense), or "auto" (hysteresis on the psummed active fraction;
+        transport_state carries the previous decision).  Transports change
+        bytes, never values.
         """
         return mr_triplets(self, map_fn, reduce, to=to, skip_stale=skip_stale,
                            cache=cache, kernel_mode=kernel_mode,
-                           force_need=force_need, payload_bound=payload_bound)
+                           force_need=force_need, payload_bound=payload_bound,
+                           transport=transport,
+                           transport_state=transport_state)
 
     def degrees(self, direction: str = "in", kernel_mode: str = "auto"):
         """Vertex degrees via a join-eliminated mrTriplets (the paper's

@@ -35,10 +35,11 @@ import jax
 import jax.numpy as jnp
 
 from . import analysis
+from . import transport as transport_mod
 from . import wire as wire_mod
 from .exchange import Exchange
-from .tree import (bmask, elem_spec, gather_rows, nbytes_of, tree_where,
-                   tree_zeros_like_elem, vmap2)
+from .tree import (bmask, elem_spec, gather_rows, nbytes_of, scatter_rows,
+                   tree_where, tree_zeros_like_elem, vmap2)
 from ..kernels import ops as kops
 from ..kernels.triplet import (DEFAULT_EDGE_BLOCK, DEFAULT_VERTEX_BLOCK,
                                flatten_tiles)
@@ -81,21 +82,70 @@ class ViewCache:
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass(frozen=True)
 class ShipMetrics:
-    wire_bytes: int                 # static bytes moved by the collective
+    wire_bytes: int                 # static bytes a dense collective moves
     effective_bytes: jnp.ndarray    # data actually needed (Fig 4 quantity)
     n_shipped: jnp.ndarray
-    # codec-aware wire volume: what a zero-run-compressing transport moves
-    # under active-set delta shipping (== wire_bytes without a delta codec).
-    bytes_on_wire: jnp.ndarray = dataclasses.field(
+    # codec-aware ACCOUNTED volume: what a zero-run-compressing transport
+    # would move under active-set delta shipping (== wire_bytes without a
+    # delta codec).  The §2.1 accounting contract — compare bytes_shipped.
+    bytes_accounted: jnp.ndarray = dataclasses.field(
         default_factory=lambda: jnp.float32(0))
+    # what the selected transport's collectives REALLY moved this ship:
+    # dense = static payload (+ flags wire), ragged = compacted payload +
+    # slot indices + counts (§2.1.1).
+    bytes_shipped: jnp.ndarray = dataclasses.field(
+        default_factory=lambda: jnp.float32(0))
+    ragged: jnp.ndarray = dataclasses.field(       # 1.0 = ragged plan taken
+        default_factory=lambda: jnp.float32(0))
+    route_active_max: jnp.ndarray = dataclasses.field(  # per-dest occupancy
+        default_factory=lambda: jnp.int32(0))
+    route_width: int = 0            # static K of this ship's route
+
+    @property
+    def bytes_on_wire(self) -> jnp.ndarray:
+        """Backward-compat alias: the PR-3 accounting number."""
+        return self.bytes_accounted
 
     def tree_flatten(self):
-        return ((self.effective_bytes, self.n_shipped, self.bytes_on_wire),
-                (self.wire_bytes,))
+        return ((self.effective_bytes, self.n_shipped, self.bytes_accounted,
+                 self.bytes_shipped, self.ragged, self.route_active_max),
+                (self.wire_bytes, self.route_width))
 
     @classmethod
     def tree_unflatten(cls, aux, children):
-        return cls(aux[0], *children)
+        return cls(aux[0], *children, route_width=aux[1])
+
+
+def _route_ship(ex: Exchange, sendbuf: Any, flags: jnp.ndarray, *,
+                bound: int | None, elem_bytes: int,
+                transport: transport_mod.TransportPolicy = transport_mod.DENSE,
+                prefer_ragged: jnp.ndarray | None = None,
+                recvflags: jnp.ndarray | None = None):
+    """Move one routed [nl, P, K, ...] buffer + its freshness flags through
+    the selected transport and account it — the single home for the
+    active-mask/payload_bound threading that ship_to_mirrors and
+    ship_aggregates_home share (DESIGN.md §2.1.1).
+
+    flags double as the wire's active set: the codec zero-substitutes and
+    delta-accounts stale entries (§4.5.1 reaching the physical wire), and
+    the ragged transport compacts exactly these entries.  Returns
+    (recvbuf, recvflags, ShipMetrics); recvbuf entries outside recvflags
+    are unspecified (zeros) and must be masked by the consumer."""
+    codec = ex.codec
+    recvbuf, rflags, info = transport_mod.ship_transport(
+        ex, sendbuf, flags, bound=bound, policy=transport,
+        prefer_ragged=prefer_ragged, recvflags=recvflags)
+    metrics = ShipMetrics(
+        wire_bytes=wire_mod.static_wire_bytes(sendbuf, codec, bound),
+        effective_bytes=flags.sum() * elem_bytes,
+        n_shipped=flags.sum(),
+        bytes_accounted=wire_mod.bytes_on_wire(sendbuf, codec, flags, bound),
+        bytes_shipped=info.bytes_shipped,
+        ragged=info.ragged,
+        route_active_max=info.route_active_max,
+        route_width=flags.shape[-1],
+    )
+    return recvbuf, rflags, metrics
 
 
 def ship_to_mirrors(
@@ -107,6 +157,8 @@ def ship_to_mirrors(
     active: jnp.ndarray | None = None,   # [P, V_blk] bool — ship only these
     cache: ViewCache | None = None,
     bound: int | None = None,            # |value| bound for int wire packing
+    transport: Any = None,               # dense|ragged|auto plan (§2.1.1)
+    prefer_ragged: jnp.ndarray | None = None,
 ) -> tuple[ViewCache, ShipMetrics]:
     """Materialise the replicated vertex view for one need set."""
     send_idx, recv_slot = s.routes[need]          # [nl, P, K] each
@@ -126,43 +178,32 @@ def ship_to_mirrors(
         values)
     sendbuf = tree_where(flags, sendbuf, jax.tree.map(jnp.zeros_like, sendbuf))
 
-    # flags double as the wire's active set: the codec zero-substitutes and
-    # delta-accounts stale entries (§4.5.1 reaching the physical wire).
-    recvbuf = ex.tree_ship(sendbuf, active=flags, bound=bound)
-    if active is None and cache is None:
-        # full ship: the flag pattern is STRUCTURAL (route padding), already
-        # known at the receiver as recv_slot validity — skip the flags
-        # collective entirely (one of the two forward a2a buffers).
-        recvflags = recv_slot < s.v_mir
-    else:
-        recvflags = ex.transpose(flags)
+    # full ship: the flag pattern is STRUCTURAL (route padding), already
+    # known at the receiver as recv_slot validity — the dense path skips
+    # the flags collective entirely (one of the two forward a2a buffers).
+    structural = (recv_slot < s.v_mir) if (active is None and cache is None) \
+        else None
+    recvbuf, recvflags, metrics = _route_ship(
+        ex, sendbuf, flags, bound=bound,
+        elem_bytes=nbytes_of(jax.tree.map(lambda v: v[0, 0], values)),
+        transport=transport_mod.resolve_transport(transport),
+        prefer_ragged=prefer_ragged, recvflags=structural)
 
-    # receiver-side scatter into mirror slots (slots are unique per partition)
-    def scatter_leaf(leaf):
-        flat = leaf.reshape((nl, p * k) + leaf.shape[3:])
-        init = jnp.zeros((nl, s.v_mir) + leaf.shape[3:], leaf.dtype)
-        return jax.vmap(lambda b, sl, x: b.at[sl].set(x, mode="drop"))(
-            init, recv_slot.reshape(nl, -1), flat)
+    # receiver-side INCREMENTAL scatter into mirror slots (slots are unique
+    # per partition): only fresh entries write — idx routes stale/padded
+    # entries out of range, so with a cache the previous superstep's mirror
+    # is updated in place rather than rebuilt and re-selected (§4.5.1).
+    idx = jnp.where(recvflags, recv_slot, s.v_mir).reshape(nl, -1)
+    init = (cache.mirror if cache is not None else jax.tree.map(
+        lambda l: jnp.zeros((nl, s.v_mir) + l.shape[3:], l.dtype), recvbuf))
+    mirror = jax.tree.map(
+        lambda b, leaf: scatter_rows(
+            b, idx, leaf.reshape((nl, p * k) + leaf.shape[3:])),
+        init, recvbuf)
+    shipped = scatter_rows(jnp.zeros((nl, s.v_mir), bool), idx,
+                           jnp.ones((nl, p * k), bool))
+    filled = shipped if cache is None else (cache.filled | shipped)
 
-    new_mirror = jax.tree.map(scatter_leaf, recvbuf)
-    shipped = jax.vmap(lambda b, sl, x: b.at[sl].set(x, mode="drop"))(
-        jnp.zeros((nl, s.v_mir), bool), recv_slot.reshape(nl, -1),
-        recvflags.reshape(nl, -1))
-
-    if cache is None:
-        mirror, filled = new_mirror, shipped
-    else:
-        mirror = tree_where(shipped, new_mirror, cache.mirror)
-        filled = cache.filled | shipped
-
-    elem_bytes = nbytes_of(jax.tree.map(lambda v: v[0, 0], values))
-    codec = ex.codec
-    metrics = ShipMetrics(
-        wire_bytes=wire_mod.static_wire_bytes(sendbuf, codec, bound),
-        effective_bytes=flags.sum() * elem_bytes,
-        n_shipped=flags.sum(),
-        bytes_on_wire=wire_mod.bytes_on_wire(sendbuf, codec, flags, bound),
-    )
     return ViewCache(mirror=mirror, filled=filled, active=shipped), metrics
 
 
@@ -175,6 +216,8 @@ def ship_aggregates_home(
     ex: Exchange,
     *,
     bound: int | None = None,
+    transport: Any = None,               # dense|ragged|auto plan (§2.1.1)
+    prefer_ragged: jnp.ndarray | None = None,
 ) -> tuple[Any, jnp.ndarray, ShipMetrics]:
     """Return partial aggregates to vertex homes and combine (reduce UDF is
     commutative-associative, §3.2, so cross-partition combining is a
@@ -204,8 +247,11 @@ def ship_aggregates_home(
     # value-adaptive and stays on).
     if reduce == "sum":
         bound = None
-    recv = ex.tree_ship(backbuf, active=backflags, bound=bound)
-    rflags = ex.transpose(backflags)
+    recv, rflags, metrics = _route_ship(
+        ex, backbuf, backflags, bound=bound,
+        elem_bytes=nbytes_of(jax.tree.map(lambda v: v[0, 0], partial)),
+        transport=transport_mod.resolve_transport(transport),
+        prefer_ragged=prefer_ragged)
 
     v_blk = s.home_mask.shape[1]
     scatter_ops = {"sum": "add", "min": "min", "max": "max"}
@@ -228,16 +274,6 @@ def ship_aggregates_home(
         jnp.zeros((nl, v_blk), jnp.int32),
         jnp.where(rflags, send_idx, v_blk).reshape(nl, -1),
         rflags.reshape(nl, -1).astype(jnp.int32)) > 0
-
-    elem_bytes = nbytes_of(jax.tree.map(lambda v: v[0, 0], partial))
-    codec = ex.codec
-    metrics = ShipMetrics(
-        wire_bytes=wire_mod.static_wire_bytes(backbuf, codec, bound),
-        effective_bytes=backflags.sum() * elem_bytes,
-        n_shipped=backflags.sum(),
-        bytes_on_wire=wire_mod.bytes_on_wire(backbuf, codec, backflags,
-                                             bound),
-    )
     return out, exists, metrics
 
 
@@ -552,6 +588,8 @@ def mr_triplets(
     kernel_mode: str = "auto",
     force_need: str | None = None,   # override join elimination (benchmarks)
     payload_bound: int | None = None,
+    transport: Any = None,           # dense|ragged|auto plan (§2.1.1)
+    transport_state: jnp.ndarray | None = None,  # prev decision (hysteresis)
 ):
     """Execute one mrTriplets. Returns (values, exists, new_cache, metrics).
 
@@ -569,6 +607,15 @@ def mr_triplets(
     the wire codec's lossless narrowing width (int8 under 127, int16 under
     32767).  Defaults to the graph's max_vid — the §2.3.1 id-valued
     convention.
+
+    transport: how the exchange buffers MOVE (core/transport.py):
+    None/"dense" keeps the static all_to_all, "ragged" compacts the active
+    entries per destination (overflow falls back dense via lax.cond), and
+    "auto" switches per superstep on the psummed active fraction with
+    hysteresis — transport_state carries the previous superstep's decision
+    (metrics["transport_state"]) so the band has memory.  Both physical
+    plans and every transport agree bit-for-bit under a lossless codec:
+    transports change bytes, never values.
 
     Fused-path caches key on `map_fn`'s OBJECT IDENTITY (like jax.jit):
     eager host loops should pass the same function object every call, not a
@@ -598,6 +645,31 @@ def mr_triplets(
         arity = deps.n_way
 
     metrics: dict[str, Any] = {"join_arity": arity, "need": need or "none"}
+
+    # --- transport plan (§2.1.1): dense vs ragged for THIS superstep -------
+    # The ragged plan only pays off for incremental ships (a full ship has
+    # no stale entries to skip), so without a cache the plan is dense.  For
+    # "auto" the decision is the psummed active fraction against the
+    # hysteresis band — traced, mesh-uniform, carried across supersteps via
+    # transport_state (pregel_fused's while carry / pregel's host loop).
+    tp = transport_mod.resolve_transport(transport)
+    ship_active = g.active if cache is not None else None
+    prefer_ragged = None
+    tstate_new = jnp.float32(0)
+    if tp.kind == "auto":
+        if ship_active is None:
+            tp = transport_mod.DENSE
+        else:
+            frac = (ex.psum(ship_active.sum().astype(jnp.float32))
+                    / jnp.float32(max(s.p * ship_active.shape[1], 1)))
+            prev = (transport_state if transport_state is not None
+                    else jnp.float32(0))
+            thresh = jnp.where(prev > 0.5, jnp.float32(tp.exit_frac),
+                               jnp.float32(tp.enter_frac))
+            prefer_ragged = frac <= thresh
+            tstate_new = prefer_ragged.astype(jnp.float32)
+    metrics["transport"] = tp.kind
+    metrics["transport_state"] = tstate_new
 
     # property-level join elimination (beyond §4.5.2): ship only the vdata
     # LEAVES the UDF actually reads.  Unused leaves become zeros in the
@@ -630,10 +702,10 @@ def mr_triplets(
 
     # --- 1/2/3: ship the replicated vertex view (with incremental cache) ----
     if need is not None:
-        ship_active = g.active if cache is not None else None
         view, m_fwd = ship_to_mirrors(s, ship_values(), need, ex,
                                       active=ship_active, cache=cache,
-                                      bound=bound)
+                                      bound=bound, transport=tp,
+                                      prefer_ragged=prefer_ragged)
         metrics["fwd"] = m_fwd
     else:
         view = cache or ViewCache(
@@ -702,13 +774,26 @@ def mr_triplets(
     # --- 5: return aggregates to vertex homes --------------------------------
     # Aggregates flow back along the routing table of the side they were
     # aggregated on (structural, independent of which sides were shipped).
+    # the return route gets its own capacity fraction when the plan set one
+    # (the aggregate wire's occupancy decouples from the forward wire's).
+    tp_back = (tp if tp.capacity_frac_back is None
+               else tp.replace(capacity_frac=tp.capacity_frac_back))
     values, exists, m_back = ship_aggregates_home(
-        s, partial, had_msg, to, reduce, ex, bound=bound)
+        s, partial, had_msg, to, reduce, ex, bound=bound, transport=tp_back,
+        prefer_ragged=prefer_ragged)
     metrics["back"] = m_back
-    # the headline codec metric: forward + return wire volume after
-    # narrowing, quantization, and (with a delta codec) zero-block skipping.
+    # the headline codec metrics: forward + return wire volume after
+    # narrowing, quantization, and (with a delta codec) zero-block skipping
+    # — bytes_on_wire is the §2.1 ACCOUNTING number, bytes_shipped what the
+    # selected transport's collectives really moved (§2.1.1).
     metrics["bytes_on_wire"] = (metrics["fwd"].bytes_on_wire
                                 + m_back.bytes_on_wire)
+    metrics["bytes_shipped"] = (metrics["fwd"].bytes_shipped
+                                + m_back.bytes_shipped)
+    # per-route capacities mean EITHER wire may compact (the forward route
+    # can stay dense past the break-even clamp while the return route
+    # compacts, and vice versa) — "ragged" means any compaction happened.
+    metrics["ragged"] = jnp.maximum(metrics["fwd"].ragged, m_back.ragged)
 
     return values, exists, view, metrics
 

@@ -32,6 +32,7 @@ from typing import Any, Callable
 import jax
 import jax.numpy as jnp
 
+from . import transport as transport_mod
 from .graph import Graph
 from .mrtriplets import ViewCache, mr_triplets
 from .tree import tree_changed, tree_where, vmap2
@@ -44,13 +45,14 @@ class PregelResult:
     metrics: list[dict]     # per-superstep engine metrics
 
 
-def _superstep(g: Graph, cache, *, vprog, send_msg, gather, default_msg,
-               skip_stale, changed_fn, kernel_mode, use_cache,
-               payload_bound=None):
+def _superstep(g: Graph, cache, tstate=None, *, vprog, send_msg, gather,
+               default_msg, skip_stale, changed_fn, kernel_mode, use_cache,
+               payload_bound=None, transport=None):
     msgs, exists, view, metrics = mr_triplets(
         g, send_msg, gather, to="dst", skip_stale=skip_stale,
         cache=cache if use_cache else None, kernel_mode=kernel_mode,
-        payload_bound=payload_bound)
+        payload_bound=payload_bound, transport=transport,
+        transport_state=tstate)
     # strip static (non-array) entries: they are not jit-returnable and are
     # re-derivable from the UDF analysis in the driver
     metrics = {k: v for k, v in metrics.items()
@@ -84,22 +86,35 @@ def pregel(
     kernel_mode: str = "auto",
     track_metrics: bool = False,
     payload_bound: int | None = None,
+    transport: Any = None,
 ) -> PregelResult:
     """Host-driven BSP loop with a jitted superstep.
 
     payload_bound certifies a static |value| bound for integer payloads and
     messages (see mr_triplets) — it widens or narrows both the fused
     kernel's staging guard and the wire codec's lossless int width.  The
-    per-superstep metrics carry `bytes_on_wire`, the codec-aware wire
-    volume: with a delta codec the changed mask the vote-to-halt loop
+    per-superstep metrics carry `bytes_on_wire` (the §2.1 accounting
+    number) and `bytes_shipped` (what the transport's collectives really
+    moved): with a delta codec the changed mask the vote-to-halt loop
     already maintains reaches the physical wire, so converged regions stop
-    paying bytes."""
+    paying bytes.
+
+    transport: None/"dense" | "ragged" | "auto" | TransportPolicy
+    (core/transport.py).  "auto" re-plans per superstep ON THE HOST: the
+    hysteresis band on the observed active fraction picks dense vs ragged,
+    and the ragged capacity tracks the previous superstep's route occupancy
+    in cap_rounding-sized tiers — the jitted superstep takes the plan as
+    static metadata, so each tier compiles once and shipped bytes shrink
+    with the active set (the runtime lax.cond overflow fallback still
+    guards every ragged step).  The per-superstep metrics record the
+    decision next to `plan` ("transport", "transport_cap", "ragged")."""
 
     step = jax.jit(functools.partial(
         _superstep, vprog=vprog, send_msg=send_msg, gather=gather,
         default_msg=default_msg, skip_stale=skip_stale,
         changed_fn=changed_fn, kernel_mode=kernel_mode,
-        use_cache=incremental, payload_bound=payload_bound))
+        use_cache=incremental, payload_bound=payload_bound),
+        static_argnames=("transport",))
 
     # static join-elimination + physical-plan facts, derived once from the
     # INITIAL graph's specs (vprog may retype properties, but every §3.3
@@ -109,27 +124,48 @@ def pregel(
     from .mrtriplets import _derive_need, plan_of
     deps = analysis.analyze_message_fn(
         send_msg, elem_spec(g.vdata), elem_spec(g.edata), elem_spec(g.vdata))
+    tp = transport_mod.resolve_transport(transport)
     static_info = {"join_arity": deps.n_way,
                    "need": _derive_need(deps, None) or "none",
                    "wire": (g.ex.codec.name if g.ex.codec is not None
                             else "f32"),
+                   "transport_policy": tp.kind,
                    "plan": plan_of(g, send_msg, gather,
                                    kernel_mode=kernel_mode,
                                    payload_bound=payload_bound)}
+
+    # host-side transport re-planning ("auto"): superstep 0 is a full ship
+    # (dense by construction), later plans come from adapt_policy on the
+    # observed active fraction + route occupancy of the step just run.
+    cur_tp = transport_mod.DENSE if tp.kind == "auto" else tp
+    n_visible = max(int(jnp.sum(g.vmask)), 1)
 
     cache = None
     all_metrics: list[dict] = []
     steps = 0
     for it in range(max_supersteps):
-        g, view, live, metrics = step(g, cache)
+        g, view, live, metrics = step(g, cache, transport=cur_tp)
         cache = view if incremental else None
         steps += 1
         if track_metrics:
             host_metrics = jax.tree.map(float, metrics)
             host_metrics.update(static_info)
+            host_metrics["transport"] = cur_tp.kind
+            host_metrics["transport_cap"] = cur_tp.cap or 0
+            host_metrics["transport_frac"] = (
+                cur_tp.capacity_frac if cur_tp.kind == "ragged" else 0.0)
             all_metrics.append(host_metrics)
         if int(live) == 0:
             break
+        if tp.kind == "auto":
+            fwd, back = metrics["fwd"], metrics["back"]
+            cur_tp = transport_mod.adapt_policy(
+                tp, was_ragged=cur_tp.kind == "ragged",
+                active_frac=float(live) / n_visible,
+                fwd_frac=(int(fwd.route_active_max)
+                          / max(fwd.route_width, 1)),
+                back_frac=(int(back.route_active_max)
+                           / max(back.route_width, 1)))
     return PregelResult(graph=g, supersteps=steps, metrics=all_metrics)
 
 
@@ -146,6 +182,7 @@ def pregel_fused(
     changed_fn: Callable | None = None,
     kernel_mode: str = "auto",
     payload_bound: int | None = None,
+    transport: Any = None,
 ):
     """Entire Pregel run as one `lax.while_loop` XLA program.
 
@@ -153,26 +190,33 @@ def pregel_fused(
     through the loop carry, collectives appear inside the loop body, and the
     compiled HLO exposes the per-superstep collective schedule for the
     roofline analysis.
+
+    transport: unlike the host driver, ONE XLA program cannot re-plan
+    static capacities — an "auto" plan here keeps the policy's static
+    capacity and switches dense<->ragged per superstep through the traced
+    hysteresis `lax.cond` (the previous decision rides the loop carry).
     """
     part = functools.partial(
         _superstep, vprog=vprog, send_msg=send_msg, gather=gather,
         default_msg=default_msg, skip_stale=skip_stale,
         changed_fn=changed_fn, kernel_mode=kernel_mode,
-        use_cache=incremental, payload_bound=payload_bound)
+        use_cache=incremental, payload_bound=payload_bound,
+        transport=transport_mod.resolve_transport(transport))
 
     # materialise an initial cache with one full ship so the carry has
     # static structure
-    g0, view0, live0, _ = part(g, None)
+    g0, view0, live0, m0 = part(g, None, jnp.float32(0))
 
     def cond(carry):
-        g_, cache_, live_, i_ = carry
+        g_, cache_, live_, ts_, i_ = carry
         return jnp.logical_and(live_ > 0, i_ < max_supersteps)
 
     def body(carry):
-        g_, cache_, live_, i_ = carry
-        g2, view, live, _ = part(g_, cache_)
-        return (g2, view if incremental else cache_, live, i_ + 1)
+        g_, cache_, live_, ts_, i_ = carry
+        g2, view, live, m = part(g_, cache_, ts_)
+        return (g2, view if incremental else cache_, live,
+                m["transport_state"], i_ + 1)
 
-    gN, _, _, steps = jax.lax.while_loop(
-        cond, body, (g0, view0, live0, jnp.int32(1)))
+    gN, _, _, _, steps = jax.lax.while_loop(
+        cond, body, (g0, view0, live0, m0["transport_state"], jnp.int32(1)))
     return gN, steps

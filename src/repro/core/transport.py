@@ -1,0 +1,339 @@
+"""Transport layer for the exchange (DESIGN.md §2.1.1).
+
+`core/wire.py` decides what a `[nl, P, K, …]` exchange buffer looks like on
+the wire (quantization, packing, delta *accounting*); this module decides
+HOW it moves.  Two transports implement the routed-ship contract
+
+    ship(tree, flags) -> (recv_tree, recv_flags)      with
+    recv_tree[p, q, j] == tree[q, p, j]   wherever  recv_flags[p, q, j],
+
+i.e. the receiver observes every ACTIVE entry at its transposed position
+and can tell exactly which entries are fresh:
+
+  * **Dense** — today's tiled `all_to_all` (extracted from `Exchange.ship`):
+    the full static buffer moves every time, stale entries zero-substituted
+    by the codec.  `bytes_shipped` == the static wire count.
+
+  * **Ragged** — the runtime realisation of §4.5.1's "only pay for changed
+    vertices": active entries are compacted per destination into a static
+    capacity-bounded buffer (`argsort` on the active mask -> `[nl, P, cap,
+    …]` payload + `[nl, P, cap]` slot indices + per-destination counts),
+    shipped through the SAME wire codec (quantization runs on the
+    `cap`-sized blocks, so codec and delta compose multiplicatively), and
+    scattered back into the dense layout on the receive side.  Entries past
+    `cap` would be dropped, so the ragged plan is only taken when every
+    destination's active count fits — otherwise the `lax.cond` fallback
+    ships dense.  SPMD shapes stay static either way: the *decision* is a
+    traced scalar, uniform across the mesh because every input to it is
+    psummed.
+
+The dense/sparse CHOICE is split across two timescales, mirroring
+PowerGraph-style adaptive engines:
+
+  * within one XLA program (`pregel_fused`, any jitted superstep) the
+    `lax.cond` picks dense vs ragged per superstep from the psummed active
+    fraction with hysteresis (`TransportPolicy.enter_frac`/`exit_frac`) and
+    the overflow check — shapes static, both branches compiled once;
+  * across host-driven supersteps (`pregel`) `adapt_policy` re-plans the
+    static capacity from the previous superstep's observed route occupancy
+    (rounded to `cap_rounding`-sized tiers so recompiles stay bounded), so
+    shipped bytes track the shrinking active set instead of a fixed cap.
+
+Stale slots on the receiver keep their previously materialised values —
+exactly the incremental-view-maintenance contract §2.1 already proves
+semantics-free — so swapping transports can never change results, only
+bytes.  Differential tests: tests/test_transport.py (roundtrip properties,
+overflow fallback both directions), tests/spmd_check.py (4-device matrix).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from . import wire as wire_mod
+from .tree import scatter_rows, tree_where
+
+
+@dataclasses.dataclass(frozen=True)
+class TransportPolicy:
+    """Static transport plan.  Hashable: rides as static jit metadata
+    (mrTriplets/pregel arguments), like `WireCodec`.
+
+    kind: "dense" | "ragged" | "auto".  "dense"/"ragged" force that plan
+    (ragged still falls back on overflow unless `fallback=False`); "auto"
+    lets the engine switch per superstep — traced hysteresis inside one XLA
+    program, `adapt_policy` re-planning across host-driven supersteps.
+    """
+
+    kind: str = "dense"
+    # static per-destination capacity of the ragged buffer; None derives it
+    # as ceil(K * capacity_frac) rounded up to cap_rounding.
+    cap: int | None = None
+    capacity_frac: float = 0.5
+    # the aggregate-return route usually carries a different occupancy than
+    # the forward mirror route (most mirror slots receive SOME message long
+    # after most vertices stopped changing), so it gets its own fraction;
+    # None = same as capacity_frac.  adapt_policy fills both from the two
+    # observed occupancies.
+    capacity_frac_back: float | None = None
+    # capacities round up to a multiple of this (the codec's block size, so
+    # quantization blocks tile the compacted payload exactly) — it is also
+    # the tier quantum that bounds host-side recompiles in adapt_policy.
+    cap_rounding: int = 32
+    # hysteresis band on the psummed active fraction: go ragged when the
+    # fraction drops below enter_frac, return to dense above exit_frac.
+    enter_frac: float = 0.35
+    exit_frac: float = 0.5
+    # break-even clamp: above this capacity fraction the slot-index wire
+    # costs more than the payload it saves, so capacity_for answers dense.
+    ragged_max_frac: float = 0.65
+    # overflow -> dense fallback as a lax.cond branch.  False removes the
+    # cond (and the dense branch from the HLO): entries past `cap` would be
+    # silently dropped, so this is ONLY for shape-level dry-run analysis or
+    # callers that certify the capacity (launch/dryrun.py's ragged cell).
+    fallback: bool = True
+
+    def replace(self, **kw) -> "TransportPolicy":
+        return dataclasses.replace(self, **kw)
+
+
+DENSE = TransportPolicy("dense")
+RAGGED = TransportPolicy("ragged")
+AUTO = TransportPolicy("auto")
+
+TRANSPORT_NAMES = ("dense", "ragged", "auto")
+
+
+def resolve_transport(spec) -> TransportPolicy:
+    """None | "dense" | "ragged" | "auto" | TransportPolicy -> policy."""
+    if spec is None:
+        return DENSE
+    if isinstance(spec, TransportPolicy):
+        return spec
+    try:
+        return {"dense": DENSE, "ragged": RAGGED, "auto": AUTO}[spec]
+    except KeyError:
+        raise ValueError(
+            f"unknown transport {spec!r}; one of {TRANSPORT_NAMES}")
+
+
+def ragged_plan(spec, active) -> TransportPolicy | None:
+    """Resolve a transport spec to a ragged-capable policy, or None when
+    the ship is dense anyway (no plan, dense plan, or no active mask to
+    compact) — the single dispatch shared by Exchange.ship/tree_ship."""
+    if spec is None or active is None:
+        return None
+    tp = resolve_transport(spec)
+    return tp if tp.kind != "dense" else None
+
+
+def capacity_for(policy: TransportPolicy, k: int) -> int | None:
+    """Static per-destination capacity for a K-wide route, or None when the
+    ragged plan cannot beat the dense wire at this K: the capacity would
+    clear the break-even fraction, past which the slot-index wire costs
+    more than the payload rows it drops."""
+    if policy.kind == "dense" or k <= 0:
+        return None
+    cap = (policy.cap if policy.cap is not None
+           else int(np.ceil(k * policy.capacity_frac)))
+    r = max(int(policy.cap_rounding), 1)
+    cap = max(-(-int(cap) // r) * r, r)
+    return None if cap >= k * policy.ragged_max_frac else cap
+
+
+def round_capacity(policy: TransportPolicy, count: int) -> int:
+    """Quantize an observed route occupancy to the policy's capacity tier
+    (round UP to a cap_rounding multiple, minimum one tier)."""
+    r = max(int(policy.cap_rounding), 1)
+    return max(-(-max(int(count), 1) // r) * r, r)
+
+
+# host-side capacity fractions quantize to 1/8 tiers: at most 8 distinct
+# ragged programs per route over a whole run, each compiled once.
+FRAC_TIERS = 8
+
+
+def frac_tier(frac: float, tiers: int = FRAC_TIERS) -> float:
+    """Round an observed occupancy fraction UP to the next 1/tiers step
+    (the headroom that keeps small occupancy growth from overflowing)."""
+    return min(float(np.ceil(max(frac, 0.0) * tiers)) / tiers, 1.0)
+
+
+def adapt_policy(policy: TransportPolicy, *, was_ragged: bool,
+                 active_frac: float, fwd_frac: float,
+                 back_frac: float | None = None) -> TransportPolicy:
+    """Host-side per-superstep re-plan for `kind="auto"` (pregel's driver).
+
+    Hysteresis on the observed active fraction decides dense vs ragged; the
+    per-ship capacities are the previous superstep's observed route
+    occupancy FRACTIONS rounded up one 1/8 tier — per ship, because the
+    forward mirror route empties with the changed set while the
+    aggregate-return route keeps carrying messages for every live mirror
+    slot (capacity_for's break-even clamp then keeps that ship dense).
+    Converging active sets shrink, so last step's occupancy bounds this
+    step's — and when it does not, the traced overflow fallback ships dense
+    and the next re-plan raises the tier.  Returns a CONCRETE
+    "dense"/"ragged" policy: it is static jit metadata, and the tier
+    quantization is what bounds recompiles."""
+    if policy.kind != "auto":
+        return policy
+    thresh = policy.exit_frac if was_ragged else policy.enter_frac
+    if active_frac > thresh:
+        return policy.replace(kind="dense")
+    fwd_t = frac_tier(fwd_frac)
+    back_t = None if back_frac is None else frac_tier(back_frac)
+    # neither ship clears the break-even clamp -> the "ragged" program
+    # would execute dense anyway; plan dense and save the compile.
+    if fwd_t >= policy.ragged_max_frac and (
+            back_t is None or back_t >= policy.ragged_max_frac):
+        return policy.replace(kind="dense")
+    return policy.replace(kind="ragged", cap=None, capacity_frac=fwd_t,
+                          capacity_frac_back=back_t)
+
+
+class TransportInfo(NamedTuple):
+    """Traced facts about one routed ship (all mesh-uniform scalars)."""
+
+    bytes_shipped: jnp.ndarray      # f32 — what the collectives really moved
+    ragged: jnp.ndarray             # f32 0/1 — the branch actually taken
+    overflow: jnp.ndarray           # f32 0/1 — counts exceeded the capacity
+    route_active_max: jnp.ndarray   # int32 — LOCAL max per-destination count
+
+
+def index_dtype(k: int) -> np.dtype:
+    """Narrowest signed dtype addressing a K-wide route (the slot-index
+    wire is transport metadata: always packed, independent of the codec)."""
+    return wire_mod.int_wire_dtype(np.int32, max(k - 1, 1))
+
+
+def _compact(tree, flags, cap: int):
+    """Compact active entries per destination: payload [nl, P, cap, ...],
+    slot indices [nl, P, cap] (int32, ascending), validity, counts."""
+    order = jnp.argsort(~flags, axis=-1, stable=True)   # active first
+    sel = order[..., :cap].astype(jnp.int32)
+    counts = flags.sum(-1, dtype=jnp.int32)             # [nl, P]
+    valid = jnp.arange(cap, dtype=jnp.int32) < counts[..., None]
+    comp = jax.tree.map(
+        lambda x: jnp.take_along_axis(
+            x, sel.reshape(sel.shape + (1,) * (x.ndim - 3)), axis=2), tree)
+    comp = tree_where(valid, comp, jax.tree.map(jnp.zeros_like, comp))
+    return comp, sel, valid, counts
+
+
+def _scatter_rows(leaf, idx, k: int):
+    """Scatter [nl, P, cap, ...] rows back into [nl, P, K, ...]; idx >= K
+    entries drop (tree.scatter_rows over the flattened destination rows)."""
+    nl, p, cap = idx.shape
+    flat = leaf.reshape((nl * p, cap) + leaf.shape[3:])
+    init = jnp.zeros((nl * p, k) + leaf.shape[3:], leaf.dtype)
+    out = scatter_rows(init, idx.reshape(nl * p, cap), flat)
+    return out.reshape((nl, p, k) + leaf.shape[3:])
+
+
+def _dense_wire_bytes(tree, codec, bound, flags_shipped: bool) -> int:
+    """Static bytes the dense transport's collectives move: codec'd payload
+    plus the 1-byte-per-entry freshness flags when they ride a collective
+    (incremental ships; full ships reconstruct them structurally)."""
+    total = wire_mod.static_wire_bytes(tree, codec, bound)
+    if flags_shipped:
+        leaves = jax.tree.leaves(tree)
+        if leaves:
+            nl, p, k = leaves[0].shape[:3]
+            total += nl * p * k
+    return total
+
+
+def ragged_wire_bytes(tree, codec, bound, cap: int) -> int:
+    """Static bytes the ragged transport's collectives move for one routed
+    ship: compacted payload (+ block scales) + slot-index wire + counts."""
+    leaves = jax.tree.leaves(tree)
+    if not leaves:
+        return 0
+    nl, p, k = leaves[0].shape[:3]
+    spec = jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct((nl, p, cap) + x.shape[3:], x.dtype),
+        tree)
+    payload = wire_mod.static_wire_bytes(spec, codec, bound)
+    return payload + nl * p * cap * index_dtype(k).itemsize + nl * p * 4
+
+
+def ship_transport(ex, tree, flags, *, bound: int | None = None,
+                   policy: TransportPolicy = DENSE,
+                   prefer_ragged: jnp.ndarray | None = None,
+                   recvflags: jnp.ndarray | None = None):
+    """Move one routed [nl, P, K, ...] buffer through the selected
+    transport.  Returns (recv_tree, recv_flags, TransportInfo).
+
+    flags: [nl, P, K] bool — entries the receiver must observe (the wire's
+    active set; everything else may arrive as zeros and is masked out by
+    recv_flags downstream).  prefer_ragged: traced mesh-uniform bool from
+    the caller's hysteresis (None = always prefer ragged when eligible).
+    recvflags: structural receive-side flags known without a collective
+    (full ships) — lets the dense path skip the flags wire.
+    """
+    codec = ex.codec
+    leaves = jax.tree.leaves(tree)
+    if not leaves:
+        zero = jnp.float32(0)
+        rf = recvflags if recvflags is not None else ex.transpose(flags)
+        return tree, rf, TransportInfo(zero, zero, zero, jnp.int32(0))
+    nl, p, k = flags.shape
+    counts = flags.sum(-1, dtype=jnp.int32)
+    maxc = counts.max()
+
+    def ship_dense(tf):
+        t, f = tf
+        recv = ex.tree_ship(t, active=f, bound=bound)
+        rf = recvflags if recvflags is not None else ex.transpose(f)
+        return recv, rf
+
+    cap = capacity_for(policy, k)
+    dense_bytes = _dense_wire_bytes(tree, codec, bound,
+                                    flags_shipped=recvflags is None)
+    if cap is None:
+        recv, rf = ship_dense((tree, flags))
+        zero = jnp.float32(0)
+        return recv, rf, TransportInfo(jnp.float32(dense_bytes), zero, zero,
+                                       maxc)
+
+    idx_dt = jnp.dtype(index_dtype(k))
+    rag_bytes = ragged_wire_bytes(tree, codec, bound, cap)
+
+    def ship_ragged(tf):
+        t, f = tf
+        comp, sel, valid, cnt = _compact(t, f, cap)
+        recv_comp = ex.tree_ship(comp, active=valid, bound=bound)
+        sel_t = ex.transpose(jnp.where(valid, sel, 0).astype(idx_dt))
+        cnt_t = ex.transpose(cnt[..., None])[..., 0]
+        valid_t = jnp.arange(cap, dtype=jnp.int32) < cnt_t[..., None]
+        idx = jnp.where(valid_t, sel_t.astype(jnp.int32), k)  # OOB -> drop
+        recv = jax.tree.map(lambda l: _scatter_rows(l, idx, k), recv_comp)
+        rf = _scatter_rows(valid_t, idx, k)
+        return recv, rf
+
+    overflow = maxc > cap
+    if not policy.fallback:
+        # capacity certified by the caller (or shape-only analysis): pure
+        # ragged program, no dense branch, no overflow collective.
+        recv, rf = ship_ragged((tree, flags))
+        return recv, rf, TransportInfo(
+            jnp.float32(rag_bytes), jnp.float32(1),
+            overflow.astype(jnp.float32), maxc)
+
+    # overflow must flip the branch on EVERY device or the all_to_all
+    # shapes disagree across the mesh — hence the psum'd predicate.
+    over_any = ex.psum(overflow.astype(jnp.int32)) > 0
+    prefer = (jnp.bool_(True) if prefer_ragged is None
+              else prefer_ragged.astype(bool))
+    use_ragged = prefer & ~over_any
+    recv, rf = jax.lax.cond(use_ragged, ship_ragged, ship_dense,
+                            (tree, flags))
+    ragf = use_ragged.astype(jnp.float32)
+    bytes_shipped = jnp.where(use_ragged, jnp.float32(rag_bytes),
+                              jnp.float32(dense_bytes))
+    return recv, rf, TransportInfo(bytes_shipped, ragf,
+                                   over_any.astype(jnp.float32), maxc)

@@ -53,6 +53,19 @@ def gather_rows(tree: Any, idx: jnp.ndarray) -> Any:
         tree)
 
 
+def scatter_rows(init: jnp.ndarray, idx: jnp.ndarray,
+                 vals: jnp.ndarray) -> jnp.ndarray:
+    """Per-row scatter: init [nl, N, ...], idx [nl, M] (out-of-range rows
+    drop), vals [nl, M, ...] -> updated [nl, N, ...].
+
+    The engine's incremental-update primitive: mirror materialisation and
+    the ragged transport's receive-side reconstruction both write ONLY the
+    rows their index set names, so everything else keeps its previously
+    materialised value (§4.5.1)."""
+    return jax.vmap(lambda b, i, v: b.at[i].set(v, mode="drop"))(
+        init, idx, vals)
+
+
 def vmap2(f: Callable) -> Callable:
     """vmap over the two leading (partition, element) axes."""
     return jax.vmap(jax.vmap(f))

@@ -28,10 +28,15 @@ transport half.  Three orthogonal mechanisms, combinable per `WireCodec`:
     zero-substitutes stale entries before the collective (§4.5.1 incremental
     maintenance); `bytes_on_wire` additionally reports the volume a
     zero-run-compressing transport would move — `block`-granular: a tile
-    with no active entry costs nothing.  The dense all_to_all itself keeps
-    its static shape (SPMD collectives cannot shrink at runtime), so this is
-    the metric the benchmarks and the roofline read, not a runtime saving on
-    the simulated wire.
+    with no active entry costs nothing.  The DENSE all_to_all keeps its
+    static shape (SPMD collectives cannot shrink at runtime), so under the
+    dense transport this is an accounting metric; the RAGGED transport
+    (`core/transport.py`, §2.1.1) compacts the active entries into a
+    capacity-bounded buffer and ships THAT through this codec — the
+    quantization blocks then tile the compacted rows, so codec and delta
+    compose multiplicatively and `ShipMetrics.bytes_shipped` (the runtime
+    number) converges to `bytes_accounted` (this accounting number) as the
+    active set collapses.
 
 Encode runs on the SEND side behind `optimization_barrier`; decode runs on
 the RECEIVE side behind another barrier.  Without the barriers XLA's

@@ -252,7 +252,9 @@ def lower_graph_cell(mesh, *, n_vertices=41_652_230, n_edges=1_468_365_182,
                      supersteps: int = 1, return_hlo: bool = False,
                      wire_dtype=None, wire: str | None = None,
                      wire_delta: bool = False, mirror_factor: float = 2.0,
-                     contrib_form: bool = False):
+                     contrib_form: bool = False,
+                     transport: str | None = None,
+                     capacity_frac: float = 0.25):
     """PageRank superstep on a Twitter-scale graph (paper Table 1), SPMD over
     the flat parts axis.  Structure arrays are ShapeDtypeStructs sized by the
     2D-cut replication model.
@@ -260,11 +262,34 @@ def lower_graph_cell(mesh, *, n_vertices=41_652_230, n_edges=1_468_365_182,
     wire: codec name ("f32"/"bf16"/"int8"/"fp8_e4m3"/"fp8_e5m2") for the
     mirror exchange (DESIGN.md §2.1); wire_delta enables active-set delta
     accounting.  wire_dtype is the pre-codec narrowing knob, kept for
-    existing callers."""
+    existing callers.
+
+    transport (DESIGN.md §2.1.1): "dense" (default), "ragged", or "auto".
+    "ragged" lowers the PURE compacted-collective program (overflow
+    fallback disabled — this is shape analysis, the lax.cond would keep a
+    dense branch in the HLO and double-count collective bytes), with the
+    static capacity = capacity_frac of the route width; "auto" keeps the
+    runtime cond, so the reported collective bytes cover BOTH branches.
+    Ragged/auto cells run at least 2 supersteps so the second ships against
+    a cache (the incremental path the ragged plan exists for)."""
     from ..core import partition as pm
+    from ..core import transport as transport_mod
     from ..core.exchange import SpmdExchange, with_wire
     from ..core.graph import Graph, StructArrays
     from ..core.pregel import _superstep
+
+    tpol = None
+    if transport is not None and transport != "dense":
+        tpol = transport_mod.resolve_transport(transport)
+        # an explicit --capacity-frac is the operator's certification: lift
+        # the break-even clamp so the requested fraction really lowers the
+        # ragged program (otherwise a frac >= ragged_max_frac would
+        # silently lower dense under a ragged label).
+        tpol = tpol.replace(capacity_frac=capacity_frac, cap_rounding=32,
+                            ragged_max_frac=1.0)
+        if tpol.kind == "ragged":
+            tpol = tpol.replace(fallback=False)
+        supersteps = max(supersteps, 2)
 
     sizes = mesh_axis_sizes(mesh)
     p = sizes["parts"]
@@ -332,7 +357,8 @@ def lower_graph_cell(mesh, *, n_vertices=41_652_230, n_edges=1_468_365_182,
             out, cache, live, _ = _superstep(
                 out, cache, vprog=vprog, send_msg=send, gather="sum",
                 default_msg={"m": jnp.float32(0.0)}, skip_stale=None,
-                changed_fn=None, kernel_mode="ref", use_cache=True)
+                changed_fn=None, kernel_mode="ref", use_cache=True,
+                transport=tpol)
         return out, live
 
     in_specs = jax.tree.map(lambda x: P(*(("parts",) + (None,) * (len(x.shape) - 1))),
@@ -351,8 +377,10 @@ def lower_graph_cell(mesh, *, n_vertices=41_652_230, n_edges=1_468_365_182,
     coll = hlo_utils.collective_bytes(txt)
     dots = hlo_utils.dot_flops(txt)
     bytes_tc = hlo_utils.bytes_accessed(txt)
+    shape_tag = f"twitter_{supersteps}step" + (
+        f"_{transport}{capacity_frac}" if tpol is not None else "")
     rec = {
-        "arch": "graphx-pagerank", "shape": f"twitter_{supersteps}step",
+        "arch": "graphx-pagerank", "shape": shape_tag,
         "status": "ok",
         "mesh": "x".join(map(str, mesh.devices.shape)),
         "mesh_axes": list(mesh.axis_names),
@@ -375,9 +403,47 @@ def lower_graph_cell(mesh, *, n_vertices=41_652_230, n_edges=1_468_365_182,
         },
         "graph": {"vertices": n_vertices, "edges": n_edges,
                   "e_blk": e_blk, "v_mir": v_mir, "k_route": k,
-                  "wire": (ex.codec.name if ex.codec is not None else "f32")},
+                  "wire": (ex.codec.name if ex.codec is not None else "f32"),
+                  "transport": transport or "dense",
+                  "capacity_frac": capacity_frac if tpol else None,
+                  "supersteps": supersteps},
     }
     return (rec, txt) if return_hlo else rec
+
+
+def check_ragged_tracks_active(mesh, *, mirror_factor: float = 2.0,
+                               fracs=(0.25, 0.5)) -> dict:
+    """Dry-run HLO check (DESIGN.md §2.1.1): the ragged PageRank cell's
+    collective bytes must TRACK the active fraction — lowering the same
+    2-superstep cell at two capacity fractions and dense must order as
+    coll(frac_lo) < coll(frac_hi) < coll(dense), and the two ragged cells'
+    per-unit-fraction prices must agree within 15% (measured: 0.03% — the
+    fixed per-destination counts wire is the only non-proportional term)."""
+    lo, hi = sorted(fracs)
+    cells = {}
+    for name, kw in (("dense", {}),
+                     (f"ragged@{lo}", {"transport": "ragged",
+                                       "capacity_frac": lo}),
+                     (f"ragged@{hi}", {"transport": "ragged",
+                                       "capacity_frac": hi})):
+        rec = lower_graph_cell(mesh, supersteps=2, mirror_factor=mirror_factor,
+                               **kw)
+        cells[name] = rec["collective_bytes_per_chip"]
+        print(f"  {name:12s} collective bytes/chip = {cells[name]:.3e}",
+              flush=True)
+    d, blo, bhi = cells["dense"], cells[f"ragged@{lo}"], cells[f"ragged@{hi}"]
+    assert blo < bhi < d, cells
+    # "track the active fraction" = the ragged cell's collective bytes are
+    # PROPORTIONAL to the capacity fraction: every cap row ships payload +
+    # slot index and nothing else, so bytes/frac is a constant unit price
+    # (the fixed remainder — per-destination counts, psums — is noise).
+    # Measured on the Twitter cell: 2.019e8 / 0.25 vs 4.037e8 / 0.5, equal
+    # to 0.03%.  The unit price EXCEEDS the dense price (slot indices ride
+    # along: int32 on an 8 B/entry payload -> ~1.5x), which is exactly why
+    # capacity_for clamps ragged plans to ragged_max_frac of the route.
+    unit_lo, unit_hi = blo / lo, bhi / hi
+    assert abs(unit_lo - unit_hi) / unit_hi < 0.15, (cells, unit_lo, unit_hi)
+    return cells
 
 
 # ---------------------------------------------------------------------------
@@ -429,6 +495,14 @@ def main() -> None:
                     help="graph cell: wire codec for the mirror exchange")
     ap.add_argument("--wire-delta", action="store_true",
                     help="graph cell: active-set delta shipping accounting")
+    ap.add_argument("--transport", default=None,
+                    choices=["dense", "ragged", "auto"],
+                    help="graph cell: exchange transport (DESIGN.md §2.1.1)")
+    ap.add_argument("--capacity-frac", type=float, default=0.25,
+                    help="graph cell: ragged capacity as a route fraction")
+    ap.add_argument("--ragged-check", action="store_true",
+                    help="graph cell: lower dense + two ragged capacities "
+                         "and assert collective bytes track the fraction")
     ap.add_argument("--mirror-factor", type=float, default=2.0)
     ap.add_argument("--contrib-form", action="store_true")
     ap.add_argument("--state-bf16", action="store_true")
@@ -468,13 +542,22 @@ def main() -> None:
     entries = _load_report()
 
     if args.graph:
+        if args.ragged_check:
+            gmesh = make_graph_mesh(multi_pod=args.multi_pod)
+            cells = check_ragged_tracks_active(
+                gmesh, mirror_factor=args.mirror_factor)
+            print(json.dumps({"ragged_check": "ok", "cells": cells},
+                             indent=1))
+            return
         for mp in ([False, True] if args.both_meshes else [args.multi_pod]):
             gmesh = make_graph_mesh(multi_pod=mp)
             rec = lower_graph_cell(
                 gmesh, wire_dtype=jnp.bfloat16 if args.wire_bf16 else None,
                 wire=args.wire, wire_delta=args.wire_delta,
                 mirror_factor=args.mirror_factor,
-                contrib_form=args.contrib_form)
+                contrib_form=args.contrib_form,
+                transport=args.transport,
+                capacity_frac=args.capacity_frac)
             if args.variant:
                 rec["variant"] = args.variant
             print(json.dumps(rec, indent=1))

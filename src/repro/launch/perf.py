@@ -147,6 +147,12 @@ def main():
                          "(per-block scaled int8/fp8, DESIGN.md §2.1)")
     ap.add_argument("--wire-delta", action="store_true",
                     help="graph cell: active-set delta shipping accounting")
+    ap.add_argument("--transport", default=None,
+                    choices=["dense", "ragged", "auto"],
+                    help="graph cell: exchange transport — 'ragged' lowers "
+                         "the compacted collective (DESIGN.md §2.1.1)")
+    ap.add_argument("--capacity-frac", type=float, default=0.25,
+                    help="graph cell: ragged capacity as a route fraction")
     ap.add_argument("--mirror-factor", type=float, default=2.0)
     ap.add_argument("--dp-over-model", action="store_true")
     ap.add_argument("--batch-shard", action="store_true",
@@ -168,7 +174,9 @@ def main():
             wire_dtype=jnp.bfloat16 if args.wire_bf16 else None,
             wire=args.wire, wire_delta=args.wire_delta,
             mirror_factor=args.mirror_factor,
-            contrib_form=args.contrib_form)
+            contrib_form=args.contrib_form,
+            transport=args.transport,
+            capacity_frac=args.capacity_frac)
     else:
         popts = {}
         if args.seq_shard:

@@ -23,7 +23,21 @@ int8 per-block-scale codec — fused AND unfused — must match the f32-wire
 reference to <= 1e-3 on the rank distribution while `bytes_on_wire`
 (psummed over the mesh) reports <= 1/3 of the f32 baseline, the collective
 really moving int8; (f) the packed-int CC loop with delta shipping stays
-bit-exact against the union-find oracle.  Prints OK on success.
+bit-exact against the union-find oracle.
+
+Ragged transport (DESIGN.md §2.1.1), same 4-device mesh: (g) delta
+PageRank under the host-adaptive "auto" plan (mirroring pregel's driver:
+hysteresis + capacity tiers from the observed route occupancy) is
+BIT-EXACT vs the dense transport on the f32 wire — for the fused AND the
+unfused physical plan — while `bytes_shipped` (psummed) drops monotonically
+across the ragged supersteps and stays below every dense superstep; the run
+starts dense (full ship), switches to ragged as the active set shrinks, and
+the first superstep's traced overflow check exercises the lax.cond dense
+fallback inside shard_map (switching in BOTH directions); (h) the same loop
+on the int8 wire keeps norm-rank err <= 1e-3; (i) the packed-int delta CC
+loop with a forced "ragged" policy (overflow falls back dense until the
+label frontier fits the capacity) stays bit-exact against union-find.
+Prints OK on success.
 """
 import os
 
@@ -197,6 +211,143 @@ def main():
     np.testing.assert_array_equal(cc8, cc_local)
     got8 = dict(zip(vids.tolist(), cc8[mask].tolist()))
     assert got8 == want
+
+    # ---- ragged transport: delta PageRank, host-adaptive capacity ----------
+    from repro.core.transport import (TransportPolicy, DENSE, adapt_policy,
+                                      resolve_transport)
+
+    # wider graph: capacity tiers need route headroom to beat the dense wire
+    gdd = rmat(8, 6, seed=0)
+    gbig = Graph.from_edges(gdd.src, gdd.dst, num_partitions=P)
+    gbig = alg.attach_out_degree(gbig, kernel_mode="ref")
+    gdp = gbig.mapV(lambda vid, v: {"deg": v["deg"],
+                                    "pr": jnp.float32(0.15),
+                                    "delta": jnp.float32(0.15)})
+    n_vis = int(np.asarray(gdp.vmask).sum())
+
+    def dsend(sv, ev, dv):
+        return {"m": sv["delta"] / sv["deg"] * ev["w"]}
+
+    def dvprog(vid, v, msg):
+        new_pr = v["pr"] + 0.85 * msg["m"]
+        return {"deg": v["deg"], "pr": new_pr, "delta": new_pr - v["pr"]}
+
+    def dchg(old, new):
+        return jnp.abs(new["pr"] - old["pr"]) > 2e-3
+
+    def run_delta_pr(gg0, transport_spec, kernel_mode="auto", n_steps=30):
+        """pregel's host driver open-coded over jit(shard_map) supersteps:
+        the static transport plan is re-chosen per superstep from psummed
+        metrics, exactly like pregel.adapt_policy."""
+        tpol = resolve_transport(transport_spec)
+        out_specs = (PS("parts"), PS("parts"), PS(), PS(), PS(), PS(), PS(),
+                     PS())
+        fns = {}
+
+        def body(gg, cache, tp):
+            g2, view, live, m = _superstep(
+                gg, cache, None, vprog=dvprog, send_msg=dsend, gather="sum",
+                default_msg={"m": jnp.float32(0.0)}, skip_stale="out",
+                changed_fn=dchg, kernel_mode=kernel_mode, use_cache=True,
+                transport=tp)
+            shipped = m["fwd"].bytes_shipped + m["back"].bytes_shipped
+            accounted = (m["fwd"].bytes_accounted + m["back"].bytes_accounted)
+            fwd_frac = (m["fwd"].route_active_max.astype(jnp.float32)
+                        / max(m["fwd"].route_width, 1))
+            back_frac = (m["back"].route_active_max.astype(jnp.float32)
+                         / max(m["back"].route_width, 1))
+            return (g2, view, jax.lax.psum(live, "parts"),
+                    jax.lax.psum(shipped, "parts"),
+                    jax.lax.psum(accounted, "parts"),
+                    jax.lax.pmax(fwd_frac, "parts"),
+                    jax.lax.pmax(back_frac, "parts"), m["fwd"].ragged)
+
+        def get_fn(tp, with_cache):
+            key = (tp.kind, tp.capacity_frac, tp.capacity_frac_back,
+                   with_cache)
+            if key not in fns:
+                if with_cache:
+                    fns[key] = jax.jit(shard_map(
+                        lambda gg, cc, _tp=tp: body(gg, cc, _tp), mesh,
+                        (PS("parts"), PS("parts")), out_specs))
+                else:
+                    fns[key] = jax.jit(shard_map(
+                        lambda gg, _tp=tp: body(gg, None, _tp), mesh,
+                        (PS("parts"),), out_specs))
+            return fns[key]
+
+        gg, cache, rows = gg0, None, []
+        cur = DENSE if tpol.kind == "auto" else tpol
+        for _ in range(n_steps):
+            fn = get_fn(cur, cache is not None)
+            gg, cache, live, shipped, accounted, ffrac, bfrac, ragged = (
+                fn(gg, cache) if cache is not None else fn(gg))
+            rows.append({"live": int(live), "shipped": float(shipped),
+                         "accounted": float(accounted),
+                         "ragged": float(ragged), "kind": cur.kind})
+            if int(live) == 0:
+                break
+            if tpol.kind == "auto":
+                cur = adapt_policy(tpol, was_ragged=cur.kind == "ragged",
+                                   active_frac=int(live) / n_vis,
+                                   fwd_frac=float(ffrac),
+                                   back_frac=float(bfrac))
+        return gg, rows
+
+    auto_pol = TransportPolicy("auto", cap_rounding=8, enter_frac=0.95,
+                               exit_frac=0.97)
+    gdp_spmd = dataclasses.replace(
+        gdp, ex=SpmdExchange(p=P, axis_name="parts"), host=None)
+    g_ref, rows_ref = run_delta_pr(gdp_spmd, None)
+    pr_ref = np.asarray(g_ref.vdata["pr"])
+    for mode in ("auto", "unfused"):
+        g_rag, rows = run_delta_pr(gdp_spmd, auto_pol, kernel_mode=mode)
+        # transports change bytes, never values: bit-exact on the f32 wire
+        np.testing.assert_array_equal(np.asarray(g_rag.vdata["pr"]), pr_ref)
+        ragged_rows = [r for r in rows if r["ragged"] == 1.0]
+        dense_rows = [r for r in rows if r["ragged"] == 0.0]
+        assert ragged_rows and dense_rows, rows
+        # the run switched dense -> ragged; shipped bytes drop monotonically
+        # across the ragged tail and undercut every dense superstep
+        shipped = [r["shipped"] for r in ragged_rows]
+        assert shipped == sorted(shipped, reverse=True), rows
+        assert max(shipped) < min(r["shipped"] for r in dense_rows), rows
+        # the first superstep is a full ship: its route occupancy overflows
+        # any useful capacity, so the plan was dense by construction, and a
+        # later shrink re-enters ragged — both switch directions exercised.
+        assert rows[0]["ragged"] == 0.0 and rows[-1]["ragged"] == 1.0, rows
+
+    # (h) same loop on the int8 quantized wire: ragged keeps rank accuracy
+    gdp8 = dataclasses.replace(gdp_spmd, ex=with_wire(gdp_spmd.ex, "int8"))
+    g8_ref, _ = run_delta_pr(gdp8, None)
+    g8_rag, rows8 = run_delta_pr(gdp8, auto_pol)
+    assert any(r["ragged"] == 1.0 for r in rows8), rows8
+    n_ref8 = pr_ref / pr_ref.sum()
+    pr8 = np.asarray(g8_rag.vdata["pr"])
+    assert np.abs(pr8 / pr8.sum() - n_ref8).max() <= 1e-3
+
+    # (i) packed-int delta CC, forced ragged plan: overflow falls back
+    # dense while the label frontier is wide, compacts once it narrows;
+    # labels stay bit-exact vs the dense run and the union-find oracle.
+    cc_pol = TransportPolicy("ragged", capacity_frac=0.5, cap_rounding=8)
+
+    def cc_loop_t(gg, kernel_mode, transport=None):
+        out, cache = gg, None
+        for _ in range(10):
+            out, cache, _, m = _superstep(
+                out, cache, None, vprog=cc_vprog, send_msg=cc_send,
+                gather="min", default_msg={"m": IMAX}, skip_stale="out",
+                changed_fn=None, kernel_mode=kernel_mode, use_cache=True,
+                transport=transport)
+        return out.vdata["cc"]
+
+    fn_ccr = jax.jit(shard_map(
+        lambda gg: cc_loop_t(gg, "auto", transport=cc_pol),
+        mesh, (shard_specs(sg8),), PS("parts")))
+    ccr = np.asarray(fn_ccr(sg8))
+    np.testing.assert_array_equal(ccr, cc_local)
+    gotr = dict(zip(vids.tolist(), ccr[mask].tolist()))
+    assert gotr == want
 
     # ---- collection shuffle under SPMD -------------------------------------
     from repro.core import Col

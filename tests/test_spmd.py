@@ -5,10 +5,14 @@ XLA_FLAGS must be set before jax initialises, and the main pytest process
 must keep seeing a single device — hence the subprocess.  The check crosses
 executors (LocalExchange vs shard_map/SpmdExchange), physical plans
 (fused vs unfused — the device-resident tile tables make the fused plan
-legal inside shard_map), backends (jnp oracle vs Pallas interpret), and
-wire codecs (f32 vs int8 per-block scales and packed-int delta CC, with the
-<= 1/3 bytes_on_wire regression — DESIGN.md §2.1); see spmd_check.py's
-docstring for the exact matrix.
+legal inside shard_map), backends (jnp oracle vs Pallas interpret), wire
+codecs (f32 vs int8 per-block scales and packed-int delta CC, with the
+<= 1/3 bytes_on_wire regression — DESIGN.md §2.1), and transports (dense
+all_to_all vs the ragged compacted collective with host-adaptive capacity
+and the lax.cond overflow fallback — DESIGN.md §2.1.1: ragged delta
+PageRank bit-exact on the f32 wire with monotonically dropping shipped
+bytes, <= 1e-3 norm-rank err on int8, delta CC bit-exact); see
+spmd_check.py's docstring for the exact matrix.
 """
 import os
 import subprocess

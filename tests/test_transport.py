@@ -1,0 +1,366 @@
+"""Transport layer tests (DESIGN.md §2.1.1): the compact -> ship -> scatter
+roundtrip, dense<->ragged switching with overflow fallback in both
+directions, shipped-vs-accounted byte agreement, and the end-to-end
+differentials under LocalExchange.
+
+The SpmdExchange half (shard_map + all_to_all + lax.cond branch agreement
+on 4 simulated devices) lives in tests/spmd_check.py, driven by
+tests/test_spmd.py.  Property-style sweeps run twice: a deterministic
+seeded matrix that always executes, and a hypothesis layer when the dev
+dependency is installed.
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (Graph, LocalExchange, TransportPolicy, algorithms as
+                        alg, with_wire)
+from repro.core import transport as T
+from repro.core import wire as W
+from repro.core.mrtriplets import ShipMetrics, mr_triplets
+from repro.data import rmat, symmetrize
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:          # dev-only dependency (requirements-dev.txt)
+    HAVE_HYPOTHESIS = False
+
+
+# ---------------------------------------------------------------------------
+# Policy resolution / capacity arithmetic
+# ---------------------------------------------------------------------------
+def test_resolve_and_capacity():
+    assert T.resolve_transport(None).kind == "dense"
+    for name in T.TRANSPORT_NAMES:
+        assert T.resolve_transport(name).kind == name
+    pol = TransportPolicy("ragged", cap_rounding=8)
+    assert T.resolve_transport(pol) is pol
+    with pytest.raises(ValueError):
+        T.resolve_transport("sparse")
+
+    # capacity rounds UP to the rounding quantum and never reaches K
+    assert T.capacity_for(pol.replace(capacity_frac=0.5), 64) == 32
+    assert T.capacity_for(pol.replace(capacity_frac=0.26), 64) == 24
+    assert T.capacity_for(pol.replace(cap=5), 64) == 8
+    # cap >= K: ragged cannot beat dense -> None
+    assert T.capacity_for(pol.replace(capacity_frac=1.0), 64) is None
+    assert T.capacity_for(pol.replace(cap=3), 8) is None
+    assert T.capacity_for(T.DENSE, 64) is None
+
+
+def test_adapt_policy_hysteresis_and_tiers():
+    pol = TransportPolicy("auto", cap_rounding=32, enter_frac=0.3,
+                          exit_frac=0.5)
+    # above the enter band: stay dense
+    assert T.adapt_policy(pol, was_ragged=False, active_frac=0.4,
+                          fwd_frac=0.1).kind == "dense"
+    # below: go ragged, per-ship occupancy fractions quantized to 1/8 tiers
+    nxt = T.adapt_policy(pol, was_ragged=False, active_frac=0.2,
+                         fwd_frac=0.21, back_frac=0.8)
+    assert nxt.kind == "ragged" and nxt.cap is None
+    assert nxt.capacity_frac == 0.25 and nxt.capacity_frac_back == 0.875
+    # the near-full back route then stays dense via the break-even clamp
+    assert T.capacity_for(nxt.replace(capacity_frac=nxt.capacity_frac_back),
+                          256) is None
+    assert T.capacity_for(nxt, 256) == 64
+    # hysteresis: once ragged, only leave above exit_frac
+    assert T.adapt_policy(pol, was_ragged=True, active_frac=0.4,
+                          fwd_frac=0.2).kind == "ragged"
+    assert T.adapt_policy(pol, was_ragged=True, active_frac=0.6,
+                          fwd_frac=0.2).kind == "dense"
+    # non-auto policies pass through untouched
+    assert T.adapt_policy(T.RAGGED, was_ragged=False, active_frac=0.9,
+                          fwd_frac=1.0) is T.RAGGED
+    assert T.frac_tier(0.13) == 0.25 and T.frac_tier(0.0) == 0.0
+    # an empty route still reserves one cap_rounding unit
+    assert T.capacity_for(pol.replace(kind="ragged", capacity_frac=0.0),
+                          256) == 32
+
+
+# ---------------------------------------------------------------------------
+# compact -> ship -> scatter roundtrip (the transport contract)
+# ---------------------------------------------------------------------------
+def _route_tree(rng, nl=4, p=4, k=24):
+    return {
+        "a": jnp.asarray(rng.normal(size=(nl, p, k)).astype(np.float32)),
+        "b": jnp.asarray(rng.normal(size=(nl, p, k, 3)).astype(np.float32)),
+    }
+
+
+def _check_contract(tree, flags, policy, *, expect_ragged=None, codec=None):
+    """recv[p, q, j] == tree[q, p, j] wherever recv_flags — vs the dense
+    reference — regardless of which branch the transport took."""
+    ex = LocalExchange(4) if codec is None else with_wire(
+        LocalExchange(4), codec)
+    recv, rf, info = T.ship_transport(ex, tree, flags, policy=policy)
+    want_rf = np.swapaxes(np.asarray(flags), 0, 1)
+    np.testing.assert_array_equal(np.asarray(rf), want_rf)
+    dense, drf, dinfo = T.ship_transport(ex, tree, flags, policy=T.DENSE)
+    for kk in tree:
+        got = np.asarray(recv[kk])
+        ref = np.asarray(dense[kk])
+        m = want_rf.reshape(want_rf.shape + (1,) * (got.ndim - 3))
+        np.testing.assert_array_equal(np.where(m, got, 0),
+                                      np.where(m, ref, 0))
+    if expect_ragged is not None:
+        assert float(info.ragged) == expect_ragged, (
+            float(info.ragged), float(info.overflow))
+    return info, dinfo
+
+
+@pytest.mark.parametrize("density", [0.0, 0.1, 0.45, 1.0])
+def test_roundtrip_random_masks(density):
+    """Random active masks across densities: all-stale (ships an empty
+    compacted buffer), sparse (ragged), and all-active (overflow past
+    capacity -> dense fallback).  cap = 12 of K = 24."""
+    rng = np.random.default_rng(int(density * 100))
+    tree = _route_tree(rng)
+    flags = jnp.asarray(rng.random((4, 4, 24)) < density)
+    pol = TransportPolicy("ragged", capacity_frac=0.5, cap_rounding=4)
+    counts = np.asarray(flags).sum(-1)
+    expect = 1.0 if counts.max() <= 12 else 0.0
+    info, dinfo = _check_contract(tree, flags, pol, expect_ragged=expect)
+    if expect:
+        assert float(info.bytes_shipped) < float(dinfo.bytes_shipped)
+    assert int(info.route_active_max) == counts.max()
+
+
+def test_all_stale_and_all_active_edges():
+    rng = np.random.default_rng(7)
+    tree = _route_tree(rng)
+    pol = TransportPolicy("ragged", cap=8, cap_rounding=4)
+    # all-stale: ragged plan taken, nothing marked fresh on the receiver
+    info, _ = _check_contract(tree, jnp.zeros((4, 4, 24), bool), pol,
+                              expect_ragged=1.0)
+    assert int(info.route_active_max) == 0
+    # all-active: every destination overflows an 8-wide capacity
+    info, _ = _check_contract(tree, jnp.ones((4, 4, 24), bool), pol,
+                              expect_ragged=0.0)
+    assert float(info.overflow) == 1.0
+
+
+def test_overflow_fallback_switches_both_directions():
+    """The same policy object flips dense->ragged->dense purely on the
+    runtime mask: overflow forces the dense branch, the next sparse mask
+    returns to ragged."""
+    rng = np.random.default_rng(3)
+    tree = _route_tree(rng)
+    pol = TransportPolicy("ragged", cap=8, cap_rounding=4)
+    sparse = jnp.zeros((4, 4, 24), bool).at[:, :, :5].set(True)
+    dense_mask = jnp.ones((4, 4, 24), bool)
+    for flags, expect in ((sparse, 1.0), (dense_mask, 0.0), (sparse, 1.0)):
+        _check_contract(tree, flags, pol, expect_ragged=expect)
+
+
+def test_prefer_ragged_gate():
+    """The caller's hysteresis decision (auto mode) can hold the dense
+    branch even when the capacity would fit."""
+    rng = np.random.default_rng(4)
+    tree = _route_tree(rng)
+    ex = LocalExchange(4)
+    flags = jnp.zeros((4, 4, 24), bool).at[:, :, :3].set(True)
+    pol = TransportPolicy("auto", cap=8, cap_rounding=4)
+    _, _, info = T.ship_transport(ex, tree, flags, policy=pol,
+                                  prefer_ragged=jnp.bool_(False))
+    assert float(info.ragged) == 0.0
+    _, _, info = T.ship_transport(ex, tree, flags, policy=pol,
+                                  prefer_ragged=jnp.bool_(True))
+    assert float(info.ragged) == 1.0
+
+
+def test_ragged_composes_with_codec():
+    """Quantization runs on the cap-sized compacted blocks: a lossless
+    codec path (packed ints under a bound) stays bit-exact through the
+    ragged transport; a scaled codec (int8) agrees with its dense-shipped
+    self within the per-block error bound."""
+    rng = np.random.default_rng(5)
+    pol = TransportPolicy("ragged", cap=12, cap_rounding=4)
+    flags = jnp.asarray(rng.random((4, 4, 24)) < 0.2)
+
+    ids = {"i": jnp.asarray(rng.integers(0, 100, (4, 4, 24)).astype(np.int32))}
+    ex8 = with_wire(LocalExchange(4), "int8")
+    recv, rf, info = T.ship_transport(ex8, ids, flags, bound=100, policy=pol)
+    assert float(info.ragged) == 1.0
+    want = np.where(np.swapaxes(np.asarray(flags), 0, 1),
+                    np.swapaxes(np.asarray(ids["i"]), 0, 1), 0)
+    np.testing.assert_array_equal(np.asarray(recv["i"]), want)
+    assert recv["i"].dtype == jnp.int32        # decodes back to wide
+
+    x = {"x": jnp.asarray(rng.normal(size=(4, 4, 24)).astype(np.float32))}
+    recv, rf, _ = T.ship_transport(ex8, x, flags, policy=pol)
+    m = np.swapaxes(np.asarray(flags), 0, 1)
+    ref = np.where(m, np.swapaxes(np.asarray(x["x"]), 0, 1), 0)
+    got = np.where(m, np.asarray(recv["x"]), 0)
+    # int8 per-block absmax error: |err| <= absmax / 64 with pow2 snapping
+    tol = np.abs(ref).max() / 64 + 1e-7
+    assert np.abs(got - ref).max() <= tol
+
+
+def test_exchange_tree_ship_transport_argument():
+    """Exchange.tree_ship(transport=...) returns the reconstructed dense
+    layout: active entries at their transposed position, stale as zeros."""
+    rng = np.random.default_rng(6)
+    ex = LocalExchange(4)
+    x = jnp.asarray(rng.normal(size=(4, 4, 24)).astype(np.float32))
+    flags = jnp.zeros((4, 4, 24), bool).at[:, :, ::5].set(True)
+    pol = TransportPolicy("ragged", cap=8, cap_rounding=4)
+    got = ex.tree_ship({"x": x}, active=flags, transport=pol)["x"]
+    want = np.where(np.swapaxes(np.asarray(flags), 0, 1),
+                    np.swapaxes(np.asarray(x), 0, 1), 0)
+    np.testing.assert_array_equal(np.asarray(got), want)
+
+
+# ---------------------------------------------------------------------------
+# Byte accounting: bytes_shipped vs bytes_accounted
+# ---------------------------------------------------------------------------
+def test_shipmetrics_backward_compat_alias():
+    m = ShipMetrics(0, jnp.int32(1), jnp.int32(1), jnp.float32(42))
+    assert float(m.bytes_on_wire) == 42.0       # the PR-3 accounting field
+    assert float(m.bytes_accounted) == 42.0
+    assert float(m.bytes_shipped) == 0.0
+    leaves, treedef = jax.tree.flatten(m)
+    m2 = jax.tree.unflatten(treedef, leaves)
+    assert float(m2.bytes_on_wire) == 42.0
+
+
+def test_shipped_matches_accounted_on_balanced_masks():
+    """The acceptance geometry: with every destination carrying the same
+    active count (contiguous prefix), the ragged payload matches the delta
+    ACCOUNTING within one capacity block per destination; the slot-index
+    and count wire is the transport's only other cost."""
+    nl = p = 4
+    k = 256
+    rng = np.random.default_rng(8)
+    tree = {"x": jnp.asarray(rng.normal(size=(nl, p, k)).astype(np.float32))}
+    ex = with_wire(LocalExchange(4), W.make_codec("f32", delta=True))
+    for c in (16, 32, 48, 96):
+        flags = jnp.zeros((nl, p, k), bool).at[:, :, :c].set(True)
+        cap = T.round_capacity(TransportPolicy("ragged"), c)
+        pol = TransportPolicy("ragged", cap=cap)
+        _, _, info = T.ship_transport(ex, tree, flags, policy=pol)
+        assert float(info.ragged) == 1.0
+        accounted = float(W.bytes_on_wire(tree, ex.codec, flags))
+        idx_wire = nl * p * (cap * T.index_dtype(k).itemsize + 4)
+        payload = float(info.bytes_shipped) - idx_wire
+        # payload within one 32-element f32 capacity block per destination
+        assert abs(payload - accounted) <= nl * p * 32 * 4, (c, payload,
+                                                             accounted)
+    # and shipped bytes drop monotonically with the active count
+    shipped = []
+    for c in (96, 48, 32, 16):
+        flags = jnp.zeros((nl, p, k), bool).at[:, :, :c].set(True)
+        pol = TransportPolicy("ragged",
+                              cap=T.round_capacity(TransportPolicy("ragged"),
+                                                   c))
+        _, _, info = T.ship_transport(ex, tree, flags, policy=pol)
+        shipped.append(float(info.bytes_shipped))
+    assert shipped == sorted(shipped, reverse=True)
+
+
+def test_ragged_wire_bytes_formula():
+    nl = p = 2
+    k, cap = 64, 16
+    tree = {"x": jnp.zeros((nl, p, k), jnp.float32)}
+    got = T.ragged_wire_bytes(tree, None, None, cap)
+    # f32 payload + int8-indexable k=64 route (int8 wire) + int32 counts
+    assert got == nl * p * (cap * 4 + cap * 1 + 4)
+    c8 = W.make_codec("int8")
+    got8 = T.ragged_wire_bytes(tree, c8, None, cap)
+    # int8 payload + 1 scale byte per 32-block (cap=16 -> 1 block)
+    assert got8 == nl * p * (cap * 1 + 1 + cap * 1 + 4)
+
+
+# ---------------------------------------------------------------------------
+# End-to-end differentials under LocalExchange (SPMD half in spmd_check.py)
+# ---------------------------------------------------------------------------
+def test_delta_pagerank_auto_transport_bit_exact():
+    """Transports change bytes, never values: delta PageRank through the
+    auto plan (which goes ragged as the active set shrinks) is bit-for-bit
+    the dense run, and ragged supersteps ship fewer bytes."""
+    gd = rmat(8, 6, seed=0)
+    g = Graph.from_edges(gd.src, gd.dst, num_partitions=4)
+    tp = TransportPolicy("auto", cap_rounding=8, enter_frac=0.95,
+                         exit_frac=0.97)
+    r_d = alg.pagerank(g, num_iters=20, tol=1e-3, track_metrics=True)
+    r_r = alg.pagerank(g, num_iters=20, tol=1e-3, track_metrics=True,
+                       transport=tp)
+    np.testing.assert_array_equal(np.asarray(r_d.graph.vdata["pr"]),
+                                  np.asarray(r_r.graph.vdata["pr"]))
+    ragged_steps = [m for m in r_r.metrics if m["transport"] == "ragged"]
+    assert ragged_steps, "auto plan never went ragged"
+    dense_shipped = max(m["bytes_shipped"] for m in r_r.metrics
+                       if m["transport"] == "dense")
+    assert all(m["bytes_shipped"] < dense_shipped or m["ragged"] == 0.0
+               for m in ragged_steps)
+
+
+def test_cc_ragged_transport_bit_exact_vs_union_find():
+    """Connected components through the ragged transport (int8 codec +
+    delta): labels bit-exact vs the plain dense run AND the union-find
+    oracle — the min-label loop converges region by region, so the auto
+    plan flips to ragged mid-run."""
+    gd = symmetrize(rmat(6, 4, seed=2))
+    sg = Graph.from_edges(gd.src, gd.dst, num_partitions=4)
+    r0 = alg.connected_components(sg)
+    sgw = sg.replace(ex=with_wire(sg.ex, "int8", delta=True))
+    tp = TransportPolicy("auto", cap_rounding=8, enter_frac=0.9,
+                         exit_frac=0.95)
+    r8 = alg.connected_components(sgw, transport=tp, track_metrics=True)
+    np.testing.assert_array_equal(np.asarray(r0.graph.vdata["cc"]),
+                                  np.asarray(r8.graph.vdata["cc"]))
+    mask = np.asarray(sg.vmask)
+    vids = np.asarray(sg.s.home_vid)[mask]
+    want = alg.connected_components_reference(gd.src, gd.dst, vids)
+    got = dict(zip(vids.tolist(),
+                   np.asarray(r8.graph.vdata["cc"])[mask].tolist()))
+    assert got == want
+    assert any(m["transport"] == "ragged" for m in r8.metrics)
+
+
+def test_mr_triplets_forced_ragged_overflow_falls_back_dense():
+    """kind='ragged' with a capacity the route cannot honour must still be
+    correct: the traced overflow check takes the dense branch."""
+    gd = rmat(6, 4, seed=1)
+    g = Graph.from_edges(gd.src, gd.dst, num_partitions=4)
+    g = g.mapV(lambda vid, v: {"x": jnp.float32(1.0)})
+
+    def send(sv, ev, dv):
+        return {"m": sv["x"]}
+    want, we, _, _ = mr_triplets(g, send, "sum", kernel_mode="unfused")
+    pol = TransportPolicy("ragged", cap=4, cap_rounding=4)
+    got, ge, _, m = mr_triplets(g, send, "sum", kernel_mode="unfused",
+                                transport=pol)
+    np.testing.assert_array_equal(np.asarray(got["m"]), np.asarray(want["m"]))
+    np.testing.assert_array_equal(np.asarray(ge), np.asarray(we))
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis layer (dev dependency; deterministic sweeps above always run)
+# ---------------------------------------------------------------------------
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=25, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1),
+           density=st.floats(0.0, 1.0),
+           cap=st.sampled_from([4, 8, 12, 16]))
+    def test_hypothesis_roundtrip_contract(seed, density, cap):
+        """For ANY mask and capacity, recv == dense reference wherever
+        recv_flags, and recv_flags is exactly the transposed mask."""
+        rng = np.random.default_rng(seed)
+        tree = _route_tree(rng, nl=2, p=2, k=16)
+        flags = jnp.asarray(rng.random((2, 2, 16)) < density)
+        ex = LocalExchange(2)
+        pol = TransportPolicy("ragged", cap=cap, cap_rounding=4)
+        recv, rf, info = T.ship_transport(ex, tree, flags, policy=pol)
+        want_rf = np.swapaxes(np.asarray(flags), 0, 1)
+        np.testing.assert_array_equal(np.asarray(rf), want_rf)
+        ref = {kk: np.swapaxes(np.asarray(v), 0, 1) for kk, v in tree.items()}
+        for kk, v in recv.items():
+            got = np.asarray(v)
+            m = want_rf.reshape(want_rf.shape + (1,) * (got.ndim - 3))
+            np.testing.assert_array_equal(np.where(m, got, 0),
+                                          np.where(m, ref[kk], 0))
+        want_ragged = float(np.asarray(flags).sum(-1).max() <= cap)
+        assert float(info.ragged) == want_ragged
