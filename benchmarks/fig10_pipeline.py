@@ -19,10 +19,53 @@ import tempfile
 import time
 
 import numpy as np
+import jax
 
 from repro.core import Graph, algorithms as alg
+from repro.core import transport as transport_mod
 
 from .common import datasets
+
+
+def analytics_tail(graph, *, reuse: bool, thresh: float):
+    """The pipeline's graph-analytics TAIL: rank-mass flow -> restrict to
+    high-rank vertices -> rank-mass among them.  Three operator stages on
+    the PageRank result, with per-stage `bytes_shipped` read off the
+    graph's wire log (DESIGN.md §3.1).
+
+    reuse=True chains on the graph as Pregel left it — the graph-resident
+    view carries `deg` (and the visibility state) across every stage
+    boundary, so only dirty leaves ship; reuse=False strips the view
+    before each consumer, which is exactly what a unified engine WITHOUT
+    cross-operator view maintenance (the PR-4 state of this repo) pays.
+    Shared by benchmarks/fig10_pipeline.py and the tier-1 pipeline smoke
+    (tests/test_pipeline.py): the two variants must agree bit-exactly
+    while reuse moves strictly fewer bytes."""
+    strip = (lambda x: x) if reuse else (lambda x: x.replace(view=None))
+    g = strip(graph)
+
+    def send_mass(sv, ev, dv):
+        return {"m": sv["pr"] / sv["deg"] * ev["w"]}
+
+    stages, b_prev = [], float(g.bytes_shipped)
+    transport_mod.SHIP_EVENTS.clear()
+    mass, _, g, _ = g.mrTriplets(send_mass, "sum")
+    b = float(g.bytes_shipped)
+    stages.append(round(b - b_prev))
+    b_prev = b
+    g = strip(g).subgraph(vpred=lambda vid, v: v["pr"] > thresh)
+    b = float(g.bytes_shipped)
+    stages.append(round(b - b_prev))
+    b_prev = b
+    g = strip(g)
+    top_mass, _, g, _ = g.mrTriplets(send_mass, "sum")
+    stages.append(round(float(g.bytes_shipped) - b_prev))
+    ships = len(transport_mod.SHIP_EVENTS)
+    return mass, top_mass, g, {
+        "stage_bytes_shipped": stages,
+        "total_bytes_shipped": sum(stages),
+        "route_ships": ships,
+    }
 
 
 def _parse(lines):
@@ -131,6 +174,32 @@ def run(quick: bool = True) -> list[dict]:
         top = sorted(ranks.items(), key=lambda kv: -kv[1])[:20]
         top_composed = [(titles2.get(k, "?"), p) for k, p in top]
         t_stage3 = time.perf_counter() - t0
+
+    # ------- graph-resident view reuse (§3.1): the analytics tail -----------
+    # Third pipeline variant: the SAME post-PageRank analytics chain run
+    # with the graph-resident view carried across operator boundaries
+    # ("unified+view-reuse") vs stripped before every consumer — the PR-4
+    # unified engine, which re-materialised the replicated view per
+    # operator ("unified-cold-view").  bytes_shipped per stage is the
+    # composed-systems penalty the paper's Fig 10 measures, here at
+    # operator instead of system granularity.
+    thresh = float(np.quantile(vals["pr"], 0.5))
+    tails = {}
+    for variant, reuse in (("unified+view-reuse", True),
+                           ("unified-cold-view", False)):
+        t0 = time.perf_counter()
+        mass, top_mass, _, acct = analytics_tail(res.graph, reuse=reuse,
+                                                 thresh=thresh)
+        jax.block_until_ready(top_mass["m"])
+        tails[reuse] = (np.asarray(mass["m"]), np.asarray(top_mass["m"]),
+                        acct)
+        rows.append({"benchmark": "fig10_pipeline", "variant": variant,
+                     "tail_s": round(time.perf_counter() - t0, 3), **acct})
+    # caching changes ships, never values — and strictly fewer bytes
+    assert np.array_equal(tails[True][0], tails[False][0])
+    assert np.array_equal(tails[True][1], tails[False][1])
+    assert (tails[True][2]["total_bytes_shipped"]
+            < tails[False][2]["total_bytes_shipped"]), tails
 
     composed_total = t_stage1 + t_stage2 + t_stage3
     rows.append({"benchmark": "fig10_pipeline", "variant": "composed",

@@ -139,6 +139,27 @@ def run(quick: bool = True) -> list[dict]:
                  **cc_fused_vs_unfused(gd),
                  "note": "int32 min-label Pregel loop (exact f32 staging)"})
 
+    # ---- §4.3 direction-widening reuse on the wire (DESIGN.md §3.1) --------
+    # A consumer needing "src" fills the src routes; a later consumer
+    # needing "both" on the warm graph ships ONLY the dst routes — against
+    # a cold graph paying the full union ship.  Static wire bytes isolate
+    # the structural effect (route width), bytes_shipped what really moved.
+    _, _, g_warm, m_src = g.mrTriplets(send, "sum", kernel_mode="ref")
+    _, _, _, m_widen = g_warm.mrTriplets(send, "sum", kernel_mode="ref",
+                                         force_need="both")
+    _, _, _, m_cold = g.replace(view=None).mrTriplets(
+        send, "sum", kernel_mode="ref", force_need="both")
+    rows.append({"benchmark": "op_micro", "op": "direction_widening",
+                 "src_fill_wire_bytes": int(m_src["fwd"].wire_bytes),
+                 "widen_dst_wire_bytes": int(m_widen["fwd"].wire_bytes),
+                 "cold_both_wire_bytes": int(m_cold["fwd"].wire_bytes),
+                 "widen_saves_pct": round(
+                     100 * (1 - m_widen["fwd"].wire_bytes
+                            / max(m_cold["fwd"].wire_bytes, 1)), 1),
+                 "note": "warm 'src' view + 'both' need ships only the dst "
+                         "routes (graph-resident view, §3.1)"})
+    assert m_widen["fwd"].wire_bytes < m_cold["fwd"].wire_bytes
+
     # ---- wire codec matrix (DESIGN.md §2.1) --------------------------------
     # f32/bf16/int8/fp8 x delta on/off with the bytes_on_wire column: the
     # per-block-scale int8 wire must ship <= 1/3 of the f32 bytes (asserted

@@ -3,22 +3,24 @@ from .collections import Col, shuffle_by_key
 from .exchange import (Exchange, LocalExchange, SpmdExchange, pack_bf16,
                        with_wire)
 from .graph import Graph, StructArrays
-from .mrtriplets import ViewCache, mr_triplets, ship_to_mirrors
+from .mrtriplets import ShipMetrics, ViewCache, mr_triplets, ship_to_mirrors
 from .partition import GraphStructure, build_structure, PARTITIONERS
 from .pregel import pregel, pregel_fused, PregelResult
 from .transport import (TransportPolicy, resolve_transport, ship_transport,
                         TRANSPORT_NAMES)
+from .view import GraphView, WireLog, refresh_view
 from .wire import WireCodec, make_codec, CODEC_NAMES
 from . import algorithms
-from .analysis import analyze_message_fn, TripletDeps
+from .analysis import analyze_message_fn, analyze_rewrites, TripletDeps
 
 __all__ = [
     "Col", "shuffle_by_key", "Exchange", "LocalExchange", "SpmdExchange",
     "pack_bf16", "with_wire", "WireCodec", "make_codec", "CODEC_NAMES",
     "TransportPolicy", "resolve_transport", "ship_transport",
     "TRANSPORT_NAMES",
-    "Graph", "StructArrays", "ViewCache", "mr_triplets",
+    "Graph", "StructArrays", "GraphView", "WireLog", "refresh_view",
+    "ShipMetrics", "ViewCache", "mr_triplets",
     "ship_to_mirrors", "GraphStructure", "build_structure", "PARTITIONERS",
     "pregel", "pregel_fused", "PregelResult", "algorithms",
-    "analyze_message_fn", "TripletDeps",
+    "analyze_message_fn", "analyze_rewrites", "TripletDeps",
 ]

@@ -25,11 +25,27 @@ IMAX = jnp.int32(2**31 - 1)
 # PageRank (paper Listings 1/2; evaluation §5.1)
 # --------------------------------------------------------------------------
 def attach_out_degree(g: Graph, kernel_mode: str = "auto") -> Graph:
-    """Degree count is the paper's 0-way-join mrTriplets (§4.5.2)."""
-    deg, _ = g.degrees("out", kernel_mode=kernel_mode)
-    vdata = dict(g.vdata) if isinstance(g.vdata, dict) else {"v": g.vdata}
-    vdata = {**vdata, "deg": jnp.maximum(deg, 1.0)}
-    return g.replace(vdata=vdata)
+    """Degree count is the paper's 0-way-join mrTriplets (§4.5.2).
+
+    View-preserving (§3.1): only the `deg` leaf is (re)computed — a warm
+    graph entering PageRank from an operator chain keeps every OTHER
+    mirror it already shipped.  `deg` itself is excluded from the
+    passthrough certificate: a pre-existing deg property is overwritten
+    here (and the overwrite can produce different values, e.g. after a
+    subgraph restriction), so its mirror must go dirty, not stay clean."""
+    from . import view as view_mod
+    from .graph import _degree_msg
+    # the method call (not bare degrees()) keeps the graph lineage: the
+    # degree aggregation's wire traffic lands in the pipeline wire log
+    vals, exists, g, _ = g.mrTriplets(_degree_msg, "sum", to="src",
+                                      kernel_mode=kernel_mode)
+    deg = jnp.where(exists, vals["deg"], 0.0)
+    old = g.vdata if isinstance(g.vdata, dict) else {"v": g.vdata}
+    vdata = {**old, "deg": jnp.maximum(deg, 1.0)}
+    view = view_mod.view_after_rewrite(
+        g.view, old, vdata, view_mod.keep_through(old, exclude=("deg",)),
+        None)
+    return g.replace(vdata=vdata, view=view)
 
 
 def pagerank(g: Graph, *, num_iters: int = 20, reset: float = 0.15,

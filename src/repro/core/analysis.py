@@ -45,6 +45,16 @@ class TripletDeps:
         """Width of the physical join after elimination (paper Fig. 5)."""
         return 1 + int(self.uses_src) + int(self.uses_dst)
 
+    def read_leaf_mask(self, nleaves: int) -> tuple[bool, ...] | None:
+        """Per-flat-vdata-leaf 'the UDF reads this leaf through either
+        side' mask, or None when unknown (trace failed / leaf count
+        mismatch) — the shared derivation behind property-level join
+        elimination in mapE, subgraph(epred) and mr_triplets."""
+        if self.src_leaves is None or len(self.src_leaves) != nleaves:
+            return None
+        return tuple(su or du for su, du in
+                     zip(self.src_leaves, self.dst_leaves))
+
 
 def _used_invars(jaxpr: jcore.Jaxpr) -> set[jcore.Var]:
     """Backward slice: which invars can reach any output."""
@@ -62,6 +72,48 @@ def _used_invars(jaxpr: jcore.Jaxpr) -> set[jcore.Var]:
                 if isinstance(v, jcore.Var):
                     needed.add(v)
     return needed
+
+
+def analyze_rewrites(
+    fn: Callable[..., Any],
+    args_example: tuple,
+    v_argnum: int,
+) -> dict | None:
+    """Which output leaves does a vertex-property rewrite PASS THROUGH?
+
+    Traces `fn(*args_example)` and reports, for every leaf of the output
+    pytree, whether it is provably the SAME value as the same-path leaf of
+    the vertex-property argument (`args_example[v_argnum]`): the jaxpr
+    output variable IS that input variable, untouched by any equation.
+    This is the static analysis behind per-leaf dirty tracking (DESIGN.md
+    §3.1): `mapV(lambda vid, v: {**v, "pr": ...})` rewrites only `pr`, so
+    only `pr`'s mirror goes stale — the other leaves keep their clean,
+    already-shipped view.
+
+    Returns {output_leaf_path: bool} keyed by `tree_flatten_with_path`
+    paths, or None when the trace fails (callers must then treat every
+    leaf as rewritten).  Leaves whose path does not exist in the input are
+    reported False (new property -> cold).  Sound, never complete: a copy
+    the tracer cannot see through is reported as a rewrite, which costs
+    bytes, never correctness.
+    """
+    try:
+        closed, out_shape = jax.make_jaxpr(fn, return_shape=True)(
+            *args_example)
+    except Exception:
+        return None
+    jaxpr = closed.jaxpr
+    flat_args = [jax.tree.flatten(a)[0] for a in args_example]
+    off = sum(len(f) for f in flat_args[:v_argnum])
+    v_paths = jax.tree_util.tree_flatten_with_path(args_example[v_argnum])[0]
+    v_var_of = {path: jaxpr.invars[off + i]
+                for i, (path, _) in enumerate(v_paths)}
+    out_paths = jax.tree_util.tree_flatten_with_path(out_shape)[0]
+    if len(out_paths) != len(jaxpr.outvars):
+        return None
+    return {path: (isinstance(ov, jcore.Var)
+                   and v_var_of.get(path) is ov)
+            for (path, _), ov in zip(out_paths, jaxpr.outvars)}
 
 
 def analyze_message_fn(

@@ -27,6 +27,13 @@ scaled int8/fp8 quantization, lossless small-int packing, plain bf16
 narrowing), moves the narrow payload plus its block scales through the
 collective, and decodes on the receive side — both conversions behind
 `optimization_barrier` so XLA cannot re-widen the collective.
+
+Layering above this interface (who decides WHAT reaches `ship`): the
+transport (`core/transport.py`, §2.1.1) decides how a routed buffer moves
+(dense vs ragged-compacted), and the graph-resident view (`core/view.py`,
+§3.1) decides which leaves and rows need to move at all — per-leaf dirty
+tracking turns an operator chain's exchanges into deltas, so by the time a
+buffer reaches this layer it is already the minimal routed set.
 """
 from __future__ import annotations
 

@@ -30,9 +30,11 @@ import jax.numpy as jnp
 from . import partition as part_mod
 from .collections import Col
 from .exchange import Exchange, LocalExchange
-from .mrtriplets import ViewCache, mr_triplets, ship_to_mirrors
+from .mrtriplets import mr_triplets
 from .tree import elem_spec, gather_rows, tree_where, vmap2
 from . import analysis
+from . import view as view_mod
+from .view import GraphView, WireLog
 
 
 @jax.tree_util.register_pytree_node_class
@@ -112,6 +114,15 @@ class Graph:
     vmask: jnp.ndarray       # [P, V_blk] visibility bitmask (subgraph view)
     emask: jnp.ndarray       # [P, E_blk]
     active: jnp.ndarray      # [P, V_blk] changed-since-last-ship (§4.5.1)
+    # graph-resident replicated vertex view (DESIGN.md §3.1): the
+    # materialized mirror + per-leaf dirty state that lets operator CHAINS
+    # delta-ship, not just the Pregel loop.  None = cold (first consumer
+    # pays a full ship).  Mutators mark dirtiness; consumers read through
+    # `core.view.refresh_view`.
+    view: GraphView = dataclasses.field(default=None)
+    # pipeline-level wire-traffic accumulators ([nl]-shaped, see WireLog);
+    # None = untracked (hand-rolled graphs).
+    wire_log: WireLog = dataclasses.field(default=None)
     ex: Exchange = dataclasses.field(default=None)          # static
     host: part_mod.GraphStructure = dataclasses.field(default=None)  # static
     # STATIC "vmask == home_mask" certificate: True only for graphs whose
@@ -123,14 +134,49 @@ class Graph:
 
     def tree_flatten(self):
         return ((self.s, self.vdata, self.edata, self.vmask, self.emask,
-                 self.active), (self.ex, self.host, self.vmask_full))
+                 self.active, self.view, self.wire_log),
+                (self.ex, self.host, self.vmask_full))
 
     @classmethod
     def tree_unflatten(cls, aux, children):
         return cls(*children, ex=aux[0], host=aux[1], vmask_full=aux[2])
 
     def replace(self, **kw) -> "Graph":
+        """dataclasses.replace with view hygiene: rewriting `vdata` or
+        `vmask` WITHOUT saying what happened to the view invalidates it —
+        the generic escape hatch must never leave a stale mirror marked
+        clean.  The operator methods below always pass `view=` explicitly
+        (that is the whole point: they know exactly what they dirtied)."""
+        if ("vdata" in kw or "vmask" in kw) and "view" not in kw:
+            kw["view"] = None
         return dataclasses.replace(self, **kw)
+
+    # ------------------------------------------------ pipeline wire metrics
+    @property
+    def ships(self):
+        """Routed collectives this graph's lineage has executed (0 when
+        untracked)."""
+        return (jnp.float32(0) if self.wire_log is None
+                else self.wire_log.ships.sum())
+
+    @property
+    def bytes_shipped(self):
+        return (jnp.float32(0) if self.wire_log is None
+                else self.wire_log.bytes_shipped.sum())
+
+    @property
+    def bytes_accounted(self):
+        return (jnp.float32(0) if self.wire_log is None
+                else self.wire_log.bytes_accounted.sum())
+
+    def _after_refresh(self, view, m, n_ships: int) -> "Graph":
+        """Attach a refreshed view + account its traffic in the wire log."""
+        log = self.wire_log
+        if log is not None and (n_ships or m is not None):
+            log = log.add(n_ships,
+                          m.bytes_shipped if m is not None else 0.0,
+                          m.bytes_accounted if m is not None else 0.0)
+        return self.replace(view=view, wire_log=log)
 
     # ------------------------------------------------------------- builders
     @staticmethod
@@ -202,6 +248,7 @@ class Graph:
             vmask=s.home_mask,
             emask=s.edge_mask,
             active=jnp.asarray(host.home_mask),
+            wire_log=WireLog.zeros(p),
             ex=ex or LocalExchange(p), host=host,
             vmask_full=True)
 
@@ -222,81 +269,118 @@ class Graph:
 
     def triplets(self):
         """The three-way join (§3.2): per-edge (src_vid, dst_vid, src_vals,
-        edata, dst_vals, mask).  Ships the full replicated view."""
-        view, _ = ship_to_mirrors(self.s, self.vdata, "both", self.ex)
+        edata, dst_vals, mask).  Reads THROUGH the graph-resident view
+        (§3.1): a warm graph — e.g. straight after `subgraph`, which just
+        shipped both visibility and properties — gathers from the cached
+        mirror without a single route collective; only dirty leaves /
+        missing directions ship."""
+        view, mirror, vis_m, _, _ = view_mod.refresh_view(
+            self, "both", with_vis=not self.vmask_full)
         svid, dvid, edata, mask = self.edges()
-        svals = gather_rows(view.mirror, self.s.src_slot)
-        dvals = gather_rows(view.mirror, self.s.dst_slot)
+        svals = gather_rows(mirror, self.s.src_slot)
+        dvals = gather_rows(mirror, self.s.dst_slot)
         # visibility: both endpoints visible
-        vis = self._edge_visibility(view)
+        if self.vmask_full:
+            vis = self.emask
+        else:
+            svis = gather_rows({"v": vis_m}, self.s.src_slot)["v"]
+            dvis = gather_rows({"v": vis_m}, self.s.dst_slot)["v"]
+            vis = svis & dvis
         return svid, dvid, svals, edata, dvals, mask & vis
 
-    def _edge_visibility(self, view=None) -> jnp.ndarray:
-        """Edges whose endpoints are both visible under the vertex bitmask.
-
-        The fast path is STRUCTURAL, not value-based: `vmask_full` is static
-        pytree metadata (True from from_edges, cleared by the two operators
-        that restrict vmask), so it keeps deciding inside jit where array
-        values are tracers (a `bool(jnp.all(...))` here would raise
-        TracerBoolConversionError) and object identity is lost."""
-        if self.vmask_full:
-            return self.emask
-        vis_view, _ = ship_to_mirrors(
-            self.s, {"vis": self.vmask}, "both", self.ex)
-        svis = gather_rows(vis_view.mirror, self.s.src_slot)["vis"]
-        dvis = gather_rows(vis_view.mirror, self.s.dst_slot)["vis"]
-        return svis & dvis
-
     # ----------------------------------------------------------- transforms
-    def mapV(self, f: Callable) -> "Graph":
+    def mapV(self, f: Callable, *, changed=None) -> "Graph":
         """f(vid, vval) -> vval'; structure and indexes reused (§4.3).
 
         May change the vertex property TYPE (Graph[V,E] -> Graph[V2,E]), so
         the new values apply everywhere; hidden vertices stay hidden via the
-        bitmask, not via stale data."""
-        return self.replace(vdata=vmap2(f)(self.s.home_vid, self.vdata))
+        bitmask, not via stale data.
+
+        View lifecycle (§3.1): the graph-resident mirror is NOT discarded —
+        jaxpr analysis finds the leaves `f` provably passes through
+        (`{**v, "pr": ...}` rewrites only `pr`) and only the rewritten
+        leaves go dirty.  `changed` narrows the dirty ROWS: None marks all
+        (conservative), "diff" value-compares old vs new per leaf, a
+        callable `changed(old_vval, new_vval) -> bool` is the caller's
+        per-vertex certificate — a transform touching 1% of vertices then
+        re-ships 1%."""
+        new_vdata = vmap2(f)(self.s.home_vid, self.vdata)
+        rewrites = analysis.analyze_rewrites(
+            f, (jax.ShapeDtypeStruct((), self.s.home_vid.dtype),
+                elem_spec(self.vdata)), 1)
+        view = view_mod.view_after_rewrite(
+            self.view, self.vdata, new_vdata, rewrites, changed)
+        return self.replace(vdata=new_vdata, view=view)
 
     def mapE(self, f: Callable) -> "Graph":
-        """f(src_vval, eval, dst_vval) -> eval'; join-eliminated shipping."""
+        """f(src_vval, eval, dst_vval) -> eval'; join-eliminated shipping
+        through the graph-resident view — only dirty/missing vertex leaves
+        among those `f` reads are shipped (§3.1)."""
         vex, eex = elem_spec(self.vdata), elem_spec(self.edata)
         deps = analysis.analyze_message_fn(f, vex, eex, vex)
         need = ("both" if deps.uses_src and deps.uses_dst
                 else "src" if deps.uses_src
                 else "dst" if deps.uses_dst else None)
+        view = self.view
+        m, n_ships = None, 0
         if need is None:
             zeros = jax.tree.map(
                 lambda x: jnp.zeros((self.s.p, self.s.e_blk) + x.shape[2:], x.dtype),
                 self.vdata)
             svals = dvals = zeros
         else:
-            view, _ = ship_to_mirrors(self.s, self.vdata, need, self.ex)
-            svals = gather_rows(view.mirror, self.s.src_slot)
-            dvals = gather_rows(view.mirror, self.s.dst_slot)
-        return self.replace(edata=vmap2(f)(svals, self.edata, dvals))
+            leaf_mask = deps.read_leaf_mask(len(jax.tree.leaves(self.vdata)))
+            view, mirror, _, m, n_ships = view_mod.refresh_view(
+                self, need, leaf_mask=leaf_mask)
+            svals = gather_rows(mirror, self.s.src_slot)
+            dvals = gather_rows(mirror, self.s.dst_slot)
+        g = self._after_refresh(view, m, n_ships)
+        return g.replace(edata=vmap2(f)(svals, self.edata, dvals))
 
     def leftJoin(self, other: Col, f: Callable | None = None,
-                 capacity: int | None = None) -> "Graph":
+                 capacity: int | None = None, *, changed=None) -> "Graph":
         """Merge a vertex property collection into the graph (Listing 4).
 
         f(vval, other_val, found) -> vval'.  Default keeps a tuple.  Only the
         input collection is shuffled (§4.4): it is re-keyed to the vertex
         home partitioning and merge-joined against the sorted home index.
-        """
+
+        The graph-resident view survives by leaf path: passthrough leaves
+        stay clean, rewritten leaves go dirty (`changed` as in mapV — a
+        sparse join with `changed="diff"` re-ships only the rows it hit),
+        newly-joined leaves start cold."""
         joined, ovf = self._join_to_homes(other, capacity)
         ovals, found = joined
         if f is None:
             f = lambda v, o, hit: (v, o, hit)
-        return self.replace(vdata=vmap2(f)(self.vdata, ovals, found))
+        new = vmap2(f)(self.vdata, ovals, found)
+        rewrites = analysis.analyze_rewrites(
+            f, (elem_spec(self.vdata), elem_spec(ovals),
+                jax.ShapeDtypeStruct((), jnp.bool_)), 0)
+        view = view_mod.view_after_rewrite(
+            self.view, self.vdata, new, rewrites, changed)
+        return self.replace(vdata=new, view=view)
 
     def innerJoin(self, other: Col, f: Callable | None = None,
-                  capacity: int | None = None) -> "Graph":
-        """leftJoin that also hides unmatched vertices via the bitmask."""
+                  capacity: int | None = None, *, changed=None) -> "Graph":
+        """leftJoin that also hides unmatched vertices via the bitmask.
+        Dirties the visibility leaf only where a vertex actually
+        disappeared; property leaves follow the leftJoin rules."""
         joined, ovf = self._join_to_homes(other, capacity)
         ovals, found = joined
         if f is None:
             f = lambda v, o, hit: (v, o)
-        new = vmap2(lambda v, o, hit: f(v, o, hit))(self.vdata, ovals, found)
-        return self.replace(vdata=new, vmask=self.vmask & found,
+        fn = lambda v, o, hit: f(v, o, hit)
+        new = vmap2(fn)(self.vdata, ovals, found)
+        rewrites = analysis.analyze_rewrites(
+            fn, (elem_spec(self.vdata), elem_spec(ovals),
+                 jax.ShapeDtypeStruct((), jnp.bool_)), 0)
+        view = view_mod.view_after_rewrite(
+            self.view, self.vdata, new, rewrites, changed)
+        vmask = self.vmask & found
+        if view is not None:
+            view = view.mark_vis(self.vmask & ~found)
+        return self.replace(vdata=new, vmask=vmask, view=view,
                             vmask_full=False)
 
     def _join_to_homes(self, other: Col, capacity: int | None):
@@ -324,26 +408,53 @@ class Graph:
     def subgraph(self, vpred: Callable | None = None,
                  epred: Callable | None = None) -> "Graph":
         """Bitmask-restricted view (§4.3): no structure rebuild, indexes
-        shared; retained edges satisfy epred AND both endpoint vpreds."""
+        shared; retained edges satisfy epred AND both endpoint vpreds.
+
+        View lifecycle (§3.1): restricting visibility dirties ONLY the
+        visibility leaf — and only at the rows whose bit actually flipped —
+        so the follow-up ship is a delta.  The visibility refresh and the
+        `epred` property refresh resolve through the same cache and FOLD
+        into one routed collective when both are cold (previously two
+        back-to-back full ships); `epred` additionally ships only the
+        vertex leaves it reads, and a `triplets()` on the result reuses the
+        just-shipped view outright."""
         vmask = self.vmask
+        view = self.view
         if vpred is not None:
             vmask = vmask & vmap2(vpred)(self.s.home_vid, self.vdata)
+            if view is not None:
+                view = view.mark_vis(self.vmask ^ vmask)
+        g = self.replace(vmask=vmask, view=view,
+                         active=self.active & vmask,
+                         vmask_full=self.vmask_full and vpred is None)
 
-        # ship new visibility to mirrors, restrict edges
-        vis_view, _ = ship_to_mirrors(self.s, {"vis": vmask}, "both", self.ex)
-        svis = gather_rows(vis_view.mirror, self.s.src_slot)["vis"]
-        dvis = gather_rows(vis_view.mirror, self.s.dst_slot)["vis"]
-        emask = self.emask & svis & dvis
-
+        # which vertex leaves does epred read?  (leaf-level join
+        # elimination for the property half of the ship)
+        nleaves = len(jax.tree.leaves(self.vdata))
         if epred is not None:
-            view, _ = ship_to_mirrors(self.s, self.vdata, "both", self.ex)
-            svals = gather_rows(view.mirror, self.s.src_slot)
-            dvals = gather_rows(view.mirror, self.s.dst_slot)
-            emask = emask & vmap2(epred)(svals, self.edata, dvals)
+            vex, eex = elem_spec(self.vdata), elem_spec(self.edata)
+            deps = analysis.analyze_message_fn(epred, vex, eex, vex)
+            leaf_mask = deps.read_leaf_mask(nleaves)
+        else:
+            leaf_mask = (False,) * nleaves
 
-        return self.replace(vmask=vmask, emask=emask,
-                            active=self.active & vmask,
-                            vmask_full=self.vmask_full and vpred is None)
+        with_vis = not g.vmask_full
+        if epred is None and not with_vis:
+            return g     # nothing to restrict against
+
+        view, mirror, vis_m, m, n_ships = view_mod.refresh_view(
+            g, "both", leaf_mask=leaf_mask, with_vis=with_vis)
+        emask = g.emask
+        if with_vis:
+            svis = gather_rows({"v": vis_m}, self.s.src_slot)["v"]
+            dvis = gather_rows({"v": vis_m}, self.s.dst_slot)["v"]
+            emask = emask & svis & dvis
+        if epred is not None:
+            svals = gather_rows(mirror, self.s.src_slot)
+            dvals = gather_rows(mirror, self.s.dst_slot)
+            emask = emask & vmap2(epred)(svals, self.edata, dvals)
+        g = g._after_refresh(view, m, n_ships)
+        return g.replace(emask=emask)
 
     def reverse(self) -> "Graph":
         """Transpose the graph: swap src/dst slots.  Edges were stored
@@ -382,16 +493,28 @@ class Graph:
                 cached._reversed = host
                 host._reversed = cached
             host = cached
-        return self.replace(s=s, host=host)
+        # the view REMAPS rather than invalidates (§3.1): mirror slots and
+        # values are direction-agnostic, only the "which routes are filled"
+        # labels swap roles with the tables.
+        view = None if self.view is None else self.view.remap_reverse()
+        return self.replace(s=s, host=host, view=view)
 
     # ------------------------------------------------------------ mrTriplets
     def mrTriplets(self, map_fn: Callable, reduce: str = "sum", *,
                    to: str = "dst", skip_stale: str | None = None,
-                   cache: ViewCache | None = None, kernel_mode: str = "auto",
+                   cache: GraphView | None = None, kernel_mode: str = "auto",
                    force_need: str | None = None,
                    payload_bound: int | None = None,
                    transport=None, transport_state=None):
         """See repro.core.mrtriplets.mr_triplets.
+
+        Returns (values, exists, graph', metrics): unlike the low-level
+        `mr_triplets` (which hands back the refreshed `GraphView`), the
+        METHOD hands back the graph carrying that view — so operator
+        chains compose naturally and the next consumer delta-ships:
+
+            vals, ok, g, m = g.mrTriplets(send, "sum")   # full ship
+            vals, ok, g, m = g.mrTriplets(send, "sum")   # zero fwd ships
 
         kernel_mode selects the physical execution strategy:
           "auto"      — fused triplet kernel when eligible (sum/min/max over
@@ -420,11 +543,14 @@ class Graph:
         transport_state carries the previous decision).  Transports change
         bytes, never values.
         """
-        return mr_triplets(self, map_fn, reduce, to=to, skip_stale=skip_stale,
-                           cache=cache, kernel_mode=kernel_mode,
-                           force_need=force_need, payload_bound=payload_bound,
-                           transport=transport,
-                           transport_state=transport_state)
+        values, exists, view, metrics = mr_triplets(
+            self, map_fn, reduce, to=to, skip_stale=skip_stale,
+            cache=cache, kernel_mode=kernel_mode,
+            force_need=force_need, payload_bound=payload_bound,
+            transport=transport, transport_state=transport_state)
+        g = self._after_refresh(view, metrics["fwd"].merge(metrics["back"]),
+                                metrics.get("ships", 0))
+        return values, exists, g, metrics
 
     def degrees(self, direction: str = "in", kernel_mode: str = "auto"):
         """Vertex degrees via a join-eliminated mrTriplets (the paper's

@@ -9,9 +9,13 @@ messages = map(triplets); result = reduceByKey(messages).  Physical plan here:
   2. *vertex shipping* — gather(route_send) → all_to_all → scatter(route_recv)
      materialises the replicated vertex view at the edge partitions (join
      site selection: vertices move to edges, never the reverse);
-  3. *incremental view maintenance* (§4.5.1) — with a `ViewCache`, only
-     vertices whose `active` bit is set are shipped; stale mirror slots keep
-     their previously materialised value;
+  3. *incremental view maintenance* (§4.5.1, graph-resident since PR 5 —
+     DESIGN.md §3.1) — the ship runs THROUGH `core.view.refresh_view`
+     against the graph's own `GraphView`: statically-clean leaves ship
+     nothing, dirty leaves ship their dirty rows, missing directions ship
+     their routes; stale mirror slots keep their previously materialised
+     value.  An explicit `cache=` argument restores the legacy contract
+     (g.active marks the changed rows for every shipped leaf);
   4. *edge-parallel map + local pre-aggregation* — messages are computed for
      live edges (`skipStale` masks edges whose relevant endpoint is stale,
      §4.6's index-scan at block granularity inside the Pallas kernel) and
@@ -65,7 +69,10 @@ _REDUCE_IDENTITY = {
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass(frozen=True)
 class ViewCache:
-    """Previously materialised replicated vertex view (§4.5.1)."""
+    """One ship's materialised view slice (§4.5.1) — the INTERNAL record
+    `ship_to_mirrors` consumes and produces.  The graph-resident,
+    per-leaf-tracked cache that operators carry between each other is
+    `core.view.GraphView` (DESIGN.md §3.1), which drives this type."""
 
     mirror: Any           # pytree [P, V_mir, ...]
     filled: jnp.ndarray   # [P, V_mir] bool — slot has ever been shipped
@@ -106,6 +113,29 @@ class ShipMetrics:
         """Backward-compat alias: the PR-3 accounting number."""
         return self.bytes_accounted
 
+    @classmethod
+    def zero(cls) -> "ShipMetrics":
+        """The no-ship element: what a statically-clean view refresh (zero
+        route collectives) reports, and merge()'s identity."""
+        return cls(0, jnp.int32(0), jnp.int32(0))
+
+    def merge(self, other: "ShipMetrics") -> "ShipMetrics":
+        """Combine the metrics of two route ships into one pipeline-level
+        record: byte and count fields add; `ragged` and the per-route
+        occupancy facts take the max (a merged record says "any ship
+        compacted" / "the fullest route looked like this"), which is the
+        conservative read for the host-side capacity planner."""
+        return ShipMetrics(
+            wire_bytes=self.wire_bytes + other.wire_bytes,
+            effective_bytes=self.effective_bytes + other.effective_bytes,
+            n_shipped=self.n_shipped + other.n_shipped,
+            bytes_accounted=self.bytes_accounted + other.bytes_accounted,
+            bytes_shipped=self.bytes_shipped + other.bytes_shipped,
+            ragged=jnp.maximum(self.ragged, other.ragged),
+            route_active_max=jnp.maximum(self.route_active_max,
+                                         other.route_active_max),
+            route_width=max(self.route_width, other.route_width))
+
     def tree_flatten(self):
         return ((self.effective_bytes, self.n_shipped, self.bytes_accounted,
                  self.bytes_shipped, self.ragged, self.route_active_max),
@@ -120,7 +150,8 @@ def _route_ship(ex: Exchange, sendbuf: Any, flags: jnp.ndarray, *,
                 bound: int | None, elem_bytes: int,
                 transport: transport_mod.TransportPolicy = transport_mod.DENSE,
                 prefer_ragged: jnp.ndarray | None = None,
-                recvflags: jnp.ndarray | None = None):
+                recvflags: jnp.ndarray | None = None,
+                label: str = "fwd"):
     """Move one routed [nl, P, K, ...] buffer + its freshness flags through
     the selected transport and account it — the single home for the
     active-mask/payload_bound threading that ship_to_mirrors and
@@ -132,6 +163,8 @@ def _route_ship(ex: Exchange, sendbuf: Any, flags: jnp.ndarray, *,
     (recvbuf, recvflags, ShipMetrics); recvbuf entries outside recvflags
     are unspecified (zeros) and must be masked by the consumer."""
     codec = ex.codec
+    transport_mod.record_ship(label, transport.kind,
+                              f"K={flags.shape[-1]}")
     recvbuf, rflags, info = transport_mod.ship_transport(
         ex, sendbuf, flags, bound=bound, policy=transport,
         prefer_ragged=prefer_ragged, recvflags=recvflags)
@@ -181,8 +214,10 @@ def ship_to_mirrors(
     # full ship: the flag pattern is STRUCTURAL (route padding), already
     # known at the receiver as recv_slot validity — the dense path skips
     # the flags collective entirely (one of the two forward a2a buffers).
-    structural = (recv_slot < s.v_mir) if (active is None and cache is None) \
-        else None
+    # This holds with or without a cache: active=None means every valid
+    # route entry is fresh (direction-widening ships into an existing view
+    # are full ships over the new routes).
+    structural = (recv_slot < s.v_mir) if active is None else None
     recvbuf, recvflags, metrics = _route_ship(
         ex, sendbuf, flags, bound=bound,
         elem_bytes=nbytes_of(jax.tree.map(lambda v: v[0, 0], values)),
@@ -251,7 +286,7 @@ def ship_aggregates_home(
         ex, backbuf, backflags, bound=bound,
         elem_bytes=nbytes_of(jax.tree.map(lambda v: v[0, 0], partial)),
         transport=transport_mod.resolve_transport(transport),
-        prefer_ragged=prefer_ragged)
+        prefer_ragged=prefer_ragged, label="back")
 
     v_blk = s.home_mask.shape[1]
     scatter_ops = {"sum": "add", "min": "min", "max": "max"}
@@ -591,10 +626,22 @@ def mr_triplets(
     transport: Any = None,           # dense|ragged|auto plan (§2.1.1)
     transport_state: jnp.ndarray | None = None,  # prev decision (hysteresis)
 ):
-    """Execute one mrTriplets. Returns (values, exists, new_cache, metrics).
+    """Execute one mrTriplets. Returns (values, exists, view, metrics).
 
     values: pytree [P, V_blk, ...] aggregated at vertex homes;
-    exists:  [P, V_blk] bool ("WHERE sum IS NOT null", §3.2).
+    exists:  [P, V_blk] bool ("WHERE sum IS NOT null", §3.2);
+    view:    the refreshed graph-resident `GraphView` (DESIGN.md §3.1) —
+    attach it (`g.replace(view=...)`, or use the `Graph.mrTriplets` method
+    which does) and the next consumer ships only dirty leaves / missing
+    directions; `metrics["ships_fwd"]` is the STATIC number of forward
+    route collectives this call emitted (0 on a clean view).
+
+    cache: explicit view override restoring the legacy §4.5.1 loop
+    contract — the supplied view plus `g.active` as the changed-row set
+    for every shipped leaf (eager loops that mutate vdata via `replace()`
+    and track changes themselves).  Without it, the graph's own `g.view`
+    (per-leaf dirty state maintained by the operators) drives the ship,
+    and a viewless graph full-ships.
 
     kernel_mode: "auto" (fused triplet kernel when eligible — Pallas on TPU,
     jnp oracle on CPU — else unfused), "pallas"/"interpret"/"ref" (force a
@@ -646,22 +693,52 @@ def mr_triplets(
 
     metrics: dict[str, Any] = {"join_arity": arity, "need": need or "none"}
 
+    # property-level join elimination (beyond §4.5.2): ship only the vdata
+    # LEAVES the UDF actually reads.  Unused leaves keep whatever the view
+    # holds (zeros when never shipped); since the UDF provably ignores
+    # them, XLA DCEs the gathers.
+    flat_vals, vtreedef = jax.tree.flatten(g.vdata)
+    leaf_mask = (None if force_need is not None
+                 else deps.read_leaf_mask(len(flat_vals)))
+    if leaf_mask is not None and (all(leaf_mask) or not any(leaf_mask)):
+        leaf_mask = None
+    metrics["shipped_leaves"] = (sum(leaf_mask) if leaf_mask
+                                 else len(flat_vals))
+
+    # view resolution (DESIGN.md §3.1): an explicit `cache=` restores the
+    # legacy loop-internal contract (g.active marks the changed rows);
+    # otherwise the GRAPH-RESIDENT view carries per-leaf dirty state across
+    # operator boundaries, and a cold graph full-ships.
+    from . import view as view_mod   # late import: view.py builds on us
+    if cache is not None and not isinstance(cache, view_mod.GraphView) \
+            and hasattr(cache, "view"):
+        # a Graph was passed (Graph.mrTriplets returns one in the cache
+        # position now): use the view it carries
+        cache = cache.view
+    legacy = cache is not None
+    graph_view = getattr(g, "view", None)
+    if not legacy and not view_mod.compatible(graph_view, g.vdata, nl,
+                                              s.v_mir):
+        graph_view = None
+
     # --- transport plan (§2.1.1): dense vs ragged for THIS superstep -------
-    # The ragged plan only pays off for incremental ships (a full ship has
-    # no stale entries to skip), so without a cache the plan is dense.  For
-    # "auto" the decision is the psummed active fraction against the
-    # hysteresis band — traced, mesh-uniform, carried across supersteps via
-    # transport_state (pregel_fused's while carry / pregel's host loop).
+    # The ragged plan only pays off for DELTA ships (a full ship has no
+    # stale entries to skip), so when no requested leaf may be dirty the
+    # plan is dense.  For "auto" the decision is the psummed dirty fraction
+    # against the hysteresis band — traced, mesh-uniform, carried across
+    # supersteps via transport_state (pregel_fused's while carry / pregel's
+    # host loop).
     tp = transport_mod.resolve_transport(transport)
-    ship_active = g.active if cache is not None else None
+    ship_rows = (g.active if legacy
+                 else view_mod.dirty_rows(graph_view, leaf_mask))
     prefer_ragged = None
     tstate_new = jnp.float32(0)
     if tp.kind == "auto":
-        if ship_active is None:
+        if ship_rows is None:
             tp = transport_mod.DENSE
         else:
-            frac = (ex.psum(ship_active.sum().astype(jnp.float32))
-                    / jnp.float32(max(s.p * ship_active.shape[1], 1)))
+            frac = (ex.psum(ship_rows.sum().astype(jnp.float32))
+                    / jnp.float32(max(s.p * ship_rows.shape[1], 1)))
             prev = (transport_state if transport_state is not None
                     else jnp.float32(0))
             thresh = jnp.where(prev > 0.5, jnp.float32(tp.exit_frac),
@@ -671,52 +748,29 @@ def mr_triplets(
     metrics["transport"] = tp.kind
     metrics["transport_state"] = tstate_new
 
-    # property-level join elimination (beyond §4.5.2): ship only the vdata
-    # LEAVES the UDF actually reads.  Unused leaves become zeros in the
-    # reconstructed view; since the UDF provably ignores them, XLA DCEs the
-    # zero gathers.
-    flat_vals, vtreedef = jax.tree.flatten(g.vdata)
-    leaf_mask = None
-    if (force_need is None and deps.src_leaves is not None
-            and len(deps.src_leaves) == len(flat_vals)):
-        leaf_mask = tuple(su or du for su, du in
-                          zip(deps.src_leaves, deps.dst_leaves))
-        if all(leaf_mask) or not any(leaf_mask):
-            leaf_mask = None
-    metrics["shipped_leaves"] = (sum(leaf_mask) if leaf_mask
-                                 else len(flat_vals))
-
-    def ship_values():
-        if leaf_mask is None:
-            return flat_vals
-        return [v for v, u in zip(flat_vals, leaf_mask) if u]
-
-    def rebuild_mirror(mirror_subset):
-        if leaf_mask is None:
-            return jax.tree.unflatten(vtreedef, mirror_subset)
-        it = iter(mirror_subset)
-        leaves = [next(it) if u
-                  else jnp.zeros((nl, s.v_mir) + v.shape[2:], v.dtype)
-                  for v, u in zip(flat_vals, leaf_mask)]
-        return jax.tree.unflatten(vtreedef, leaves)
-
-    # --- 1/2/3: ship the replicated vertex view (with incremental cache) ----
+    # --- 1/2/3: materialise the replicated view THROUGH the cache ----------
+    ships_fwd = 0
     if need is not None:
-        view, m_fwd = ship_to_mirrors(s, ship_values(), need, ex,
-                                      active=ship_active, cache=cache,
-                                      bound=bound, transport=tp,
-                                      prefer_ragged=prefer_ragged)
+        view, mirror_tree, _, m_fwd, ships_fwd = view_mod.refresh_view(
+            g, need, leaf_mask=leaf_mask, bound=bound, transport=tp,
+            prefer_ragged=prefer_ragged,
+            legacy_cache=cache if legacy else None)
         metrics["fwd"] = m_fwd
     else:
-        view = cache or ViewCache(
-            mirror=tree_zeros_like_elem(g.vdata, (nl, s.v_mir)),
-            filled=jnp.zeros((nl, s.v_mir), bool),
-            active=jnp.ones((nl, s.v_mir), bool))
-        metrics["fwd"] = ShipMetrics(0, jnp.int32(0), jnp.int32(0),
-                                     jnp.float32(0))
+        mirror_tree = None
+        if legacy:
+            view = cache
+        else:
+            # no vertex data read: NO delta information exists for this
+            # call, so every slot counts as fresh — a PREVIOUS consumer's
+            # refresh slots must not leak into skip_stale (same rule as
+            # refresh_view's entries-empty path: warm and cold agree).
+            view = (graph_view if graph_view is not None
+                    else view_mod.empty_view(s, g.vdata, nl))
+            view = view.replace(active=jnp.ones((nl, s.v_mir), bool))
+        metrics["fwd"] = ShipMetrics.zero()
 
     # --- 4: edge-parallel message computation -------------------------------
-    mirror_tree = rebuild_mirror(view.mirror) if need is not None else None
 
     # skipStale (§3.2 / §4.6): drop edges whose relevant endpoint did not
     # change since the last ship.  "out" skips stale sources, "in" stale
@@ -782,6 +836,11 @@ def mr_triplets(
         s, partial, had_msg, to, reduce, ex, bound=bound, transport=tp_back,
         prefer_ragged=prefer_ragged)
     metrics["back"] = m_back
+    # static route-ship count of this call: forward view-refresh collectives
+    # (0 on a clean view) + the aggregate return (always 1 — it carries the
+    # results).  The quantity the ship-count regression tests pin down.
+    metrics["ships_fwd"] = ships_fwd
+    metrics["ships"] = ships_fwd + 1
     # the headline codec metrics: forward + return wire volume after
     # narrowing, quantization, and (with a delta codec) zero-block skipping
     # — bytes_on_wire is the §2.1 ACCOUNTING number, bytes_shipped what the

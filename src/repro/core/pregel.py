@@ -10,7 +10,11 @@ Differences from classic Pregel, following the paper:
   * message computation sees BOTH endpoint attributes (triplet view) and the
     jaxpr analyzer prunes whichever side the UDF ignores (§4.5.2);
   * change tracking drives both skipStale edge skipping and incremental
-    replicated-view maintenance (§4.5.1) via the carried ViewCache;
+    replicated-view maintenance (§4.5.1) via the GRAPH-RESIDENT view
+    (DESIGN.md §3.1): the loop inherits whatever the operator chain before
+    it already shipped, vprog's changed mask is folded back per leaf
+    (passthrough leaves never re-ship), and the result graph exits WARM —
+    downstream operators keep delta-shipping;
   * vprog runs on every visible vertex each superstep with a default message
     where none arrived — exactly `g.leftJoin(msgs).mapV(vprog)` of Listing 5;
   * `kernel_mode` threads through to mrTriplets' physical-plan choice:
@@ -32,10 +36,12 @@ from typing import Any, Callable
 import jax
 import jax.numpy as jnp
 
+from . import analysis
 from . import transport as transport_mod
+from . import view as view_mod
 from .graph import Graph
-from .mrtriplets import ViewCache, mr_triplets
-from .tree import tree_changed, tree_where, vmap2
+from .mrtriplets import mr_triplets
+from .tree import elem_spec, tree_changed, tree_where, vmap2
 
 
 @dataclasses.dataclass
@@ -45,14 +51,22 @@ class PregelResult:
     metrics: list[dict]     # per-superstep engine metrics
 
 
-def _superstep(g: Graph, cache, tstate=None, *, vprog, send_msg, gather,
+def _superstep(g: Graph, tstate=None, *, vprog, send_msg, gather,
                default_msg, skip_stale, changed_fn, kernel_mode, use_cache,
                payload_bound=None, transport=None):
+    """One BSP superstep.  The incremental view rides the GRAPH itself
+    (§3.1): mr_triplets refreshes `g.view` (full ship when cold, per-leaf
+    delta when warm — including a view inherited from operators BEFORE the
+    loop), and vprog's §4.5.1 changed mask is fed straight back into it, so
+    the delta state also survives EXITING the loop into whatever operator
+    chain consumes the result."""
+    gin = g if use_cache else g.replace(view=None)
     msgs, exists, view, metrics = mr_triplets(
-        g, send_msg, gather, to="dst", skip_stale=skip_stale,
-        cache=cache if use_cache else None, kernel_mode=kernel_mode,
+        gin, send_msg, gather, to="dst", skip_stale=skip_stale,
+        kernel_mode=kernel_mode,
         payload_bound=payload_bound, transport=transport,
         transport_state=tstate)
+    n_ships = metrics.get("ships", 0)
     # strip static (non-array) entries: they are not jit-returnable and are
     # re-derivable from the UDF analysis in the driver
     metrics = {k: v for k, v in metrics.items()
@@ -68,8 +82,25 @@ def _superstep(g: Graph, cache, tstate=None, *, vprog, send_msg, gather,
         changed = vmap2(changed_fn)(g.vdata, new_vdata)
     changed = changed & g.vmask
     live = changed.sum()
-    g2 = g.replace(vdata=new_vdata, active=changed)
-    return g2, view, live, metrics
+    if use_cache:
+        # per-leaf dirty feed: leaves vprog provably passes through (jaxpr
+        # analysis — delta PageRank's `deg`) stay CLEAN and never re-ship;
+        # rewritten leaves go dirty exactly at the changed rows.  The
+        # analysis is trace-time work: every driver jits this function
+        # (pregel's step, pregel_fused, the shard_map harnesses), so it
+        # runs per COMPILE, not per superstep.
+        rewrites = analysis.analyze_rewrites(
+            vprog, (jax.ShapeDtypeStruct((), g.s.home_vid.dtype),
+                    elem_spec(g.vdata), elem_spec(msgs_or_default)), 1)
+        view = view_mod.view_after_rewrite(
+            view, g.vdata, new_vdata, rewrites, changed)
+    log = g.wire_log
+    if log is not None:
+        m = metrics["fwd"].merge(metrics["back"])
+        log = log.add(n_ships, m.bytes_shipped, m.bytes_accounted)
+    g2 = g.replace(vdata=new_vdata, active=changed,
+                   view=view if use_cache else None, wire_log=log)
+    return g2, live, metrics
 
 
 def pregel(
@@ -119,8 +150,6 @@ def pregel(
     # static join-elimination + physical-plan facts, derived once from the
     # INITIAL graph's specs (vprog may retype properties, but every §3.3
     # algorithm keeps the message shape fixed across supersteps)
-    from .tree import elem_spec
-    from . import analysis
     from .mrtriplets import _derive_need, plan_of
     deps = analysis.analyze_message_fn(
         send_msg, elem_spec(g.vdata), elem_spec(g.edata), elem_spec(g.vdata))
@@ -140,12 +169,10 @@ def pregel(
     cur_tp = transport_mod.DENSE if tp.kind == "auto" else tp
     n_visible = max(int(jnp.sum(g.vmask)), 1)
 
-    cache = None
     all_metrics: list[dict] = []
     steps = 0
     for it in range(max_supersteps):
-        g, view, live, metrics = step(g, cache, transport=cur_tp)
-        cache = view if incremental else None
+        g, live, metrics = step(g, transport=cur_tp)
         steps += 1
         if track_metrics:
             host_metrics = jax.tree.map(float, metrics)
@@ -154,6 +181,11 @@ def pregel(
             host_metrics["transport_cap"] = cur_tp.cap or 0
             host_metrics["transport_frac"] = (
                 cur_tp.capacity_frac if cur_tp.kind == "ragged" else 0.0)
+            # pipeline-level accumulation (§3.1): the graph's wire log
+            # counts this loop's traffic on top of whatever the operator
+            # chain BEFORE it already shipped.
+            host_metrics["pipeline_ships"] = float(g.ships)
+            host_metrics["pipeline_bytes_shipped"] = float(g.bytes_shipped)
             all_metrics.append(host_metrics)
         if int(live) == 0:
             break
@@ -203,20 +235,19 @@ def pregel_fused(
         use_cache=incremental, payload_bound=payload_bound,
         transport=transport_mod.resolve_transport(transport))
 
-    # materialise an initial cache with one full ship so the carry has
-    # static structure
-    g0, view0, live0, m0 = part(g, None, jnp.float32(0))
+    # materialise the graph-resident view with one full ship so the carry
+    # has static structure (the view rides INSIDE the graph now — §3.1)
+    g0, live0, m0 = part(g, jnp.float32(0))
 
     def cond(carry):
-        g_, cache_, live_, ts_, i_ = carry
+        g_, live_, ts_, i_ = carry
         return jnp.logical_and(live_ > 0, i_ < max_supersteps)
 
     def body(carry):
-        g_, cache_, live_, ts_, i_ = carry
-        g2, view, live, m = part(g_, cache_, ts_)
-        return (g2, view if incremental else cache_, live,
-                m["transport_state"], i_ + 1)
+        g_, live_, ts_, i_ = carry
+        g2, live, m = part(g_, ts_)
+        return (g2, live, m["transport_state"], i_ + 1)
 
-    gN, _, _, _, steps = jax.lax.while_loop(
-        cond, body, (g0, view0, live0, m0["transport_state"], jnp.int32(1)))
+    gN, _, _, steps = jax.lax.while_loop(
+        cond, body, (g0, live0, m0["transport_state"], jnp.int32(1)))
     return gN, steps

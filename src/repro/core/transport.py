@@ -195,6 +195,26 @@ def adapt_policy(policy: TransportPolicy, *, was_ragged: bool,
                           capacity_frac_back=back_t)
 
 
+# ---------------------------------------------------------------------------
+# Route-ship trace log.  Every routed ship (`mrtriplets._route_ship`) records
+# one event here at TRACE time, so the number of events emitted while
+# building (or eagerly running) a program is exactly the number of route
+# collectives it contains — the quantity the ship-count regression tests and
+# `launch/dryrun.py --profile-ships` assert on.  A plain list, reset by the
+# caller (counts are only meaningful after a `.clear()`): the engine traces
+# single-threaded.  Bounded — long eager sessions that never clear must not
+# leak memory, so the oldest half is dropped past the cap.
+SHIP_EVENTS: list = []
+_SHIP_EVENTS_CAP = 65536
+
+
+def record_ship(label: str, kind: str, route: str) -> None:
+    """Log one routed ship (trace-time).  label: 'fwd'|'back'|caller tag."""
+    if len(SHIP_EVENTS) >= _SHIP_EVENTS_CAP:
+        del SHIP_EVENTS[:_SHIP_EVENTS_CAP // 2]
+    SHIP_EVENTS.append({"label": label, "kind": kind, "route": route})
+
+
 class TransportInfo(NamedTuple):
     """Traced facts about one routed ship (all mesh-uniform scalars)."""
 

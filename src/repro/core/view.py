@@ -1,0 +1,425 @@
+"""Graph-resident incremental view maintenance (DESIGN.md §3.1).
+
+Through PR 4 the replicated vertex view was a loop-internal detail: the
+`ViewCache` that `ship_to_mirrors` returns lived exactly as long as one
+Pregel loop, so every OTHER view consumer — `triplets`, `mapE`,
+`subgraph(epred=…)`, a fresh `mrTriplets` call — re-shipped the full
+replicated view from scratch.  The paper's end-to-end result (Fig 10) is
+won precisely by NOT paying data movement at operator boundaries, so this
+module promotes the view to a first-class member of `Graph`:
+
+  * `GraphView` — the materialized mirror pytree plus, per vdata LEAF, a
+    [nl, V_blk] dirty mask over home rows and a static record of which
+    route directions ("src"/"dst") have been shipped, with the same
+    bookkeeping for the visibility bitmask.  Mutators (`mapV`, the joins,
+    `subgraph`) mark dirtiness instead of discarding the view
+    (`view_after_rewrite`, driven by `core.analysis.analyze_rewrites`);
+    `reverse()` remaps direction labels rather than invalidating.
+
+  * `refresh_view` — the single read path.  A consumer names a need set
+    and the leaves it reads; each leaf independently resolves to one of
+      - a cache hit   (direction filled, statically clean: ZERO ships),
+      - a delta ship  (direction filled, dirty rows only — §4.5.1 at
+                       operator-chain granularity),
+      - a widening ship (leaf clean but a new direction is needed: only
+                       the missing routes ship — "src" filled + "both"
+                       needed ships the dst routes, §4.3 index reuse on
+                       the wire), or
+      - a cold ship   (full routes),
+    and leaves with the same resolution share ONE routed collective (the
+    `subgraph(vpred, epred)` visibility + property ship folds here).
+
+  * `WireLog` — pipeline-level ships / bytes accumulators carried as a
+    pytree child of `Graph`, so operator chains report total wire traffic
+    the way Pregel supersteps already do.
+
+Static-vs-traced split: the per-row dirty masks are traced arrays (they
+ride jit/`lax.while_loop` carries), but WHETHER a leaf may be dirty at all
+(`clean`) and which directions are filled (`dirs`) are pytree aux — the
+ship plan is a trace-time constant, so a clean chain compiles to a program
+with literally no route collectives, and the while-loop carry keeps a
+stable treedef because mutator marking is also static.
+
+The load-bearing invariant (chain-differential tested, LocalExchange and
+the 4-device SPMD matrix): caching changes SHIPS, never VALUES — a warm
+chain is bit-exact with a cold one on the f32 wire for fused and unfused
+plans, because a clean mirror slot already holds exactly the value a cold
+ship would rematerialize (the §2.1 incremental-maintenance argument, now
+applied across operator boundaries instead of across supersteps).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from . import transport as transport_mod
+from .mrtriplets import ShipMetrics, ViewCache, ship_to_mirrors
+from .tree import vmap2
+
+# direction bookkeeping: need-set names <-> compact direction strings
+_DIR = {"src": "s", "dst": "d", "both": "sd"}
+_NEED = {"s": "src", "d": "dst", "sd": "both"}
+
+
+def _dirs_union(a: str, b: str) -> str:
+    return "".join(c for c in "sd" if c in a or c in b)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class WireLog:
+    """Pipeline-level wire-traffic accumulators (a `Graph` pytree child).
+
+    Shaped [nl] (leading partition axis) rather than scalar so the log
+    shards with the graph under `shard_map` — the count lands in row 0 and
+    totals are a sum (per-device inside SPMD, global under LocalExchange,
+    psum for a mesh-global figure)."""
+
+    ships: jnp.ndarray            # [nl] f32 — routed collectives executed
+    bytes_shipped: jnp.ndarray    # [nl] f32 — what the transports moved
+    bytes_accounted: jnp.ndarray  # [nl] f32 — the §2.1 codec accounting
+
+    def tree_flatten(self):
+        return (self.ships, self.bytes_shipped, self.bytes_accounted), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    @staticmethod
+    def zeros(nl: int) -> "WireLog":
+        z = jnp.zeros((nl,), jnp.float32)
+        return WireLog(z, z, z)
+
+    def add(self, n_ships, shipped, accounted) -> "WireLog":
+        bump = lambda a, x: a.at[0].add(jnp.asarray(x, a.dtype))
+        return WireLog(bump(self.ships, n_ships),
+                       bump(self.bytes_shipped, shipped),
+                       bump(self.bytes_accounted, accounted))
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class GraphView:
+    """Graph-resident replicated vertex view with per-leaf dirty tracking.
+
+    mirror/dirty mirror the vdata pytree structure leaf-for-leaf; `vis` is
+    the visibility bitmask's own mirror (subgraph's ship).  `dirs` /
+    `vis_dirs` record which route directions each leaf has been shipped
+    over ("" | "s" | "d" | "sd"), `clean` / `vis_clean` certify that the
+    corresponding dirty mask is structurally all-False — both are pytree
+    AUX, so the refresh plan stays a trace-time constant."""
+
+    mirror: Any               # pytree == vdata, leaves [nl, V_mir, ...]
+    vis: jnp.ndarray          # [nl, V_mir] bool — visibility mirror
+    filled: jnp.ndarray       # [nl, V_mir] bool — slot ever shipped
+    active: jnp.ndarray       # [nl, V_mir] bool — slots of the LATEST refresh
+    dirty: Any                # pytree == vdata, leaves [nl, V_blk] bool
+    vis_dirty: jnp.ndarray    # [nl, V_blk] bool
+    # --- static (pytree aux) ---
+    dirs: tuple = ()          # per flat leaf: filled directions
+    vis_dirs: str = ""
+    clean: tuple = ()         # per flat leaf: dirty mask structurally empty
+    vis_clean: bool = True
+
+    def tree_flatten(self):
+        return ((self.mirror, self.vis, self.filled, self.active,
+                 self.dirty, self.vis_dirty),
+                (self.dirs, self.vis_dirs, self.clean, self.vis_clean))
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children, *aux)
+
+    def replace(self, **kw) -> "GraphView":
+        return dataclasses.replace(self, **kw)
+
+    # ------------------------------------------------------------- mutators
+    def mark_vis(self, rows: jnp.ndarray) -> "GraphView":
+        """Visibility changed at `rows` (subgraph/innerJoin restriction)."""
+        return self.replace(vis_dirty=self.vis_dirty | rows,
+                            vis_clean=False)
+
+    def remap_reverse(self) -> "GraphView":
+        """`reverse()` swaps the src/dst roles of the routing tables; the
+        mirror VALUES are untouched, so the view survives with its
+        direction labels swapped — remap, never invalidate (§4.3)."""
+        swap = {"": "", "s": "d", "d": "s", "sd": "sd"}
+        return self.replace(dirs=tuple(swap[d] for d in self.dirs),
+                            vis_dirs=swap[self.vis_dirs])
+
+
+def empty_view(s, vdata, nl: int) -> GraphView:
+    """A cold view: nothing filled, nothing dirty (cold leaves ship via the
+    direction-missing plan, not the dirty-row plan)."""
+    v_mir = s.v_mir
+    v_blk = s.home_mask.shape[-1]
+    mirror = jax.tree.map(
+        lambda x: jnp.zeros((nl, v_mir) + x.shape[2:], x.dtype), vdata)
+    dirty = jax.tree.map(lambda x: jnp.zeros((nl, v_blk), bool), vdata)
+    n = len(jax.tree.leaves(vdata))
+    zslot = jnp.zeros((nl, v_mir), bool)
+    return GraphView(mirror=mirror, vis=zslot, filled=zslot, active=zslot,
+                     dirty=dirty, vis_dirty=jnp.zeros((nl, v_blk), bool),
+                     dirs=("",) * n, vis_dirs="",
+                     clean=(True,) * n, vis_clean=True)
+
+
+def compatible(view: GraphView | None, vdata, nl: int, v_mir: int) -> bool:
+    """Does this view's mirror match vdata's structure and element specs?
+    Mutators maintain this; the check guards hand-rolled graphs."""
+    if view is None:
+        return False
+    if jax.tree.structure(view.mirror) != jax.tree.structure(vdata):
+        return False
+    for m, v in zip(jax.tree.leaves(view.mirror), jax.tree.leaves(vdata)):
+        if (m.dtype != v.dtype or m.shape[2:] != v.shape[2:]
+                or m.shape[:2] != (nl, v_mir)):
+            return False
+    return True
+
+
+def _plan_leaf(dirs: str, clean: bool, need_d: str):
+    """One leaf's refresh resolution: None (cache hit) or
+    (kind, route_dirs, new_dirs)."""
+    missing = "".join(c for c in need_d if c not in dirs)
+    if not missing:
+        # every needed direction is filled: ship dirty rows over ALL filled
+        # directions (keeping every filled mirror coherent is what lets a
+        # single per-leaf dirty mask suffice), or nothing at all.
+        return None if clean else ("delta", dirs, dirs)
+    if clean and dirs:
+        # §4.3 direction-widening reuse: the filled directions are current,
+        # so only the missing routes ship (full — those slots are cold).
+        return ("full", missing, _dirs_union(dirs, need_d))
+    # cold leaf, or dirty AND widening: one full ship over the union.
+    u = _dirs_union(dirs, need_d)
+    return ("full", u, u)
+
+
+def refresh_view(
+    g,                        # Graph (duck-typed: s, ex, vdata, vmask, view)
+    need: str,                # "src" | "dst" | "both"
+    *,
+    leaf_mask=None,           # per flat vdata leaf: consumer reads it
+    with_vis: bool = False,   # also materialise the visibility mirror
+    bound: int | None = None,
+    transport=None,           # transport plan for DELTA ships (§2.1.1)
+    prefer_ragged: jnp.ndarray | None = None,
+    legacy_cache: GraphView | None = None,
+    legacy_active: jnp.ndarray | None = None,
+):
+    """Materialise the replicated view for one consumer THROUGH the cache.
+
+    Returns (view', mirror_tree, vis_mirror, merged ShipMetrics, n_ships).
+    `n_ships` is the static number of routed collectives this refresh
+    emitted (0 for a fully clean view); `mirror_tree` always has vdata's
+    structure — leaves the consumer did not request keep whatever the view
+    holds (zeros when never shipped), which is sound because join
+    elimination proved the consumer never reads them.
+
+    legacy_cache restores the pre-PR-5 `mr_triplets(cache=...)` contract:
+    the caller-supplied view plus `g.active` (or `legacy_active`) as the
+    changed-row set for EVERY requested leaf, ignoring the view's own
+    static dirty state — eager loops that mutate vdata via `replace()`
+    keep working unchanged.
+    """
+    s, ex = g.s, g.ex
+    nl = g.vmask.shape[0]
+    flat_vals, treedef = jax.tree.flatten(g.vdata)
+    n = len(flat_vals)
+
+    view = legacy_cache if legacy_cache is not None else g.view
+    if not compatible(view, g.vdata, nl, s.v_mir):
+        view = empty_view(s, g.vdata, nl)
+    mir_l = list(jax.tree.leaves(view.mirror))
+    dirty_l = list(jax.tree.leaves(view.dirty))
+    dirs_l, clean_l = list(view.dirs), list(view.clean)
+    vis_mir, vis_dirty = view.vis, view.vis_dirty
+    vis_dirs, vis_clean = view.vis_dirs, view.vis_clean
+    if legacy_cache is not None:
+        rows = legacy_active if legacy_active is not None else g.active
+        dirty_l = [rows] * n
+        clean_l = [False] * n
+
+    required = tuple(leaf_mask) if leaf_mask is not None else (True,) * n
+    need_d = _DIR[need]
+    entries = []          # (slot, kind, route_dirs, new_dirs)
+    for i in range(n):
+        if not required[i]:
+            continue
+        plan = _plan_leaf(dirs_l[i], clean_l[i], need_d)
+        if plan is not None:
+            entries.append((i,) + plan)
+    if with_vis:
+        plan = _plan_leaf(vis_dirs, vis_clean, "sd")
+        if plan is not None:
+            entries.append(("vis",) + plan)
+
+    # group leaves by identical resolution: one routed collective per group
+    # (this is where subgraph's visibility + epred-property ships fold).
+    groups: dict = {}
+    for e in entries:
+        groups.setdefault((e[1], e[2]), []).append(e)
+
+    filled = view.filled
+    shipped_any = jnp.zeros((nl, s.v_mir), bool)
+    merged, n_ships = None, 0
+    for (kind, route_d), items in groups.items():
+        vals, prev, act = {}, {}, None
+        for (slot, *_rest) in items:
+            key = "vis" if slot == "vis" else f"l{slot}"
+            vals[key] = g.vmask if slot == "vis" else flat_vals[slot]
+            prev[key] = vis_mir if slot == "vis" else mir_l[slot]
+            if kind == "delta":
+                d = vis_dirty if slot == "vis" else dirty_l[slot]
+                act = d if act is None else (act | d)
+        cache = ViewCache(mirror=prev, filled=filled, active=filled)
+        sub, m = ship_to_mirrors(
+            s, vals, _NEED[route_d], ex, active=act, cache=cache,
+            bound=bound,
+            # full ships have nothing to compact — keep them dense
+            transport=transport if kind == "delta" else None,
+            prefer_ragged=prefer_ragged if kind == "delta" else None)
+        n_ships += 1
+        merged = m if merged is None else merged.merge(m)
+        filled = sub.filled
+        shipped_any = shipped_any | sub.active
+        for (slot, *_rest) in items:
+            key = "vis" if slot == "vis" else f"l{slot}"
+            if slot == "vis":
+                vis_mir = sub.mirror[key]
+            else:
+                mir_l[slot] = sub.mirror[key]
+
+    if not entries:
+        # nothing to track: NO delta information exists for this call, so
+        # every slot counts as fresh — exactly what the cold (viewless)
+        # path reports.  This keeps skip_stale consumers value-identical
+        # warm vs cold ("caching changes ships, never values"): a clean
+        # view means "current", not "stale".  Delta loops (Pregel) never
+        # hit this branch — their vprog marks leaves dirty every
+        # superstep, so their refreshes always carry real freshness.
+        shipped_any = jnp.ones((nl, s.v_mir), bool)
+
+    zrows = jnp.zeros((nl, s.home_mask.shape[-1]), bool)
+    for (slot, _kind, _route, new_dirs) in entries:
+        if slot == "vis":
+            vis_dirs, vis_clean, vis_dirty = new_dirs, True, zrows
+        else:
+            dirs_l[slot], clean_l[slot], dirty_l[slot] = new_dirs, True, zrows
+
+    view2 = GraphView(
+        mirror=jax.tree.unflatten(treedef, mir_l), vis=vis_mir,
+        filled=filled, active=shipped_any,
+        dirty=jax.tree.unflatten(treedef, dirty_l), vis_dirty=vis_dirty,
+        dirs=tuple(dirs_l), vis_dirs=vis_dirs,
+        clean=tuple(clean_l), vis_clean=vis_clean)
+    return (view2, view2.mirror, vis_mir,
+            merged if merged is not None else ShipMetrics.zero(), n_ships)
+
+
+def dirty_rows(view: GraphView | None, leaf_mask=None):
+    """Union of the requested leaves' MAY-BE-DIRTY rows, or None when every
+    requested leaf is statically clean (transport planners branch on this:
+    no delta ship will happen, so no active fraction exists)."""
+    if view is None:
+        return None
+    flat = jax.tree.leaves(view.dirty)
+    required = tuple(leaf_mask) if leaf_mask is not None else \
+        (True,) * len(flat)
+    out = None
+    for d, req, cl in zip(flat, required, view.clean):
+        if not req or cl:
+            continue
+        out = d if out is None else (out | d)
+    return out
+
+
+def keep_through(old_vdata, exclude: tuple = ()) -> dict:
+    """A `rewrites` map marking every old leaf as passthrough — for updates
+    that only ADD leaves (attach_out_degree's `{**v, "deg": …}` built from
+    arrays rather than a per-element UDF, where jaxpr analysis has nothing
+    to trace).  The caller certifies the old leaves are untouched; keys
+    the update OVERWRITES must be named in `exclude` (top-level dict keys)
+    or their stale mirrors would stay marked clean."""
+    def kept(path):
+        return not (path and getattr(path[0], "key", None) in exclude)
+    return {p: kept(p) for p, _ in
+            jax.tree_util.tree_flatten_with_path(old_vdata)[0]}
+
+
+def view_after_rewrite(view: GraphView | None, old_vdata, new_vdata,
+                       rewrites: dict | None, changed=None) -> GraphView | None:
+    """Carry a GraphView across a vertex-property rewrite (mapV / joins /
+    Pregel's vprog): dirtiness is UPDATED, never the view discarded.
+
+    rewrites: {output leaf path: passthrough?} from
+      `analysis.analyze_rewrites`, or None when the trace failed (every
+      surviving leaf is then dirtied in full).
+    changed: which ROWS the rewrite touched, for the non-passthrough
+      leaves — None (all rows: the conservative default), "diff" (per-leaf
+      value comparison: a top-k join that touches 1% of vertices marks
+      1%), a callable `f(old_elem, new_elem) -> bool` (the caller's
+      certificate, like Pregel's changed_fn), or a precomputed [nl, V_blk]
+      bool array (Pregel feeds its §4.5.1 vote-to-halt mask straight in).
+
+    Leaves are matched by PATH: surviving non-passthrough leaves keep
+    their mirror and gain dirty rows, dropped paths lose their mirror, new
+    or retyped paths start cold.  The visibility state is untouched.
+    """
+    if view is None:
+        return None
+    old_paths = {p: i for i, (p, _) in enumerate(
+        jax.tree_util.tree_flatten_with_path(old_vdata)[0])}
+    new_flat, new_def = jax.tree_util.tree_flatten_with_path(new_vdata)
+    old_mir = jax.tree.leaves(view.mirror)
+    old_dirty = jax.tree.leaves(view.dirty)
+    old_vals = jax.tree.leaves(old_vdata)
+    nl, v_mir = view.filled.shape
+    v_blk = view.vis_dirty.shape[-1]
+
+    rows_all = None
+    if isinstance(changed, (jnp.ndarray, np.ndarray)):
+        rows_all = jnp.asarray(changed)
+    elif callable(changed):
+        rows_all = vmap2(changed)(old_vdata, new_vdata)
+
+    mir, dirty, dirs, clean = [], [], [], []
+    for path, leaf in new_flat:
+        i = old_paths.get(path)
+        keeps = (i is not None and old_mir[i].dtype == leaf.dtype
+                 and old_mir[i].shape[2:] == leaf.shape[2:])
+        if not keeps:
+            mir.append(jnp.zeros((nl, v_mir) + leaf.shape[2:], leaf.dtype))
+            dirty.append(jnp.zeros((nl, v_blk), bool))
+            dirs.append("")
+            clean.append(True)
+            continue
+        passthrough = rewrites is not None and rewrites.get(path, False)
+        mir.append(old_mir[i])
+        if passthrough:
+            dirty.append(old_dirty[i])
+            dirs.append(view.dirs[i])
+            clean.append(view.clean[i])
+            continue
+        if rows_all is not None:
+            rows = rows_all
+        elif changed == "diff":
+            d = leaf != old_vals[i]
+            rows = (d.reshape(d.shape[:2] + (-1,)).any(-1)
+                    if d.ndim > 2 else d)
+        else:
+            rows = jnp.ones((nl, v_blk), bool)
+        dirty.append(old_dirty[i] | rows)
+        dirs.append(view.dirs[i])
+        clean.append(False)
+
+    return view.replace(
+        mirror=jax.tree.unflatten(new_def, mir),
+        dirty=jax.tree.unflatten(new_def, dirty),
+        dirs=tuple(dirs), clean=tuple(clean))

@@ -248,48 +248,14 @@ def lower_cell(arch: str, shape_name: str, mesh, *, strategy: str | None = None,
 # ---------------------------------------------------------------------------
 # GraphX engine cell (the paper's own workload on the production mesh)
 # ---------------------------------------------------------------------------
-def lower_graph_cell(mesh, *, n_vertices=41_652_230, n_edges=1_468_365_182,
-                     supersteps: int = 1, return_hlo: bool = False,
-                     wire_dtype=None, wire: str | None = None,
-                     wire_delta: bool = False, mirror_factor: float = 2.0,
-                     contrib_form: bool = False,
-                     transport: str | None = None,
-                     capacity_frac: float = 0.25):
-    """PageRank superstep on a Twitter-scale graph (paper Table 1), SPMD over
-    the flat parts axis.  Structure arrays are ShapeDtypeStructs sized by the
-    2D-cut replication model.
-
-    wire: codec name ("f32"/"bf16"/"int8"/"fp8_e4m3"/"fp8_e5m2") for the
-    mirror exchange (DESIGN.md §2.1); wire_delta enables active-set delta
-    accounting.  wire_dtype is the pre-codec narrowing knob, kept for
-    existing callers.
-
-    transport (DESIGN.md §2.1.1): "dense" (default), "ragged", or "auto".
-    "ragged" lowers the PURE compacted-collective program (overflow
-    fallback disabled — this is shape analysis, the lax.cond would keep a
-    dense branch in the HLO and double-count collective bytes), with the
-    static capacity = capacity_frac of the route width; "auto" keeps the
-    runtime cond, so the reported collective bytes cover BOTH branches.
-    Ragged/auto cells run at least 2 supersteps so the second ships against
-    a cache (the incremental path the ragged plan exists for)."""
+def _graph_cell_sds(mesh, *, n_vertices: int, n_edges: int,
+                    mirror_factor: float, ex, contrib_form: bool = False):
+    """ShapeDtypeStruct stand-ins for one Twitter-scale graph cell
+    (structure sized by the 2D-cut replication model) — the ONE place the
+    cell's spec lives, shared by lower_graph_cell and profile_ships so the
+    two lanes always lower the same program shape."""
     from ..core import partition as pm
-    from ..core import transport as transport_mod
-    from ..core.exchange import SpmdExchange, with_wire
     from ..core.graph import Graph, StructArrays
-    from ..core.pregel import _superstep
-
-    tpol = None
-    if transport is not None and transport != "dense":
-        tpol = transport_mod.resolve_transport(transport)
-        # an explicit --capacity-frac is the operator's certification: lift
-        # the break-even clamp so the requested fraction really lowers the
-        # ragged program (otherwise a frac >= ragged_max_frac would
-        # silently lower dense under a ragged label).
-        tpol = tpol.replace(capacity_frac=capacity_frac, cap_rounding=32,
-                            ragged_max_frac=1.0)
-        if tpol.kind == "ragged":
-            tpol = tpol.replace(fallback=False)
-        supersteps = max(supersteps, 2)
 
     sizes = mesh_axis_sizes(mesh)
     p = sizes["parts"]
@@ -316,17 +282,10 @@ def lower_graph_cell(mesh, *, n_vertices=41_652_230, n_edges=1_468_365_182,
                 for need in ("src", "dst", "both")},
         p=p, e_blk=e_blk, v_mir=v_mir, v_blk=v_blk,
         num_vertices=n_vertices, num_edges=n_edges)
-
     vdata_sds = {"pr": sds((p, v_blk), jnp.float32, pp),
                  "deg": sds((p, v_blk), jnp.float32, pp)}
     if contrib_form:
-        # PowerGraph-style pre-aggregation: the message reads ONE
-        # home-computed property, so property-level join elimination ships
-        # a single float per mirror instead of the whole struct.
         vdata_sds["contrib"] = sds((p, v_blk), jnp.float32, pp)
-    ex = SpmdExchange(p=p, axis_name="parts", wire_dtype=wire_dtype)
-    if wire is not None:
-        ex = with_wire(ex, wire, delta=wire_delta or None)
     g_sds = Graph(
         s=s,
         vdata=vdata_sds,
@@ -334,8 +293,62 @@ def lower_graph_cell(mesh, *, n_vertices=41_652_230, n_edges=1_468_365_182,
         vmask=sds((p, v_blk), jnp.bool_, pp),
         emask=sds((p, e_blk), jnp.bool_, pp),
         active=sds((p, v_blk), jnp.bool_, pp),
-        ex=ex,
-        host=None)
+        ex=ex, host=None)
+    return g_sds, spec
+
+
+def lower_graph_cell(mesh, *, n_vertices=41_652_230, n_edges=1_468_365_182,
+                     supersteps: int = 1, return_hlo: bool = False,
+                     wire_dtype=None, wire: str | None = None,
+                     wire_delta: bool = False, mirror_factor: float = 2.0,
+                     contrib_form: bool = False,
+                     transport: str | None = None,
+                     capacity_frac: float = 0.25):
+    """PageRank superstep on a Twitter-scale graph (paper Table 1), SPMD over
+    the flat parts axis.  Structure arrays are ShapeDtypeStructs sized by the
+    2D-cut replication model.
+
+    wire: codec name ("f32"/"bf16"/"int8"/"fp8_e4m3"/"fp8_e5m2") for the
+    mirror exchange (DESIGN.md §2.1); wire_delta enables active-set delta
+    accounting.  wire_dtype is the pre-codec narrowing knob, kept for
+    existing callers.
+
+    transport (DESIGN.md §2.1.1): "dense" (default), "ragged", or "auto".
+    "ragged" lowers the PURE compacted-collective program (overflow
+    fallback disabled — this is shape analysis, the lax.cond would keep a
+    dense branch in the HLO and double-count collective bytes), with the
+    static capacity = capacity_frac of the route width; "auto" keeps the
+    runtime cond, so the reported collective bytes cover BOTH branches.
+    Ragged/auto cells run at least 2 supersteps so the second ships against
+    a cache (the incremental path the ragged plan exists for)."""
+    from ..core import transport as transport_mod
+    from ..core.exchange import SpmdExchange, with_wire
+    from ..core.pregel import _superstep
+
+    tpol = None
+    if transport is not None and transport != "dense":
+        tpol = transport_mod.resolve_transport(transport)
+        # an explicit --capacity-frac is the operator's certification: lift
+        # the break-even clamp so the requested fraction really lowers the
+        # ragged program (otherwise a frac >= ragged_max_frac would
+        # silently lower dense under a ragged label).
+        tpol = tpol.replace(capacity_frac=capacity_frac, cap_rounding=32,
+                            ragged_max_frac=1.0)
+        if tpol.kind == "ragged":
+            tpol = tpol.replace(fallback=False)
+        supersteps = max(supersteps, 2)
+
+    p = mesh_axis_sizes(mesh)["parts"]
+    ex = SpmdExchange(p=p, axis_name="parts", wire_dtype=wire_dtype)
+    if wire is not None:
+        ex = with_wire(ex, wire, delta=wire_delta or None)
+    # contrib_form is PowerGraph-style pre-aggregation: the message reads
+    # ONE home-computed property, so property-level join elimination ships
+    # a single float per mirror instead of the whole struct.
+    g_sds, spec = _graph_cell_sds(
+        mesh, n_vertices=n_vertices, n_edges=n_edges,
+        mirror_factor=mirror_factor, ex=ex, contrib_form=contrib_form)
+    e_blk, v_mir, k = spec["e_blk"], spec["v_mir"], spec["k_route"]
 
     if contrib_form:
         def send(sv, ev, dv):
@@ -352,14 +365,16 @@ def lower_graph_cell(mesh, *, n_vertices=41_652_230, n_edges=1_468_365_182,
             return {"pr": 0.15 + 0.85 * msg["m"], "deg": v["deg"]}
 
     def pr_superstep(g):
-        out, cache = g, None
+        out = g
         for _ in range(supersteps):
-            out, cache, live, _ = _superstep(
-                out, cache, vprog=vprog, send_msg=send, gather="sum",
+            out, live, _ = _superstep(
+                out, vprog=vprog, send_msg=send, gather="sum",
                 default_msg={"m": jnp.float32(0.0)}, skip_stale=None,
                 changed_fn=None, kernel_mode="ref", use_cache=True,
                 transport=tpol)
-        return out, live
+        # the carried view/wire_log are loop-internal here: stripping them
+        # keeps the cell's output signature identical to its input specs
+        return out.replace(view=None), live
 
     in_specs = jax.tree.map(lambda x: P(*(("parts",) + (None,) * (len(x.shape) - 1))),
                             g_sds, is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
@@ -446,6 +461,71 @@ def check_ragged_tracks_active(mesh, *, mirror_factor: float = 2.0,
     return cells
 
 
+def profile_ships(mesh, *, n_vertices=41_652_230, n_edges=1_468_365_182,
+                  mirror_factor: float = 2.0) -> dict:
+    """`--profile-ships`: lower a canned operator CHAIN (mrTriplets -> mapV
+    touching one leaf -> mrTriplets -> mrTriplets) twice — once reading
+    through the graph-resident view (§3.1), once with the view stripped
+    before every consumer — and report, per variant, the trace-time route
+    ships plus the all_to_all op count and collective bytes in the compiled
+    HLO.  A pipeline regression (an operator re-shipping a clean view)
+    shows up as extra route ships / collective bytes in the reuse column,
+    which is exactly what this check is wired into CI to catch."""
+    from ..core import transport as transport_mod
+    from ..core.exchange import SpmdExchange
+
+    p = mesh_axis_sizes(mesh)["parts"]
+    g_sds, _ = _graph_cell_sds(
+        mesh, n_vertices=n_vertices, n_edges=n_edges,
+        mirror_factor=mirror_factor,
+        ex=SpmdExchange(p=p, axis_name="parts"))
+
+    def send(sv, ev, dv):
+        return {"m": sv["pr"] / sv["deg"] * ev["w"]}
+
+    def chain(g, reuse: bool):
+        import dataclasses as dc
+        strip = (lambda x: x) if reuse else \
+            (lambda x: dc.replace(x, view=None))
+        v1, _, g, _ = g.mrTriplets(send, "sum", kernel_mode="ref")
+        g = strip(g).mapV(lambda vid, v: {"pr": v["pr"] * 0.85,
+                                          "deg": v["deg"]})
+        v2, _, g, _ = g.mrTriplets(send, "sum", kernel_mode="ref")
+        g = strip(g)
+        v3, _, g, _ = g.mrTriplets(send, "sum", kernel_mode="ref")
+        return v1["m"], v2["m"], v3["m"]
+
+    in_specs = jax.tree.map(
+        lambda x: P(*(("parts",) + (None,) * (len(x.shape) - 1))),
+        g_sds, is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+    from ..utils.spmd import shard_map as _shard_map
+    out = {}
+    for name, reuse in (("view_reuse", True), ("cold", False)):
+        fn = jax.jit(_shard_map(lambda g, _r=reuse: chain(g, _r), mesh,
+                                (in_specs,), (P("parts"),) * 3))
+        transport_mod.SHIP_EVENTS.clear()
+        lowered = fn.lower(g_sds)
+        ships = list(transport_mod.SHIP_EVENTS)
+        txt = lowered.compile().as_text()
+        coll = hlo_utils.collective_bytes(txt)
+        out[name] = {
+            "route_ships": len(ships),
+            "route_ships_fwd": sum(1 for e in ships if e["label"] == "fwd"),
+            "a2a_ops": txt.count("all-to-all"),
+            "collective_bytes_per_chip": int(coll.get("total_bytes", 0)),
+        }
+        print(f"  {name:10s} route_ships={out[name]['route_ships']} "
+              f"(fwd {out[name]['route_ships_fwd']}) "
+              f"a2a_ops={out[name]['a2a_ops']} "
+              f"coll_bytes/chip={out[name]['collective_bytes_per_chip']:.3e}",
+              flush=True)
+    r, c = out["view_reuse"], out["cold"]
+    assert r["route_ships_fwd"] < c["route_ships_fwd"], out
+    assert r["collective_bytes_per_chip"] < c["collective_bytes_per_chip"], \
+        out
+    return out
+
+
 # ---------------------------------------------------------------------------
 # Driver
 # ---------------------------------------------------------------------------
@@ -503,6 +583,10 @@ def main() -> None:
     ap.add_argument("--ragged-check", action="store_true",
                     help="graph cell: lower dense + two ragged capacities "
                          "and assert collective bytes track the fraction")
+    ap.add_argument("--profile-ships", action="store_true",
+                    help="graph cell: lower a canned operator chain with "
+                         "and without graph-resident view reuse and report "
+                         "route ships + HLO collective bytes (§3.1)")
     ap.add_argument("--mirror-factor", type=float, default=2.0)
     ap.add_argument("--contrib-form", action="store_true")
     ap.add_argument("--state-bf16", action="store_true")
@@ -542,6 +626,12 @@ def main() -> None:
     entries = _load_report()
 
     if args.graph:
+        if args.profile_ships:
+            gmesh = make_graph_mesh(multi_pod=args.multi_pod)
+            cells = profile_ships(gmesh, mirror_factor=args.mirror_factor)
+            print(json.dumps({"profile_ships": "ok", "cells": cells},
+                             indent=1))
+            return
         if args.ragged_check:
             gmesh = make_graph_mesh(multi_pod=args.multi_pod)
             cells = check_ragged_tracks_active(

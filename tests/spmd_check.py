@@ -37,6 +37,12 @@ fallback inside shard_map (switching in BOTH directions); (h) the same loop
 on the int8 wire keeps norm-rank err <= 1e-3; (i) the packed-int delta CC
 loop with a forced "ragged" policy (overflow falls back dense until the
 label frontier fits the capacity) stays bit-exact against union-find.
+
+Graph-resident view (DESIGN.md §3.1), same 4-device mesh: (j) the
+operator chain mapV -> mrTriplets -> subgraph -> mrTriplets run WARM (the
+graph carries its view across operator boundaries) is bit-exact vs the
+COLD chain (view stripped before every consumer) for the fused and
+unfused plans, while psummed bytes_shipped strictly drops.
 Prints OK on success.
 """
 import os
@@ -83,10 +89,10 @@ def main():
         return {**v, "pr": 0.15 + 0.85 * msg["m"]}
 
     def pr_loop(gg, kernel_mode):
-        out, cache = gg, None
+        out = gg
         for _ in range(10):
-            out, cache, live, _ = _superstep(
-                out, cache, vprog=vprog, send_msg=send, gather="sum",
+            out, live, _ = _superstep(
+                out, vprog=vprog, send_msg=send, gather="sum",
                 default_msg={"m": jnp.float32(0.0)}, skip_stale=None,
                 changed_fn=None, kernel_mode=kernel_mode, use_cache=True)
         return out.vdata["pr"]
@@ -148,10 +154,10 @@ def main():
         return {"cc": jnp.minimum(v["cc"], msg["m"])}
 
     def cc_loop(gg, kernel_mode):
-        out, cache = gg, None
+        out = gg
         for _ in range(10):
-            out, cache, _, m = _superstep(
-                out, cache, vprog=cc_vprog, send_msg=cc_send, gather="min",
+            out, _, m = _superstep(
+                out, vprog=cc_vprog, send_msg=cc_send, gather="min",
                 default_msg={"m": IMAX}, skip_stale="out",
                 changed_fn=None, kernel_mode=kernel_mode, use_cache=True)
         return out.vdata["cc"]
@@ -240,13 +246,13 @@ def main():
         the static transport plan is re-chosen per superstep from psummed
         metrics, exactly like pregel.adapt_policy."""
         tpol = resolve_transport(transport_spec)
-        out_specs = (PS("parts"), PS("parts"), PS(), PS(), PS(), PS(), PS(),
-                     PS())
+        out_specs = (PS("parts"), PS(), PS(), PS(), PS(), PS(), PS())
         fns = {}
 
-        def body(gg, cache, tp):
-            g2, view, live, m = _superstep(
-                gg, cache, None, vprog=dvprog, send_msg=dsend, gather="sum",
+        def body(gg, tp):
+            # the incremental view rides the graph itself (§3.1)
+            g2, live, m = _superstep(
+                gg, None, vprog=dvprog, send_msg=dsend, gather="sum",
                 default_msg={"m": jnp.float32(0.0)}, skip_stale="out",
                 changed_fn=dchg, kernel_mode=kernel_mode, use_cache=True,
                 transport=tp)
@@ -256,32 +262,25 @@ def main():
                         / max(m["fwd"].route_width, 1))
             back_frac = (m["back"].route_active_max.astype(jnp.float32)
                          / max(m["back"].route_width, 1))
-            return (g2, view, jax.lax.psum(live, "parts"),
+            return (g2, jax.lax.psum(live, "parts"),
                     jax.lax.psum(shipped, "parts"),
                     jax.lax.psum(accounted, "parts"),
                     jax.lax.pmax(fwd_frac, "parts"),
                     jax.lax.pmax(back_frac, "parts"), m["fwd"].ragged)
 
-        def get_fn(tp, with_cache):
-            key = (tp.kind, tp.capacity_frac, tp.capacity_frac_back,
-                   with_cache)
+        def get_fn(tp):
+            key = (tp.kind, tp.capacity_frac, tp.capacity_frac_back)
             if key not in fns:
-                if with_cache:
-                    fns[key] = jax.jit(shard_map(
-                        lambda gg, cc, _tp=tp: body(gg, cc, _tp), mesh,
-                        (PS("parts"), PS("parts")), out_specs))
-                else:
-                    fns[key] = jax.jit(shard_map(
-                        lambda gg, _tp=tp: body(gg, None, _tp), mesh,
-                        (PS("parts"),), out_specs))
+                fns[key] = jax.jit(shard_map(
+                    lambda gg, _tp=tp: body(gg, _tp), mesh,
+                    (PS("parts"),), out_specs))
             return fns[key]
 
-        gg, cache, rows = gg0, None, []
+        gg, rows = gg0, []
         cur = DENSE if tpol.kind == "auto" else tpol
         for _ in range(n_steps):
-            fn = get_fn(cur, cache is not None)
-            gg, cache, live, shipped, accounted, ffrac, bfrac, ragged = (
-                fn(gg, cache) if cache is not None else fn(gg))
+            fn = get_fn(cur)
+            gg, live, shipped, accounted, ffrac, bfrac, ragged = fn(gg)
             rows.append({"live": int(live), "shipped": float(shipped),
                          "accounted": float(accounted),
                          "ragged": float(ragged), "kind": cur.kind})
@@ -332,10 +331,10 @@ def main():
     cc_pol = TransportPolicy("ragged", capacity_frac=0.5, cap_rounding=8)
 
     def cc_loop_t(gg, kernel_mode, transport=None):
-        out, cache = gg, None
+        out = gg
         for _ in range(10):
-            out, cache, _, m = _superstep(
-                out, cache, None, vprog=cc_vprog, send_msg=cc_send,
+            out, _, m = _superstep(
+                out, None, vprog=cc_vprog, send_msg=cc_send,
                 gather="min", default_msg={"m": IMAX}, skip_stale="out",
                 changed_fn=None, kernel_mode=kernel_mode, use_cache=True,
                 transport=transport)
@@ -348,6 +347,40 @@ def main():
     np.testing.assert_array_equal(ccr, cc_local)
     gotr = dict(zip(vids.tolist(), ccr[mask].tolist()))
     assert gotr == want
+
+    # ---- (j) graph-resident view: operator-CHAIN delta shipping (§3.1) -----
+    # mapV -> mrTriplets -> subgraph -> mrTriplets, warm (the graph carries
+    # its view across operator boundaries) vs cold (view stripped before
+    # every consumer).  Same 4-device mesh, fused and unfused plans: the
+    # warm chain must be BIT-EXACT on the f32 wire while psummed
+    # bytes_shipped strictly drops — the Fig 10 end-to-end claim at
+    # operator granularity.
+    def chain(gg, cold, kernel_mode):
+        strip = (lambda x: dataclasses.replace(x, view=None)) if cold \
+            else (lambda x: x)
+        v1, e1, gg, m1 = gg.mrTriplets(send, "sum", kernel_mode=kernel_mode)
+        gg = strip(gg).mapV(lambda vid, v: {**v, "pr": v["pr"] * 2.0})
+        v2, e2, gg, m2 = gg.mrTriplets(send, "sum", kernel_mode=kernel_mode)
+        gg = strip(gg).subgraph(vpred=lambda vid, v: v["pr"] < 4.0)
+        gg = strip(gg)
+        v3, e3, gg, m3 = gg.mrTriplets(send, "sum", kernel_mode=kernel_mode)
+        shipped = (m1["fwd"].bytes_shipped + m2["fwd"].bytes_shipped
+                   + m3["fwd"].bytes_shipped)
+        return v3["m"], e3, jax.lax.psum(shipped, "parts")
+
+    for mode in ("auto", "unfused"):
+        outs = {}
+        for cold in (True, False):
+            fn_c = jax.jit(shard_map(
+                lambda gg, _c=cold, _m=mode: chain(gg, _c, _m),
+                mesh, (gspecs,), (PS("parts"), PS("parts"), PS())))
+            outs[cold] = fn_c(g_spmd)
+        np.testing.assert_array_equal(np.asarray(outs[True][0]),
+                                      np.asarray(outs[False][0]))
+        np.testing.assert_array_equal(np.asarray(outs[True][1]),
+                                      np.asarray(outs[False][1]))
+        warm_b, cold_b = float(outs[False][2]), float(outs[True][2])
+        assert 0 < warm_b < cold_b, (mode, warm_b, cold_b)
 
     # ---- collection shuffle under SPMD -------------------------------------
     from repro.core import Col

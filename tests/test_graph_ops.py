@@ -41,10 +41,10 @@ def test_triplets_is_three_way_join():
 
 
 def test_triplets_and_subgraph_under_jit():
-    """Regression: `_edge_visibility`'s fast path must be a STRUCTURAL check
-    (the static `vmask_full` pytree-aux flag), never `bool(jnp.all(...))` —
-    that raises TracerBoolConversionError as soon as triplets()/subgraph()
-    run inside jax.jit."""
+    """Regression: the edge-visibility fast path in triplets()/subgraph()
+    must be a STRUCTURAL check (the static `vmask_full` pytree-aux flag),
+    never `bool(jnp.all(...))` — that raises TracerBoolConversionError as
+    soon as triplets()/subgraph() run inside jax.jit."""
     import jax
     gr, g, vals = build()
 

@@ -1,0 +1,44 @@
+"""Tier-1 fig10 pipeline smoke (fast lane).
+
+Runs the fig10 analytics tail — the operator chain whose wire traffic the
+graph-resident view (DESIGN.md §3.1) exists to eliminate — at CI scale,
+warm vs cold, so an end-to-end pipeline regression (an operator
+re-shipping a clean view, or a cached chain diverging from the cold one)
+fails CI instead of only showing up in benchmark reports.
+"""
+import os
+import sys
+
+import numpy as np
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+sys.path.insert(0, os.path.dirname(HERE))    # repo root: benchmarks package
+
+from repro.core import Graph, algorithms as alg          # noqa: E402
+from repro.data import rmat                              # noqa: E402
+
+
+def test_fig10_tail_view_reuse_smoke():
+    from benchmarks.fig10_pipeline import analytics_tail
+
+    gd = rmat(7, 5, seed=1)
+    g = Graph.from_edges(gd.src, gd.dst, num_partitions=4)
+    res = alg.pagerank(g, num_iters=5, kernel_mode="ref")
+    pr = np.asarray(res.graph.vdata["pr"])[np.asarray(res.graph.vmask)]
+    thresh = float(np.median(pr))
+
+    mass_w, top_w, gw, acct_w = analytics_tail(res.graph, reuse=True,
+                                               thresh=thresh)
+    mass_c, top_c, gc, acct_c = analytics_tail(res.graph, reuse=False,
+                                               thresh=thresh)
+    # caching changes ships, never values (f32 bit-exact)
+    np.testing.assert_array_equal(np.asarray(mass_w["m"]),
+                                  np.asarray(mass_c["m"]))
+    np.testing.assert_array_equal(np.asarray(top_w["m"]),
+                                  np.asarray(top_c["m"]))
+    # ... and the reuse pipeline is strictly cheaper on the wire, with the
+    # final stage free (everything it reads was just shipped)
+    assert acct_w["total_bytes_shipped"] < acct_c["total_bytes_shipped"]
+    assert acct_w["route_ships"] < acct_c["route_ships"]
+    assert acct_w["stage_bytes_shipped"][-1] < \
+        acct_c["stage_bytes_shipped"][-1]

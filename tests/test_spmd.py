@@ -11,7 +11,9 @@ codecs (f32 vs int8 per-block scales and packed-int delta CC, with the
 all_to_all vs the ragged compacted collective with host-adaptive capacity
 and the lax.cond overflow fallback — DESIGN.md §2.1.1: ragged delta
 PageRank bit-exact on the f32 wire with monotonically dropping shipped
-bytes, <= 1e-3 norm-rank err on int8, delta CC bit-exact); see
+bytes, <= 1e-3 norm-rank err on int8, delta CC bit-exact), plus the
+graph-resident view's operator-chain differential (DESIGN.md §3.1: warm
+vs cold chain bit-exact with strictly fewer shipped bytes); see
 spmd_check.py's docstring for the exact matrix.
 """
 import os
