@@ -6,8 +6,19 @@ communication roughly in half and reducing runtime.
 
 Our jaxpr analyzer (repro.core.analysis) performs the rewrite soundly; the
 benchmark compares per-superstep forward wire bytes and wall time with the
-analyzer ON (need=src) vs forced OFF (need=both), plus the 0-way case
-(degree count: UDF reads no vertex attributes at all).
+analyzer ON (need=src) vs forced OFF (need=both) for BOTH physical plans
+(the reference executor and the fused triplet kernel), plus the 0-way case
+(degree count: UDF reads no vertex attributes at all).  `shipped_leaves`
+is the property-level refinement (§4.5.2 at leaf granularity): of the
+vertex-property leaves, how many actually ride the forward ship.
+
+PR 6 extends the figure to CHAIN granularity (core/planner.py): the
+declared chain mapV -> mrTriplets -> mrTriplets runs through the
+chain-level optimizer ON vs OFF from a warm both-direction view, and the
+WireLog's `bytes_shipped` shows the whole-chain join elimination — the
+dirty leaf's dst coherence routes stop shipping because no remaining
+consumer reads them, on top of the per-call side/leaf elimination both
+variants already perform.
 """
 from __future__ import annotations
 
@@ -16,6 +27,7 @@ import jax.numpy as jnp
 
 from repro.core import Graph, algorithms as alg
 from repro.core.mrtriplets import mr_triplets
+from repro.core.planner import MapV, MrTriplets, run_chain
 
 from .common import datasets, timeit
 
@@ -25,25 +37,31 @@ def run(quick: bool = True) -> list[dict]:
     g = alg.attach_out_degree(Graph.from_edges(gd.src, gd.dst,
                                                num_partitions=4))
     g = g.mapV(lambda vid, v: {**v, "pr": jnp.float32(1.0)})
+    n_leaves = len(jax.tree.leaves(g.vdata))
 
     def send(sv, ev, dv):
         return {"m": sv["pr"] / sv["deg"] * ev["w"]}
 
     rows = []
     wire = {}
-    for label, force in (("join_elim_on(2way)", None),
-                         ("join_elim_off(3way)", "both")):
-        vals, _, _, metrics = mr_triplets(g, send, "sum", force_need=force,
-                                          kernel_mode="ref")
-        wire[label] = metrics["fwd"].wire_bytes
+    for kernel, km in (("ref", "ref"), ("fused", "auto")):
+        for label, force in (("join_elim_on(2way)", None),
+                             ("join_elim_off(3way)", "both")):
+            vals, _, _, metrics = mr_triplets(g, send, "sum",
+                                              force_need=force,
+                                              kernel_mode=km)
+            wire[kernel, label] = metrics["fwd"].wire_bytes
 
-        step = jax.jit(lambda gg, f=force: mr_triplets(
-            gg, send, "sum", force_need=f, kernel_mode="ref")[0]["m"])
-        sec = timeit(step, g, iters=3)
-        rows.append({"benchmark": "fig5_join_elim", "variant": label,
-                     "fwd_wire_bytes": int(metrics["fwd"].wire_bytes),
-                     "join_arity": metrics["join_arity"],
-                     "seconds_per_mrtriplets": round(sec, 4)})
+            step = jax.jit(lambda gg, f=force, k=km: mr_triplets(
+                gg, send, "sum", force_need=f, kernel_mode=k)[0]["m"])
+            sec = timeit(step, g, iters=3)
+            rows.append({"benchmark": "fig5_join_elim",
+                         "variant": f"{label}[{kernel}]",
+                         "fwd_wire_bytes": int(metrics["fwd"].wire_bytes),
+                         "join_arity": metrics["join_arity"],
+                         "shipped_leaves":
+                             f"{metrics['shipped_leaves']}/{n_leaves}",
+                         "seconds_per_mrtriplets": round(sec, 4)})
 
     # 0-way: degree counting ships no vertex data at all
     def send0(sv, ev, dv):
@@ -52,13 +70,40 @@ def run(quick: bool = True) -> list[dict]:
     _, _, _, m0 = mr_triplets(g, send0, "sum", kernel_mode="ref")
     rows.append({"benchmark": "fig5_join_elim", "variant": "degrees(0way)",
                  "fwd_wire_bytes": int(m0["fwd"].wire_bytes),
-                 "join_arity": m0["join_arity"]})
+                 "join_arity": m0["join_arity"],
+                 "shipped_leaves": f"{m0['shipped_leaves']}/{n_leaves}"})
 
-    red = wire["join_elim_off(3way)"] / max(wire["join_elim_on(2way)"], 1)
+    red = (wire["ref", "join_elim_off(3way)"]
+           / max(wire["ref", "join_elim_on(2way)"], 1))
     rows.append({"benchmark": "fig5_join_elim", "variant": "SUMMARY",
                  "comm_reduction_x": round(red, 2),
                  "paper_claim": "~2x communication reduction"})
     assert red > 1.4, red   # paper: almost half the communication
+
+    # ---- chain variant: WHOLE-CHAIN join elimination (§4.4, PR 6) ----------
+    # a prior both-need consumer fills the view over both directions; the
+    # declared chain then reads src-only, so the optimizer demotes the
+    # dirty leaf's coherence ships to the src routes.
+    def send_both(sv, ev, dv):
+        return {"m": sv["pr"] * ev["w"] + dv["deg"]}
+
+    _, _, g_warm, _ = g.mrTriplets(send_both, "sum")
+    steps = (MapV(lambda vid, v: {**v, "pr": v["pr"] + 1.0}),
+             MrTriplets(send, "sum"),
+             MrTriplets(send, "sum"))
+    chain_bytes = {}
+    for opt in (True, False):
+        res = run_chain(g_warm, steps, optimize=opt)
+        chain_bytes[opt] = (float(res.graph.bytes_shipped)
+                            - float(g_warm.bytes_shipped))
+        rows.append({"benchmark": "fig5_join_elim",
+                     "variant": f"chain_planner_{'on' if opt else 'off'}",
+                     "chain": "mapV->mrT->mrT (warm both-dir view)",
+                     "bytes_shipped": int(chain_bytes[opt])})
+    cred = chain_bytes[False] / max(chain_bytes[True], 1)
+    rows.append({"benchmark": "fig5_join_elim", "variant": "CHAIN_SUMMARY",
+                 "chain_comm_reduction_x": round(cred, 2)})
+    assert chain_bytes[True] < chain_bytes[False], chain_bytes
     return rows
 
 

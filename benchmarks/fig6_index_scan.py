@@ -11,6 +11,12 @@ touched).  We report, per superstep, the live-edge fraction — the fraction
 of the edge table the predicated kernel actually processes — for CC
 (shrinks fast) vs static PageRank (stays ~1.0), plus wall time with
 skipStale on/off.
+
+PR 6 adds the QUERY-driven row: a `subgraph(epred)` pushed below a
+following mrTriplets by the chain planner (core/planner.py) restricts the
+same index-scan path — the live-edge fraction and the whole-chunk live
+fraction both drop below 1.0 without ever materialising the restricted
+edge table.
 """
 from __future__ import annotations
 
@@ -65,6 +71,43 @@ def run(quick: bool = True) -> list[dict]:
                          "TPU block-skip kernel exploits); 1-CPU wall time "
                          "has zero exchange cost so masking overhead is not "
                          "representative"})
+
+    # --- predicate pushdown: subgraph(epred) below mrTriplets (§4.4 PR 6) --
+    # the chain planner lowers the restriction into the index-scan path:
+    # the fused kernel's live bits carry the predicate, so whole [Eb]
+    # chunks with no surviving edge are never touched — the same machinery
+    # the CC collapse above exploits, now driven by a QUERY predicate.
+    from repro.core.planner import MrTriplets, Subgraph, run_chain
+    from repro.kernels.triplet import chunk_live_flags
+
+    gq = alg.attach_out_degree(Graph.from_edges(gd.src, gd.dst,
+                                                num_partitions=4))
+    # a dst-range predicate (vertex id carried as a property): restricting
+    # the aggregation side lines up with the tile tables' (out_block,
+    # in_block) sort, so the predicate kills WHOLE chunks, not just edges
+    n_half = float(gq.s.num_vertices) / 2.0
+    gq = gq.mapV(lambda vid, v: {**v, "vid": vid.astype(jnp.float32)})
+    epred = lambda sv, ev, dv: dv["vid"] < n_half
+    send_deg = lambda sv, ev, dv: {"m": sv["deg"] * ev["w"]}
+    res_pd = run_chain(gq, [Subgraph(epred=epred),
+                            MrTriplets(send_deg, "sum")])
+    m_pd = res_pd.outputs[0][2]
+    live = m_pd["emask_pushed"]
+    n_edges_q = float(gq.s.num_edges)
+    eb = gq.s.e_blk
+    cf_pred = chunk_live_flags(gq.s.tiles["dst"], live, e_blk=eb)
+    cf_all = chunk_live_flags(gq.s.tiles["dst"], gq.emask, e_blk=eb)
+    frac = float(m_pd["live_edges"]) / n_edges_q
+    rows.append({"benchmark": "fig6_index_scan", "algo": "epred_pushdown",
+                 "superstep": 0,
+                 "live_edge_fraction": round(frac, 4),
+                 "chunk_live_fraction": round(
+                     float(cf_pred.mean()) / max(float(cf_all.mean()),
+                                                 1e-9), 4),
+                 "note": "subgraph(epred)->mrTriplets fused: the predicate "
+                         "masks the scan below the join; whole-chunk "
+                         "skipping sees the restricted live set"})
+    assert frac < 1.0, frac
 
     # --- PageRank: active set stays large (paper: only slight benefit) ----
     g = Graph.from_edges(gd.src, gd.dst, num_partitions=4)

@@ -8,10 +8,13 @@ from .partition import GraphStructure, build_structure, PARTITIONERS
 from .pregel import pregel, pregel_fused, PregelResult
 from .transport import (TransportPolicy, resolve_transport, ship_transport,
                         TRANSPORT_NAMES)
-from .view import GraphView, WireLog, refresh_view
+from .view import GraphView, WireLog, refresh_view, prune_view
 from .wire import WireCodec, make_codec, CODEC_NAMES
 from . import algorithms
-from .analysis import analyze_message_fn, analyze_rewrites, TripletDeps
+from . import planner
+from .planner import ChainPlan, ChainResult, plan_chain, run_chain
+from .analysis import (analyze_message_fn, analyze_rewrites, TripletDeps,
+                       union_read_dirs)
 
 __all__ = [
     "Col", "shuffle_by_key", "Exchange", "LocalExchange", "SpmdExchange",
@@ -23,4 +26,6 @@ __all__ = [
     "ship_to_mirrors", "GraphStructure", "build_structure", "PARTITIONERS",
     "pregel", "pregel_fused", "PregelResult", "algorithms",
     "analyze_message_fn", "analyze_rewrites", "TripletDeps",
+    "union_read_dirs", "prune_view",
+    "planner", "ChainPlan", "ChainResult", "plan_chain", "run_chain",
 ]

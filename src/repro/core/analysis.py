@@ -50,10 +50,37 @@ class TripletDeps:
         side' mask, or None when unknown (trace failed / leaf count
         mismatch) — the shared derivation behind property-level join
         elimination in mapE, subgraph(epred) and mr_triplets."""
-        if self.src_leaves is None or len(self.src_leaves) != nleaves:
+        if (self.src_leaves is None or self.dst_leaves is None
+                or len(self.src_leaves) != nleaves
+                or len(self.dst_leaves) != nleaves):
             return None
         return tuple(su or du for su, du in
                      zip(self.src_leaves, self.dst_leaves))
+
+    def read_leaf_dirs(self, nleaves: int) -> tuple[str, ...] | None:
+        """Per-flat-vdata-leaf route-direction read set: "" (not read),
+        "s" (read through the source side), "d" (destination), "sd"
+        (both), or None when unknown.  The direction-resolved refinement
+        of `read_leaf_mask` that chain-level planning composes backward
+        (core/planner.py): a leaf's remaining-consumer read set is the
+        `union_read_dirs` of these over the rest of the chain."""
+        if (self.src_leaves is None or self.dst_leaves is None
+                or len(self.src_leaves) != nleaves
+                or len(self.dst_leaves) != nleaves):
+            return None
+        return tuple(("s" if su else "") + ("d" if du else "")
+                     for su, du in zip(self.src_leaves, self.dst_leaves))
+
+
+def union_read_dirs(a: tuple[str, ...] | None,
+                    b: tuple[str, ...] | None) -> tuple[str, ...] | None:
+    """Pointwise union of two per-leaf direction read sets.  None means
+    'unknown -> everything', which absorbs: union with None is None, so a
+    single unanalyzable consumer soundly disables pruning behind it."""
+    if a is None or b is None:
+        return None
+    return tuple("".join(c for c in "sd" if c in x or c in y)
+                 for x, y in zip(a, b))
 
 
 def _used_invars(jaxpr: jcore.Jaxpr) -> set[jcore.Var]:

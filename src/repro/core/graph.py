@@ -505,7 +505,8 @@ class Graph:
                    cache: GraphView | None = None, kernel_mode: str = "auto",
                    force_need: str | None = None,
                    payload_bound: int | None = None,
-                   transport=None, transport_state=None):
+                   transport=None, transport_state=None,
+                   epred: Callable | None = None):
         """See repro.core.mrtriplets.mr_triplets.
 
         Returns (values, exists, graph', metrics): unlike the low-level
@@ -547,9 +548,16 @@ class Graph:
             self, map_fn, reduce, to=to, skip_stale=skip_stale,
             cache=cache, kernel_mode=kernel_mode,
             force_need=force_need, payload_bound=payload_bound,
-            transport=transport, transport_state=transport_state)
+            transport=transport, transport_state=transport_state,
+            epred=epred)
         g = self._after_refresh(view, metrics["fwd"].merge(metrics["back"]),
                                 metrics.get("ships", 0))
+        if "emask_pushed" in metrics:
+            # the pushed-down predicate IS the subgraph restriction: the
+            # result graph carries the combined edge mask a materialising
+            # subgraph(epred) would have produced (emask is edge-level
+            # state, so the vertex view survives this replace untouched).
+            g = g.replace(emask=metrics["emask_pushed"])
         return values, exists, g, metrics
 
     def degrees(self, direction: str = "in", kernel_mode: str = "auto"):

@@ -116,8 +116,13 @@ class ShipMetrics:
     @classmethod
     def zero(cls) -> "ShipMetrics":
         """The no-ship element: what a statically-clean view refresh (zero
-        route collectives) reports, and merge()'s identity."""
-        return cls(0, jnp.int32(0), jnp.int32(0))
+        route collectives) reports, and merge()'s identity.  Count fields
+        carry the dtype a live ship's `flags.sum()` produces (the default
+        integer dtype, which follows the x64 config) — a clean and a
+        shipping refresh must present identical avals across lax.cond /
+        while-carry branches."""
+        nz = jnp.zeros((), jax.dtypes.canonicalize_dtype(jnp.int64))
+        return cls(0, nz, nz)
 
     def merge(self, other: "ShipMetrics") -> "ShipMetrics":
         """Combine the metrics of two route ships into one pipeline-level
@@ -421,6 +426,16 @@ def _derive_need(deps, force_need: str | None) -> str | None:
             else "dst" if deps.uses_dst else None)
 
 
+def _union_need(a: str | None, b: str | None) -> str | None:
+    """Union of two need sets (the ship for a fused subgraph+mrTriplets
+    pair must cover both UDFs' reads)."""
+    if a is None:
+        return b
+    if b is None or a == b:
+        return a
+    return "both"
+
+
 def _plan_fused(g, map_fn, deps, need, reduce, force_need,
                 vex, eex, payload_bound: int | None = None
                 ) -> _FusedPlan | None:
@@ -625,8 +640,20 @@ def mr_triplets(
     payload_bound: int | None = None,
     transport: Any = None,           # dense|ragged|auto plan (§2.1.1)
     transport_state: jnp.ndarray | None = None,  # prev decision (hysteresis)
+    epred: Callable | None = None,   # pushed-down subgraph predicate (§4.4)
 ):
     """Execute one mrTriplets. Returns (values, exists, view, metrics).
+
+    epred: a `subgraph(epred=…)` predicate LOWERED below this mrTriplets by
+    the chain planner (core/planner.py, DESIGN.md §4.4).  Its vertex reads
+    union into this call's need/leaf ship (one refresh, one fold of the
+    visibility ship when the graph is vmask-restricted); the predicate is
+    evaluated on the refreshed mirrors and masks the per-edge `live` bits,
+    so a restricted sweep feeds the fused kernel's §4.6 whole-chunk
+    skipping instead of paying a separate subgraph materialisation pass.
+    The combined edge mask (visibility ∧ epred, BEFORE any skip_stale
+    freshness narrowing) is returned as `metrics["emask_pushed"]` for the
+    caller to install as the result graph's emask.
 
     values: pytree [P, V_blk, ...] aggregated at vertex homes;
     exists:  [P, V_blk] bool ("WHERE sum IS NOT null", §3.2);
@@ -691,6 +718,13 @@ def mr_triplets(
         uses_src, uses_dst = deps.uses_src, deps.uses_dst
         arity = deps.n_way
 
+    # pushed-down subgraph predicate (§4.4): its vertex reads join this
+    # call's ship — one refresh covers both UDFs.
+    edeps = (analysis.analyze_message_fn(epred, vex, eex, vex)
+             if epred is not None else None)
+    if edeps is not None:
+        need = _union_need(need, _derive_need(edeps, None))
+
     metrics: dict[str, Any] = {"join_arity": arity, "need": need or "none"}
 
     # property-level join elimination (beyond §4.5.2): ship only the vdata
@@ -700,9 +734,14 @@ def mr_triplets(
     flat_vals, vtreedef = jax.tree.flatten(g.vdata)
     leaf_mask = (None if force_need is not None
                  else deps.read_leaf_mask(len(flat_vals)))
+    if edeps is not None and leaf_mask is not None:
+        em = edeps.read_leaf_mask(len(flat_vals))
+        leaf_mask = (None if em is None else
+                     tuple(a or b for a, b in zip(leaf_mask, em)))
     if leaf_mask is not None and (all(leaf_mask) or not any(leaf_mask)):
         leaf_mask = None
-    metrics["shipped_leaves"] = (sum(leaf_mask) if leaf_mask
+    metrics["shipped_leaves"] = (0 if need is None else
+                                 sum(leaf_mask) if leaf_mask
                                  else len(flat_vals))
 
     # view resolution (DESIGN.md §3.1): an explicit `cache=` restores the
@@ -749,13 +788,23 @@ def mr_triplets(
     metrics["transport_state"] = tstate_new
 
     # --- 1/2/3: materialise the replicated view THROUGH the cache ----------
+    # a pushed-down epred on a vmask-restricted graph folds the visibility
+    # ship into this same refresh (what subgraph would have shipped alone).
+    with_vis = epred is not None and not getattr(g, "vmask_full", False)
     ships_fwd = 0
-    if need is not None:
-        view, mirror_tree, _, m_fwd, ships_fwd = view_mod.refresh_view(
-            g, need, leaf_mask=leaf_mask, bound=bound, transport=tp,
-            prefer_ragged=prefer_ragged,
+    vis_mir = None
+    if need is not None or with_vis:
+        lm = leaf_mask if need is not None else (False,) * len(flat_vals)
+        view, mirror_tree, vis_mir, m_fwd, ships_fwd = view_mod.refresh_view(
+            g, need or "both", leaf_mask=lm, with_vis=with_vis, bound=bound,
+            transport=tp, prefer_ragged=prefer_ragged,
             legacy_cache=cache if legacy else None)
         metrics["fwd"] = m_fwd
+        if need is None:
+            # no vertex PROPERTY was read: this call carries no property
+            # freshness information (the vis-only refresh above must not
+            # leak its slot set into skip_stale) — same rule as below.
+            view = view.replace(active=jnp.ones((nl, s.v_mir), bool))
     else:
         mirror_tree = None
         if legacy:
@@ -778,6 +827,22 @@ def mr_triplets(
     # plans below mask the SAME per-edge live bits, so fused vs unfused is a
     # pure execution-strategy choice, never a semantics change.
     live = g.emask
+    if epred is not None:
+        # §4.4 predicate pushdown reaching the §4.6 index scan: restrict
+        # the per-edge live bits by endpoint visibility and the predicate
+        # BEFORE the sweep, so whole all-dead chunks are skipped by the
+        # fused kernel instead of materialised by a separate subgraph pass.
+        take_slot = jax.vmap(lambda a, i: jnp.take(a, i, mode="clip"))
+        if with_vis:
+            live = live & take_slot(vis_mir, s.src_slot) \
+                        & take_slot(vis_mir, s.dst_slot)
+        ezeros = tree_zeros_like_elem(g.vdata, (nl, s.e_blk))
+        esv = (gather_rows(mirror_tree, s.src_slot)
+               if edeps.uses_src else ezeros)
+        edv = (gather_rows(mirror_tree, s.dst_slot)
+               if edeps.uses_dst else ezeros)
+        live = live & vmap2(epred)(esv, g.edata, edv)
+        metrics["emask_pushed"] = live
     if skip_stale is not None:
         take_active = jax.vmap(lambda a, i: jnp.take(a, i, mode="clip"))
         src_fresh = take_active(view.active, s.src_slot)

@@ -1,0 +1,362 @@
+"""Chain-level relational optimizer over operator chains (DESIGN.md §4.4).
+
+The paper's thesis (§4.4–§4.6) is that graph operators cast in relational
+algebra admit QUERY optimization.  Through PR 5 our analyses run per call:
+every `mrTriplets`/`mapE`/`subgraph` plans its own ships in isolation, so
+
+  * a delta ship keeps EVERY filled mirror direction coherent, even ones no
+    remaining consumer of the chain will ever read (a `both`-filled leaf
+    re-read only through `src` still pays the dst routes);
+  * `subgraph` predicates materialise an edge mask in their own pass — the
+    restriction never reaches the fused kernel's §4.6 chunk skipping of the
+    mrTriplets that follows;
+  * only Pregel's host driver re-plans the transport from observed
+    occupancy — operator chains ship with whatever policy they were given.
+
+This module plans a DECLARED chain as one query:
+
+  1. **Whole-chain join elimination** — each step's refresh request (which
+     leaves, which route directions: `TripletDeps.read_leaf_dirs` composed
+     with `analysis.union_read_dirs`) is accumulated BACKWARD, and before
+     each step `view.prune_view` forgets per-leaf view state no remaining
+     step requests.  A dirty leaf read only through `src` downstream stops
+     shipping its dst coherence routes; a dirty leaf never read again stops
+     shipping entirely.
+  2. **Predicate pushdown** — a `Subgraph(vpred/epred)` immediately
+     followed by a `MrTriplets` lowers into `mr_triplets(epred=…)`: one
+     refresh covers the predicate's and the message UDF's reads (folding
+     the visibility ship), and the predicate masks the per-edge live bits
+     that drive whole-chunk skipping in `kernels/triplet.py`.
+  3. **Host-adaptive transport re-planning** — between eager chain steps
+     `transport.adapt_policy` re-plans a `kind="auto"` policy from the
+     observed `ShipMetrics` route occupancy and the view's dirty fraction,
+     the way `pregel`'s driver does per superstep.
+
+Legality (the differential-tested invariant: planning changes SHIPS, never
+VALUES):
+
+  * pruning only ever REDUCES what the view claims is filled — an
+    unanticipated read takes the widening/cold path and rematerialises the
+    exact same values (extra bytes, never a semantics change).  Clean
+    leaves are never demoted: within the chain a clean leaf ships nothing
+    either way, so pruning it could only tax out-of-chain readers.
+  * `skip_stale` couples VALUES to the freshness marks the ship plan
+    leaves behind, so it is a planning barrier: no pruning happens at or
+    before the last `skip_stale` step, and a Subgraph never fuses into a
+    `skip_stale` MrTriplets.
+  * transports are value-free by the §2.1.1 contract.  Adaptation only
+    runs between EAGER steps (a traced chain keeps its static policy —
+    same rule as `pregel_fused`).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from . import analysis
+from . import transport as transport_mod
+from . import view as view_mod
+from .mrtriplets import _derive_need, _union_need
+from .tree import elem_spec, vmap2
+
+_DIR = {"src": "s", "dst": "d", "both": "sd"}
+
+
+# ------------------------------------------------------------- chain steps
+@dataclasses.dataclass(frozen=True)
+class MapV:
+    """g.mapV(f, changed=...)"""
+    f: Callable
+    changed: Any = None
+
+
+@dataclasses.dataclass(frozen=True)
+class MapE:
+    """g.mapE(f)"""
+    f: Callable
+
+
+@dataclasses.dataclass(frozen=True)
+class Subgraph:
+    """g.subgraph(vpred, epred) — pushes below a following MrTriplets."""
+    vpred: Callable | None = None
+    epred: Callable | None = None
+
+
+@dataclasses.dataclass(frozen=True)
+class MrTriplets:
+    """g.mrTriplets(map_fn, reduce, ...) — produces one chain output."""
+    map_fn: Callable
+    reduce: str = "sum"
+    to: str = "dst"
+    skip_stale: str | None = None
+    kernel_mode: str = "auto"
+    payload_bound: int | None = None
+
+
+def _true_epred(sv, ev, dv):
+    """Vacuous predicate carrying a vpred-only Subgraph's visibility
+    restriction through the pushdown path (module-level: fused caches key
+    on UDF identity)."""
+    return jnp.bool_(True)
+
+
+@dataclasses.dataclass(frozen=True)
+class ChainPlan:
+    """Static optimization decisions for one declared chain."""
+    # per step: per-flat-vdata-leaf direction set any step >= i requests
+    # ("" | "s" | "d" | "sd"), or None = unknown -> prune nothing there.
+    keep_dirs: tuple
+    # step i is a Subgraph folded into the MrTriplets at i + 1
+    fused: tuple
+
+
+@dataclasses.dataclass
+class ChainResult:
+    graph: Any          # the graph after the whole chain
+    outputs: list       # (values, exists, metrics) per MrTriplets step
+    step_metrics: list  # per-step planner records (host-side facts)
+
+
+# ----------------------------------------------------------- static analysis
+def _mrt_request(map_fn, epred, vex, eex, n):
+    """The per-leaf direction set a (possibly predicate-fused) mrTriplets
+    refresh will request, or None when unknown (trace failed)."""
+    deps = analysis.analyze_message_fn(map_fn, vex, eex, vex)
+    need = _derive_need(deps, None)
+    mask = deps.read_leaf_mask(n)
+    if epred is not None:
+        edeps = analysis.analyze_message_fn(epred, vex, eex, vex)
+        need = _union_need(need, _derive_need(edeps, None))
+        em = edeps.read_leaf_mask(n)
+        mask = (None if (mask is None or em is None)
+                else tuple(a or b for a, b in zip(mask, em)))
+    if need is None:
+        return ("",) * n
+    if mask is None:
+        return None
+    nd = _DIR[need]
+    return tuple(nd if m else "" for m in mask)
+
+
+def plan_chain(g, steps, *, optimize: bool = True) -> ChainPlan:
+    """Statically analyze a chain against this graph's property specs.
+
+    Runs entirely on ShapeDtypeStructs (no graph values are read), so the
+    same plan serves eager and traced execution.  Unknown territory —
+    an untraceable UDF, a structure-changing mapV — degrades to
+    keep-everything, never to a wrong plan."""
+    steps = tuple(steps)
+    ns = len(steps)
+    fused = [False] * ns
+    if optimize:
+        for i in range(ns - 1):
+            st, nxt = steps[i], steps[i + 1]
+            if (isinstance(st, Subgraph) and isinstance(nxt, MrTriplets)
+                    and (st.epred is not None or st.vpred is not None)
+                    and nxt.skip_stale is None):
+                fused[i] = True
+
+    # forward pass: property elem specs entering each step (mapV/mapE may
+    # retype).  `known=False` poisons everything downstream of a spec we
+    # cannot derive.
+    vid_spec = jax.ShapeDtypeStruct((), g.s.home_vid.dtype)
+    cur_v, cur_e = elem_spec(g.vdata), elem_spec(g.edata)
+    specs, carry_ok = [], []
+    known = True
+    for st in steps:
+        specs.append((cur_v, cur_e) if known else None)
+        ok = True
+        if known and isinstance(st, MapV):
+            try:
+                new_v = jax.eval_shape(st.f, vid_spec, cur_v)
+                new_v = jax.tree.map(
+                    lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype), new_v)
+            except Exception:
+                known, new_v = False, None
+            if known:
+                old_p = [p for p, _ in
+                         jax.tree_util.tree_flatten_with_path(cur_v)[0]]
+                new_p = [p for p, _ in
+                         jax.tree_util.tree_flatten_with_path(new_v)[0]]
+                # leaf indices only line up across the rewrite when the
+                # flattened paths do — otherwise no read-set crosses it.
+                ok = old_p == new_p
+                cur_v = new_v
+        elif known and isinstance(st, MapE):
+            try:
+                cur_e = jax.tree.map(
+                    lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype),
+                    jax.eval_shape(st.f, cur_v, cur_e, cur_v))
+            except Exception:
+                known = False
+        carry_ok.append(ok and known)
+
+    # backward pass: per-leaf directions requested by steps >= i.  The
+    # accumulator starts from "nothing is read after the chain ends": the
+    # declared chain is the caller's certificate of remaining consumers
+    # (an out-of-chain read later cold-ships — bytes, not values).
+    keep: list = [None] * ns
+    tail: tuple | None = ()     # () = empty read set of the step AFTER it
+    for i in range(ns - 1, -1, -1):
+        st = steps[i]
+        if specs[i] is None:
+            keep[i] = None
+            tail = None
+            continue
+        vex, eex = specs[i]
+        n = len(jax.tree.leaves(vex))
+        req_tail = ("",) * n if tail == () else tail
+        if isinstance(st, MrTriplets):
+            if i > 0 and fused[i - 1]:
+                req = ("",) * n   # accounted at the Subgraph it fused with
+            else:
+                req = _mrt_request(st.map_fn, None, vex, eex, n)
+            if st.skip_stale is not None:
+                # freshness marks couple values to the ship plan: nothing
+                # at or before this step may be pruned.
+                req = None
+        elif isinstance(st, Subgraph):
+            if fused[i]:
+                nxt = steps[i + 1]
+                req = _mrt_request(nxt.map_fn, st.epred or _true_epred,
+                                   vex, eex, n)
+            elif st.epred is not None:
+                edeps = analysis.analyze_message_fn(st.epred, vex, eex, vex)
+                em = edeps.read_leaf_mask(n)
+                req = (None if em is None
+                       else tuple("sd" if m else "" for m in em))
+            else:
+                req = ("",) * n
+        elif isinstance(st, MapE):
+            req = _mrt_request(st.f, None, vex, eex, n)
+        else:   # MapV reads home values only, never the mirror
+            req = ("",) * n
+        fut = analysis.union_read_dirs(req, req_tail)
+        if isinstance(st, MapV) and not carry_ok[i]:
+            # a structure-changing mapV: downstream reads refer to the
+            # POST-rewrite leaves, which don't map onto the leaves the
+            # view holds before this step — keep everything here and
+            # upstream of here.
+            fut = None
+        keep[i] = fut if optimize else None
+        tail = fut
+    return ChainPlan(keep_dirs=tuple(keep), fused=tuple(fused))
+
+
+# ----------------------------------------------------------------- execution
+def _effective_keep(view, keep):
+    """Never demote a CLEAN leaf: it ships nothing within the chain either
+    way, so pruning it could only tax out-of-chain readers later."""
+    if view is None or keep is None:
+        return None
+    if len(keep) != len(view.dirs):
+        return None
+    return tuple(d if cl else k
+                 for k, d, cl in zip(keep, view.dirs, view.clean))
+
+
+def _apply_vpred(g, vpred):
+    """The local half of subgraph(vpred): restrict visibility and dirty the
+    vis leaf — the SHIP is deferred into the fused mrTriplets refresh."""
+    vmask = g.vmask & vmap2(vpred)(g.s.home_vid, g.vdata)
+    view = g.view.mark_vis(g.vmask ^ vmask) if g.view is not None else None
+    return g.replace(vmask=vmask, view=view, active=g.active & vmask,
+                     vmask_full=False)
+
+
+def _concrete_float(x) -> float | None:
+    """float(x) for eager values, None under tracing (adapt_policy needs
+    host-side facts, exactly like pregel's driver)."""
+    try:
+        return float(x)
+    except Exception:
+        return None
+
+
+def run_chain(g, steps, *, optimize: bool = True, transport: Any = None
+              ) -> ChainResult:
+    """Execute a declared operator chain through the optimizer.
+
+    optimize=False runs the steps exactly as the equivalent method chain
+    would (the differential baseline: same values, more bytes).  transport
+    follows the mrTriplets contract; "auto" re-plans per step on the host
+    between eager steps."""
+    steps = tuple(steps)
+    plan = plan_chain(g, steps, optimize=optimize)
+    tp_spec = transport_mod.resolve_transport(transport)
+    cur_tp = transport_mod.DENSE if tp_spec.kind == "auto" else tp_spec
+    outputs: list = []
+    recs: list = []
+    i = 0
+    while i < len(steps):
+        st = steps[i]
+        rec: dict[str, Any] = {"step": i, "kind": type(st).__name__,
+                               "transport": cur_tp.kind}
+        if optimize:
+            keep = _effective_keep(g.view, plan.keep_dirs[i])
+            pruned = view_mod.prune_view(g.view, keep)
+            rec["pruned_dirs"] = (
+                0 if g.view is None or pruned is g.view else
+                sum(len(a) - len(b)
+                    for a, b in zip(g.view.dirs, pruned.dirs)))
+            if pruned is not g.view:
+                g = g.replace(view=pruned)
+        m = None
+        if isinstance(st, Subgraph) and plan.fused[i]:
+            nxt = steps[i + 1]
+            if st.vpred is not None:
+                g = _apply_vpred(g, st.vpred)
+            vals, ok, g, m = g.mrTriplets(
+                nxt.map_fn, nxt.reduce, to=nxt.to,
+                skip_stale=nxt.skip_stale, kernel_mode=nxt.kernel_mode,
+                payload_bound=nxt.payload_bound, transport=cur_tp,
+                epred=st.epred or _true_epred)
+            rec["pushdown"] = True
+            outputs.append((vals, ok, m))
+            i += 2
+        elif isinstance(st, MrTriplets):
+            vals, ok, g, m = g.mrTriplets(
+                st.map_fn, st.reduce, to=st.to, skip_stale=st.skip_stale,
+                kernel_mode=st.kernel_mode, payload_bound=st.payload_bound,
+                transport=cur_tp)
+            outputs.append((vals, ok, m))
+            i += 1
+        elif isinstance(st, Subgraph):
+            g = g.subgraph(st.vpred, st.epred)
+            i += 1
+        elif isinstance(st, MapE):
+            g = g.mapE(st.f)
+            i += 1
+        elif isinstance(st, MapV):
+            g = g.mapV(st.f, changed=st.changed)
+            i += 1
+        else:
+            raise TypeError(f"unknown chain step {st!r}")
+
+        # host-adaptive transport re-planning (tentpole 3): what pregel's
+        # driver does per superstep, per chain step — from the observed
+        # route occupancy of the ship just run and the dirty fraction the
+        # NEXT refresh would delta-ship.
+        if tp_spec.kind == "auto" and m is not None:
+            fwd, back = m["fwd"], m["back"]
+            occ = _concrete_float(fwd.route_active_max)
+            rows = view_mod.dirty_rows(g.view)
+            nvis = _concrete_float(jnp.sum(g.vmask))
+            af = (0.0 if rows is None else _concrete_float(jnp.sum(rows)))
+            if occ is not None and af is not None and nvis is not None:
+                cur_tp = transport_mod.adapt_policy(
+                    tp_spec, was_ragged=cur_tp.kind == "ragged",
+                    active_frac=af / max(nvis, 1.0),
+                    fwd_frac=occ / max(fwd.route_width, 1),
+                    back_frac=(float(back.route_active_max)
+                               / max(back.route_width, 1)))
+                rec["transport_next"] = cur_tp.kind
+        bs = _concrete_float(g.bytes_shipped)
+        if bs is not None:
+            rec["bytes_shipped_total"] = bs
+        recs.append(rec)
+    return ChainResult(graph=g, outputs=outputs, step_metrics=recs)

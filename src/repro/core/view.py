@@ -344,13 +344,63 @@ def keep_through(old_vdata, exclude: tuple = ()) -> dict:
     """A `rewrites` map marking every old leaf as passthrough — for updates
     that only ADD leaves (attach_out_degree's `{**v, "deg": …}` built from
     arrays rather than a per-element UDF, where jaxpr analysis has nothing
-    to trace).  The caller certifies the old leaves are untouched; keys
-    the update OVERWRITES must be named in `exclude` (top-level dict keys)
-    or their stale mirrors would stay marked clean."""
+    to trace).  The caller certifies the old leaves are untouched; keys the
+    update OVERWRITES must be named in `exclude` or their stale mirrors
+    would stay marked clean.  Each `exclude` entry is a key or a tuple of
+    keys matched as a PATH PREFIX — "stats" excludes the whole `stats`
+    subtree, ("stats", "deg") excludes only the nested `deg` leaf (plain
+    top-level keys keep their old meaning as 1-tuples)."""
+    def keys_of(path):
+        return tuple(getattr(e, "key", None) for e in path)
+
+    prefixes = [e if isinstance(e, tuple) else (e,) for e in exclude]
+
     def kept(path):
-        return not (path and getattr(path[0], "key", None) in exclude)
+        ks = keys_of(path)
+        return not any(ks[:len(pfx)] == pfx for pfx in prefixes)
+
     return {p: kept(p) for p, _ in
             jax.tree_util.tree_flatten_with_path(old_vdata)[0]}
+
+
+def prune_view(view: GraphView | None,
+               keep_dirs: tuple[str, ...] | None) -> GraphView | None:
+    """Forget per-leaf view state no remaining consumer will read — the
+    chain-level join-elimination primitive (core/planner.py, DESIGN.md
+    §4.4).  `keep_dirs` is a per-flat-leaf direction set ("", "s", "d",
+    "sd"): each leaf's filled directions demote to the intersection, and a
+    leaf whose intersection is empty resets to cold/clean (its dirty rows
+    will never ship, so they stop riding delta-coherence collectives).
+
+    Legality: pruning only ever REDUCES what the view claims is filled.  A
+    read the plan did not anticipate sees a missing direction and takes
+    refresh_view's widening/cold full-ship path — extra bytes, identical
+    values.  The visibility state is never pruned (subgraph/triplets
+    consumers are not part of the leaf read-set calculus).  None keep_dirs
+    (unknown chain tail) or a None/incompatible view is a no-op."""
+    if view is None or keep_dirs is None:
+        return view
+    flat_dirty, ddef = jax.tree.flatten(view.dirty)
+    if len(keep_dirs) != len(flat_dirty):
+        return view
+    dirs, clean, dirty = [], [], []
+    changed = False
+    for d0, cl0, dy0, keep in zip(view.dirs, view.clean, flat_dirty,
+                                  keep_dirs):
+        d = "".join(c for c in d0 if c in keep)
+        if d == d0:
+            dirs.append(d0), clean.append(cl0), dirty.append(dy0)
+            continue
+        changed = True
+        if d:
+            dirs.append(d), clean.append(cl0), dirty.append(dy0)
+        else:   # dropped entirely: cold leaf, dirty rows forgotten
+            dirs.append(""), clean.append(True)
+            dirty.append(jnp.zeros_like(dy0))
+    if not changed:
+        return view
+    return view.replace(dirty=jax.tree.unflatten(ddef, dirty),
+                        dirs=tuple(dirs), clean=tuple(clean))
 
 
 def view_after_rewrite(view: GraphView | None, old_vdata, new_vdata,

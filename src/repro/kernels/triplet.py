@@ -139,6 +139,26 @@ def build_triplet_tiles(
     return dict(perm=perm, chunk_out=chunk_out, chunk_in=chunk_in)
 
 
+def chunk_live_flags(tiles, live: jnp.ndarray, *, e_blk: int) -> jnp.ndarray:
+    """Per-chunk any-live flags [P, n_chunks] for a per-edge live mask
+    [P, E_blk] — exactly the `act` bits `fused_triplet` derives to drive
+    `pl.when` whole-chunk skipping (§4.6).
+
+    This is the measurement hook for predicate pushdown (core/planner.py):
+    a subgraph restriction lowered into the mrTriplets live bits skips
+    every chunk whose edges are all dead, and `1 - mean(flags)` is the
+    fraction of the clustered edge index the sweep never touches (the
+    fig6 'index scan' quantity at tile granularity).  Padding chunks
+    count as skipped, matching the kernel."""
+    perm = jnp.asarray(tiles["perm"])
+    p, n_chunks, eb = perm.shape
+    lp = jnp.concatenate([live, jnp.zeros((live.shape[0], 1), bool)], axis=1)
+    cl = jax.vmap(lambda l, i: jnp.take(l, i, mode="clip"))(
+        lp, jnp.minimum(perm, e_blk).reshape(p, -1)).reshape(p, n_chunks, eb)
+    cl = cl & (perm < e_blk)
+    return cl.any(axis=2)
+
+
 def flatten_tiles(tiles, *, e_blk: int, n_vb: int) -> dict:
     """Map per-partition [P, n_chunks, ...] tile tables onto the kernel's
     flat stacked space: edge i of partition q -> q*e_blk + i, local block b

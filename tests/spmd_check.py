@@ -43,6 +43,12 @@ operator chain mapV -> mrTriplets -> subgraph -> mrTriplets run WARM (the
 graph carries its view across operator boundaries) is bit-exact vs the
 COLD chain (view stripped before every consumer) for the fused and
 unfused plans, while psummed bytes_shipped strictly drops.
+
+Chain planner (core/planner.py, DESIGN.md §4.4), same 4-device mesh: (k)
+the declared chain mapV -> mrTriplets -> mrTriplets run through
+run_chain(optimize=True) under jit(shard_map) is BIT-EXACT on the f32
+wire vs optimize=False while psummed bytes_shipped strictly drops (the
+pruned dst coherence routes stop shipping on every device).
 Prints OK on success.
 """
 import os
@@ -381,6 +387,43 @@ def main():
                                       np.asarray(outs[False][1]))
         warm_b, cold_b = float(outs[False][2]), float(outs[True][2])
         assert 0 < warm_b < cold_b, (mode, warm_b, cold_b)
+
+    # ---- (k) chain planner: whole-chain join elimination (§4.4) ------------
+    # warm the view over BOTH directions inside the traced program, then run
+    # the declared chain through the optimizer: planning must change SHIPS
+    # (psummed bytes strictly drop), never VALUES (bit-exact f32).
+    from repro.core.planner import MapV, MrTriplets, run_chain
+
+    def send_both(sv, ev, dv):
+        return {"m": sv["pr"] * ev["w"] + dv["deg"]}
+
+    def send_src(sv, ev, dv):
+        return {"m": sv["pr"] * ev["w"]}
+
+    chain_steps = (MapV(lambda vid, v: {**v, "pr": v["pr"] + 1.0}),
+                   MrTriplets(send_src, "sum"),
+                   MrTriplets(send_src, "sum"))
+
+    def planned(gg, opt):
+        _, _, gg, _ = gg.mrTriplets(send_both, "sum")   # both-dir warm fill
+        base = gg.bytes_shipped
+        res = run_chain(gg, chain_steps, optimize=opt)
+        vals, exists, _ = res.outputs[-1]
+        return (vals["m"], exists,
+                jax.lax.psum(res.graph.bytes_shipped - base, "parts"))
+
+    pouts = {}
+    for opt in (True, False):
+        fn_k = jax.jit(shard_map(
+            lambda gg, _o=opt: planned(gg, _o),
+            mesh, (gspecs,), (PS("parts"), PS("parts"), PS())))
+        pouts[opt] = fn_k(g_spmd)
+    np.testing.assert_array_equal(np.asarray(pouts[True][0]),
+                                  np.asarray(pouts[False][0]))
+    np.testing.assert_array_equal(np.asarray(pouts[True][1]),
+                                  np.asarray(pouts[False][1]))
+    b_on, b_off = float(pouts[True][2]), float(pouts[False][2])
+    assert 0 < b_on < b_off, (b_on, b_off)
 
     # ---- collection shuffle under SPMD -------------------------------------
     from repro.core import Col

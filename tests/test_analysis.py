@@ -1,0 +1,151 @@
+"""Unit coverage for the jaxpr dependency analyses (core/analysis.py).
+
+Until PR 6 this machinery was tested only indirectly through the engine's
+ship counts; this file pins the analyses themselves, including the
+`read_leaf_mask` dst_leaves=None regression (a UDF whose trace yields src
+leaves but whose deps were constructed without dst info used to raise
+TypeError instead of degrading to 'unknown')."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.analysis import (TripletDeps, _used_invars,
+                                 analyze_message_fn, analyze_rewrites,
+                                 union_read_dirs)
+
+F32 = jax.ShapeDtypeStruct((), jnp.float32)
+VEX = {"x": F32, "y": F32}
+EEX = {"w": F32}
+
+
+# ------------------------------------------------------------- TripletDeps
+def test_read_leaf_mask_partial_none_degrades_not_raises():
+    """Regression: one side's leaves known, the other None (partially
+    failed trace / hand-built deps).  Must report 'unknown' (None), not
+    TypeError from zipping a None."""
+    d = TripletDeps(True, True, False, src_leaves=(True, False),
+                    dst_leaves=None)
+    assert d.read_leaf_mask(2) is None          # raised TypeError pre-fix
+    assert d.read_leaf_dirs(2) is None
+    d2 = TripletDeps(True, True, False, src_leaves=None,
+                     dst_leaves=(True, False))
+    assert d2.read_leaf_mask(2) is None
+    assert d2.read_leaf_dirs(2) is None
+
+
+def test_read_leaf_mask_count_mismatch_is_unknown():
+    d = TripletDeps(True, False, False, src_leaves=(True,),
+                    dst_leaves=(False,))
+    assert d.read_leaf_mask(2) is None
+    assert d.read_leaf_dirs(2) is None
+    assert d.read_leaf_mask(1) == (True,)
+    assert d.read_leaf_dirs(1) == ("s",)
+
+
+def test_read_leaf_dirs_resolves_directions():
+    d = TripletDeps(True, True, True,
+                    src_leaves=(True, False, True),
+                    dst_leaves=(False, True, True))
+    assert d.read_leaf_mask(3) == (True, True, True)
+    assert d.read_leaf_dirs(3) == ("s", "d", "sd")
+
+
+def test_union_read_dirs():
+    assert union_read_dirs(("s", ""), ("d", "")) == ("sd", "")
+    assert union_read_dirs(("s", "d"), ("s", "")) == ("s", "d")
+    assert union_read_dirs(("", ""), ("", "")) == ("", "")
+    # canonical ordering: always "sd", never "ds"
+    assert union_read_dirs(("d",), ("s",)) == ("sd",)
+    # None = unknown absorbs
+    assert union_read_dirs(None, ("s",)) is None
+    assert union_read_dirs(("s",), None) is None
+
+
+# ------------------------------------------------------------ _used_invars
+def test_used_invars_backward_slice():
+    def f(a, b, c):
+        t = a * 2.0          # a reaches the output
+        dead = b + 1.0       # b computed but discarded
+        del dead
+        return t + c         # c reaches the output
+
+    jaxpr = jax.make_jaxpr(f)(1.0, 2.0, 3.0).jaxpr
+    needed = _used_invars(jaxpr)
+    a, b, c = jaxpr.invars
+    assert a in needed and c in needed and b not in needed
+
+
+def test_used_invars_passthrough_output():
+    # an invar that IS an outvar (no equation touches it) is in the slice
+    jaxpr = jax.make_jaxpr(lambda a, b: a)(1.0, 2.0).jaxpr
+    needed = _used_invars(jaxpr)
+    assert jaxpr.invars[0] in needed
+    assert jaxpr.invars[1] not in needed
+
+
+# ------------------------------------------------------ analyze_message_fn
+def test_message_fn_per_leaf_masks():
+    deps = analyze_message_fn(lambda sv, ev, dv: {"m": sv["x"] * ev["w"]},
+                              VEX, EEX, VEX)
+    assert (deps.uses_src, deps.uses_dst, deps.uses_edge) == (
+        True, False, True)
+    assert deps.src_leaves == (True, False)     # x read, y not
+    assert deps.dst_leaves == (False, False)
+    assert deps.read_leaf_mask(2) == (True, False)
+    assert deps.read_leaf_dirs(2) == ("s", "")
+    assert deps.n_way == 2
+
+
+def test_message_fn_trace_failure_is_conservative():
+    def bad(sv, ev, dv):
+        if sv["x"] > 0:      # concrete branch on a tracer -> trace fails
+            return {"m": sv["x"]}
+        return {"m": dv["y"]}
+
+    deps = analyze_message_fn(bad, VEX, EEX, VEX)
+    assert (deps.uses_src, deps.uses_dst, deps.uses_edge) == (
+        True, True, True)
+    assert deps.src_leaves is None and deps.dst_leaves is None
+    assert deps.read_leaf_mask(2) is None       # TypeError pre-fix
+    assert deps.read_leaf_dirs(2) is None
+    assert deps.msg_spec is None
+
+
+def test_message_fn_msg_spec_captured():
+    deps = analyze_message_fn(
+        lambda sv, ev, dv: {"m": sv["x"] + dv["x"], "f": ev["w"] > 0},
+        VEX, EEX, VEX)
+    flat = dict(jax.tree_util.tree_flatten_with_path(deps.msg_spec)[0])
+    specs = {k[-1].key: v for k, v in flat.items()}
+    assert specs["m"].dtype == jnp.float32
+    assert specs["f"].dtype == jnp.bool_
+    assert deps.read_leaf_dirs(2) == ("sd", "")
+
+
+# -------------------------------------------------------- analyze_rewrites
+def _rw(fn, vex=VEX):
+    vid = jax.ShapeDtypeStruct((), jnp.int32)
+    got = analyze_rewrites(fn, (vid, vex), 1)
+    if got is None:
+        return None
+    return {k[-1].key: v for k, v in got.items()}
+
+
+def test_rewrites_identity_leaf_detected():
+    got = _rw(lambda vid, v: {"x": v["x"] * 2.0, "y": v["y"]})
+    assert got == {"x": False, "y": True}       # y passes through untouched
+
+
+def test_rewrites_new_leaf_and_total_rewrite():
+    got = _rw(lambda vid, v: {"x": v["y"], "y": v["x"] + 1.0})
+    # x's OUTPUT is v["y"]'s var: same-path check must say rewritten
+    assert got == {"x": False, "y": False}
+
+
+def test_rewrites_trace_failure_returns_none():
+    def bad(vid, v):
+        if v["x"] > 0:
+            return v
+        return {"x": v["y"], "y": v["x"]}
+
+    assert _rw(bad) is None

@@ -1,0 +1,242 @@
+"""Chain-level relational optimizer (core/planner.py, DESIGN.md §4.4).
+
+The invariant under test everywhere: PLANNING CHANGES SHIPS, NEVER VALUES.
+Every optimization (backward read-set pruning, predicate pushdown into the
+fused kernel's index scan, host-adaptive transport re-planning) is run
+against the optimize=False naive baseline and must agree bit-exactly in
+f32 while shipping no more — and in the targeted constructions strictly
+fewer — bytes.  (The 4-device SPMD half of this matrix is
+tests/spmd_check.py section (k).)"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import Graph
+from repro.core import transport as transport_mod
+from repro.core.planner import (MapE, MapV, MrTriplets, Subgraph,
+                                plan_chain, run_chain)
+from repro.data import rmat
+
+SEND_X = lambda sv, ev, dv: {"m": sv["x"] * ev["w"]}
+SEND_XY = lambda sv, ev, dv: {"m": sv["x"] * ev["w"] + dv["y"]}
+BUMP_X = MapV(lambda vid, v: {"x": v["x"] + 1.0, "y": v["y"]})
+
+
+def build(seed=0, p=4, scale=6, ef=4):
+    g = rmat(scale, ef, seed=seed)
+    n = g.num_vertices
+    vids = np.arange(n, dtype=np.int64)
+    return Graph.from_edges(
+        g.src, g.dst, vertex_keys=vids,
+        vertex_values={"x": (vids % 17 + 1).astype(np.float32),
+                       "y": (vids % 5).astype(np.float32)},
+        default_vertex={"x": np.float32(0), "y": np.float32(0)},
+        num_partitions=p)
+
+
+def warm_both(g):
+    """Fill the view over BOTH directions for both leaves (a pre-chain
+    both-need consumer) — the state whose coherence ships the planner can
+    demote."""
+    _, _, g, _ = g.mrTriplets(SEND_XY, "sum")
+    return g
+
+
+def run_both(g, steps, **kw):
+    on = run_chain(g, steps, optimize=True, **kw)
+    off = run_chain(g, steps, optimize=False, **kw)
+    for (vo, eo, _), (vf, ef, _) in zip(on.outputs, off.outputs):
+        jax.tree.map(
+            lambda a, b: np.testing.assert_array_equal(np.asarray(a),
+                                                       np.asarray(b)),
+            (vo, eo), (vf, ef))
+    return on, off
+
+
+def chain_bytes(g0, res):
+    return float(res.graph.bytes_shipped) - float(g0.bytes_shipped)
+
+
+# --------------------------------------------------------- static planning
+def test_plan_backward_read_set_composition():
+    g = build()
+    steps = [BUMP_X, MrTriplets(SEND_X, "sum"), MrTriplets(SEND_X, "sum")]
+    plan = plan_chain(g, steps)
+    # x read through src by every remaining consumer, y by none
+    assert plan.keep_dirs == (("s", ""), ("s", ""), ("s", ""))
+    # requests mirror what refresh_view will ACTUALLY ask for — the
+    # side-level need uniformly over required leaves (a grouped ship), not
+    # the per-leaf side reads; under-approximating would turn the next
+    # step's delta into a widening full ship
+    plan2 = plan_chain(g, [MrTriplets(SEND_XY, "sum"),
+                           MrTriplets(SEND_X, "sum")])
+    assert plan2.keep_dirs == (("sd", "sd"), ("s", ""))
+
+
+def test_plan_skip_stale_is_a_barrier():
+    g = build()
+    steps = [BUMP_X, MrTriplets(SEND_X, "sum", skip_stale="out"),
+             MrTriplets(SEND_X, "sum")]
+    plan = plan_chain(g, steps)
+    # freshness marks couple values to the ship plan: nothing at or before
+    # the skip_stale step may be pruned; after it pruning resumes
+    assert plan.keep_dirs[0] is None and plan.keep_dirs[1] is None
+    assert plan.keep_dirs[2] == ("s", "")
+    # and a Subgraph never fuses INTO a skip_stale mrTriplets
+    p2 = plan_chain(g, [Subgraph(epred=lambda sv, ev, dv: ev["w"] > 0),
+                        MrTriplets(SEND_X, "sum", skip_stale="out")])
+    assert p2.fused == (False, False)
+
+
+def test_plan_structure_changing_mapv_is_a_barrier():
+    g = build()
+    steps = [MrTriplets(SEND_X, "sum"),
+             MapV(lambda vid, v: {"z": v["x"] + v["y"]}),   # retypes vdata
+             MrTriplets(lambda sv, ev, dv: {"m": sv["z"]}, "sum")]
+    plan = plan_chain(g, steps)
+    assert plan.keep_dirs[0] is None and plan.keep_dirs[1] is None
+    # the post-rewrite step plans against the NEW spec (one leaf)
+    assert plan.keep_dirs[2] == ("s",)
+
+
+def test_plan_unanalyzable_udf_disables_pruning_behind_it():
+    g = build()
+
+    def opaque(sv, ev, dv):
+        if sv["x"] > 0:              # concrete branch -> trace fails
+            return {"m": sv["x"]}
+        return {"m": dv["y"]}
+
+    plan = plan_chain(g, [MrTriplets(SEND_X, "sum"),
+                          MrTriplets(opaque, "sum")])
+    assert plan.keep_dirs == (None, None)
+
+
+def test_plan_optimize_false_plans_nothing():
+    g = build()
+    plan = plan_chain(g, [Subgraph(epred=lambda sv, ev, dv: ev["w"] > 0),
+                          MrTriplets(SEND_X, "sum")], optimize=False)
+    assert plan.fused == (False, False)
+    assert all(k is None for k in plan.keep_dirs)
+
+
+# ------------------------------------------- join elimination differential
+@pytest.mark.parametrize("km", ["ref", "unfused", "auto"])
+def test_chain_pruning_ships_less_bit_exact(km):
+    g0 = build()
+    g = warm_both(g0)
+    steps = [BUMP_X, MrTriplets(SEND_X, "sum", kernel_mode=km),
+             MrTriplets(SEND_X, "sum", kernel_mode=km)]
+    on, off = run_both(g, steps)
+    b_on, b_off = chain_bytes(g, on), chain_bytes(g, off)
+    # the dirty leaf's dst coherence routes stop shipping
+    assert 0 < b_on < b_off, (b_on, b_off)
+    assert sum(r.get("pruned_dirs", 0) for r in on.step_metrics) > 0
+
+
+def test_chain_drops_leaf_no_consumer_reads():
+    g = warm_both(build())
+    # dirty BOTH leaves; downstream only ever reads x -> y's dirty rows
+    # must stop riding the delta collectives entirely
+    dirty_all = MapV(lambda vid, v: {"x": v["x"] + 1.0, "y": v["y"] * 2.0})
+    steps = [dirty_all, MrTriplets(SEND_X, "sum"),
+             MrTriplets(SEND_X, "sum")]
+    on, off = run_both(g, steps)
+    assert chain_bytes(g, on) < chain_bytes(g, off)
+
+
+def test_cold_chain_identical_plans():
+    # nothing filled, nothing dirty -> pruning finds nothing; the naive
+    # and optimized chains ship the same bytes and values
+    g = build()
+    steps = [MrTriplets(SEND_X, "sum"), MrTriplets(SEND_X, "sum")]
+    on, off = run_both(g, steps)
+    assert chain_bytes(g, on) == chain_bytes(g, off)
+
+
+def test_skip_stale_chain_bit_exact():
+    # the barrier keeps freshness-coupled values identical
+    g = warm_both(build())
+    steps = [BUMP_X, MrTriplets(SEND_X, "sum", skip_stale="out"),
+             MrTriplets(SEND_XY, "sum", skip_stale="in")]
+    on, off = run_both(g, steps)
+    assert chain_bytes(g, on) == chain_bytes(g, off)
+
+
+# -------------------------------------------------- predicate pushdown
+def test_epred_pushdown_bit_exact_and_restricts_scan():
+    g0 = build()
+    epred = lambda sv, ev, dv: sv["y"] < 3.0
+    steps = [Subgraph(epred=epred), MrTriplets(SEND_X, "sum")]
+    on, off = run_both(g0, steps)
+    assert plan_chain(g0, steps).fused == (True, False)
+    # the result graph carries the SAME restriction the materialising
+    # subgraph produced...
+    np.testing.assert_array_equal(np.asarray(on.graph.emask),
+                                  np.asarray(off.graph.emask))
+    # ...the scan was genuinely restricted below the join...
+    mo = on.outputs[0][2]
+    n_edges = int(g0.emask.sum())
+    assert 0 < float(mo["live_edges"]) < n_edges
+    # ...and one fused refresh ships no more than subgraph + mrTriplets
+    assert chain_bytes(g0, on) <= chain_bytes(g0, off)
+    assert on.step_metrics[0].get("pushdown") is True
+
+
+def test_vpred_pushdown_defers_visibility_ship():
+    g0 = build()
+    vpred = lambda vid, v: v["x"] > 4.0
+    steps = [Subgraph(vpred=vpred), MrTriplets(SEND_XY, "sum")]
+    on, off = run_both(g0, steps)
+    np.testing.assert_array_equal(np.asarray(on.graph.vmask),
+                                  np.asarray(off.graph.vmask))
+    np.testing.assert_array_equal(np.asarray(on.graph.emask),
+                                  np.asarray(off.graph.emask))
+    assert chain_bytes(g0, on) <= chain_bytes(g0, off)
+    # hidden vertices' edges really dropped out of the scan
+    assert float(on.outputs[0][2]["live_edges"]) < int(g0.emask.sum())
+
+
+def test_pushdown_then_more_chain():
+    # fusion composes with pruning in a longer chain
+    g = warm_both(build())
+    steps = [BUMP_X,
+             Subgraph(epred=lambda sv, ev, dv: ev["w"] > 0.0),
+             MrTriplets(SEND_X, "sum"),
+             MrTriplets(SEND_X, "sum")]
+    on, off = run_both(g, steps)
+    assert chain_bytes(g, on) < chain_bytes(g, off)
+
+
+# ----------------------------------------------- transport + traceability
+def test_auto_transport_adapts_per_step():
+    g = warm_both(build())
+    steps = [BUMP_X, MrTriplets(SEND_X, "sum"), MrTriplets(SEND_X, "sum")]
+    on, off = run_both(g, steps, transport="auto")
+    recs = [r for r in on.step_metrics if "transport_next" in r]
+    assert recs, "host re-planning never ran between eager steps"
+    assert all(r["transport_next"] in ("dense", "ragged") for r in recs)
+
+
+def test_chain_traces_under_jit():
+    g = warm_both(build())
+    steps = [BUMP_X, MrTriplets(SEND_X, "sum"), MrTriplets(SEND_X, "sum")]
+
+    def fn(gg):
+        r = run_chain(gg, steps, optimize=True)
+        return r.outputs[-1][0]["m"], r.graph.bytes_shipped
+
+    mj, bj = jax.jit(fn)(g)
+    me, be = fn(g)
+    np.testing.assert_array_equal(np.asarray(mj), np.asarray(me))
+    assert float(bj) == float(be)
+
+
+def test_mape_in_chain():
+    g = warm_both(build())
+    steps = [BUMP_X,
+             MapE(lambda sv, ev, dv: {"w": ev["w"] * (sv["x"] > 0.0)}),
+             MrTriplets(SEND_X, "sum")]
+    on, off = run_both(g, steps)
+    assert chain_bytes(g, on) <= chain_bytes(g, off)

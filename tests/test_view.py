@@ -386,3 +386,70 @@ def test_wire_log_accumulates():
     # mutators keep the log
     g3 = g2.mapV(lambda vid, v: {"x": v["x"], "y": v["y"] + 1})
     assert float(g3.ships) == 3
+
+
+def test_keep_through_nested_exclude_dirties_stale_leaf():
+    """Regression: `keep_through(exclude=…)` matched top-level keys only,
+    so excluding a NESTED leaf — the natural (("stats", "deg"),) spelling —
+    silently kept its stale mirror marked clean and the warm path read old
+    values.  Entries now match as path prefixes; warm must equal cold."""
+    from repro.core import view as view_mod
+
+    g = rmat(5, 4, seed=3)
+    vids = np.arange(g.num_vertices, dtype=np.int64)
+    vv = {"x": (vids % 7 + 1).astype(np.float32),
+          "stats": {"deg": (vids % 4).astype(np.float32)}}
+    gr = Graph.from_edges(
+        g.src, g.dst, vertex_keys=vids, vertex_values=vv,
+        default_vertex={"x": np.float32(0),
+                        "stats": {"deg": np.float32(0)}},
+        num_partitions=4)
+
+    send = lambda sv, ev, dv: {"m": sv["stats"]["deg"] + dv["x"]}
+    _, _, warm, _ = gr.mrTriplets(send, "sum")      # view now filled
+
+    # overwrite ONLY the nested leaf, certifying the rest passes through
+    def bump_deg(gg):
+        old = gg.vdata
+        new = {"x": old["x"],
+               "stats": {"deg": old["stats"]["deg"] + 10.0}}
+        view = view_mod.view_after_rewrite(
+            gg.view, old, new,
+            view_mod.keep_through(old, exclude=(("stats", "deg"),)), None)
+        return gg.replace(vdata=new, view=view)
+
+    got, _, _, _ = bump_deg(warm).mrTriplets(send, "sum")   # warm: delta
+    want, _, _, _ = bump_deg(gr).mrTriplets(send, "sum")    # cold: full
+    np.testing.assert_array_equal(np.asarray(got["m"]),
+                                  np.asarray(want["m"]))
+    # whole-subtree exclusion and the old top-level spelling both still work
+    km = view_mod.keep_through(warm.vdata, exclude=("stats",))
+    assert [v for _, v in sorted(km.items(), key=str)] in (
+        [True, False], [False, True])
+    km2 = view_mod.keep_through(warm.vdata, exclude=("x",))
+    assert sum(km2.values()) == len(km2) - 1
+
+
+def test_ship_metrics_zero_matches_live_dtypes_under_x64():
+    """Regression: `ShipMetrics.zero()` hardcoded int32 counters while a
+    live ship's counters are `flags.sum()` — the default integer dtype,
+    which is int64 under the x64 config.  A statically-clean refresh and a
+    shipping refresh then presented different avals across lax.cond
+    branches.  zero() must track the config."""
+    from jax.experimental import enable_x64
+
+    with enable_x64():
+        flags = jnp.zeros((2, 4), bool)
+        live = ShipMetrics(wire_bytes=0,
+                           effective_bytes=flags.sum() * 4,
+                           n_shipped=flags.sum(),
+                           route_width=0)
+        z = ShipMetrics.zero()
+        assert ([x.dtype for x in jax.tree.leaves(live)]
+                == [x.dtype for x in jax.tree.leaves(z)])
+        # the aval-stability contract itself: both branches of a cond
+        out = jax.lax.cond(flags.any(),
+                           lambda: live, lambda: ShipMetrics.zero())
+        assert int(out.n_shipped) == 0
+    # and outside x64 the counters stay the default int32
+    assert ShipMetrics.zero().n_shipped.dtype == jnp.zeros((), bool).sum().dtype

@@ -41,8 +41,11 @@ def test_registry_and_with_wire():
 
 def test_pack_bf16_shim_matches_with_wire():
     """The deprecated helper is with_wire(ex, "bf16"): floats narrow, the
-    result STAYS bf16 in the shipped buffer (mirror stores the wire dtype)."""
-    ex = pack_bf16(LocalExchange(4))
+    result STAYS bf16 in the shipped buffer (mirror stores the wire dtype).
+    The shim WARNS — callers migrate to with_wire (repro-internal use is a
+    hard error via the pytest.ini filterwarnings gate)."""
+    with pytest.warns(DeprecationWarning, match="with_wire"):
+        ex = pack_bf16(LocalExchange(4))
     assert ex.codec.name == "bf16" and ex.codec.fdtype == jnp.bfloat16
     x = jnp.asarray(np.random.default_rng(0).normal(size=(4, 4, 8))
                     .astype(np.float32))
@@ -369,7 +372,7 @@ def test_bf16_wire_unchanged_by_codec_layer():
     """The legacy bf16 path must produce numerically identical results
     through the codec layer (regression vs the pre-codec Exchange.ship)."""
     g, _ = _graph()
-    r_new = alg.pagerank(g.replace(ex=pack_bf16(g.ex)), num_iters=5)
+    r_new = alg.pagerank(g.replace(ex=with_wire(g.ex, "bf16")), num_iters=5)
     r_leg = alg.pagerank(g.replace(
         ex=LocalExchange(4, wire_dtype=jnp.bfloat16)), num_iters=5)
     np.testing.assert_array_equal(np.asarray(r_new.graph.vdata["pr"]),
