@@ -1,0 +1,93 @@
+"""Perf-regression gate for the persisted BENCH trajectory.
+
+  PYTHONPATH=src python -m benchmarks.perf_gate FRESH.json COMMITTED.json \
+      [--tol-scale 1.0]
+
+Diffs a freshly produced BENCH_superstep.json against the committed one on
+the DETERMINISTIC fields only (static wire-byte accounting, modeled roofline
+step time, superstep counts, recompiles, materialization counts, overlap
+efficiency) — measured CPU wall seconds are informational and never gated.
+Each field declares which direction is a regression and a relative
+tolerance (superstep_bench.GATED_FIELDS, also embedded in the committed
+file); --tol-scale loosens or tightens all of them together.
+
+Exit status 0 = no regressions; 1 = regressions (listed on stdout).  Rows
+are keyed by (workload, transport, codec, pipeline); a key present in the
+committed file but missing from the fresh run is itself a regression — a
+benchmark cell silently dropping out must fail the lane, not shrink it.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def _load_rows(path: str) -> tuple[dict, dict]:
+    with open(path) as f:
+        doc = json.load(f)
+    rows = doc["rows"] if isinstance(doc, dict) else doc
+    key_fields = (doc.get("row_key") if isinstance(doc, dict) else None) or \
+        ["workload", "transport", "codec", "pipeline"]
+    keyed = {tuple(r[k] for k in key_fields): r for r in rows}
+    return doc if isinstance(doc, dict) else {"rows": rows}, keyed
+
+
+def compare(fresh: dict, committed: dict, gated: dict,
+            tol_scale: float = 1.0) -> list[str]:
+    """Return regression messages (empty = gate passes)."""
+    problems = []
+    for key, want in committed.items():
+        got = fresh.get(key)
+        if got is None:
+            problems.append(f"{key}: row missing from fresh run")
+            continue
+        for field, spec in gated.items():
+            worse, tol = spec["worse"], spec["tol"] * tol_scale
+            if field not in want:
+                continue
+            if field not in got:
+                problems.append(f"{key}: field {field!r} missing")
+                continue
+            ref, val = float(want[field]), float(got[field])
+            scale = max(abs(ref), 1e-12)
+            if worse == "up" and val > ref + tol * scale:
+                problems.append(
+                    f"{key}: {field} regressed {ref:g} -> {val:g} "
+                    f"(+{(val - ref) / scale:.1%}, tol {tol:.1%})")
+            elif worse == "down" and val < ref - tol * scale:
+                problems.append(
+                    f"{key}: {field} regressed {ref:g} -> {val:g} "
+                    f"(-{(ref - val) / scale:.1%}, tol {tol:.1%})")
+    return problems
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("fresh")
+    ap.add_argument("committed")
+    ap.add_argument("--tol-scale", type=float, default=1.0)
+    args = ap.parse_args()
+
+    fresh_doc, fresh = _load_rows(args.fresh)
+    committed_doc, committed = _load_rows(args.committed)
+    gated = committed_doc.get("gated_fields")
+    if gated is None:
+        from benchmarks.superstep_bench import GATED_FIELDS
+        gated = {k: {"worse": d, "tol": t} for k, (d, t) in
+                 GATED_FIELDS.items()}
+
+    problems = compare(fresh, committed, gated, args.tol_scale)
+    if problems:
+        print(f"PERF GATE: {len(problems)} regression(s) vs committed "
+              "trajectory:")
+        for p in problems:
+            print("  " + p)
+        return 1
+    print(f"PERF GATE: OK ({len(committed)} rows, "
+          f"{len(gated)} gated fields)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -18,9 +18,15 @@ import time
 import traceback
 
 # The SpmdExchange fused-vs-unfused columns (op_micro, fig7) need >= 4
-# devices; simulate 4 host-platform devices unless the operator provided
-# their own flags.  Must happen before any benchmark module imports jax.
-os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=4")
+# devices; simulate host-platform devices unless the operator provided
+# their own flags.  REPRO_NUM_DEVICES overrides the simulated count (it has
+# no effect under an operator-supplied XLA_FLAGS or on real accelerators,
+# where the platform owns the device count — modules that need more
+# devices than exist skip gracefully instead).  Must happen before any
+# benchmark module imports jax.
+_ndev = os.environ.get("REPRO_NUM_DEVICES", "4")
+os.environ.setdefault(
+    "XLA_FLAGS", f"--xla_force_host_platform_device_count={_ndev}")
 
 MODULES = [
     "fig4_incremental",
@@ -39,7 +45,24 @@ def main() -> None:
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default=None)
     ap.add_argument("--json-out", default="reports/bench.json")
+    ap.add_argument("--superstep", action="store_true",
+                    help="run ONLY the superstep fusion/overlap bench and "
+                         "write its persisted trajectory (BENCH file)")
+    ap.add_argument("--bench-out", default="BENCH_superstep.json",
+                    help="trajectory path for --superstep")
     args = ap.parse_args()
+
+    if args.superstep:
+        from benchmarks import superstep_bench
+        rows = superstep_bench.run(quick=not args.full)
+        for r in rows:
+            print("  " + ", ".join(f"{k}={v}" for k, v in r.items()
+                                   if k != "benchmark"))
+        with open(args.bench_out, "w") as f:
+            json.dump(superstep_bench.trajectory(rows), f, indent=1)
+            f.write("\n")
+        print(f"\n{len(rows)} superstep rows -> {args.bench_out}")
+        return
 
     mods = [args.only] if args.only else MODULES
     all_rows = []

@@ -1,0 +1,243 @@
+"""Superstep mega-fusion + overlap benchmark (DESIGN.md §2.3.2 / §2.1.2).
+
+First compiled numbers for the fused-superstep + pipelined-exchange work:
+for each workload x transport x codec x pipeline cell, one converged Pregel
+run reporting
+
+  * `bytes_per_chip`        — shipped collective bytes / P (deterministic:
+                              static wire accounting, fixed seeds);
+  * `overlap_efficiency`    — the fraction of exchange wire time the ring
+                              pipeline hides behind compute ((P-1)/P once
+                              the schedule decomposes into P independent
+                              stages; 0 for the serialized all_to_all);
+  * `step_time_modeled_s`   — per-superstep roofline: HBM time for the home
+                              materializations + the UNHIDDEN fraction of
+                              link time (launch.perf constants — no TPU
+                              wall clock exists in this container);
+  * `materializations_*`    — home-shaped HBM array materializations per
+                              superstep from the traced jaxpr, fused vs
+                              unfused apply (the §2.3.2 claim: strictly
+                              fewer when the apply half fuses);
+  * `seconds_measured`      — CPU wall time, informational only (NOT gated:
+                              host timing noise).
+
+`benchmarks/run.py --superstep` writes the deterministic rows to
+BENCH_superstep.json (the committed perf trajectory); `benchmarks/perf_gate.py`
+diffs a fresh file against the committed one in CI.
+"""
+from __future__ import annotations
+
+import functools
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+import importlib
+
+from repro.core import Graph, TransportPolicy, with_wire
+from repro.core.transport import DENSE
+from repro.data import rmat, symmetrize
+
+# `repro.core.pregel` the MODULE — the package re-exports the same name as
+# the driver function, which `import ... as` would resolve to instead
+pregel_mod = importlib.import_module("repro.core.pregel")
+
+# roofline constants live with the dry-run profiler; launch.perf only forces
+# a 512-device host platform when XLA_FLAGS is still unset (run.py sets it)
+from repro.launch.perf import HBM_BW, LINK_BW
+
+P = 4
+
+
+# ---------------------------------------------------------------------------
+# home-materialization counting (the dry-run HLO evidence for §2.3.2)
+# ---------------------------------------------------------------------------
+def _subjaxprs(val):
+    from jax.extend import core as jex
+    if isinstance(val, jex.ClosedJaxpr):
+        yield val.jaxpr
+    elif isinstance(val, jex.Jaxpr):
+        yield val
+    elif isinstance(val, (list, tuple)):
+        for v in val:
+            yield from _subjaxprs(v)
+
+
+def _count_home_shaped(jaxpr, shape2) -> int:
+    n = 0
+    for eqn in jaxpr.eqns:
+        for v in eqn.outvars:
+            if tuple(getattr(v.aval, "shape", ()))[:2] == shape2:
+                n += 1
+        for val in eqn.params.values():
+            for sub in _subjaxprs(val):
+                n += _count_home_shaped(sub, shape2)
+    return n
+
+
+def count_home_materializations(g: Graph, *, vprog, send_msg, gather,
+                                default_msg, skip_stale, fuse_apply) -> int:
+    """Number of home-vertex-shaped ([nl, v_blk, ...]) arrays one traced
+    superstep materializes.  Traced with kernel_mode="interpret" so the
+    fused sweeps stay single `pallas_call` equations — exactly what the
+    compiled HLO keeps VMEM-resident instead of round-tripping to HBM."""
+    fn = functools.partial(
+        pregel_mod._superstep, vprog=vprog, send_msg=send_msg, gather=gather,
+        default_msg=default_msg, skip_stale=skip_stale, changed_fn=None,
+        kernel_mode="interpret", use_cache=True, fuse_apply=fuse_apply)
+    jaxpr = jax.make_jaxpr(fn)(g)
+    nl, v_blk = g.s.home_vid.shape
+    return _count_home_shaped(jaxpr.jaxpr, (nl, v_blk))
+
+
+# ---------------------------------------------------------------------------
+# workloads
+# ---------------------------------------------------------------------------
+def _workloads(quick: bool):
+    """name -> (graph builder output, pregel kwargs, fuse_apply)."""
+    IMAX = jnp.int32(2**31 - 1)
+
+    # CC: min gather, int32 labels — the fused apply's bit-exact default
+    sgd = symmetrize(rmat(7 if quick else 11, 4, seed=4))
+    cg = Graph.from_edges(sgd.src, sgd.dst, num_partitions=P)
+    cg = cg.mapV(lambda vid, v: {"cc": vid})
+
+    def cc_send(sv, ev, dv):
+        return {"m": sv["cc"]}
+
+    def cc_vprog(vid, v, msg):
+        return {"cc": jnp.minimum(v["cc"], msg["m"])}
+
+    # delta PageRank: sum gather with a tolerance changed mask, so the
+    # active set SHRINKS and auto transport has something to compact
+    gd = rmat(8 if quick else 12, 6, seed=3)
+    deg = np.maximum(np.bincount(
+        gd.src, minlength=int(max(gd.src.max(), gd.dst.max())) + 1), 1)
+    vids = np.arange(len(deg))
+    pg = Graph.from_edges(gd.src, gd.dst, num_partitions=P,
+                          vertex_keys=vids,
+                          vertex_values={"deg": deg.astype(np.float32)},
+                          default_vertex={"deg": np.float32(1)})
+    pg = pg.mapV(lambda vid, v: {"pr": jnp.float32(1.0), "deg": v["deg"]})
+
+    def pr_send(sv, ev, dv):
+        return {"m": sv["pr"] / sv["deg"]}
+
+    def pr_vprog(vid, v, msg):
+        return {"pr": 0.15 + 0.85 * msg["m"], "deg": v["deg"]}
+
+    def pr_changed(old, new):
+        return jnp.abs(new["pr"] - old["pr"]).max() > 1e-2
+
+    return {
+        "cc": (cg, dict(vprog=cc_vprog, send_msg=cc_send, gather="min",
+                        default_msg={"m": IMAX}, skip_stale="out"),
+               "auto"),
+        "pagerank_delta": (pg, dict(vprog=pr_vprog, send_msg=pr_send,
+                                    gather="sum",
+                                    default_msg={"m": jnp.float32(0.0)},
+                                    skip_stale="out",
+                                    changed_fn=pr_changed),
+                           "always"),
+    }
+
+
+def run(quick: bool = True) -> list[dict]:
+    if jax.device_count() < 1:   # pragma: no cover — defensive
+        return []
+    rows = []
+    auto_tp = TransportPolicy("auto", cap_rounding=8, enter_frac=0.95,
+                              exit_frac=0.97)
+    for wname, (g, kw, fuse) in _workloads(quick).items():
+        # the §2.3.2 HBM-materialization evidence, once per workload
+        mat_kw = {k: kw[k] for k in ("vprog", "send_msg", "gather",
+                                     "default_msg", "skip_stale")}
+        mats_unfused = count_home_materializations(
+            g, fuse_apply="unfused", **mat_kw)
+        mats_fused = count_home_materializations(
+            g, fuse_apply=fuse, **mat_kw)
+        nl, v_blk = g.s.home_vid.shape
+        dv = sum(int(np.prod(l.shape[2:], dtype=np.int64)) if l.ndim > 2
+                 else 1 for l in jax.tree.leaves(g.vdata))
+        home_bytes = nl * v_blk * dv * 4
+
+        for codec in ("f32", "int8"):
+            gc = g.replace(ex=with_wire(g.ex, codec)) if codec != "f32" else g
+            for transport in ("dense", "auto"):
+                for pipeline in (False, True):
+                    tp = (auto_tp if transport == "auto"
+                          else DENSE).replace(pipeline=pipeline)
+                    call_kw = dict(kw)
+                    vprog = call_kw.pop("vprog")
+                    send_msg = call_kw.pop("send_msg")
+                    gather = call_kw.pop("gather")
+                    call_kw.update(transport=tp, track_metrics=True,
+                                   fuse_apply=fuse, max_supersteps=30)
+
+                    def go():
+                        return pregel_mod.pregel(gc, vprog, send_msg, gather,
+                                                 **call_kw)
+
+                    jax.block_until_ready(
+                        jax.tree.leaves(go().graph.vdata))   # compile
+                    t0 = time.perf_counter()
+                    res = go()
+                    jax.block_until_ready(jax.tree.leaves(res.graph.vdata))
+                    sec = time.perf_counter() - t0
+                    n_steps = max(res.supersteps, 1)
+                    shipped = float(sum(m["bytes_shipped"]
+                                        for m in res.metrics))
+                    bytes_per_chip = shipped / P
+                    overlap = (P - 1) / P if pipeline else 0.0
+                    # per-superstep roofline: HBM writes of the home-shaped
+                    # materializations + the unhidden slice of link time
+                    mats = mats_fused
+                    t_hbm = mats * home_bytes / HBM_BW
+                    t_link = (bytes_per_chip / n_steps) / LINK_BW
+                    step_time = t_hbm + (1.0 - overlap) * t_link
+                    rows.append({
+                        "benchmark": "superstep",
+                        "workload": wname,
+                        "transport": transport,
+                        "codec": codec,
+                        "pipeline": pipeline,
+                        "supersteps": res.supersteps,
+                        "apply_plan": res.metrics[0]["apply_plan"],
+                        "plan": res.metrics[0]["plan"],
+                        "recompiles": int(res.metrics[-1]["recompiles"]),
+                        "bytes_per_chip": round(bytes_per_chip),
+                        "overlap_efficiency": overlap,
+                        "materializations_fused": mats_fused,
+                        "materializations_unfused": mats_unfused,
+                        "t_link_s": t_link,
+                        "step_time_modeled_s": step_time,
+                        "seconds_measured": round(sec, 4),
+                    })
+    return rows
+
+
+# deterministic fields the perf gate diffs (direction: which way is WORSE)
+GATED_FIELDS = {
+    "bytes_per_chip": ("up", 0.02),
+    "step_time_modeled_s": ("up", 0.05),
+    "supersteps": ("up", 0.0),
+    "recompiles": ("up", 0.0),
+    "materializations_fused": ("up", 0.0),
+    "overlap_efficiency": ("down", 0.0),
+}
+ROW_KEY = ("workload", "transport", "codec", "pipeline")
+
+
+def trajectory(rows: list[dict]) -> dict:
+    """The persisted BENCH document (no timestamps: byte-reproducible)."""
+    return {
+        "schema": 1,
+        "bench": "superstep",
+        "model": {"HBM_BW": HBM_BW, "LINK_BW": LINK_BW, "P": P},
+        "gated_fields": {k: {"worse": d, "tol": t}
+                         for k, (d, t) in GATED_FIELDS.items()},
+        "row_key": list(ROW_KEY),
+        "rows": rows,
+    }

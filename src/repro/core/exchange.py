@@ -59,6 +59,25 @@ class Exchange:
     def tree_transpose(self, tree):
         return jax.tree.map(self.transpose, tree)
 
+    def ppermute(self, x: jnp.ndarray, shift: int) -> jnp.ndarray:
+        """Rotate blocks around the partition ring: out[(i+shift) % P] gets
+        partition i's block.  The primitive under `ring_transpose`."""
+        raise NotImplementedError
+
+    def ring_transpose(self, x: jnp.ndarray) -> jnp.ndarray:
+        """The SAME contract as `transpose`, realised as P ring stages
+        (DESIGN.md §2.1.2): stage d moves each partition's d-th diagonal
+        block one hop of distance d.  Bit-identical output — pure data
+        movement, no arithmetic — but where `transpose` is ONE monolithic
+        all_to_all the scheduler must fence, the ring stages are P
+        independent small collectives: each consumes only the send buffer
+        and fills a disjoint slice of the result, so XLA's async collective
+        scheduler can overlap stage d+1's wire time with compute that
+        consumes stage d's block (the fused superstep sweep of the tile
+        that already arrived).  Requires one partition per executor shard.
+        """
+        raise NotImplementedError
+
     def psum(self, x: jnp.ndarray) -> jnp.ndarray:
         """Mesh-global sum of a per-executor quantity.  LocalExchange holds
         the whole array, so the local value IS global; SpmdExchange psums
@@ -140,6 +159,23 @@ class LocalExchange(Exchange):
         assert x.shape[0] == self.p and x.shape[1] == self.p, x.shape
         return jnp.swapaxes(x, 0, 1)
 
+    def ppermute(self, x: jnp.ndarray, shift: int) -> jnp.ndarray:
+        assert x.shape[0] == self.p, x.shape
+        return jnp.roll(x, shift % self.p, axis=0)
+
+    def ring_transpose(self, x: jnp.ndarray) -> jnp.ndarray:
+        # stage-by-stage simulation of the ring schedule: at stage d the
+        # receiver r gets sender (r-d) % p's block x[(r-d) % p, r] and files
+        # it at out[r, (r-d) % p] — after p stages, out == transpose(x).
+        assert x.shape[0] == self.p and x.shape[1] == self.p, x.shape
+        p = self.p
+        rows = jnp.arange(p)
+        out = jnp.zeros_like(x)
+        for d in range(p):
+            src = (rows - d) % p
+            out = out.at[rows, src].set(x[src, rows])
+        return out
+
 
 @dataclasses.dataclass(frozen=True)
 class SpmdExchange(Exchange):
@@ -164,6 +200,35 @@ class SpmdExchange(Exchange):
         return jax.lax.all_to_all(
             x, self.axis_name, split_axis=1, concat_axis=1, tiled=True
         )
+
+    def ppermute(self, x: jnp.ndarray, shift: int) -> jnp.ndarray:
+        s = shift % self.p
+        if s == 0:
+            return x
+        return jax.lax.ppermute(
+            x, self.axis_name, [(i, (i + s) % self.p) for i in range(self.p)])
+
+    def ring_transpose(self, x: jnp.ndarray) -> jnp.ndarray:
+        # local x: [1, P, ...] (one partition per device — the ring schedule
+        # keys block position off the device index).  Stage d: this device r
+        # sends its column block x[:, (r+d) % p] a distance-d hop; the block
+        # arriving here came from (r-d) % p and lands at that column of the
+        # output.  Stage 0 is the local diagonal (no collective).  Each
+        # stage reads only `x` and writes a disjoint output column, so the
+        # P-1 ppermutes are mutually independent — the async-collective
+        # property `transpose`'s single fused all_to_all cannot offer.
+        p = self.p
+        r = jax.lax.axis_index(self.axis_name)
+        out = jnp.zeros_like(x)
+        for d in range(p):
+            blk = jax.lax.dynamic_slice_in_dim(x, (r + d) % p, 1, axis=1)
+            if d:
+                blk = jax.lax.ppermute(
+                    blk, self.axis_name,
+                    [(i, (i + d) % p) for i in range(p)])
+            out = jax.lax.dynamic_update_slice_in_dim(
+                out, blk, (r - d + p) % p, axis=1)
+        return out
 
     def psum(self, x: jnp.ndarray) -> jnp.ndarray:
         return jax.lax.psum(x, self.axis_name)

@@ -103,6 +103,20 @@ def _degree_msg(sv, ev, dv):
     return {"deg": jnp.float32(1.0)}
 
 
+_TILE_SIDE_SWAP = {"dst": "src", "src": "dst",
+                   "apply_dst": "apply_src", "apply_src": "apply_dst"}
+
+
+def _swap_tile_sides(tiles):
+    """reverse() relabeling of the tile-table dict: the triplet tables swap
+    aggregation roles, and so do the apply-route tables (they follow their
+    routes).  Key-based, so new table families survive a transpose instead of
+    being silently dropped by a hand-written dict literal."""
+    if tiles is None:
+        return None
+    return {_TILE_SIDE_SWAP.get(k, k): v for k, v in tiles.items()}
+
+
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass(frozen=True)
 class Graph:
@@ -470,8 +484,7 @@ class Graph:
             src_perm=ident,
             routes={"src": self.s.routes["dst"], "dst": self.s.routes["src"],
                     "both": self.s.routes["both"]},
-            tiles=(None if self.s.tiles is None else
-                   {"dst": self.s.tiles["src"], "src": self.s.tiles["dst"]}))
+            tiles=_swap_tile_sides(self.s.tiles))
         host = self.host
         if host is not None:
             # memoised: GraphStructure is identity-compared static jit
@@ -487,9 +500,7 @@ class Graph:
                     routes={"src": host.routes["dst"],
                             "dst": host.routes["src"],
                             "both": host.routes["both"]},
-                    tiles=(None if host.tiles is None else
-                           {"dst": host.tiles["src"],
-                            "src": host.tiles["dst"]}))
+                    tiles=_swap_tile_sides(host.tiles))
                 cached._reversed = host
                 host._reversed = cached
             host = cached

@@ -52,10 +52,11 @@ from ..kernels.triplet import (DEFAULT_EDGE_BLOCK, DEFAULT_VERTEX_BLOCK,
 # the build-time table construction in kernels/triplet.py via partition.py.
 FUSED_EDGE_BLOCK = DEFAULT_EDGE_BLOCK
 FUSED_VERTEX_BLOCK = DEFAULT_VERTEX_BLOCK
-# min/max reduce unrolls one [Eb, Vb] masked matrix per message column in
-# VMEM (kernels/triplet.py); cap the width so the unroll stays well inside
-# the ~16 MiB/core budget — wider payloads fall back to the unfused plan.
-FUSED_MINMAX_MAX_WIDTH = 16
+# min/max reduce runs the segmented-scan MXU path (kernels/triplet.py §2.3.1):
+# log2(Eb) shift/select steps over the [Eb, Dm] tile plus one [Vb, Eb] matmul,
+# so VMEM scales with Dm instead of Dm·[Eb, Vb] masks.  The cap now only
+# bounds the scan tile itself — wider payloads fall back to the unfused plan.
+FUSED_MINMAX_MAX_WIDTH = 64
 
 _REDUCE_IDENTITY = {
     "sum": lambda dt: jnp.zeros((), dt),
@@ -258,10 +259,17 @@ def ship_aggregates_home(
     bound: int | None = None,
     transport: Any = None,               # dense|ragged|auto plan (§2.1.1)
     prefer_ragged: jnp.ndarray | None = None,
+    combine: bool = True,
 ) -> tuple[Any, jnp.ndarray, ShipMetrics]:
     """Return partial aggregates to vertex homes and combine (reduce UDF is
     commutative-associative, §3.2, so cross-partition combining is a
-    scatter-reduce)."""
+    scatter-reduce).
+
+    combine=False stops after the route collective and hands back the RAW
+    routed buffer (recv [nl, P, K, ...], rflags [nl, P, K]) instead of the
+    combined per-home values — the seam the fused superstep apply
+    (kernels/superstep.py) consumes, performing the combine inside the same
+    kernel as the vprog so aggregates never materialise per-home in HBM."""
     send_idx, recv_slot = s.routes[need]
     nl, p, k = send_idx.shape
 
@@ -292,6 +300,8 @@ def ship_aggregates_home(
         elem_bytes=nbytes_of(jax.tree.map(lambda v: v[0, 0], partial)),
         transport=transport_mod.resolve_transport(transport),
         prefer_ragged=prefer_ragged, label="back")
+    if not combine:
+        return recv, rflags, metrics
 
     v_blk = s.home_mask.shape[1]
     scatter_ops = {"sum": "add", "min": "min", "max": "max"}
@@ -641,8 +651,14 @@ def mr_triplets(
     transport: Any = None,           # dense|ragged|auto plan (§2.1.1)
     transport_state: jnp.ndarray | None = None,  # prev decision (hysteresis)
     epred: Callable | None = None,   # pushed-down subgraph predicate (§4.4)
+    return_routed: bool = False,     # fused-apply seam: skip the home combine
 ):
     """Execute one mrTriplets. Returns (values, exists, view, metrics).
+
+    return_routed=True stops the physical plan after the aggregate-return
+    collective: `values` is then the ROUTED recv buffer [nl, P, K, ...] and
+    `exists` its freshness flags [nl, P, K] — the fused superstep apply
+    (core/pregel.py via kernels/superstep.py) combines them in-kernel.
 
     epred: a `subgraph(epred=…)` predicate LOWERED below this mrTriplets by
     the chain planner (core/planner.py, DESIGN.md §4.4).  Its vertex reads
@@ -899,7 +915,7 @@ def mr_triplets(
                else tp.replace(capacity_frac=tp.capacity_frac_back))
     values, exists, m_back = ship_aggregates_home(
         s, partial, had_msg, to, reduce, ex, bound=bound, transport=tp_back,
-        prefer_ragged=prefer_ragged)
+        prefer_ragged=prefer_ragged, combine=return_routed is False)
     metrics["back"] = m_back
     # static route-ship count of this call: forward view-refresh collectives
     # (0 on a clean view) + the aggregate return (always 1 — it carries the
@@ -920,6 +936,263 @@ def mr_triplets(
     metrics["ragged"] = jnp.maximum(metrics["fwd"].ragged, m_back.ragged)
 
     return values, exists, view, metrics
+
+
+# ---------------------------------------------------------------------------
+# Fused superstep APPLY path (DESIGN.md §2.3.2): combine + vprog + changed
+# mask in one kernel at the vertex homes.
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class _ApplyPlan:
+    """Static packing layout for the fused superstep apply kernel."""
+
+    dm: int                       # packed message width
+    dv: int                       # packed vertex-state width
+    msg_specs: tuple              # per-leaf combine-dtype ShapeDtypeStructs
+    msg_treedef: Any
+    v_specs: tuple                # per-leaf vdata ShapeDtypeStructs
+    v_treedef: Any
+    defaults: tuple               # per-msg-leaf static default scalars
+
+
+def _plan_apply(g, vprog: Callable, send_msg: Callable, reduce: str,
+                changed_fn: Callable | None, default_msg: Any,
+                payload_bound: int | None) -> _ApplyPlan | None:
+    """Decide whether the superstep's apply half can run fused; None ->
+    unfused apply.
+
+    Eligibility mirrors _plan_fused's staging rules on the ROUTED aggregate
+    leaves (message dtypes through the wire) and adds the apply side's own:
+    every vdata leaf flat and either f32 (the staging dtype — narrower
+    floats would see different vprog arithmetic) or an exact-staging int;
+    the vprog traceable with output specs identical to the input state (its
+    integer OUTPUT values must honour the same payload_bound that admits
+    its inputs — the §2.3.1 id-valued convention); default-message leaves
+    static scalars (they substitute in their own dtype INSIDE the kernel,
+    so CC's 2^31-1 identity never rides the f32 staging); and the apply
+    route tables present on the structure (partition.build_structure,
+    tiles["apply_*"])."""
+    s = g.s
+    if reduce not in ("sum", "min", "max"):
+        return None
+    if s.tiles is None or "apply_dst" not in s.tiles:
+        return None
+    vex, eex = elem_spec(g.vdata), elem_spec(g.edata)
+    deps = analysis.analyze_message_fn(send_msg, vex, eex, vex)
+    msg_spec = deps.msg_spec
+    if msg_spec is None:
+        return None
+    bound = payload_bound if payload_bound is not None else s.max_vid
+    msg_leaves, msg_treedef = jax.tree.flatten(msg_spec)
+    if not msg_leaves or not all(
+            _fused_leaf_ok(m, bound, reduce, message=True)
+            for m in msg_leaves):
+        return None
+    vleaves, vdef = jax.tree.flatten(vex)
+    if not vleaves:
+        return None
+    for leaf in vleaves:
+        if len(leaf.shape) > 1:
+            return None
+        if jnp.issubdtype(leaf.dtype, jnp.floating):
+            if leaf.dtype != jnp.float32:
+                return None
+        elif jnp.issubdtype(leaf.dtype, jnp.integer):
+            if not _fused_int_ok(leaf.dtype, bound):
+                return None
+        else:
+            return None
+    # dtypes the vprog actually sees after the combine: floats upcast to f32
+    # (the unfused combine_leaf accumulates float leaves in f32), ints exact.
+    mspecs = tuple(
+        jax.ShapeDtypeStruct(m.shape,
+                             jnp.float32 if jnp.issubdtype(m.dtype,
+                                                           jnp.floating)
+                             else m.dtype)
+        for m in msg_leaves)
+    try:
+        dleaves, _ = jax.tree.flatten(default_msg)
+    except Exception:
+        return None
+    if len(dleaves) != len(msg_leaves):
+        return None
+    defaults = []
+    for d in dleaves:
+        arr = np.asarray(d)
+        if arr.ndim != 0:
+            return None
+        defaults.append(arr.item())
+    vid_spec = jax.ShapeDtypeStruct((), s.home_vid.dtype)
+    try:
+        out = jax.eval_shape(vprog, vid_spec, vex,
+                             jax.tree.unflatten(msg_treedef, list(mspecs)))
+    except Exception:
+        return None
+    out_leaves, out_def = jax.tree.flatten(out)
+    if out_def != vdef or any(
+            tuple(o.shape) != tuple(v.shape) or o.dtype != v.dtype
+            for o, v in zip(out_leaves, vleaves)):
+        return None
+    if changed_fn is not None:
+        try:
+            ch = jax.eval_shape(changed_fn, vex, vex)
+        except Exception:
+            return None
+        if getattr(ch, "shape", None) != () or ch.dtype != jnp.bool_:
+            return None
+    widths_m = [int(np.prod(m.shape, dtype=np.int64)) if m.shape else 1
+                for m in msg_leaves]
+    widths_v = [int(np.prod(v.shape, dtype=np.int64)) if v.shape else 1
+                for v in vleaves]
+    dm = sum(widths_m)
+    if reduce != "sum" and dm > FUSED_MINMAX_MAX_WIDTH:
+        return None
+    return _ApplyPlan(dm=dm, dv=sum(widths_v), msg_specs=mspecs,
+                      msg_treedef=msg_treedef, v_specs=tuple(vleaves),
+                      v_treedef=vdef, defaults=tuple(defaults))
+
+
+@functools.lru_cache(maxsize=256)
+def _make_apply_fn(vprog, changed_fn, plan: _ApplyPlan):
+    """Packed apply closure for the fused superstep kernel: unpack state and
+    combined messages from their column-packed staging matrices, substitute
+    per-leaf defaults where no message arrived, vmap the vprog, select on
+    visibility, derive the changed bit.  Shared VERBATIM by the kernel
+    (kernels/superstep.py) and the oracle (ref.fused_apply) — the only
+    difference between the two paths is how the combine lands.
+
+    Memoised on (vprog, changed_fn, plan) identity: the closure is a STATIC
+    jit argument of the kernel, so repeated supersteps must hand back the
+    same object or every step recompiles."""
+    mspecs, mdef = plan.msg_specs, plan.msg_treedef
+    vspecs, vdef = plan.v_specs, plan.v_treedef
+    defaults = plan.defaults
+
+    def unpack(mat, specs):
+        out, off = [], 0
+        for spec in specs:
+            size = (int(np.prod(spec.shape, dtype=np.int64))
+                    if spec.shape else 1)
+            col = mat[:, off:off + size]
+            off += size
+            dt = (spec.dtype if jnp.issubdtype(spec.dtype, jnp.integer)
+                  else jnp.float32)
+            out.append(col.reshape((mat.shape[0],) + tuple(spec.shape))
+                       .astype(dt))
+        return out
+
+    def apply_fn(vid, vmask, xv, acc, exists):
+        n = xv.shape[0]
+        vm = vmask > 0.0                                       # [n, 1]
+        v_tree = jax.tree.unflatten(vdef, unpack(xv, vspecs))
+        # messages: park a safe 0 where no message arrived (the accumulator
+        # holds the f32 reduce identity there — finfo extremes that would
+        # wrap an int cast), cast into the combine dtype, then substitute
+        # the per-leaf default in ITS OWN dtype.
+        mleaves, off = [], 0
+        for spec, dflt in zip(mspecs, defaults):
+            size = (int(np.prod(spec.shape, dtype=np.int64))
+                    if spec.shape else 1)
+            col = acc[:, off:off + size]
+            off += size
+            e = jnp.broadcast_to(exists, col.shape)
+            dt = (spec.dtype if jnp.issubdtype(spec.dtype, jnp.integer)
+                  else jnp.float32)
+            col = jnp.where(e, col, 0.0).astype(dt)
+            col = jnp.where(e, col, jnp.asarray(dflt, dt))
+            mleaves.append(col.reshape((n,) + tuple(spec.shape)))
+        m_tree = jax.tree.unflatten(mdef, mleaves)
+        new = jax.vmap(vprog)(vid[:, 0], v_tree, m_tree)
+        cols = [l.reshape(n, -1).astype(jnp.float32)
+                for l in jax.tree.leaves(new)]
+        new_mat = cols[0] if len(cols) == 1 else jnp.concatenate(cols, -1)
+        new_mat = jnp.where(vm, new_mat, xv)                   # visibility
+        if changed_fn is None:
+            # exact in the packed staging: every admitted leaf embeds
+            # injectively in f32 (native f32, or ints under the mantissa
+            # bound), so packed inequality == native tree_changed.
+            changed = jnp.any(new_mat != xv, axis=1, keepdims=True)
+        else:
+            new_tree = jax.tree.unflatten(vdef, unpack(new_mat, vspecs))
+            ch = jax.vmap(changed_fn)(v_tree, new_tree)
+            changed = ch.reshape(n, 1)
+        changed = jnp.logical_and(changed, vm)
+        return new_mat, changed.astype(jnp.float32)
+
+    return apply_fn
+
+
+def fused_apply_home(g, recv: Any, rflags: jnp.ndarray, to: str, reduce: str,
+                     plan: _ApplyPlan, vprog: Callable,
+                     changed_fn: Callable | None, kernel_mode: str):
+    """Home half of the fused superstep (§2.3.2): pack the ROUTED aggregate
+    rows (ship_aggregates_home(combine=False) / mr_triplets(
+    return_routed=True)) and the home vertex state, then combine + apply +
+    changed-derive in one kernel sweep per home block.
+
+    Returns (new_vdata pytree [nl, V_blk, ...], changed [nl, V_blk] bool)."""
+    s = g.s
+    send_idx, _ = s.routes[to]
+    nl, p, k = send_idx.shape
+    vb = FUSED_VERTEX_BLOCK
+    v_blk = s.v_blk
+    n_vb = max(-(-v_blk // vb), 1)
+    v_pad = n_vb * vb
+
+    # routed payload rows -> [nl·P·K, Dm] f32 staging (floats widen exactly;
+    # ints are exact under the plan's round-trip guard)
+    pay = jnp.concatenate(
+        [l.reshape(nl, p * k, -1).astype(jnp.float32)
+         for l in jax.tree.leaves(recv)],
+        axis=-1).reshape(nl * p * k, plan.dm)
+    # route padding has send_idx == -1 at exactly the rflags-false positions,
+    # but mask explicitly: dead rows must never address a home slot.
+    flags = rflags & (send_idx >= 0)
+    off = (jnp.arange(nl, dtype=jnp.int32) * v_pad)[:, None, None]
+    slot = (jnp.where(send_idx >= 0, send_idx, 0) + off).reshape(-1)
+    live = flags.reshape(-1)
+
+    x = _pack_cols(g.vdata, (True,) * len(plan.v_specs), nl, v_blk)
+    x = jnp.pad(x.astype(jnp.float32), ((0, 0), (0, v_pad - v_blk), (0, 0)))
+    x = x.reshape(nl * v_pad, plan.dv)
+    vid = jnp.pad(s.home_vid, ((0, 0), (0, v_pad - v_blk))).reshape(-1)
+    vmask = jnp.pad(g.vmask, ((0, 0), (0, v_pad - v_blk))).reshape(-1)
+
+    tiles = (None if kops.resolve_mode(kernel_mode) == "ref"
+             else flatten_tiles(s.tiles["apply_" + to], e_blk=p * k,
+                                n_vb=n_vb))
+    apply_fn = _make_apply_fn(vprog, changed_fn, plan)
+    new_mat, changed = kops.superstep_apply(
+        pay, slot, live, tiles, x, vid, vmask, apply_fn,
+        nl * v_pad, plan.dm, plan.dv, reduce=reduce, mode=kernel_mode,
+        eb=FUSED_EDGE_BLOCK, vb=FUSED_VERTEX_BLOCK)
+    new_mat = new_mat.reshape(nl, v_pad, plan.dv)[:, :v_blk]
+    changed = changed.reshape(nl, v_pad)[:, :v_blk] > 0
+
+    # split the packed state back per leaf, casting ints out of f32 staging
+    out, col = [], 0
+    for spec in plan.v_specs:
+        size = int(np.prod(spec.shape, dtype=np.int64)) if spec.shape else 1
+        leaf = new_mat[..., col:col + size].reshape(
+            (nl, v_blk) + tuple(spec.shape))
+        col += size
+        out.append(leaf.astype(spec.dtype))
+    return jax.tree.unflatten(plan.v_treedef, out), changed
+
+
+def apply_plan_of(g, vprog: Callable, send_msg: Callable,
+                  reduce: str = "sum", *, changed_fn: Callable | None = None,
+                  default_msg: Any = None, kernel_mode: str = "auto",
+                  payload_bound: int | None = None) -> str:
+    """The static apply-half plan decision WITHOUT executing a superstep:
+    "fused_apply" | "unfused" — the §2.3.2 analogue of `plan_of` (a
+    trace-time constant; drivers report it, they cannot read it back out of
+    a jitted step)."""
+    if kernel_mode == "unfused":
+        return "unfused"
+    plan = _plan_apply(g, vprog, send_msg, reduce, changed_fn, default_msg,
+                       payload_bound)
+    return "fused_apply" if plan is not None else "unfused"
 
 
 def plan_of(g, map_fn: Callable, reduce: str = "sum", *,

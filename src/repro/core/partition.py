@@ -309,6 +309,15 @@ def build_structure(
         "dst": build_triplet_tiles(dst_slot, src_slot, edge_mask, v_mir),
         "src": build_triplet_tiles(src_slot, dst_slot, edge_mask, v_mir),
     }
+    # Route-chunk tables for the fused superstep APPLY kernel (§2.3.2): the
+    # aggregate-return route's [P, P, K] send entries, grouped by destination
+    # HOME-vertex block through the same chunk machinery — route entry (pe, j)
+    # of partition q plays the "edge", its home row the aggregation slot.
+    # Keyed by the aggregation side whose route carries the aggregates back.
+    for side in ("src", "dst"):
+        send = routes[side][0].reshape(p, -1)
+        tiles["apply_" + side] = build_triplet_tiles(
+            np.maximum(send, 0), np.zeros_like(send), send >= 0, v_blk)
 
     stats = PartitionStats(
         num_vertices=n_vertices,

@@ -40,7 +40,8 @@ from . import analysis
 from . import transport as transport_mod
 from . import view as view_mod
 from .graph import Graph
-from .mrtriplets import mr_triplets
+from .mrtriplets import (_plan_apply, apply_plan_of, fused_apply_home,
+                         mr_triplets)
 from .tree import elem_spec, tree_changed, tree_where, vmap2
 
 
@@ -53,34 +54,60 @@ class PregelResult:
 
 def _superstep(g: Graph, tstate=None, *, vprog, send_msg, gather,
                default_msg, skip_stale, changed_fn, kernel_mode, use_cache,
-               payload_bound=None, transport=None):
+               payload_bound=None, transport=None, fuse_apply="auto"):
     """One BSP superstep.  The incremental view rides the GRAPH itself
     (§3.1): mr_triplets refreshes `g.view` (full ship when cold, per-leaf
     delta when warm — including a view inherited from operators BEFORE the
     loop), and vprog's §4.5.1 changed mask is fed straight back into it, so
     the delta state also survives EXITING the loop into whatever operator
-    chain consumes the result."""
+    chain consumes the result.
+
+    fuse_apply: "auto" runs the §2.3.2 fused superstep kernel (combine +
+    vprog + changed mask in one Pallas sweep) whenever the vprog/message
+    shapes are eligible AND the fusion is bit-exact vs this unfused path —
+    true for 'min'/'max' gathers, whose combine is order-independent.  For
+    'sum' the fused combine's accumulation order differs from the unfused
+    scatter-add, so it must be opted into explicitly (True / "always");
+    False / "unfused" pins this reference path."""
     gin = g if use_cache else g.replace(view=None)
+    aplan = None
+    if kernel_mode != "unfused" and fuse_apply not in (False, "unfused"):
+        if fuse_apply in (True, "always") or gather in ("min", "max"):
+            aplan = _plan_apply(g, vprog, send_msg, gather, changed_fn,
+                                default_msg, payload_bound)
     msgs, exists, view, metrics = mr_triplets(
         gin, send_msg, gather, to="dst", skip_stale=skip_stale,
         kernel_mode=kernel_mode,
         payload_bound=payload_bound, transport=transport,
-        transport_state=tstate)
+        transport_state=tstate, return_routed=aplan is not None)
     n_ships = metrics.get("ships", 0)
     # strip static (non-array) entries: they are not jit-returnable and are
     # re-derivable from the UDF analysis in the driver
     metrics = {k: v for k, v in metrics.items()
                if not isinstance(v, (str, int))}
-    msgs_or_default = tree_where(exists, msgs, jax.tree.map(
-        lambda d, m: jnp.broadcast_to(jnp.asarray(d, m.dtype), m.shape),
-        default_msg, msgs))
-    new_vdata = vmap2(vprog)(g.s.home_vid, g.vdata, msgs_or_default)
-    new_vdata = tree_where(g.vmask, new_vdata, g.vdata)
-    if changed_fn is None:
-        changed = tree_changed(new_vdata, g.vdata)
+    if aplan is not None:
+        # fused §2.3.2 path: `msgs` here is the RAW routed aggregate tree
+        # (per-source-partition partials, not yet combined) — the kernel
+        # combines them and runs vprog + changed derivation in one sweep,
+        # so the combined messages / defaulted messages / changed mask
+        # never materialise to HBM on the home side.
+        new_vdata, changed = fused_apply_home(
+            g, msgs, exists, "dst", gather, aplan, vprog, changed_fn,
+            kernel_mode)
+        msg_elem = jax.tree.unflatten(aplan.msg_treedef,
+                                      list(aplan.msg_specs))
     else:
-        changed = vmap2(changed_fn)(g.vdata, new_vdata)
-    changed = changed & g.vmask
+        msgs_or_default = tree_where(exists, msgs, jax.tree.map(
+            lambda d, m: jnp.broadcast_to(jnp.asarray(d, m.dtype), m.shape),
+            default_msg, msgs))
+        new_vdata = vmap2(vprog)(g.s.home_vid, g.vdata, msgs_or_default)
+        new_vdata = tree_where(g.vmask, new_vdata, g.vdata)
+        if changed_fn is None:
+            changed = tree_changed(new_vdata, g.vdata)
+        else:
+            changed = vmap2(changed_fn)(g.vdata, new_vdata)
+        changed = changed & g.vmask
+        msg_elem = elem_spec(msgs_or_default)
     live = changed.sum()
     if use_cache:
         # per-leaf dirty feed: leaves vprog provably passes through (jaxpr
@@ -91,7 +118,7 @@ def _superstep(g: Graph, tstate=None, *, vprog, send_msg, gather,
         # runs per COMPILE, not per superstep.
         rewrites = analysis.analyze_rewrites(
             vprog, (jax.ShapeDtypeStruct((), g.s.home_vid.dtype),
-                    elem_spec(g.vdata), elem_spec(msgs_or_default)), 1)
+                    elem_spec(g.vdata), msg_elem), 1)
         view = view_mod.view_after_rewrite(
             view, g.vdata, new_vdata, rewrites, changed)
     log = g.wire_log
@@ -118,8 +145,11 @@ def pregel(
     track_metrics: bool = False,
     payload_bound: int | None = None,
     transport: Any = None,
+    fuse_apply: Any = "auto",
 ) -> PregelResult:
     """Host-driven BSP loop with a jitted superstep.
+
+    fuse_apply: "auto" | True/"always" | False/"unfused" — see _superstep.
 
     payload_bound certifies a static |value| bound for integer payloads and
     messages (see mr_triplets) — it widens or narrows both the fused
@@ -144,7 +174,8 @@ def pregel(
         _superstep, vprog=vprog, send_msg=send_msg, gather=gather,
         default_msg=default_msg, skip_stale=skip_stale,
         changed_fn=changed_fn, kernel_mode=kernel_mode,
-        use_cache=incremental, payload_bound=payload_bound),
+        use_cache=incremental, payload_bound=payload_bound,
+        fuse_apply=fuse_apply),
         static_argnames=("transport",))
 
     # static join-elimination + physical-plan facts, derived once from the
@@ -154,6 +185,9 @@ def pregel(
     deps = analysis.analyze_message_fn(
         send_msg, elem_spec(g.vdata), elem_spec(g.edata), elem_spec(g.vdata))
     tp = transport_mod.resolve_transport(transport)
+    fuse = (kernel_mode != "unfused"
+            and fuse_apply not in (False, "unfused")
+            and (fuse_apply in (True, "always") or gather in ("min", "max")))
     static_info = {"join_arity": deps.n_way,
                    "need": _derive_need(deps, None) or "none",
                    "wire": (g.ex.codec.name if g.ex.codec is not None
@@ -161,13 +195,21 @@ def pregel(
                    "transport_policy": tp.kind,
                    "plan": plan_of(g, send_msg, gather,
                                    kernel_mode=kernel_mode,
-                                   payload_bound=payload_bound)}
+                                   payload_bound=payload_bound),
+                   "apply_plan": (apply_plan_of(
+                       g, vprog, send_msg, gather, changed_fn=changed_fn,
+                       default_msg=default_msg, kernel_mode=kernel_mode,
+                       payload_bound=payload_bound) if fuse else "unfused")}
 
     # host-side transport re-planning ("auto"): superstep 0 is a full ship
     # (dense by construction), later plans come from adapt_policy on the
     # observed active fraction + route occupancy of the step just run.
     cur_tp = transport_mod.DENSE if tp.kind == "auto" else tp
     n_visible = max(int(jnp.sum(g.vmask)), 1)
+    # each DISTINCT static transport plan the jitted step has seen is one
+    # XLA compile — the hysteresis in adapt_policy (prev=) exists to keep
+    # this set small on oscillating frontiers.
+    plans_seen = {cur_tp}
 
     all_metrics: list[dict] = []
     steps = 0
@@ -181,6 +223,7 @@ def pregel(
             host_metrics["transport_cap"] = cur_tp.cap or 0
             host_metrics["transport_frac"] = (
                 cur_tp.capacity_frac if cur_tp.kind == "ragged" else 0.0)
+            host_metrics["recompiles"] = len(plans_seen)
             # pipeline-level accumulation (§3.1): the graph's wire log
             # counts this loop's traffic on top of whatever the operator
             # chain BEFORE it already shipped.
@@ -197,7 +240,9 @@ def pregel(
                 fwd_frac=(int(fwd.route_active_max)
                           / max(fwd.route_width, 1)),
                 back_frac=(int(back.route_active_max)
-                           / max(back.route_width, 1)))
+                           / max(back.route_width, 1)),
+                prev=cur_tp)
+            plans_seen.add(cur_tp)
     return PregelResult(graph=g, supersteps=steps, metrics=all_metrics)
 
 
@@ -215,6 +260,7 @@ def pregel_fused(
     kernel_mode: str = "auto",
     payload_bound: int | None = None,
     transport: Any = None,
+    fuse_apply: Any = "auto",
 ):
     """Entire Pregel run as one `lax.while_loop` XLA program.
 
@@ -233,7 +279,8 @@ def pregel_fused(
         default_msg=default_msg, skip_stale=skip_stale,
         changed_fn=changed_fn, kernel_mode=kernel_mode,
         use_cache=incremental, payload_bound=payload_bound,
-        transport=transport_mod.resolve_transport(transport))
+        transport=transport_mod.resolve_transport(transport),
+        fuse_apply=fuse_apply)
 
     # materialise the graph-resident view with one full ship so the carry
     # has static structure (the view rides INSIDE the graph now — §3.1)

@@ -96,6 +96,18 @@ class TransportPolicy:
     # silently dropped, so this is ONLY for shape-level dry-run analysis or
     # callers that certify the capacity (launch/dryrun.py's ragged cell).
     fallback: bool = True
+    # ship through the ring-pipelined transpose (DESIGN.md §2.1.2): the
+    # route collective decomposes into P independent ppermute stages whose
+    # wire time overlaps the consuming compute.  Bit-identical recv buffers
+    # — the ring is pure data movement — so it composes with dense/ragged
+    # and every codec.  (New fields append at the END: policies are built
+    # positionally in tests.)
+    pipeline: bool = False
+    # adapt_policy shrink hysteresis: a ragged capacity tier only steps DOWN
+    # when the observed occupancy clears the lower tier even after this
+    # multiplicative headroom; growth applies immediately (overflow costs a
+    # dense-fallback ship).  Bounds recompiles on oscillating frontiers.
+    tier_headroom: float = 1.25
 
     def replace(self, **kw) -> "TransportPolicy":
         return dataclasses.replace(self, **kw)
@@ -165,7 +177,8 @@ def frac_tier(frac: float, tiers: int = FRAC_TIERS) -> float:
 
 def adapt_policy(policy: TransportPolicy, *, was_ragged: bool,
                  active_frac: float, fwd_frac: float,
-                 back_frac: float | None = None) -> TransportPolicy:
+                 back_frac: float | None = None,
+                 prev: TransportPolicy | None = None) -> TransportPolicy:
     """Host-side per-superstep re-plan for `kind="auto"` (pregel's driver).
 
     Hysteresis on the observed active fraction decides dense vs ragged; the
@@ -178,14 +191,32 @@ def adapt_policy(policy: TransportPolicy, *, was_ragged: bool,
     step's — and when it does not, the traced overflow fallback ships dense
     and the next re-plan raises the tier.  Returns a CONCRETE
     "dense"/"ragged" policy: it is static jit metadata, and the tier
-    quantization is what bounds recompiles."""
+    quantization is what bounds recompiles.
+
+    prev: the CONCRETE policy the step just ran with.  Every distinct
+    returned policy is one fresh XLA compile, so tier changes get their own
+    hysteresis: growth applies immediately (under-capacity means a wasted
+    dense-fallback ship), but a tier only steps DOWN when the occupancy
+    clears the lower tier even after `tier_headroom` — an occupancy
+    oscillating around a tier boundary (frontier algorithms re-expanding
+    into a region) then pins to the upper tier instead of flip-flopping
+    between two compiled programs every superstep."""
     if policy.kind != "auto":
         return policy
     thresh = policy.exit_frac if was_ragged else policy.enter_frac
     if active_frac > thresh:
         return policy.replace(kind="dense")
-    fwd_t = frac_tier(fwd_frac)
-    back_t = None if back_frac is None else frac_tier(back_frac)
+    prev_ragged = prev is not None and prev.kind == "ragged"
+
+    def tier(frac: float, prev_t: float | None) -> float:
+        t = frac_tier(frac)
+        if prev_t is None or t > prev_t:
+            return t
+        return min(frac_tier(min(frac * policy.tier_headroom, 1.0)), prev_t)
+
+    fwd_t = tier(fwd_frac, prev.capacity_frac if prev_ragged else None)
+    back_t = None if back_frac is None else tier(
+        back_frac, prev.capacity_frac_back if prev_ragged else None)
     # neither ship clears the break-even clamp -> the "ragged" program
     # would execute dense anyway; plan dense and save the compile.
     if fwd_t >= policy.ragged_max_frac and (
@@ -281,6 +312,22 @@ def ragged_wire_bytes(tree, codec, bound, cap: int) -> int:
     return payload + nl * p * cap * index_dtype(k).itemsize + nl * p * 4
 
 
+def _ring_tree_ship(ex, tree, *, active=None, bound: int | None = None):
+    """`Exchange.tree_ship`'s codec path over the ring-pipelined transpose
+    (§2.1.2): encode each leaf on the send side, move payload + block
+    scales through `ring_transpose` instead of the monolithic collective,
+    decode on the receive side.  Value-identical to the plain ship — the
+    ring reorders the wire schedule, never the data."""
+    def one(x):
+        enc = wire_mod.encode_leaf(x, ex.codec, bound=bound, active=active)
+        if enc is None:
+            return ex.ring_transpose(x)
+        payload = ex.ring_transpose(enc.payload)
+        scale = None if enc.scale is None else ex.ring_transpose(enc.scale)
+        return wire_mod.decode_leaf(enc.kind, payload, scale, x, ex.codec)
+    return jax.tree.map(one, tree)
+
+
 def ship_transport(ex, tree, flags, *, bound: int | None = None,
                    policy: TransportPolicy = DENSE,
                    prefer_ragged: jnp.ndarray | None = None,
@@ -296,10 +343,16 @@ def ship_transport(ex, tree, flags, *, bound: int | None = None,
     (full ships) — lets the dense path skip the flags wire.
     """
     codec = ex.codec
+    # the pipelined wire moves IDENTICAL bits over a different collective
+    # schedule, so it swaps in transparently under dense and ragged alike
+    xpose = ex.ring_transpose if policy.pipeline else ex.transpose
+    tship = ((lambda t, *, active, bound: _ring_tree_ship(
+                  ex, t, active=active, bound=bound))
+             if policy.pipeline else ex.tree_ship)
     leaves = jax.tree.leaves(tree)
     if not leaves:
         zero = jnp.float32(0)
-        rf = recvflags if recvflags is not None else ex.transpose(flags)
+        rf = recvflags if recvflags is not None else xpose(flags)
         return tree, rf, TransportInfo(zero, zero, zero, jnp.int32(0))
     nl, p, k = flags.shape
     counts = flags.sum(-1, dtype=jnp.int32)
@@ -307,8 +360,8 @@ def ship_transport(ex, tree, flags, *, bound: int | None = None,
 
     def ship_dense(tf):
         t, f = tf
-        recv = ex.tree_ship(t, active=f, bound=bound)
-        rf = recvflags if recvflags is not None else ex.transpose(f)
+        recv = tship(t, active=f, bound=bound)
+        rf = recvflags if recvflags is not None else xpose(f)
         return recv, rf
 
     cap = capacity_for(policy, k)
@@ -326,9 +379,9 @@ def ship_transport(ex, tree, flags, *, bound: int | None = None,
     def ship_ragged(tf):
         t, f = tf
         comp, sel, valid, cnt = _compact(t, f, cap)
-        recv_comp = ex.tree_ship(comp, active=valid, bound=bound)
-        sel_t = ex.transpose(jnp.where(valid, sel, 0).astype(idx_dt))
-        cnt_t = ex.transpose(cnt[..., None])[..., 0]
+        recv_comp = tship(comp, active=valid, bound=bound)
+        sel_t = xpose(jnp.where(valid, sel, 0).astype(idx_dt))
+        cnt_t = xpose(cnt[..., None])[..., 0]
         valid_t = jnp.arange(cap, dtype=jnp.int32) < cnt_t[..., None]
         idx = jnp.where(valid_t, sel_t.astype(jnp.int32), k)  # OOB -> drop
         recv = jax.tree.map(lambda l: _scatter_rows(l, idx, k), recv_comp)

@@ -84,6 +84,25 @@ def triplet(x, ev, src_slot, dst_slot, live, tiles, tile_fn,
         eb=eb, vb=vb, interpret=(m == "interpret"))
 
 
+def superstep_apply(payload, slot, live, tiles, x, vid, vmask, apply_fn,
+                    num_slots: int, dm: int, dv: int, *,
+                    reduce: str = "sum", mode: Mode = "auto",
+                    eb: int = 512, vb: int = 512):
+    """Fused superstep apply half (§2.3.2): combine the routed aggregate rows
+    into per-home-vertex totals, then run the engine's packed vprog/changed
+    closure in the same sweep.  `tiles` is the flat apply-route table dict
+    (tiles["apply_*"] -> flatten_tiles); the jnp oracle ignores it (pass
+    None).  Returns (new packed state [S, dv] f32, changed [S] f32 0/1)."""
+    m = _resolve(mode)
+    if m == "ref":
+        return ref.fused_apply(payload, slot, live, x, vid, vmask, apply_fn,
+                               num_slots, reduce=reduce)
+    from . import superstep as _superstep
+    return _superstep.fused_apply(
+        payload, slot, live, tiles, x, vid, vmask, apply_fn, num_slots,
+        dm, dv, reduce=reduce, eb=eb, vb=vb, interpret=(m == "interpret"))
+
+
 def flash_attention(q, k, v, *, causal: bool = True, scale: float | None = None,
                     kv_offset: int = 0, mode: Mode = "auto",
                     block_q: int = 512, block_kv: int = 512):

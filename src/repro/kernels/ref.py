@@ -98,6 +98,46 @@ def fused_triplet(
     return out, cnt
 
 
+def fused_apply(
+    payload: jnp.ndarray,    # [R, Dm] f32 routed aggregate rows (flat space)
+    slot: jnp.ndarray,       # [R] int32 HOME slot per row (flat padded space)
+    live: jnp.ndarray,       # [R] bool — row carries a real aggregate
+    x: jnp.ndarray,          # [S, Dv] packed home vertex state (f32 staging)
+    vid: jnp.ndarray,        # [S] int32 home vertex ids
+    vmask: jnp.ndarray,      # [S] home visibility mask (0/1)
+    apply_fn,                # ([S,1]i32,[S,1]f32,[S,Dv],[S,Dm],[S,1]bool)
+                             #   -> ([S,Dv] f32, [S,1] f32)
+    num_slots: int,          # = S
+    *,
+    reduce: str = "sum",
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Oracle for kernels/superstep.fused_apply — the home half of a fused
+    Pregel superstep (DESIGN.md §2.3.2): combine the routed per-partition
+    aggregates into per-home-vertex totals, then run the (already vmapped,
+    column-packed) vprog apply + changed-mask closure in the same sweep.
+    `apply_fn` owns the engine's per-leaf unpack / default-message
+    substitution / visibility select / changed derivation, so the oracle and
+    kernel share it verbatim and differ only in how the combine lands.
+    Returns (new packed state [S, Dv] f32, changed [S] f32 0/1)."""
+    ident = _TRIPLET_IDENTITY[reduce]
+    seg = jnp.where(live, slot, num_slots)                       # dead -> OOB
+    cnt = jax.ops.segment_sum(live.astype(jnp.float32), seg,
+                              num_segments=num_slots + 1)[:num_slots]
+    if reduce == "sum":
+        m = jnp.where(live[:, None], payload, 0.0).astype(jnp.float32)
+        acc = jax.ops.segment_sum(m, seg,
+                                  num_segments=num_slots + 1)[:num_slots]
+    else:
+        fn = jax.ops.segment_min if reduce == "min" else jax.ops.segment_max
+        m = jnp.where(live[:, None], payload.astype(jnp.float32), ident)
+        acc = fn(m, seg, num_segments=num_slots + 1)[:num_slots]
+        acc = jnp.where(cnt[:, None] > 0, acc, ident)
+    new, chg = apply_fn(vid.astype(jnp.int32)[:, None],
+                        vmask.astype(jnp.float32)[:, None],
+                        x.astype(jnp.float32), acc, cnt[:, None] > 0)
+    return new, chg[:, 0]
+
+
 def flash_attention(
     q: jnp.ndarray,  # [B, Hq, Lq, Dh]
     k: jnp.ndarray,  # [B, Hkv, Lk, Dh]

@@ -11,7 +11,8 @@ the edge sweep never leaves VMEM:
     dv  = onehot_dst @ x[dst_tile]
     msg = tile_fn(sv, ev, dv)                 # the (vmapped) map UDF, traced
     out += onehot_outᵀ @ (msg · live)         # reduce 'sum' = MXU matmul
-    out  = min/max(out, colwise-reduce(msg))  # reduce 'min'/'max' on the VPU
+    out  = min/max(out, boundaryᵀ @ scan(msg))  # 'min'/'max' = segmented scan
+                                                #   + one MXU matmul (§2.3.1)
 
 Edges are re-sorted at build time into fixed-size chunks grouped by
 (out_block, in_block) — the §4.2 clustered index — so each chunk touches one
@@ -102,7 +103,10 @@ def build_triplet_tiles(
         live = np.flatnonzero(edge_mask[q])
         ob = out_slot[q][live] // vb
         ib = in_slot[q][live] // vb
-        order = np.lexsort((ib, ob))      # out-block major, in-block minor
+        # out-block major, in-block minor; WITHIN a chunk the edges sort by
+        # aggregation slot — the invariant the segmented-scan min/max path
+        # relies on (equal-slot runs are contiguous, padding at the tail).
+        order = np.lexsort((out_slot[q][live], ib, ob))
         live = live[order]
         ob, ib = ob[order], ib[order]
 
@@ -179,6 +183,47 @@ def flatten_tiles(tiles, *, e_blk: int, n_vb: int) -> dict:
 # ----------------------------------------------------------------------------
 # Kernel
 # ----------------------------------------------------------------------------
+def segmented_reduce_mxu(vals, slot, reduce: str, ident, oh_out):
+    """Block-local segment min/max via the segmented-scan trick (MXU path).
+
+    vals   [Eb, Dm] f32, dead rows ALREADY substituted with `ident`
+    slot   [Eb, 1]  int32 output slots; equal-slot rows must be CONTIGUOUS
+                    (build_triplet_tiles sorts each chunk by aggregation slot,
+                    padding rows at the tail)
+    oh_out [Eb, Vb] f32 one-hot of slot against the block's columns (0 rows
+                    for OOB/padding slots)
+
+    A Hillis–Steele segmented inclusive prefix scan (log2(Eb) static steps of
+    shift + slot-guarded select, pure VPU elementwise on the [Eb, Dm] tile)
+    leaves every segment's FULL reduction at its last row; the boundary
+    one-hot then has exactly one nonzero per output column, so a single
+    [Vb, Eb] @ [Eb, Dm] matmul lands the per-slot results on the MXU — exact,
+    because each output element sums exactly one scanned term.  This replaces
+    the old per-column masked VPU reduce, which materialised Dm full [Eb, Vb]
+    masks and kept CC/SSSP off the MXU.
+    """
+    sel = jnp.minimum if reduce == "min" else jnp.maximum
+    eb = vals.shape[0]
+    acc, seg = vals, slot
+    shift = 1
+    while shift < eb:                                 # log2(Eb) static steps
+        prev = jnp.concatenate(
+            [jnp.full((shift,) + acc.shape[1:], ident, acc.dtype),
+             acc[:-shift]], axis=0)
+        pseg = jnp.concatenate(
+            [jnp.full((shift, 1), -1, seg.dtype), seg[:-shift]], axis=0)
+        acc = jnp.where(pseg == seg, sel(acc, prev), acc)
+        shift *= 2
+    nxt = jnp.concatenate(
+        [seg[1:], jnp.full((1, 1), -2, seg.dtype)], axis=0)
+    last = (seg != nxt).astype(jnp.float32)           # [Eb, 1] segment ends
+    oh_last = oh_out * last                           # ≤1 nonzero per column
+    red = jax.lax.dot_general(oh_last, acc, (((0,), (0,)), ((), ())),
+                              preferred_element_type=jnp.float32)  # [Vb, Dm]
+    present = jnp.sum(oh_last, axis=0)[:, None] > 0.0
+    return jnp.where(present, red, ident)
+
+
 def _make_kernel(tile_fn: Callable, reduce: str, dm: int):
     ident = REDUCE_IDENTITY[reduce]
 
@@ -229,14 +274,13 @@ def _make_kernel(tile_fn: Callable, reduce: str, dm: int):
                     preferred_element_type=jnp.float32)
             else:
                 sel = jnp.minimum if reduce == "min" else jnp.maximum
-                mask = oh_live > 0.0
-                reds = []
-                for d in range(dm):                              # static unroll
-                    col = jnp.where(mask, msgs[:, d:d + 1], ident)
-                    reds.append(col.min(axis=0) if reduce == "min"
-                                else col.max(axis=0))            # [Vb]
-                out_ref[...] = sel(out_ref[...],
-                                   jnp.stack(reds, axis=1))      # [Vb, Dm]
+                # dead rows keep their REAL slots but carry the identity, so
+                # they never perturb a segment's min/max; padding rows (slot
+                # == vb) match no column of the one-hot.
+                vals = jnp.where(live[:, None] > 0.0, msgs, ident)
+                red = segmented_reduce_mxu(
+                    vals, oloc_ref[...][:, None], reduce, ident, oh_o)
+                out_ref[...] = sel(out_ref[...], red)            # [Vb, Dm]
 
     return kernel
 

@@ -425,6 +425,58 @@ def main():
     b_on, b_off = float(pouts[True][2]), float(pouts[False][2])
     assert 0 < b_on < b_off, (b_on, b_off)
 
+    # ---- (l) ring-pipelined exchange: overlap is bit-exact (§2.1.2) --------
+    # pipeline=True only RE-SCHEDULES the mirror ship — P ppermute hops
+    # double-buffered against the fused sweep instead of one serialized
+    # all_to_all — so every cell of fused/unfused apply x dense/ragged
+    # transport x f32/int8 wire must reproduce the serialized labels bit
+    # for bit (each serialized baseline was pinned to cc_local above).
+    for graph in (sg_spmd, sg8):
+        lspecs = shard_specs(graph)
+        for mode in ("auto", "unfused"):
+            for tp0 in (DENSE, cc_pol):
+                tp = tp0.replace(pipeline=True)
+                fn_l = jax.jit(shard_map(
+                    lambda gg, _m=mode, _t=tp: cc_loop_t(gg, _m, transport=_t),
+                    mesh, (lspecs,), PS("parts")))
+                ccp = np.asarray(fn_l(graph))
+                np.testing.assert_array_equal(ccp, cc_local)
+
+    # warm-view re-entry (§3.1): leave one jitted loop with the view still
+    # riding the graph, re-enter another under the pipelined schedule — the
+    # delta-shipping path must stay bit-exact across the process boundary.
+    def cc_phase(gg, n, transport):
+        out = gg
+        for _ in range(n):
+            out, _, _ = _superstep(
+                out, None, vprog=cc_vprog, send_msg=cc_send, gather="min",
+                default_msg={"m": IMAX}, skip_stale="out", changed_fn=None,
+                kernel_mode="auto", use_cache=True, transport=transport)
+        return out
+
+    warm = {}
+    for pipe in (False, True):
+        tp = DENSE.replace(pipeline=pipe)
+        fa = jax.jit(shard_map(lambda gg, _t=tp: cc_phase(gg, 4, _t),
+                               mesh, (PS("parts"),), PS("parts")))
+        g_mid = fa(sg_spmd)
+        assert g_mid.view is not None, pipe   # exits warm
+        fb = jax.jit(shard_map(
+            lambda gg, _t=tp: cc_phase(gg, 6, _t).vdata["cc"],
+            mesh, (PS("parts"),), PS("parts")))
+        warm[pipe] = np.asarray(fb(g_mid))
+    np.testing.assert_array_equal(warm[True], warm[False])
+    np.testing.assert_array_equal(warm[False], cc_local)
+
+    # pipelined ragged under the ADAPTIVE driver: sum gather, shrinking
+    # frontier — values identical to the serialized dense reference while
+    # the run still switches into ragged shipping
+    for spec in (DENSE.replace(pipeline=True),
+                 auto_pol.replace(pipeline=True)):
+        g_pipe, rows_p = run_delta_pr(gdp_spmd, spec)
+        np.testing.assert_array_equal(np.asarray(g_pipe.vdata["pr"]), pr_ref)
+    assert any(r["ragged"] == 1.0 for r in rows_p), rows_p
+
     # ---- collection shuffle under SPMD -------------------------------------
     from repro.core import Col
     from repro.core.collections import shuffle_by_key

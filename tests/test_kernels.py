@@ -384,12 +384,20 @@ def test_fused_fallback_on_ineligible_payloads():
         gr2, lambda sv, ev, dv: {"m": jnp.zeros((2, 2)) + sv["x"]},
         "sum", kernel_mode="auto")
     assert m4["plan"] == "unfused"
-    # wide payload with min/max (per-column VMEM unroll) -> unfused
+    # min/max widths within the segmented-scan cap now fuse (the old
+    # per-column VMEM unroll and its 16-wide limit are gone)...
     gr3, _ = _build_engine_graph(scale=5, ef=3, payload_dim=32)
     f3 = lambda sv, ev, dv: {"m": sv["vec"]}
     _, _, _, m5 = mr_triplets(gr3, f3, "min", kernel_mode="auto")
-    assert m5["plan"] == "unfused"
-    _, _, _, m6 = mr_triplets(gr3, f3, "sum", kernel_mode="auto")
+    assert m5["plan"] == "fused"
+    # ...but past FUSED_MINMAX_MAX_WIDTH the scan's [Eb, Dm] VMEM working
+    # set stops paying for itself -> unfused
+    from repro.core.mrtriplets import FUSED_MINMAX_MAX_WIDTH
+    gr4, _ = _build_engine_graph(scale=5, ef=3,
+                                 payload_dim=FUSED_MINMAX_MAX_WIDTH + 8)
+    _, _, _, m5w = mr_triplets(gr4, f3, "min", kernel_mode="auto")
+    assert m5w["plan"] == "unfused"
+    _, _, _, m6 = mr_triplets(gr4, f3, "sum", kernel_mode="auto")
     assert m6["plan"] == "fused"    # sum path has no width cap
 
 
