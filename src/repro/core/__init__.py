@@ -10,6 +10,9 @@ from .transport import (TransportPolicy, resolve_transport, ship_transport,
                         TRANSPORT_NAMES)
 from .view import GraphView, WireLog, refresh_view, prune_view
 from .wire import WireCodec, make_codec, CODEC_NAMES
+from .fault import FaultPlan, FaultyExchange
+from .snapshot import (SnapshotStore, save_pregel, restore_pregel,
+                       restore_pregel_elastic)
 from . import algorithms
 from . import planner
 from .planner import ChainPlan, ChainResult, plan_chain, run_chain
@@ -25,6 +28,8 @@ __all__ = [
     "ShipMetrics", "ViewCache", "mr_triplets",
     "ship_to_mirrors", "GraphStructure", "build_structure", "PARTITIONERS",
     "pregel", "pregel_fused", "PregelResult", "algorithms",
+    "FaultPlan", "FaultyExchange", "SnapshotStore", "save_pregel",
+    "restore_pregel", "restore_pregel_elastic",
     "analyze_message_fn", "analyze_rewrites", "TripletDeps",
     "union_read_dirs", "prune_view",
     "planner", "ChainPlan", "ChainResult", "plan_chain", "run_chain",

@@ -87,6 +87,14 @@ class Exchange:
         the collectives mismatched shapes."""
         return x
 
+    def home_rows(self, nl: int) -> jnp.ndarray:
+        """[nl] int32 GLOBAL partition ids of this executor's local rows.
+        LocalExchange holds every partition, so rows ARE global ids; inside
+        shard_map a device's single row is its mesh position.  The receive
+        side of the integrity check (DESIGN.md §6) salts its recomputed
+        word with these, so a misrouted block cannot verify."""
+        return jnp.arange(nl, dtype=jnp.int32)
+
     # Wire-format hooks (DESIGN.md §2.1).  `wire` is the codec; `wire_dtype`
     # is the pre-codec LEGACY field — plain float narrowing only, no
     # quantization/packing/delta; prefer `with_wire(ex, codec)`.
@@ -232,6 +240,10 @@ class SpmdExchange(Exchange):
 
     def psum(self, x: jnp.ndarray) -> jnp.ndarray:
         return jax.lax.psum(x, self.axis_name)
+
+    def home_rows(self, nl: int) -> jnp.ndarray:
+        base = jax.lax.axis_index(self.axis_name).astype(jnp.int32)
+        return base * nl + jnp.arange(nl, dtype=jnp.int32)
 
 
 def with_wire(ex: Exchange, codec, *, delta: bool | None = None,

@@ -1,0 +1,206 @@
+"""Deterministic wire-fault injection for the chaos harness (DESIGN.md §6).
+
+`FaultyExchange` wraps any executor and corrupts the buffers its collectives
+return — AFTER the wire moved them, exactly where a flaky link, a DMA bit
+flip, or a misrouted block would land.  Everything about an injection is
+decided at TRACE time from a static `FaultPlan`, so a chaos run is exactly
+reproducible: the same plan against the same program corrupts the same
+collectives in the same way on every execution (the corruption is baked
+into the compiled program — a persistently flaky link, the worst case for
+the retry ladder).
+
+Targeting is COUNT-BASED.  Every transpose/ring_transpose the wrapped
+executor performs increments a trace-time call counter; the plan selects
+calls by index (`calls=(0, 2)`) or hits all of them (`calls="all"`), and
+`max_events` caps the total number of corrupted collectives.  The transport
+layer's integrity ladder (`core/transport.py`) additionally brackets its
+ship attempts with `note_attempt(k)`, so a plan can express a TRANSIENT
+fault (`attempts=(0,)`: first attempt corrupt, retry clean — values stay
+bit-exact, `wire_faults` counts the hit) versus a PERSISTENT one
+(`attempts=(0, 1)`: retry fails too, the route degrades to the raw dense
+ship, which attempt 2 leaves clean).  `attempts=None` corrupts regardless
+of bracketing — the negative control proving unprotected ships really do go
+wrong.
+
+`psum` is NEVER corrupted: plan decisions (overflow, integrity verdicts)
+must stay mesh-uniform or the collective shapes themselves diverge — a
+fault model for control-plane disagreement is a different failure class
+than wire corruption and out of scope here.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from .exchange import Exchange
+from .wire import WireCodec
+
+MODES = ("corrupt", "zero", "drop", "misroute")
+
+# mantissa-only XOR pattern for f32 bit flips: perturbs the value without
+# ever manufacturing NaN/Inf (sign and exponent bits stay intact), so the
+# corruption survives arithmetic and must be CAUGHT, not laundered by a
+# NaN-propagating reduce.
+_F32_FLIP = np.int32(0x0007FFF0)
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultPlan:
+    """Static description of what to break.
+
+    mode:     "corrupt" — XOR payload bits (mantissa-only for floats);
+              "zero"    — zero the targeted block (lost payload);
+              "drop"    — zero every block headed to the target receiver
+                          (lost route);
+              "misroute"— deliver the ring-neighbour sender's block instead
+                          (stale/foreign data, bits individually valid).
+    attempts: integrity-ladder attempts to hit (see module docstring);
+              None = always, () = never (a wrapper that observes only).
+    calls:    indices of collective calls to hit within targeted attempts,
+              or "all".
+    route:    (recv, send) GLOBAL partition pair to hit, or None for every
+              partner block.
+    max_events: cap on the total number of corrupted collectives (trace
+              order), None = unlimited.
+    seed:     corruption pattern seed (per-event patterns derive from
+              seed + call index).
+    """
+
+    mode: str = "corrupt"
+    attempts: tuple | None = (0,)
+    calls: Any = "all"
+    route: tuple | None = None
+    max_events: int | None = None
+    seed: int = 0
+
+
+@dataclasses.dataclass(eq=False)
+class FaultyExchange(Exchange):
+    """Fault-injecting decorator over a real executor.
+
+    eq=False: identity semantics, like `GraphStructure` — the wrapper rides
+    in `Graph.ex` (static pytree aux) and its mutable trace-time counters
+    must not participate in equality/hashing.
+    """
+
+    inner: Exchange
+    plan: FaultPlan = FaultPlan()
+
+    def __post_init__(self):
+        if self.plan.mode not in MODES:
+            raise ValueError(
+                f"unknown fault mode {self.plan.mode!r}; one of {MODES}")
+        self.p = self.inner.p
+        self._attempt = None   # current integrity-ladder attempt, or None
+        self._calls = 0        # trace-time collective call counter
+        self._events = 0       # trace-time corrupted-collective counter
+
+    # --- stats / control -------------------------------------------------
+    def note_attempt(self, a: int) -> None:
+        """Integrity-ladder bracket (called by transport.ship_transport)."""
+        self._attempt = a
+
+    def reset(self) -> None:
+        self._attempt = None
+        self._calls = 0
+        self._events = 0
+
+    @property
+    def events(self) -> int:
+        """Collectives corrupted so far (trace-time count)."""
+        return self._events
+
+    # --- Exchange interface ----------------------------------------------
+    @property
+    def codec(self) -> WireCodec | None:
+        return self.inner.codec
+
+    def transpose(self, x: jnp.ndarray) -> jnp.ndarray:
+        return self._maybe_corrupt(self.inner.transpose(x))
+
+    def ring_transpose(self, x: jnp.ndarray) -> jnp.ndarray:
+        return self._maybe_corrupt(self.inner.ring_transpose(x))
+
+    def ppermute(self, x: jnp.ndarray, shift: int) -> jnp.ndarray:
+        # individual ring stages pass through untouched; ring_transpose
+        # corrupts its assembled result so both wire schedules present the
+        # same fault surface to the ladder.
+        return self.inner.ppermute(x, shift)
+
+    def psum(self, x: jnp.ndarray) -> jnp.ndarray:
+        return self.inner.psum(x)
+
+    def home_rows(self, nl: int) -> jnp.ndarray:
+        return self.inner.home_rows(nl)
+
+    # --- injection -------------------------------------------------------
+    def _maybe_corrupt(self, out: jnp.ndarray) -> jnp.ndarray:
+        i = self._calls
+        self._calls += 1
+        plan = self.plan
+        if plan.attempts is not None and self._attempt not in plan.attempts:
+            return out
+        if plan.calls != "all" and i not in tuple(plan.calls):
+            return out
+        if plan.max_events is not None and self._events >= plan.max_events:
+            return out
+        if out.ndim < 2:
+            return out
+        self._events += 1
+        return _apply_fault(out, plan, self.inner, salt=i)
+
+
+def _block_mask(out: jnp.ndarray, plan: FaultPlan, inner: Exchange):
+    """[nl, P] bool — which received partner blocks the fault hits.  Rows
+    are indexed by GLOBAL receiver partition id (home_rows), so a route
+    target means the same physical link under both executors."""
+    nl, p = out.shape[:2]
+    rows = inner.home_rows(nl)
+    if plan.route is None:
+        return jnp.ones((nl, p), bool)
+    recv, send = plan.route
+    rmask = rows == recv
+    if plan.mode == "drop":
+        return jnp.broadcast_to(rmask[:, None], (nl, p))
+    cmask = jnp.arange(p) == send
+    return rmask[:, None] & cmask[None, :]
+
+
+def _apply_fault(out: jnp.ndarray, plan: FaultPlan, inner: Exchange,
+                 *, salt: int) -> jnp.ndarray:
+    m = _block_mask(out, plan, inner)
+    m = m.reshape(m.shape + (1,) * (out.ndim - 2))
+    if plan.mode in ("zero", "drop"):
+        return jnp.where(m, jnp.zeros_like(out), out)
+    if plan.mode == "misroute":
+        # the block that SHOULD have come from sender q arrives carrying
+        # sender (q-1)'s payload: a switch delivering to the wrong port.
+        return jnp.where(m, jnp.roll(out, 1, axis=1), out)
+    assert plan.mode == "corrupt"
+    return _flip_bits(out, m, plan.seed, salt)
+
+
+def _flip_bits(out: jnp.ndarray, m: jnp.ndarray, seed: int,
+               salt: int) -> jnp.ndarray:
+    rng = np.random.RandomState((seed * 1000003 + salt) % (2 ** 31))
+    if out.dtype == jnp.bool_:
+        return jnp.where(m, ~out, out)
+    if jnp.issubdtype(out.dtype, jnp.floating):
+        if out.dtype.itemsize == 4:
+            pat = np.int32(rng.randint(1, 2 ** 18)) & _F32_FLIP | np.int32(16)
+            bits = jax.lax.bitcast_convert_type(out, jnp.int32)
+            flipped = jax.lax.bitcast_convert_type(bits ^ pat, out.dtype)
+            return jnp.where(m, flipped, out)
+        # narrow floats (bf16/fp8): flip low mantissa bits via the int view
+        idt = jnp.dtype(f"int{out.dtype.itemsize * 8}")
+        pat = np.asarray(rng.randint(1, 8)).astype(idt)
+        bits = jax.lax.bitcast_convert_type(out, idt)
+        flipped = jax.lax.bitcast_convert_type(bits ^ pat, out.dtype)
+        return jnp.where(m, flipped, out)
+    # integers: XOR low bits — stays in range for packed wire dtypes
+    pat = np.asarray(rng.randint(1, 8), out.dtype)
+    return jnp.where(m, out ^ pat, out)

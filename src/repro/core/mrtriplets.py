@@ -108,6 +108,16 @@ class ShipMetrics:
     route_active_max: jnp.ndarray = dataclasses.field(  # per-dest occupancy
         default_factory=lambda: jnp.int32(0))
     route_width: int = 0            # static K of this ship's route
+    # robustness counters (DESIGN.md §6): ragged->dense overflow fallbacks
+    # taken, integrity-word failures, and routes degraded to a raw dense
+    # ship after the retry also failed.  f32 like the byte fields so zero()
+    # stays aval-stable across cond/while branches.
+    overflow: jnp.ndarray = dataclasses.field(
+        default_factory=lambda: jnp.float32(0))
+    wire_faults: jnp.ndarray = dataclasses.field(
+        default_factory=lambda: jnp.float32(0))
+    degraded: jnp.ndarray = dataclasses.field(
+        default_factory=lambda: jnp.float32(0))
 
     @property
     def bytes_on_wire(self) -> jnp.ndarray:
@@ -140,16 +150,22 @@ class ShipMetrics:
             ragged=jnp.maximum(self.ragged, other.ragged),
             route_active_max=jnp.maximum(self.route_active_max,
                                          other.route_active_max),
-            route_width=max(self.route_width, other.route_width))
+            route_width=max(self.route_width, other.route_width),
+            overflow=self.overflow + other.overflow,
+            wire_faults=self.wire_faults + other.wire_faults,
+            degraded=self.degraded + other.degraded)
 
     def tree_flatten(self):
         return ((self.effective_bytes, self.n_shipped, self.bytes_accounted,
-                 self.bytes_shipped, self.ragged, self.route_active_max),
+                 self.bytes_shipped, self.ragged, self.route_active_max,
+                 self.overflow, self.wire_faults, self.degraded),
                 (self.wire_bytes, self.route_width))
 
     @classmethod
     def tree_unflatten(cls, aux, children):
-        return cls(aux[0], *children, route_width=aux[1])
+        return cls(aux[0], *children[:6], route_width=aux[1],
+                   overflow=children[6], wire_faults=children[7],
+                   degraded=children[8])
 
 
 def _route_ship(ex: Exchange, sendbuf: Any, flags: jnp.ndarray, *,
@@ -183,6 +199,9 @@ def _route_ship(ex: Exchange, sendbuf: Any, flags: jnp.ndarray, *,
         ragged=info.ragged,
         route_active_max=info.route_active_max,
         route_width=flags.shape[-1],
+        overflow=jnp.asarray(info.overflow, jnp.float32),
+        wire_faults=jnp.asarray(info.wire_faults, jnp.float32),
+        degraded=jnp.asarray(info.degraded, jnp.float32),
     )
     return recvbuf, rflags, metrics
 

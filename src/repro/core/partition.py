@@ -138,6 +138,22 @@ class GraphStructure:
         return part, rows
 
 
+def place_vertex_rows(s: "GraphStructure", vids: np.ndarray,
+                      values: np.ndarray, fill=0) -> np.ndarray:
+    """Host-side scatter of per-id vertex facts into `s`'s home layout:
+    a [P, V_blk, ...] buffer with `values[i]` at vertex `vids[i]`'s home
+    row and `fill` elsewhere.  The elastic-restore placement path (§6):
+    a snapshot keys vmask/active by GLOBAL id, a structure keys them by
+    (partition, row) — this is the re-keying."""
+    vids = np.asarray(vids, np.int64)
+    values = np.asarray(values)
+    part, row = s.local_row(vids)
+    buf = np.full((s.num_partitions, s.v_blk) + values.shape[1:], fill,
+                  values.dtype)
+    buf[part, row] = values
+    return buf
+
+
 def edge_partition_2d(src: np.ndarray, dst: np.ndarray, p: int) -> np.ndarray:
     """2D hash partitioner (§4.2).
 

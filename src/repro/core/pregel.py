@@ -31,10 +31,13 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import logging
 from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
+
+_log = logging.getLogger(__name__)
 
 from . import analysis
 from . import transport as transport_mod
@@ -146,8 +149,24 @@ def pregel(
     payload_bound: int | None = None,
     transport: Any = None,
     fuse_apply: Any = "auto",
+    checkpoint: Any = None,
+    checkpoint_every: int | None = None,
+    guard: Any = None,
+    resume: bool = True,
 ) -> PregelResult:
     """Host-driven BSP loop with a jitted superstep.
+
+    checkpoint: a directory path or `core.snapshot.SnapshotStore` enabling
+    superstep checkpointing (§6): every `checkpoint_every` supersteps — and
+    at the next boundary after `guard` (a `train.fault.PreemptionGuard`)
+    reports a preemption, after which the loop exits — the full carry is
+    snapshotted: the warm graph INCLUDING its view and dirty masks, the
+    live count, and the concrete transport policy the next superstep would
+    run with.  With `resume=True` (default) an existing snapshot in the
+    store is restored before the loop starts, so re-running the same
+    `pregel` call after a kill continues warm — delta shipping and the
+    adaptive capacity schedule pick up where they left off, bit-exact with
+    the uninterrupted run.
 
     fuse_apply: "auto" | True/"always" | False/"unfused" — see _superstep.
 
@@ -205,6 +224,23 @@ def pregel(
     # (dense by construction), later plans come from adapt_policy on the
     # observed active fraction + route occupancy of the step just run.
     cur_tp = transport_mod.DENSE if tp.kind == "auto" else tp
+
+    # §6 superstep checkpointing: resolve the store and, on resume, swap in
+    # the snapshotted carry BEFORE deriving anything from the graph.
+    store = None
+    start = 0
+    if checkpoint is not None:
+        from . import snapshot as snapshot_mod
+        store = (checkpoint
+                 if isinstance(checkpoint, snapshot_mod.SnapshotStore)
+                 else snapshot_mod.SnapshotStore(checkpoint))
+        if resume and store.latest_step() is not None:
+            g, start, saved_tp, _live = snapshot_mod.restore_pregel(store, g)
+            if saved_tp is not None:
+                # the snapshot stores the POST-adapt policy: the next
+                # superstep runs exactly the plan the killed run chose.
+                cur_tp = saved_tp
+
     n_visible = max(int(jnp.sum(g.vmask)), 1)
     # each DISTINCT static transport plan the jitted step has seen is one
     # XLA compile — the hysteresis in adapt_policy (prev=) exists to keep
@@ -213,9 +249,22 @@ def pregel(
 
     all_metrics: list[dict] = []
     steps = 0
-    for it in range(max_supersteps):
+    for it in range(start, max_supersteps):
         g, live, metrics = step(g, transport=cur_tp)
         steps += 1
+        fwd, back = metrics["fwd"], metrics["back"]
+        # §6 graceful-degradation accounting, surfaced every superstep:
+        # overflow = ragged plan fell back to a dense ship (bytes worse,
+        # values exact), wire_faults/degraded = integrity-word failures
+        # retried / degraded to raw f32 for the step.
+        overflow_fallbacks = float(fwd.overflow + back.overflow)
+        wire_faults = float(fwd.wire_faults + back.wire_faults)
+        degraded_routes = float(fwd.degraded + back.degraded)
+        if overflow_fallbacks:
+            _log.warning(
+                "pregel superstep %d: ragged transport overflowed its "
+                "static capacity %d time(s); shipped dense this step "
+                "(values exact, bytes worse)", it, int(overflow_fallbacks))
         if track_metrics:
             host_metrics = jax.tree.map(float, metrics)
             host_metrics.update(static_info)
@@ -224,6 +273,9 @@ def pregel(
             host_metrics["transport_frac"] = (
                 cur_tp.capacity_frac if cur_tp.kind == "ragged" else 0.0)
             host_metrics["recompiles"] = len(plans_seen)
+            host_metrics["overflow_fallbacks"] = overflow_fallbacks
+            host_metrics["wire_faults"] = wire_faults
+            host_metrics["degraded_routes"] = degraded_routes
             # pipeline-level accumulation (§3.1): the graph's wire log
             # counts this loop's traffic on top of whatever the operator
             # chain BEFORE it already shipped.
@@ -233,7 +285,6 @@ def pregel(
         if int(live) == 0:
             break
         if tp.kind == "auto":
-            fwd, back = metrics["fwd"], metrics["back"]
             cur_tp = transport_mod.adapt_policy(
                 tp, was_ragged=cur_tp.kind == "ragged",
                 active_frac=float(live) / n_visible,
@@ -243,6 +294,20 @@ def pregel(
                            / max(back.route_width, 1)),
                 prev=cur_tp)
             plans_seen.add(cur_tp)
+        if store is not None:
+            # checkpoint AFTER adapt so the saved policy is the one the
+            # next superstep would run; a preemption request (SIGTERM via
+            # train.fault.PreemptionGuard) forces a snapshot at this
+            # boundary and exits the loop.
+            preempt = guard is not None and getattr(guard, "requested",
+                                                    False)
+            due = (checkpoint_every is not None
+                   and (it + 1 - start) % checkpoint_every == 0)
+            if due or preempt:
+                snapshot_mod.save_pregel(store, it + 1, g, cur_tp,
+                                         live=int(live))
+                if preempt:
+                    break
     return PregelResult(graph=g, supersteps=steps, metrics=all_metrics)
 
 

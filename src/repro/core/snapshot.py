@@ -1,0 +1,357 @@
+"""Atomic sharded snapshots: one store for train AND graph state (§6).
+
+`train/checkpoint.py` shipped the original machinery — npz shards + JSON
+manifest written to `tmp.<step>/`, fsync'd, atomically renamed.  This module
+hoists that write/rename/restore core into `SnapshotStore` (train's
+`Checkpointer` is now a thin client) and builds the GRAPH user on top:
+`save_pregel`/`restore_pregel` snapshot the full Pregel carry at a
+superstep boundary —
+
+  * the warm `Graph`: vdata/edata, visibility + edge masks, the active
+    (changed-since-last-ship) set, and the PR-5 `GraphView` — mirrors,
+    per-leaf dirty masks, and the STATIC filled-direction/clean aux, which
+    goes in the manifest because it is pytree aux, not arrays: a restored
+    mirror marked cold would cold-reship the world, and one marked filled
+    for the wrong directions would serve stale slots as clean;
+  * the live count and the CONCRETE `TransportPolicy` the next superstep
+    would have run with, so the host-adaptive transport resumes its
+    capacity-tier schedule instead of re-warming from the default plan;
+  * the edge list + per-id vertex facts (`elastic/…` keys), which is what
+    makes restore ELASTIC: `restore_pregel_elastic` rebuilds the graph on
+    a different partition count via the ordinary `partition.build_structure`
+    re-shard path and re-places vmask/active by vertex id.  The rebuilt
+    view is cold by design — mirrors are partition-layout facts and do not
+    survive a re-shard.
+
+Atomicity ladder (the §6 crash-consistency contract): shard npz → manifest
+write + file fsync → `os.rename(tmp, final)` → PARENT DirECTORY fsync (a
+crash between rename and the directory metadata reaching disk could
+otherwise lose the rename the docstring promises) → GC.  Readers ignore and
+garbage-collect stray `tmp.<step>/` dirs — a torn write is invisible.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import shutil
+import threading
+import time
+from typing import Any
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from . import partition as part_mod
+from .transport import TransportPolicy
+from .view import GraphView, WireLog
+
+
+def flatten_with_paths(tree) -> list[tuple[str, Any]]:
+    """[(keystr, leaf)] in flatten order — the leaf naming every snapshot
+    (train and graph) keys its shards by."""
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    return [(jax.tree_util.keystr(kp), leaf) for kp, leaf in flat]
+
+
+class SnapshotStore:
+    """Atomic, async, sharded snapshot directory.
+
+    One snapshot = `<dir>/step_<N>/` holding `shards.npz` (named host
+    arrays) + `manifest.json` (leaf specs + caller metadata).  Writes land
+    in `tmp.<N>/` first and rename in whole; `keep` newest snapshots
+    survive GC."""
+
+    def __init__(self, directory: str, keep: int = 3):
+        self.dir = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+        self._thread: threading.Thread | None = None
+        self._inflight: int | None = None
+
+    # ------------------------------------------------------------------ save
+    def write(self, step: int, arrays: dict, manifest: dict | None = None,
+              *, blocking: bool = True) -> None:
+        """Write one snapshot.  `arrays` values must already be host data
+        (the caller decides when the device sync happens); `manifest`
+        entries ride alongside the store's own leaf specs."""
+        host = {k: np.asarray(v) for k, v in arrays.items()}
+        self.wait()                      # one outstanding write at a time
+        self._inflight = step
+        self._thread = threading.Thread(
+            target=self._write, args=(step, host, dict(manifest or {})),
+            daemon=True)
+        self._thread.start()
+        if blocking:
+            self.wait()
+
+    def _write(self, step: int, host: dict, manifest: dict) -> None:
+        tmp = os.path.join(self.dir, f"tmp.{step}")
+        final = os.path.join(self.dir, f"step_{step:08d}")
+        os.makedirs(tmp, exist_ok=True)
+        np.savez(os.path.join(tmp, "shards.npz"),
+                 **{k.replace("/", "\\"): v for k, v in host.items()})
+        manifest = dict(manifest)
+        manifest.setdefault("step", step)
+        manifest["leaves"] = {
+            k: {"shape": list(v.shape), "dtype": str(v.dtype)}
+            for k, v in host.items()}
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+            f.flush()
+            os.fsync(f.fileno())
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)            # atomicity boundary
+        self._fsync_dir()                # …and make the rename itself durable
+        self._inflight = None
+        self._gc()
+
+    def _fsync_dir(self) -> None:
+        """fsync the snapshot DIRECTORY: rename durability is directory
+        metadata, and a crash before it reaches disk silently revives the
+        previous snapshot (or none).  Best-effort on filesystems that
+        refuse directory fds."""
+        try:
+            fd = os.open(self.dir, os.O_RDONLY)
+        except OSError:
+            return
+        try:
+            os.fsync(fd)
+        except OSError:
+            pass
+        finally:
+            os.close(fd)
+
+    def wait(self) -> None:
+        if self._thread is not None and self._thread.is_alive():
+            self._thread.join()
+
+    def _gc(self) -> None:
+        steps = sorted(self.all_steps())
+        for s in steps[: -self.keep]:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s:08d}"),
+                          ignore_errors=True)
+
+    # --------------------------------------------------------------- restore
+    def all_steps(self) -> list[int]:
+        """Committed snapshots only — `tmp.*` never counts."""
+        out = []
+        for name in os.listdir(self.dir):
+            if name.startswith("step_"):
+                out.append(int(name.split("_")[1]))
+        return sorted(out)
+
+    def latest_step(self) -> int | None:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def clean_tmp(self) -> list[str]:
+        """Remove torn `tmp.<step>/` dirs a killed writer left behind (an
+        in-flight async write's tmp dir is spared).  Returns what was
+        removed."""
+        removed = []
+        for name in sorted(os.listdir(self.dir)):
+            if not name.startswith("tmp."):
+                continue
+            if self._inflight is not None and name == f"tmp.{self._inflight}":
+                continue
+            shutil.rmtree(os.path.join(self.dir, name), ignore_errors=True)
+            removed.append(name)
+        return removed
+
+    def read(self, step: int) -> tuple[dict, dict]:
+        """(arrays, manifest) of one committed snapshot.  Cleans stray tmp
+        dirs on the way — restore is where a previous crash gets tidied."""
+        self.clean_tmp()
+        path = os.path.join(self.dir, f"step_{step:08d}")
+        with open(os.path.join(path, "manifest.json")) as f:
+            manifest = json.load(f)
+        data = np.load(os.path.join(path, "shards.npz"))
+        arrays = {k.replace("\\", "/"): data[k] for k in data.files}
+        return arrays, manifest
+
+
+# ---------------------------------------------------------------------------
+# Graph / Pregel snapshots
+# ---------------------------------------------------------------------------
+def _named_leaves(prefix: str, tree) -> dict:
+    return {prefix + k: v for k, v in flatten_with_paths(tree)}
+
+
+def _unflatten_like(like, arrays: dict, prefix: str):
+    """Rebuild a pytree in `like`'s structure from prefixed array keys."""
+    keys = [prefix + k for k, _ in flatten_with_paths(like)]
+    return jax.tree.unflatten(jax.tree.structure(like),
+                              [jnp.asarray(arrays[k]) for k in keys])
+
+
+def _plain_names(tree) -> list[str]:
+    """Dict-pytree leaf names ("pr", "a.b") — the elastic keys, which must
+    reconstruct WITHOUT a `like` structure on the restore side."""
+    names = []
+    for k, _ in flatten_with_paths(tree):
+        name = k.replace("']['", ".").strip("[]'\"")
+        if not name or name in names:
+            raise ValueError(
+                "elastic snapshots need dict-shaped vdata/edata with unique "
+                f"string keys; got leaf path {k!r}")
+        names.append(name)
+    return names
+
+
+def graph_arrays(g, *, elastic: bool = True) -> tuple[dict, dict]:
+    """(arrays, manifest) capturing one Graph.  The manifest half carries
+    everything that is STATIC pytree aux on the live object — the view's
+    filled-direction/clean records and `vmask_full` — because restoring the
+    arrays under wrong aux silently corrupts the delta-shipping plan."""
+    arrays = {
+        **_named_leaves("vdata", g.vdata),
+        **_named_leaves("edata", g.edata),
+        "vmask": g.vmask, "emask": g.emask, "active": g.active,
+        "home_vid": g.s.home_vid, "home_mask": g.s.home_mask,
+    }
+    manifest: dict = {
+        "kind": "graph",
+        "p": int(g.s.p),
+        "vmask_full": bool(g.vmask_full),
+        "view": None,
+        "wire_log": g.wire_log is not None,
+        "wall_time": time.time(),
+    }
+    if g.wire_log is not None:
+        arrays["wire_log/ships"] = g.wire_log.ships
+        arrays["wire_log/bytes_shipped"] = g.wire_log.bytes_shipped
+        arrays["wire_log/bytes_accounted"] = g.wire_log.bytes_accounted
+    if g.view is not None:
+        v = g.view
+        arrays.update(_named_leaves("view/mirror", v.mirror))
+        arrays.update(_named_leaves("view/dirty", v.dirty))
+        arrays.update({"view/vis": v.vis, "view/filled": v.filled,
+                       "view/active": v.active, "view/vis_dirty": v.vis_dirty})
+        manifest["view"] = {"dirs": list(v.dirs), "vis_dirs": v.vis_dirs,
+                            "clean": list(v.clean),
+                            "vis_clean": bool(v.vis_clean)}
+    if elastic:
+        svid, dvid, edata = g.edges_to_numpy()
+        arrays["elastic/src"] = svid
+        arrays["elastic/dst"] = dvid
+        for name, leaf in zip(_plain_names(edata), jax.tree.leaves(edata)):
+            arrays[f"elastic/edata/{name}"] = leaf
+        manifest["elastic"] = {"edata": _plain_names(edata),
+                               "vdata": _plain_names(g.vdata)}
+    return arrays, manifest
+
+
+def save_pregel(store: SnapshotStore, step: int, g, policy=None, *,
+                live=None, blocking: bool = True,
+                elastic: bool = True) -> None:
+    """Snapshot the Pregel carry at a superstep boundary: `step` is the
+    NEXT superstep to run, `policy` the concrete transport it would run
+    with (adapt_policy's output — saving the pre-adapt plan would replay
+    one stale capacity tier on resume)."""
+    arrays, manifest = graph_arrays(g, elastic=elastic)
+    manifest["kind"] = "pregel"
+    manifest["superstep"] = int(step)
+    manifest["live"] = None if live is None else int(live)
+    manifest["policy"] = (None if policy is None
+                          else dataclasses.asdict(policy))
+    store.write(step, arrays, manifest, blocking=blocking)
+
+
+def _manifest_policy(manifest: dict) -> TransportPolicy | None:
+    d = manifest.get("policy")
+    if d is None:
+        return None
+    d = dict(d)
+    d["cap"] = None if d.get("cap") is None else int(d["cap"])
+    return TransportPolicy(**d)
+
+
+def restore_pregel(store: SnapshotStore, like, step: int | None = None):
+    """WARM restore onto the same partition count: rebuild the Graph in
+    `like`'s structure (identity-shared `StructArrays`/host/executor — the
+    deterministic-rebuild invariant of §6 means a resumed process's
+    structure IS the saved one, and identity keeps the plan caches valid)
+    including the view, so delta shipping continues where the killed run
+    left off.  Returns (graph, next_superstep, policy, live)."""
+    if step is None:
+        step = store.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no snapshots in {store.dir}")
+    arrays, manifest = store.read(step)
+    if int(manifest["p"]) != int(like.s.p):
+        raise ValueError(
+            f"snapshot has p={manifest['p']}, this graph has p={like.s.p}; "
+            "use restore_pregel_elastic to re-shard")
+    vdata = _unflatten_like(like.vdata, arrays, "vdata")
+    edata = _unflatten_like(like.edata, arrays, "edata")
+    view = None
+    if manifest.get("view") is not None:
+        va = manifest["view"]
+        view = GraphView(
+            mirror=_unflatten_like(vdata, arrays, "view/mirror"),
+            vis=jnp.asarray(arrays["view/vis"]),
+            filled=jnp.asarray(arrays["view/filled"]),
+            active=jnp.asarray(arrays["view/active"]),
+            dirty=_unflatten_like(vdata, arrays, "view/dirty"),
+            vis_dirty=jnp.asarray(arrays["view/vis_dirty"]),
+            dirs=tuple(va["dirs"]), vis_dirs=va["vis_dirs"],
+            clean=tuple(va["clean"]), vis_clean=bool(va["vis_clean"]))
+    wire_log = like.wire_log
+    if manifest.get("wire_log") and "wire_log/ships" in arrays:
+        wire_log = WireLog(
+            ships=jnp.asarray(arrays["wire_log/ships"]),
+            bytes_shipped=jnp.asarray(arrays["wire_log/bytes_shipped"]),
+            bytes_accounted=jnp.asarray(arrays["wire_log/bytes_accounted"]))
+    g = like.replace(
+        vdata=vdata, edata=edata,
+        vmask=jnp.asarray(arrays["vmask"]),
+        emask=jnp.asarray(arrays["emask"]),
+        active=jnp.asarray(arrays["active"]),
+        view=view, wire_log=wire_log,
+        vmask_full=bool(manifest["vmask_full"]))
+    return g, int(manifest.get("superstep", step)), \
+        _manifest_policy(manifest), manifest.get("live")
+
+
+def restore_pregel_elastic(store: SnapshotStore, *,
+                           num_partitions: int, step: int | None = None,
+                           ex=None, partitioner: str = "2d"):
+    """ELASTIC restore onto a different partition count: rebuild through
+    `Graph.from_edges` (the ordinary `partition.build_structure` re-shard
+    path) from the snapshot's edge list and per-id vertex facts, then
+    re-place vmask/active by vertex id.  The view comes back COLD — mirror
+    slots are partition-layout facts and do not survive a re-shard — so
+    the first superstep pays one full ship and delta shipping resumes from
+    there.  Returns (graph, next_superstep, policy, live)."""
+    from .graph import Graph       # local import: graph.py is upstream
+
+    if step is None:
+        step = store.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no snapshots in {store.dir}")
+    arrays, manifest = store.read(step)
+    if "elastic/src" not in arrays:
+        raise ValueError("snapshot was written with elastic=False")
+    el = manifest["elastic"]
+    home_mask = arrays["home_mask"].astype(bool)
+    vk = arrays["home_vid"][home_mask].astype(np.int64)
+    vvals = {n: arrays["vdata['" + n.replace(".", "']['") + "']"][home_mask]
+             for n in el["vdata"]}
+    default = {n: np.zeros(v.shape[1:], v.dtype) for n, v in vvals.items()}
+    edata = {n: arrays[f"elastic/edata/{n}"] for n in el["edata"]}
+    g = Graph.from_edges(
+        arrays["elastic/src"], arrays["elastic/dst"], edge_values=edata,
+        vertex_keys=vk, vertex_values=vvals, default_vertex=default,
+        num_partitions=num_partitions, partitioner=partitioner, ex=ex)
+    vmask = part_mod.place_vertex_rows(
+        g.host, vk, arrays["vmask"][home_mask], fill=False)
+    active = part_mod.place_vertex_rows(
+        g.host, vk, arrays["active"][home_mask], fill=False)
+    g = g.replace(vmask=jnp.asarray(vmask & np.asarray(g.s.home_mask)),
+                  active=jnp.asarray(active),
+                  view=None, vmask_full=bool(manifest["vmask_full"]))
+    return g, int(manifest.get("superstep", step)), \
+        _manifest_policy(manifest), manifest.get("live")

@@ -108,6 +108,12 @@ class TransportPolicy:
     # multiplicative headroom; growth applies immediately (overflow costs a
     # dense-fallback ship).  Bounds recompiles on oscillating frontiers.
     tier_headroom: float = 1.25
+    # per-route integrity words checked at receive (DESIGN.md §6): a failed
+    # check retries the ship once, then degrades the route to a raw dense
+    # full-width ship for this superstep — values stay correct, bytes get
+    # worse, nothing crashes.  Verification needs a layout-independent
+    # encoding, so scaled codecs ship unchecked (wire.verifiable).
+    integrity: bool = False
 
     def replace(self, **kw) -> "TransportPolicy":
         return dataclasses.replace(self, **kw)
@@ -253,6 +259,8 @@ class TransportInfo(NamedTuple):
     ragged: jnp.ndarray             # f32 0/1 — the branch actually taken
     overflow: jnp.ndarray           # f32 0/1 — counts exceeded the capacity
     route_active_max: jnp.ndarray   # int32 — LOCAL max per-destination count
+    wire_faults: jnp.ndarray = 0.0  # f32 — failed integrity checks (§6)
+    degraded: jnp.ndarray = 0.0     # f32 0/1 — retry also failed; shipped raw
 
 
 def index_dtype(k: int) -> np.dtype:
@@ -328,20 +336,13 @@ def _ring_tree_ship(ex, tree, *, active=None, bound: int | None = None):
     return jax.tree.map(one, tree)
 
 
-def ship_transport(ex, tree, flags, *, bound: int | None = None,
-                   policy: TransportPolicy = DENSE,
-                   prefer_ragged: jnp.ndarray | None = None,
-                   recvflags: jnp.ndarray | None = None):
-    """Move one routed [nl, P, K, ...] buffer through the selected
-    transport.  Returns (recv_tree, recv_flags, TransportInfo).
-
-    flags: [nl, P, K] bool — entries the receiver must observe (the wire's
-    active set; everything else may arrive as zeros and is masked out by
-    recv_flags downstream).  prefer_ragged: traced mesh-uniform bool from
-    the caller's hysteresis (None = always prefer ragged when eligible).
-    recvflags: structural receive-side flags known without a collective
-    (full ships) — lets the dense path skip the flags wire.
-    """
+def _ship_once(ex, tree, flags, *, bound: int | None = None,
+               policy: TransportPolicy = DENSE,
+               prefer_ragged: jnp.ndarray | None = None,
+               recvflags: jnp.ndarray | None = None):
+    """One un-checked pass of the routed ship (the PR-4 transport body —
+    `ship_transport` wraps it in the §6 integrity ladder when the policy
+    asks).  Returns (recv_tree, recv_flags, TransportInfo)."""
     codec = ex.codec
     # the pipelined wire moves IDENTICAL bits over a different collective
     # schedule, so it swaps in transparently under dense and ragged alike
@@ -410,3 +411,98 @@ def ship_transport(ex, tree, flags, *, bound: int | None = None,
                               jnp.float32(dense_bytes))
     return recv, rf, TransportInfo(bytes_shipped, ragf,
                                    over_any.astype(jnp.float32), maxc)
+
+
+def ship_transport(ex, tree, flags, *, bound: int | None = None,
+                   policy: TransportPolicy = DENSE,
+                   prefer_ragged: jnp.ndarray | None = None,
+                   recvflags: jnp.ndarray | None = None):
+    """Move one routed [nl, P, K, ...] buffer through the selected
+    transport.  Returns (recv_tree, recv_flags, TransportInfo).
+
+    flags: [nl, P, K] bool — entries the receiver must observe (the wire's
+    active set; everything else may arrive as zeros and is masked out by
+    recv_flags downstream).  prefer_ragged: traced mesh-uniform bool from
+    the caller's hysteresis (None = always prefer ragged when eligible).
+    recvflags: structural receive-side flags known without a collective
+    (full ships) — lets the dense path skip the flags wire.
+
+    With `policy.integrity` (DESIGN.md §6) every ship carries a per-route
+    int32 integrity word — a position-weighted fold over the decoded
+    payload bits and the freshness flags, salted with the destination id —
+    recomputed and compared at receive.  A mesh-uniform (psummed) mismatch
+    retries the ship once; a second failure degrades the route to a raw
+    full-width dense transpose for this superstep.  Values stay correct,
+    `TransportInfo.wire_faults`/`degraded` count the events, and the extra
+    attempts' bytes land in `bytes_shipped`.
+    """
+    kw = dict(bound=bound, policy=policy, prefer_ragged=prefer_ragged,
+              recvflags=recvflags)
+    if not policy.integrity or not jax.tree.leaves(tree):
+        return _ship_once(ex, tree, flags, **kw)
+    codec = ex.codec
+    # a fault injector (core/fault.py) brackets its corruption by these
+    # trace-time attempt marks; a real executor simply has no hook.
+    note = getattr(ex, "note_attempt", lambda _a: None)
+    if not wire_mod.verifiable(codec):
+        note(0)
+        return _ship_once(ex, tree, flags, **kw)
+
+    xpose = ex.ring_transpose if policy.pipeline else ex.transpose
+    nl, p, k = flags.shape
+    # the send side folds what an intact receiver would MATERIALISE —
+    # decode(encode(x)) — so legal narrowing never reads as corruption.
+    rt = jax.tree.map(
+        lambda x: wire_mod.roundtrip_leaf(x, codec, bound=bound,
+                                          active=flags), tree)
+    cols = jnp.broadcast_to(jnp.arange(p, dtype=jnp.int32), (nl, p))
+    rows = jnp.broadcast_to(ex.home_rows(nl)[:, None], (nl, p))
+    expect = wire_mod.integrity_word(rt, flags, dest=cols, src=rows)
+    word_bytes = jnp.float32(nl * p * 4)
+
+    def attempt(a: int):
+        note(a)
+        recv, rf, info = _ship_once(ex, tree, flags, **kw)
+        want = xpose(expect[..., None])[..., 0]
+        got = wire_mod.integrity_word(recv, rf, dest=rows, src=cols)
+        bad = (got != want).sum(dtype=jnp.int32)
+        # mesh-uniform verdict: a single device's mismatch must retry the
+        # collective on EVERY device or the a2a shapes disagree.
+        ok = ex.psum(bad) == 0
+        return recv, rf, info, ok
+
+    recv0, rf0, info0, ok0 = attempt(0)
+    recv1, rf1, info1, ok1 = jax.lax.cond(
+        ok0,
+        lambda _: (recv0, rf0, info0, jnp.bool_(True)),
+        lambda _: attempt(1),
+        None)
+
+    # last rung: raw full-width dense transpose — no codec, no compaction,
+    # nothing left to mis-encode; receive-side cast keeps the recv avals
+    # identical to the kept branch (narrow codecs store narrow mirrors).
+    def _degrade(_):
+        note(2)
+        recv = jax.tree.map(
+            lambda x, l: xpose(x).astype(l.dtype), tree, recv1)
+        rf = recvflags if recvflags is not None else xpose(flags)
+        return recv, rf
+
+    recv2, rf2 = jax.lax.cond(ok1, lambda _: (recv1, rf1), _degrade, None)
+
+    raw_bytes = float(sum(x.size * x.dtype.itemsize
+                          for x in jax.tree.leaves(tree)))
+    if recvflags is None:
+        raw_bytes += nl * p * k
+    retried = (~ok0).astype(jnp.float32)
+    degraded = (~ok1).astype(jnp.float32)
+    info = TransportInfo(
+        bytes_shipped=(info0.bytes_shipped + retried * info1.bytes_shipped
+                       + degraded * jnp.float32(raw_bytes)
+                       + (1.0 + retried) * word_bytes),
+        ragged=jnp.where(degraded > 0, jnp.float32(0), info1.ragged),
+        overflow=jnp.maximum(info0.overflow, info1.overflow),
+        route_active_max=info0.route_active_max,
+        wire_faults=retried + degraded,
+        degraded=degraded)
+    return recv2, rf2, info

@@ -288,6 +288,103 @@ def static_wire_bytes(tree, codec: WireCodec | None,
     return int(total)
 
 
+# ---------------------------------------------------------------------------
+# Per-route integrity words (DESIGN.md §6)
+# ---------------------------------------------------------------------------
+# Knuth / Murmur3 multiplicative constants as wrapped int32s — salt the
+# destination and sender ids into the word.  Both ends matter: a block
+# delivered to the wrong partition fails on the destination salt, and a
+# CONSISTENT misdelivery (payload, flags, and word all arriving from the
+# wrong sender together) fails on the sender salt, because the receiver
+# recomputes it from the block's claimed position.
+_GOLD = np.int32(np.uint32(0x9E3779B9).view(np.int32))
+_GOLD2 = np.int32(np.uint32(0x85EBCA6B).view(np.int32))
+
+
+def verifiable(codec: WireCodec | None) -> bool:
+    """Integrity words need a LAYOUT-INDEPENDENT encoding: the sender folds
+    over decode(encode(x)) in the dense layout, but a ragged transport
+    encodes the compacted buffer — per-block scales then tile different
+    element groups and legitimately produce different values.  Plain
+    narrowing and lossless int packing are per-element, so they verify;
+    scaled codecs do not (their ships are protected only by the flag fold
+    and destination salt)."""
+    return codec is None or not codec.scaled
+
+
+def roundtrip_leaf(x: jnp.ndarray, codec: WireCodec | None,
+                   *, bound: int | None = None,
+                   active: jnp.ndarray | None = None) -> jnp.ndarray:
+    """decode(encode(x)) without a collective: the exact values the receiver
+    of an intact ship materialises.  The send side folds THIS (not the raw
+    buffer) into its integrity word, so lossy-but-legal narrowing (bf16)
+    never reads as corruption."""
+    if codec is None:
+        return x
+    enc = encode_leaf(x, codec, bound=bound, active=active)
+    if enc is None:
+        return x
+    return decode_leaf(enc.kind, enc.payload, enc.scale, x, codec)
+
+
+def _leaf_words(x: jnp.ndarray) -> jnp.ndarray:
+    """[nl, P, ...] -> [nl, P, W] int32: the leaf's raw bits as 32-bit words
+    (narrower dtypes embed bijectively; 64-bit dtypes split into two)."""
+    nl, p = x.shape[:2]
+    flat = x.reshape(nl, p, -1)
+    if flat.dtype == jnp.bool_:
+        return flat.astype(jnp.int32)
+    size = flat.dtype.itemsize
+    if size == 4:
+        return jax.lax.bitcast_convert_type(flat, jnp.int32)
+    if size < 4:
+        if jnp.issubdtype(flat.dtype, jnp.integer):
+            return flat.astype(jnp.int32)
+        return jax.lax.bitcast_convert_type(
+            flat, jnp.dtype(f"int{size * 8}")).astype(jnp.int32)
+    return jax.lax.bitcast_convert_type(flat, jnp.int32).reshape(nl, p, -1)
+
+
+def _weighted_fold(words: jnp.ndarray) -> jnp.ndarray:
+    """[nl, P, W] int32 -> [nl, P]: position-weighted wrap-around sum.  Odd
+    per-position coefficients keep the fold sensitive to swapped or shifted
+    entries, which an unweighted sum cannot see."""
+    coef = 2 * jnp.arange(words.shape[-1], dtype=jnp.int32) + 1
+    return (words * coef).sum(axis=-1, dtype=jnp.int32)
+
+
+def fold_words(tree, flags: jnp.ndarray) -> jnp.ndarray:
+    """[nl, P] int32 fold over a routed buffer + its freshness flags.
+
+    Entries outside `flags` are excluded on BOTH ends of a ship (the
+    receiver's recvflags carry the same pattern under the routed-ship
+    contract), so unspecified-zero padding never aliases real payload."""
+    nl, p, k = flags.shape
+    word = _weighted_fold(flags.astype(jnp.int32))
+    for x in jax.tree.leaves(tree):
+        if x.size == 0 or x.ndim < 3:
+            continue
+        words = _leaf_words(x)
+        wpe = words.shape[-1] // k        # 32-bit words per route entry
+        m = flags if wpe == 1 else jnp.repeat(flags, wpe, axis=-1)
+        word = word + _weighted_fold(jnp.where(m, words, 0))
+    return word
+
+
+def integrity_word(tree, flags: jnp.ndarray, dest: jnp.ndarray,
+                   src: jnp.ndarray) -> jnp.ndarray:
+    """[nl, P] int32 per-route integrity word (DESIGN.md §6).
+
+    dest/src: [nl, P] int32 GLOBAL partition ids each block is for / from.
+    The sender fills dest from its column positions and src from its own
+    home row; the receiver fills dest from its own home row and src from
+    the block's claimed column — so zeroed, bit-flipped, and misrouted
+    blocks (even a self-consistent roll of the whole exchange) all fail."""
+    return (fold_words(tree, flags)
+            + (dest.astype(jnp.int32) + 1) * _GOLD
+            + (src.astype(jnp.int32) + 1) * _GOLD2)
+
+
 def bytes_on_wire(tree, codec: WireCodec | None,
                   active: jnp.ndarray | None = None,
                   bound: int | None = None) -> jnp.ndarray:

@@ -303,7 +303,8 @@ def lower_graph_cell(mesh, *, n_vertices=41_652_230, n_edges=1_468_365_182,
                      wire_delta: bool = False, mirror_factor: float = 2.0,
                      contrib_form: bool = False,
                      transport: str | None = None,
-                     capacity_frac: float = 0.25):
+                     capacity_frac: float = 0.25,
+                     integrity: bool = False):
     """PageRank superstep on a Twitter-scale graph (paper Table 1), SPMD over
     the flat parts axis.  Structure arrays are ShapeDtypeStructs sized by the
     2D-cut replication model.
@@ -312,6 +313,12 @@ def lower_graph_cell(mesh, *, n_vertices=41_652_230, n_edges=1_468_365_182,
     mirror exchange (DESIGN.md §2.1); wire_delta enables active-set delta
     accounting.  wire_dtype is the pre-codec narrowing knob, kept for
     existing callers.
+
+    integrity (DESIGN.md §6): lower the cell with the per-route integrity
+    word + retry/degrade ladder enabled, so the dry-run report prices the
+    checked wire — the word itself (one int32 per route) plus the verify
+    psum, and the lax.cond retry/degrade branches the checked program
+    keeps in the HLO.
 
     transport (DESIGN.md §2.1.1): "dense" (default), "ragged", or "auto".
     "ragged" lowers the PURE compacted-collective program (overflow
@@ -337,6 +344,9 @@ def lower_graph_cell(mesh, *, n_vertices=41_652_230, n_edges=1_468_365_182,
         if tpol.kind == "ragged":
             tpol = tpol.replace(fallback=False)
         supersteps = max(supersteps, 2)
+    if integrity:
+        tpol = (tpol if tpol is not None
+                else transport_mod.DENSE).replace(integrity=True)
 
     p = mesh_axis_sizes(mesh)["parts"]
     ex = SpmdExchange(p=p, axis_name="parts", wire_dtype=wire_dtype)
@@ -392,8 +402,10 @@ def lower_graph_cell(mesh, *, n_vertices=41_652_230, n_edges=1_468_365_182,
     coll = hlo_utils.collective_bytes(txt)
     dots = hlo_utils.dot_flops(txt)
     bytes_tc = hlo_utils.bytes_accessed(txt)
-    shape_tag = f"twitter_{supersteps}step" + (
-        f"_{transport}{capacity_frac}" if tpol is not None else "")
+    shape_tag = (f"twitter_{supersteps}step"
+                 + (f"_{transport}{capacity_frac}"
+                    if transport not in (None, "dense") else "")
+                 + ("_chk" if integrity else ""))
     rec = {
         "arch": "graphx-pagerank", "shape": shape_tag,
         "status": "ok",
@@ -421,6 +433,7 @@ def lower_graph_cell(mesh, *, n_vertices=41_652_230, n_edges=1_468_365_182,
                   "wire": (ex.codec.name if ex.codec is not None else "f32"),
                   "transport": transport or "dense",
                   "capacity_frac": capacity_frac if tpol else None,
+                  "integrity": bool(integrity),
                   "supersteps": supersteps},
     }
     return (rec, txt) if return_hlo else rec
@@ -580,6 +593,9 @@ def main() -> None:
                     help="graph cell: exchange transport (DESIGN.md §2.1.1)")
     ap.add_argument("--capacity-frac", type=float, default=0.25,
                     help="graph cell: ragged capacity as a route fraction")
+    ap.add_argument("--integrity", action="store_true",
+                    help="graph cell: enable the §6 wire-integrity word + "
+                         "retry/degrade ladder in the lowered program")
     ap.add_argument("--ragged-check", action="store_true",
                     help="graph cell: lower dense + two ragged capacities "
                          "and assert collective bytes track the fraction")
@@ -647,7 +663,8 @@ def main() -> None:
                 mirror_factor=args.mirror_factor,
                 contrib_form=args.contrib_form,
                 transport=args.transport,
-                capacity_frac=args.capacity_frac)
+                capacity_frac=args.capacity_frac,
+                integrity=args.integrity)
             if args.variant:
                 rec["variant"] = args.variant
             print(json.dumps(rec, indent=1))

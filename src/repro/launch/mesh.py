@@ -35,5 +35,20 @@ def make_graph_mesh(*, multi_pod: bool = False):
     return _make_mesh((256,), ("parts",), jax.devices()[:256])
 
 
+def make_restore_mesh(num_parts: int):
+    """Mesh for an ELASTIC restore (DESIGN.md §6): a preempted graph job
+    resumed on a different chip budget re-shards its snapshot through
+    `core.snapshot.restore_pregel_elastic(num_partitions=num_parts)`, and
+    the replacement mesh is simply a flat 'parts' axis over however many
+    chips the scheduler hands back — partition count is snapshot DATA, not
+    code, so any size that fits the surviving fleet works."""
+    devices = jax.devices()
+    if len(devices) < num_parts:
+        raise RuntimeError(
+            f"elastic restore onto {num_parts} parts needs {num_parts} "
+            f"devices, have {len(devices)}")
+    return _make_mesh((num_parts,), ("parts",), devices[:num_parts])
+
+
 def mesh_axis_sizes(mesh) -> dict[str, int]:
     return dict(zip(mesh.axis_names, mesh.devices.shape))

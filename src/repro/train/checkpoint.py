@@ -4,99 +4,64 @@ Design (DESIGN.md §6):
   * one .npz per host holding that host's addressable shards + a JSON
     manifest (step, mesh shape, leaf paths/shapes/dtypes);
   * writes go to  <dir>/tmp.<step>/  and atomically rename to <dir>/step_N
-    only after fsync — a killed job never sees a torn checkpoint;
+    only after fsync of the manifest AND of the checkpoint directory — a
+    killed job never sees a torn checkpoint, and a crash right after the
+    rename cannot roll it back;
   * async: the device->host copy is synchronous (cheap) and the file write
     runs on a daemon thread so the train loop overlaps I/O with compute;
   * elastic restore: the manifest stores the LOGICAL pytree, not the mesh,
     so a restore onto a different mesh re-shards via jax.device_put with the
     new sharding (mesh shape is data, not code).
+
+The write/rename/restore core lives in `core/snapshot.py` (`SnapshotStore`)
+— ONE implementation shared with the graph engine's superstep snapshots
+(`snapshot.save_pregel`); this class is the train-loop client that maps an
+arbitrary pytree onto named shards.
 """
 from __future__ import annotations
 
-import json
-import os
-import shutil
-import threading
 from typing import Any
 
 import numpy as np
 import jax
 
+from ..core.snapshot import SnapshotStore, flatten_with_paths
 
-def _flatten_with_paths(tree) -> list[tuple[str, Any]]:
-    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
-    return [(jax.tree_util.keystr(kp), leaf) for kp, leaf in flat]
+# back-compat alias: this module's original helper moved to core/snapshot
+_flatten_with_paths = flatten_with_paths
 
 
 class Checkpointer:
     def __init__(self, directory: str, keep: int = 3):
+        self._store = SnapshotStore(directory, keep=keep)
         self.dir = directory
         self.keep = keep
-        os.makedirs(directory, exist_ok=True)
-        self._thread: threading.Thread | None = None
 
     # ------------------------------------------------------------------ save
     def save(self, step: int, tree: Any, *, blocking: bool = False) -> None:
         """Snapshot to host memory now; write to disk asynchronously."""
-        host = {k: np.asarray(v) for k, v in _flatten_with_paths(tree)}
-        treedef = jax.tree.structure(tree)
-        self.wait()  # one outstanding write at a time
-        self._thread = threading.Thread(
-            target=self._write, args=(step, host, str(treedef)), daemon=True)
-        self._thread.start()
-        if blocking:
-            self.wait()
-
-    def _write(self, step: int, host: dict, treedef_repr: str) -> None:
-        tmp = os.path.join(self.dir, f"tmp.{step}")
-        final = os.path.join(self.dir, f"step_{step:08d}")
-        os.makedirs(tmp, exist_ok=True)
-        np.savez(os.path.join(tmp, "shards.npz"),
-                 **{k.replace("/", "\\"): v for k, v in host.items()})
-        manifest = {
-            "step": step,
-            "treedef": treedef_repr,
-            "leaves": {k: {"shape": list(v.shape), "dtype": str(v.dtype)}
-                       for k, v in host.items()},
-        }
-        with open(os.path.join(tmp, "manifest.json"), "w") as f:
-            json.dump(manifest, f)
-            f.flush()
-            os.fsync(f.fileno())
-        if os.path.exists(final):
-            shutil.rmtree(final)
-        os.rename(tmp, final)              # atomicity boundary
-        self._gc()
+        host = {k: np.asarray(v) for k, v in flatten_with_paths(tree)}
+        self._store.write(step, host,
+                          {"step": step,
+                           "treedef": str(jax.tree.structure(tree))},
+                          blocking=blocking)
 
     def wait(self) -> None:
-        if self._thread is not None and self._thread.is_alive():
-            self._thread.join()
-
-    def _gc(self) -> None:
-        steps = sorted(self.all_steps())
-        for s in steps[: -self.keep]:
-            shutil.rmtree(os.path.join(self.dir, f"step_{s:08d}"),
-                          ignore_errors=True)
+        self._store.wait()
 
     # --------------------------------------------------------------- restore
     def all_steps(self) -> list[int]:
-        out = []
-        for name in os.listdir(self.dir):
-            if name.startswith("step_"):
-                out.append(int(name.split("_")[1]))
-        return sorted(out)
+        return self._store.all_steps()
 
     def latest_step(self) -> int | None:
-        steps = self.all_steps()
-        return steps[-1] if steps else None
+        return self._store.latest_step()
 
     def restore(self, step: int, like: Any, shardings: Any = None) -> Any:
         """Restore into the structure of `like`; reshard onto `shardings`
-        (elastic: the target mesh may differ from the saving mesh)."""
-        path = os.path.join(self.dir, f"step_{step:08d}")
-        data = np.load(os.path.join(path, "shards.npz"))
-        host = {k.replace("\\", "/"): data[k] for k in data.files}
-        keys = [k for k, _ in _flatten_with_paths(like)]
+        (elastic: the target mesh may differ from the saving mesh).  Stray
+        `tmp.<step>/` dirs from a crashed writer are cleaned on the way."""
+        host, _ = self._store.read(step)
+        keys = [k for k, _ in flatten_with_paths(like)]
         leaves = [host[k] for k in keys]
         tree = jax.tree.unflatten(jax.tree.structure(like), leaves)
         if shardings is not None:

@@ -22,6 +22,11 @@ class StragglerDetector:
     alpha: float = 0.1          # EWMA weight
     z_threshold: float = 3.0
     warmup: int = 5
+    # variance floor as a fraction of the mean: perfectly regular warmup
+    # steps prime _var to ~0, and without a floor the first post-warmup
+    # step with ANY jitter z-explodes and gets flagged (the §6 regression
+    # tests/test_fault.py::test_straggler_warmup_jitter pins this).
+    min_rel_std: float = 0.05
     on_straggler: Callable[[int, float, float], None] | None = None
 
     _mean: float = 0.0
@@ -38,7 +43,7 @@ class StragglerDetector:
                 self._mean + (seconds - self._mean) / self._n)
             self._var = max(self._var, (seconds - self._mean) ** 2)
             return False
-        std = max(self._var ** 0.5, 1e-6)
+        std = max(self._var ** 0.5, self.min_rel_std * abs(self._mean), 1e-6)
         z = (seconds - self._mean) / std
         flagged = z > self.z_threshold
         if flagged:

@@ -44,6 +44,16 @@ graph carries its view across operator boundaries) is bit-exact vs the
 COLD chain (view stripped before every consumer) for the fused and
 unfused plans, while psummed bytes_shipped strictly drops.
 
+Fault tolerance (DESIGN.md §6), same 4-device mesh: (m) PageRank and CC
+under injected wire faults — transient faults (first attempt corrupt,
+retry clean) and persistent ones (retry corrupt too, route degrades to the
+raw dense ship) — stay BIT-EXACT vs the fault-free run while the psummed
+wire_faults/degraded counters record the hits; a run killed mid-flight and
+snapshotted at a superstep boundary resumes warm (restored view: the next
+superstep ships strictly fewer psummed bytes than a view-stripped cold
+restart) and converges bit-exact; the same snapshot restores ELASTICALLY
+onto a 2-device mesh and still reaches the union-find oracle's labels.
+
 Chain planner (core/planner.py, DESIGN.md §4.4), same 4-device mesh: (k)
 the declared chain mapV -> mrTriplets -> mrTriplets run through
 run_chain(optimize=True) under jit(shard_map) is BIT-EXACT on the f32
@@ -512,6 +522,143 @@ def main():
     want = sorted(zip(np.asarray(kk_l)[m_np_l].tolist(),
                       np.asarray(vv_l["v"])[m_np_l].tolist()))
     assert got == want
+
+    # ---- (m) chaos: wire integrity + kill/checkpoint/restore (§6) ----------
+    # NOTE: the integrity ladder's retry/degrade lax.cond branches run
+    # DIFFERENT collectives per branch, which trips shard_map's replication
+    # checker — every harness here lowers through utils.spmd.shard_map,
+    # which passes check_rep/check_vma=False for exactly this reason.
+    import tempfile
+
+    from repro.core import snapshot as snap
+    from repro.core.fault import FaultPlan, FaultyExchange
+
+    DENSE_CHK = DENSE.replace(integrity=True)
+    RAGGED_CHK = cc_pol.replace(integrity=True)
+
+    def pr_chk_loop(gg, transport):
+        out, faults, degraded = gg, jnp.float32(0), jnp.float32(0)
+        for _ in range(6):
+            out, _, m = _superstep(
+                out, None, vprog=vprog, send_msg=send, gather="sum",
+                default_msg={"m": jnp.float32(0.0)}, skip_stale=None,
+                changed_fn=None, kernel_mode="auto", use_cache=True,
+                transport=transport)
+            faults += m["fwd"].wire_faults + m["back"].wire_faults
+            degraded += m["fwd"].degraded + m["back"].degraded
+        return (out.vdata["pr"], jax.lax.psum(faults, "parts"),
+                jax.lax.psum(degraded, "parts"))
+
+    def run_pr_chk(graph, transport):
+        fn = jax.jit(shard_map(
+            lambda gg, _t=transport: pr_chk_loop(gg, _t),
+            mesh, (PS("parts"),), (PS("parts"), PS(), PS())))
+        pr, faults, degraded = fn(graph)
+        return np.asarray(pr), float(faults), float(degraded)
+
+    pr_clean, f0, d0 = run_pr_chk(g_spmd, DENSE_CHK)
+    assert (f0, d0) == (0.0, 0.0), (f0, d0)
+
+    def faulty(graph, plan):
+        return dataclasses.replace(
+            graph, ex=FaultyExchange(SpmdExchange(p=P, axis_name="parts"),
+                                     plan))
+
+    # transient: every fault caught + retried clean, values bit-exact
+    pr_t, f_t, d_t = run_pr_chk(
+        faulty(g_spmd, FaultPlan(mode="corrupt", attempts=(0,))), DENSE_CHK)
+    np.testing.assert_array_equal(pr_t, pr_clean)
+    assert f_t > 0 and d_t == 0.0, (f_t, d_t)
+
+    # persistent: retry fails too, route degrades to the raw dense ship
+    pr_p, f_p, d_p = run_pr_chk(
+        faulty(g_spmd, FaultPlan(mode="corrupt", attempts=(0, 1))),
+        DENSE_CHK)
+    np.testing.assert_array_equal(pr_p, pr_clean)
+    assert d_p > 0 and f_p >= d_p, (f_p, d_p)
+
+    # route loss (zeroed blocks) on the RAGGED checked transport, CC labels
+    def cc_chk(gg):
+        out = cc_phase(gg, 10, RAGGED_CHK)
+        return out.vdata["cc"]
+
+    sgf = dataclasses.replace(
+        sg_spmd, ex=FaultyExchange(SpmdExchange(p=P, axis_name="parts"),
+                                   FaultPlan(mode="zero", route=(2, 1),
+                                             attempts=(0,))))
+    fn_ccf = jax.jit(shard_map(cc_chk, mesh, (PS("parts"),), PS("parts")))
+    np.testing.assert_array_equal(np.asarray(fn_ccf(sgf)), cc_local)
+
+    # ---- kill / checkpoint / restore (same mesh, then elastic onto 2) ------
+    cc_want = alg.connected_components_reference(sgd.src, sgd.dst, vids)
+    f4 = jax.jit(shard_map(lambda gg: cc_phase(gg, 4, DENSE),
+                           mesh, (PS("parts"),), PS("parts")))
+    g_mid = f4(sg_spmd)          # "killed" after 4 supersteps, warm view
+    with tempfile.TemporaryDirectory() as ckdir:
+        store = snap.SnapshotStore(ckdir)
+        snap.save_pregel(store, 4, g_mid, DENSE, live=1)
+
+        # warm restore into a FRESHLY BUILT process (the §6 resume contract:
+        # structure is rebuilt deterministically, state comes off the store)
+        fresh = dataclasses.replace(
+            Graph.from_edges(sgd.src, sgd.dst, num_partitions=P).mapV(
+                lambda vid, v: {"cc": vid}),
+            ex=SpmdExchange(p=P, axis_name="parts"), host=None)
+        g_res, start, pol, _live = snap.restore_pregel(store, fresh)
+        assert start == 4 and pol.kind == "dense"
+        f6 = jax.jit(shard_map(
+            lambda gg: cc_phase(gg, 6, DENSE).vdata["cc"],
+            mesh, (PS("parts"),), PS("parts")))
+        np.testing.assert_array_equal(np.asarray(f6(g_res)), cc_local)
+
+        # warm restore ships strictly fewer psummed bytes than a cold
+        # restart.  Measured on the delta-PR workload: its view carries a
+        # provably-CLEAN leaf (deg — vprog passthrough), and clean leaves
+        # skip the wire entirely; a view-stripped cold restart re-ships
+        # them.  (CC's single always-dirty leaf shows no dense-transport
+        # delta, which is exactly why the clean-leaf contract matters.)
+        def pr_phase(gg, n):
+            out = gg
+            for _ in range(n):
+                out, _, _ = _superstep(
+                    out, None, vprog=dvprog, send_msg=dsend, gather="sum",
+                    default_msg={"m": jnp.float32(0.0)}, skip_stale="out",
+                    changed_fn=dchg, kernel_mode="auto", use_cache=True)
+            return out
+
+        def pr_step_bytes(gg):
+            _, _, m = _superstep(
+                gg, None, vprog=dvprog, send_msg=dsend, gather="sum",
+                default_msg={"m": jnp.float32(0.0)}, skip_stale="out",
+                changed_fn=dchg, kernel_mode="auto", use_cache=True)
+            return jax.lax.psum(
+                m["fwd"].bytes_shipped + m["back"].bytes_shipped, "parts")
+
+        store_pr = snap.SnapshotStore(os.path.join(ckdir, "pr"))
+        f3p = jax.jit(shard_map(lambda gg: pr_phase(gg, 3), mesh,
+                                (PS("parts"),), PS("parts")))
+        snap.save_pregel(store_pr, 3, f3p(gdp_spmd), DENSE, live=1)
+        g_prres, startp, _polp, _ = snap.restore_pregel(store_pr, gdp_spmd)
+        assert startp == 3
+        fpb = jax.jit(shard_map(pr_step_bytes, mesh, (PS("parts"),), PS()))
+        warm_bytes = float(fpb(g_prres))
+        cold_bytes = float(fpb(dataclasses.replace(g_prres, view=None)))
+        assert 0 < warm_bytes < cold_bytes, (warm_bytes, cold_bytes)
+
+        # elastic restore: same snapshot onto a 2-device mesh (p=2)
+        g2, start2, _pol2, _ = snap.restore_pregel_elastic(
+            store, num_partitions=2,
+            ex=SpmdExchange(p=2, axis_name="parts"))
+        assert start2 == 4 and g2.s.p == 2
+        mesh2 = make_mesh((2,), ("parts",), jax.devices()[:2])
+        f2 = jax.jit(shard_map(
+            lambda gg: cc_phase(gg, 8, DENSE).vdata["cc"],
+            mesh2, (PS("parts"),), PS("parts")))
+        cc2 = np.asarray(f2(dataclasses.replace(g2, host=None)))
+        m2 = np.asarray(g2.vmask)
+        got2 = dict(zip(np.asarray(g2.s.home_vid)[m2].tolist(),
+                        cc2[m2].tolist()))
+        assert got2 == cc_want
 
     print("OK")
 

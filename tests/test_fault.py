@@ -1,0 +1,370 @@
+"""Chaos harness (DESIGN.md §6): wire-fault injection, superstep
+checkpointing, crash consistency, and the fault-tolerance satellites.
+
+Layout:
+  * chaos-marked tests (also slow: they are compile-heavy) run the full
+    injection matrix — every fault mode against the integrity ladder, on
+    dense and ragged transports, asserting BIT-EXACT convergence vs a
+    fault-free baseline plus the expected wire_faults/degraded counters,
+    and the kill/checkpoint/restore differentials (warm restore ships
+    strictly fewer bytes than a cold restart; elastic restore onto a
+    different partition count converges to the same labels);
+  * unmarked tests stay in the fast lane: crash-consistency of the
+    snapshot store (torn tmp dirs), the overflow_fallbacks counter +
+    warning, StragglerDetector/PreemptionGuard behaviour.
+
+The 4-device SPMD half of the harness is tests/spmd_check.py section (m),
+driven by tests/test_spmd.py.
+"""
+import logging
+import signal
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import Graph, TransportPolicy, algorithms as alg
+from repro.core import snapshot as snap
+from repro.core.exchange import LocalExchange
+from repro.core.fault import MODES, FaultPlan, FaultyExchange
+from repro.core.pregel import pregel
+from repro.train.checkpoint import Checkpointer
+from repro.train.fault import PreemptionGuard, StragglerDetector
+
+P = 4
+IMAX = jnp.int32(2 ** 31 - 1)
+
+
+# ---------------------------------------------------------------------------
+# Workload helpers (host-driver PageRank / CC on a small random graph)
+# ---------------------------------------------------------------------------
+def _edges(n=48, m=240, seed=3, sym=False):
+    rng = np.random.RandomState(seed)
+    src, dst = rng.randint(0, n, m), rng.randint(0, n, m)
+    if sym:
+        src, dst = np.r_[src, dst], np.r_[dst, src]
+    return src, dst
+
+
+def _pr_graph(ex=None, seed=3):
+    src, dst = _edges(seed=seed)
+    g = Graph.from_edges(src, dst,
+                         edge_values={"w": np.ones(len(src), np.float32)},
+                         num_partitions=P, ex=ex)
+    g = alg.attach_out_degree(g)
+    return g.mapV(lambda vid, v: {**v, "pr": jnp.float32(1.0)})
+
+
+def _pr_send(sv, ev, dv):
+    return {"m": sv["pr"] / sv["deg"] * ev["w"]}
+
+
+def _pr_vprog(vid, v, msg):
+    return {**v, "pr": 0.15 + 0.85 * msg["m"]}
+
+
+def _run_pr(g, n_steps, **kw):
+    return pregel(g, _pr_vprog, _pr_send, "sum",
+                  default_msg={"m": jnp.float32(0.0)}, skip_stale=None,
+                  max_supersteps=n_steps, **kw)
+
+
+def _cc_send(sv, ev, dv):
+    return {"m": sv["cc"]}
+
+
+def _cc_vprog(vid, v, msg):
+    return {"cc": jnp.minimum(v["cc"], msg["m"])}
+
+
+def _run_cc(g, n_steps, **kw):
+    return pregel(g, _cc_vprog, _cc_send, "min", default_msg={"m": IMAX},
+                  max_supersteps=n_steps, skip_stale="out", **kw)
+
+
+def _pr_of(result):
+    return np.asarray(result.graph.vdata["pr"])
+
+
+def _fault_totals(result):
+    faults = sum(m["wire_faults"] for m in result.metrics)
+    degraded = sum(m["degraded_routes"] for m in result.metrics)
+    return faults, degraded
+
+
+DENSE_CHK = TransportPolicy("dense", integrity=True)
+RAGGED_CHK = TransportPolicy("ragged", capacity_frac=0.5, cap_rounding=4,
+                             integrity=True)
+
+
+# ---------------------------------------------------------------------------
+# Chaos matrix: every fault mode x transport, transient and persistent
+# ---------------------------------------------------------------------------
+@pytest.mark.chaos
+@pytest.mark.slow
+@pytest.mark.parametrize("policy", [DENSE_CHK, RAGGED_CHK],
+                         ids=["dense", "ragged"])
+@pytest.mark.parametrize("mode,route", [
+    ("corrupt", None), ("zero", (2, 1)), ("drop", (1, 0)),
+    ("misroute", None)])
+def test_chaos_transient_fault_bit_exact(mode, route, policy):
+    """A transient fault (first attempt corrupt, retry clean) must leave the
+    run BIT-EXACT vs fault-free while wire_faults counts the hits — the §6
+    retry half of the ladder, for every fault mode on both transports."""
+    assert mode in MODES
+    clean = _run_pr(_pr_graph(), 4, transport=policy, track_metrics=True)
+    assert _fault_totals(clean) == (0.0, 0.0)
+
+    plan = FaultPlan(mode=mode, route=route, attempts=(0,))
+    faulty = _run_pr(_pr_graph(ex=FaultyExchange(LocalExchange(p=P), plan)),
+                     4, transport=policy, track_metrics=True)
+    np.testing.assert_array_equal(_pr_of(clean), _pr_of(faulty))
+    faults, degraded = _fault_totals(faulty)
+    assert faults > 0
+    assert degraded == 0.0     # retries succeeded; nothing degraded
+
+
+@pytest.mark.chaos
+@pytest.mark.slow
+@pytest.mark.parametrize("policy", [DENSE_CHK, RAGGED_CHK],
+                         ids=["dense", "ragged"])
+def test_chaos_persistent_fault_degrades(policy):
+    """A persistent fault (retry corrupt too) forces the degrade rung: the
+    route re-ships as the raw dense transpose, values stay BIT-EXACT, and
+    the degraded counter records the downgrade."""
+    clean = _run_pr(_pr_graph(), 4, transport=policy)
+    plan = FaultPlan(mode="corrupt", attempts=(0, 1))
+    faulty = _run_pr(_pr_graph(ex=FaultyExchange(LocalExchange(p=P), plan)),
+                     4, transport=policy, track_metrics=True)
+    np.testing.assert_array_equal(_pr_of(clean), _pr_of(faulty))
+    faults, degraded = _fault_totals(faulty)
+    assert degraded > 0
+    assert faults >= degraded
+
+
+@pytest.mark.chaos
+@pytest.mark.slow
+def test_chaos_negative_control_unprotected():
+    """Negative control: the same injection WITHOUT the integrity word must
+    actually corrupt the result — proving the matrix above exercises real
+    faults, not a no-op injector."""
+    clean = _run_pr(_pr_graph(), 4)
+    plan = FaultPlan(mode="corrupt", attempts=None)   # always corrupt
+    faulty = _run_pr(_pr_graph(ex=FaultyExchange(LocalExchange(p=P), plan)),
+                     4)
+    assert not np.array_equal(_pr_of(clean), _pr_of(faulty))
+
+
+# ---------------------------------------------------------------------------
+# Kill / checkpoint / restore
+# ---------------------------------------------------------------------------
+def test_checkpoint_resume_bit_exact(tmp_path):
+    """Periodic checkpointing + resume: killing a run at superstep 3 and
+    re-running the same call resumes from the snapshot and converges
+    BIT-EXACT with the uninterrupted run (the §6 warm-resume contract)."""
+    base = _run_pr(_pr_graph(), 8)
+    d = str(tmp_path / "ckpt")
+    r1 = _run_pr(_pr_graph(), 3, checkpoint=d, checkpoint_every=3)
+    assert r1.supersteps == 3
+    r2 = _run_pr(_pr_graph(), 8, checkpoint=d, checkpoint_every=3)
+    assert r2.supersteps == 5          # resumed at 3, ran 3..7
+    np.testing.assert_array_equal(_pr_of(base), _pr_of(r2))
+
+
+def test_preemption_guard_checkpoints_and_resumes(tmp_path):
+    """SIGTERM-at-boundary contract: when the guard trips, pregel snapshots
+    at the NEXT superstep boundary and exits; the follow-up run resumes and
+    finishes bit-exact."""
+    class TrippedGuard:
+        def __init__(self, after):
+            self.seen, self.after = 0, after
+
+        @property
+        def requested(self):
+            self.seen += 1
+            return self.seen > self.after
+
+    base = _run_pr(_pr_graph(), 8)
+    d = str(tmp_path / "ckpt")
+    r1 = _run_pr(_pr_graph(), 8, checkpoint=d, guard=TrippedGuard(3))
+    assert 0 < r1.supersteps < 8
+    r2 = _run_pr(_pr_graph(), 8, checkpoint=d)
+    assert r1.supersteps + r2.supersteps == 8
+    np.testing.assert_array_equal(_pr_of(base), _pr_of(r2))
+
+
+@pytest.mark.chaos
+@pytest.mark.slow
+def test_warm_restore_ships_fewer_bytes_than_cold(tmp_path):
+    """The point of snapshotting the VIEW: a warm restore's first superstep
+    delta-ships (clean leaves — deg — never move), a cold restart re-ships
+    the world.  Both converge bit-exact; warm must be strictly cheaper."""
+    base = _run_pr(_pr_graph(), 5)
+    d = str(tmp_path / "ckpt")
+    _run_pr(_pr_graph(), 3, checkpoint=d, checkpoint_every=3)
+
+    warm = _run_pr(_pr_graph(), 5, checkpoint=d, track_metrics=True)
+    assert warm.supersteps == 2
+    np.testing.assert_array_equal(_pr_of(base), _pr_of(warm))
+
+    store = snap.SnapshotStore(d)
+    g_cold, start, _pol, _live = snap.restore_pregel(store, _pr_graph())
+    assert start == 3
+    cold = _run_pr(g_cold.replace(view=None), 2, track_metrics=True)
+    np.testing.assert_array_equal(_pr_of(base), _pr_of(cold))
+
+    def first_step_bytes(res):
+        m = res.metrics[0]
+        return m["fwd"].bytes_shipped + m["back"].bytes_shipped
+
+    assert first_step_bytes(warm) < first_step_bytes(cold)
+
+
+@pytest.mark.chaos
+@pytest.mark.slow
+def test_elastic_restore_different_partition_count(tmp_path):
+    """Kill a 4-partition CC run mid-flight, restore onto 2 partitions via
+    the elastic path, finish there: per-vertex labels must match the
+    uninterrupted 4-partition run exactly (min-label diffusion is
+    order-independent, so elasticity cannot change the fixpoint)."""
+    src, dst = _edges(n=40, m=120, seed=11, sym=True)
+    w = {"w": np.ones(len(src), np.float32)}
+
+    def build(p):
+        g = Graph.from_edges(src, dst, edge_values=w, num_partitions=p)
+        return g.mapV(lambda vid, v: {"cc": vid})
+
+    base = _run_cc(build(P), 100)
+    base_vids, base_vals = base.graph.vertices_to_numpy()
+    base_cc = dict(zip(base_vids.tolist(),
+                       np.asarray(base_vals["cc"]).tolist()))
+
+    d = str(tmp_path / "ckpt")
+    _run_cc(build(P), 2, checkpoint=d, checkpoint_every=2)
+
+    g2, start, _pol, _live = snap.restore_pregel_elastic(
+        snap.SnapshotStore(d), num_partitions=2)
+    assert g2.s.p == 2 and start == 2
+    done = _run_cc(g2, 100)
+    vids, vals = done.graph.vertices_to_numpy()
+    got = dict(zip(vids.tolist(), np.asarray(vals["cc"]).tolist()))
+    assert got == base_cc
+
+
+# ---------------------------------------------------------------------------
+# Snapshot-store crash consistency (satellite a)
+# ---------------------------------------------------------------------------
+def test_torn_tmp_is_invisible_and_cleaned(tmp_path):
+    """A writer killed mid-write leaves tmp.<step>/ behind: it must never
+    count as a snapshot, and the next restore must clean it."""
+    store = snap.SnapshotStore(str(tmp_path))
+    store.write(1, {"a": np.arange(3)}, {"tag": "ok"})
+    torn = tmp_path / "tmp.2"
+    torn.mkdir()
+    (torn / "shards.npz").write_bytes(b"\x00garbage")
+    assert store.all_steps() == [1]
+    assert store.latest_step() == 1
+    arrays, manifest = store.read(1)
+    np.testing.assert_array_equal(arrays["a"], np.arange(3))
+    assert manifest["tag"] == "ok"
+    assert not torn.exists()
+
+
+def test_clean_tmp_spares_inflight_write(tmp_path):
+    store = snap.SnapshotStore(str(tmp_path))
+    live = tmp_path / "tmp.5"
+    dead = tmp_path / "tmp.4"
+    live.mkdir()
+    dead.mkdir()
+    store._inflight = 5
+    removed = store.clean_tmp()
+    assert removed == ["tmp.4"]
+    assert live.exists() and not dead.exists()
+
+
+def test_checkpointer_restore_cleans_torn_tmp(tmp_path):
+    ck = Checkpointer(str(tmp_path), keep=2)
+    tree = {"w": np.arange(6, dtype=np.float32).reshape(2, 3)}
+    ck.save(7, tree, blocking=True)
+    torn = tmp_path / "tmp.8"
+    torn.mkdir()
+    (torn / "manifest.json").write_text("{not json")
+    assert ck.all_steps() == [7]
+    out = ck.restore(7, tree)
+    np.testing.assert_array_equal(np.asarray(out["w"]), tree["w"])
+    assert not torn.exists()
+
+
+# ---------------------------------------------------------------------------
+# overflow_fallbacks counter + warning (satellite b)
+# ---------------------------------------------------------------------------
+def test_overflow_fallbacks_counted_and_warned(caplog):
+    """A ragged plan whose static capacity cannot hold the frontier must
+    fall back dense every ship: the host metrics pin the per-superstep
+    fallback count and the driver logs a warning."""
+    pol = TransportPolicy("ragged", cap=4, cap_rounding=4)
+    with caplog.at_level(logging.WARNING, logger="repro.core.pregel"):
+        res = _run_pr(_pr_graph(), 3, transport=pol, track_metrics=True)
+    counts = [m["overflow_fallbacks"] for m in res.metrics]
+    assert len(counts) == 3
+    # superstep 0's forward ship is the COLD full ship (every mirror moves
+    # regardless of the active set), which plans dense — only the return
+    # route can overflow.  Warm supersteps delta-ship both directions, and
+    # sync PageRank keeps every vertex active, so both overflow the cap-4
+    # plan thereafter.
+    assert counts == [1.0, 2.0, 2.0]
+    assert any("overflowed its static capacity" in r.message
+               for r in caplog.records)
+    # fault-free run: the §6 integrity counters stay zero
+    assert _fault_totals(res) == (0.0, 0.0)
+    # and the values are unaffected by the fallback (dense re-ship is exact)
+    np.testing.assert_array_equal(_pr_of(res), _pr_of(_run_pr(_pr_graph(),
+                                                              3)))
+
+
+# ---------------------------------------------------------------------------
+# StragglerDetector / PreemptionGuard (satellite c)
+# ---------------------------------------------------------------------------
+def test_straggler_warmup_jitter():
+    """Regression (§6): perfectly regular warmup steps prime the EWMA
+    variance to ~0; the first post-warmup step with nanoscale jitter must
+    NOT be flagged (the min_rel_std floor), while a real straggler must."""
+    det = StragglerDetector(warmup=5)
+    for i in range(5):
+        assert not det.observe(i, 0.1)
+    assert not det.observe(5, 0.1000001)
+    assert det.events == 0
+    assert det.observe(6, 5.0)
+    assert det.events == 1
+
+
+def test_straggler_flagged_step_skips_ewma():
+    det = StragglerDetector(warmup=3, alpha=0.5)
+    for i in range(3):
+        det.observe(i, 0.1)
+    mean_before = det._mean
+    assert det.observe(3, 50.0)            # flagged...
+    assert det._mean == mean_before        # ...and excluded from the EWMA
+    assert not det.observe(4, 0.1)         # the baseline is not poisoned
+    cb = []
+    det2 = StragglerDetector(warmup=2,
+                             on_straggler=lambda s, t, m: cb.append((s, t)))
+    det2.observe(0, 0.1)
+    det2.observe(1, 0.1)
+    det2.observe(2, 9.0)
+    assert cb == [(2, 9.0)]
+
+
+def test_preemption_guard_signal_roundtrip():
+    g = PreemptionGuard()
+    try:
+        assert not g.requested
+        signal.raise_signal(signal.SIGTERM)
+        assert g.requested
+    finally:
+        g.uninstall()
+    # uninstalled: a fresh guard without handlers observes only _handler
+    g2 = PreemptionGuard(install=False)
+    assert not g2.requested
+    g2._handler(signal.SIGTERM, None)
+    assert g2.requested
