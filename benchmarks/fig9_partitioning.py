@@ -4,8 +4,13 @@ Paper result: 16 -> 128 partitions (8x) increases communication only ~2x,
 because the 2D vertex cut bounds replication at O(sqrt(P)) per vertex.
 
 We measure the actual replication factor and mrTriplets wire bytes for the
-2D cut vs the 1D edge-cut-style hash and random placement, across partition
-counts — the paper's Figure 9 plus its §4.2 partitioner comparison.
+2D cut vs the 1D edge-cut-style hash, random placement and the degree-aware
+hybrid cut (§4.2), across partition counts — the paper's Figure 9 plus its
+§4.2 partitioner comparison.  A second sweep holds the partitioning at P=4
+and varies the physical plan instead: fused kernel, ragged transport, and
+the hybrid cut's broadcast lane with per-destination capacity tiers
+(DESIGN.md §2.1.3), reporting the bytes the selected transport really
+shipped.
 """
 from __future__ import annotations
 
@@ -15,37 +20,83 @@ import jax.numpy as jnp
 
 from repro.core import Graph, algorithms as alg
 from repro.core import partition as pm
+from repro.core import transport as tm
 from repro.core.mrtriplets import mr_triplets
 
 from .common import datasets
+
+_PR_SEND = lambda sv, ev, dv: {"m": sv["pr"] / sv["deg"] * ev["w"]}  # noqa: E731
+
+
+def _pr_graph(gd, p, partitioner="2d", **kw):
+    g = alg.attach_out_degree(
+        Graph.from_edges(gd.src, gd.dst, num_partitions=p,
+                         partitioner=partitioner, **kw),
+        kernel_mode="ref")
+    return g.mapV(lambda vid, v: {**v, "pr": jnp.float32(1.0)})
 
 
 def run(quick: bool = True) -> list[dict]:
     gd = datasets(quick)["twitter-sim"]
     rows = []
     repl_2d = {}
-    for partitioner in ("2d", "1d", "random"):
+    for partitioner in ("2d", "1d", "random", "hybrid"):
         for p in (4, 16, 64) if quick else (4, 16, 64, 128):
             s = pm.build_structure(gd.src, gd.dst, p, partitioner=partitioner)
             repl = s.stats.replication_factor
             if partitioner == "2d":
                 repl_2d[p] = repl
+            if partitioner == "hybrid":
+                # ISSUE 9 acceptance: threshold 0 is always a sweep
+                # candidate, so hybrid never replicates more than 2D.
+                assert repl <= repl_2d[p] + 1e-9, (p, repl, repl_2d[p])
             # wire bytes of one PageRank mrTriplets at this partitioning
-            g = alg.attach_out_degree(
-                Graph.from_edges(gd.src, gd.dst, num_partitions=p,
-                                 partitioner=partitioner),
-                kernel_mode="ref")
-            g = g.mapV(lambda vid, v: {**v, "pr": jnp.float32(1.0)})
-            _, _, _, m = mr_triplets(
-                g, lambda sv, ev, dv: {"m": sv["pr"] / sv["deg"] * ev["w"]},
-                "sum", kernel_mode="ref")
+            g = _pr_graph(gd, p, partitioner)
+            _, _, _, m = mr_triplets(g, _PR_SEND, "sum", kernel_mode="ref")
             rows.append({
                 "benchmark": "fig9_partitioning", "partitioner": partitioner,
-                "partitions": p,
+                "partitions": p, "kernel": "ref", "transport": "dense",
                 "replication_factor": round(repl, 3),
+                "hybrid_threshold": s.stats.threshold,
                 "sqrt_p": round(math.sqrt(p), 2),
                 "fwd_wire_bytes": int(m["fwd"].wire_bytes),
                 "effective_fwd_bytes": int(m["fwd"].effective_bytes)})
+
+    # physical-plan sweep at fixed P=4: fused kernel, ragged transport,
+    # hybrid cut + broadcast lane + per-destination tiers (§2.1.3)
+    tiered = tm.TransportPolicy(
+        kind="ragged", capacity_frac=1.0, capacity_frac_back=1.0,
+        capacity_fracs=(0.5,) * 4, capacity_fracs_back=(0.5,) * 4)
+    plans = (
+        ("2d", {}, "fused-dense", tm.DENSE, "auto"),
+        ("2d", {}, "fused-ragged",
+         tm.TransportPolicy(kind="ragged", capacity_frac=1.0,
+                            capacity_frac_back=1.0), "auto"),
+        ("hybrid", {"bcast_min_repl": 3}, "bcast-dense", tm.DENSE, "auto"),
+        ("hybrid", {"bcast_min_repl": 3}, "bcast-tiered", tiered, "auto"),
+    )
+    base_shipped = None
+    for partitioner, kw, plan, tp, mode in plans:
+        g = _pr_graph(gd, 4, partitioner, **kw)
+        _, _, _, m = mr_triplets(g, _PR_SEND, "sum", kernel_mode=mode,
+                                 transport=tp)
+        shipped = float(m["fwd"].bytes_shipped)
+        if plan == "fused-dense":
+            base_shipped = shipped
+        if plan.startswith("bcast"):
+            # the broadcast lane ships each broadcast-set vertex ONCE per
+            # source instead of once per (source, dest) route entry
+            assert shipped < base_shipped, (plan, shipped, base_shipped)
+        rows.append({
+            "benchmark": "fig9_partitioning", "partitioner": partitioner,
+            "partitions": 4, "kernel": plan, "transport": tp.kind,
+            "replication_factor": round(
+                g.host.stats.replication_factor, 3),
+            "hybrid_threshold": g.host.stats.threshold,
+            "n_broadcast": g.host.stats.n_broadcast,
+            "fwd_wire_bytes": int(m["fwd"].wire_bytes),
+            "fwd_bytes_shipped": int(shipped),
+            "effective_fwd_bytes": int(m["fwd"].effective_bytes)})
 
     # paper claim: comm grows ~sqrt(P), i.e. 16x partitions => ~<=4x comm
     if 4 in repl_2d and 64 in repl_2d:

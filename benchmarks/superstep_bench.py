@@ -96,13 +96,17 @@ def count_home_materializations(g: Graph, *, vprog, send_msg, gather,
 # workloads
 # ---------------------------------------------------------------------------
 def _workloads(quick: bool):
-    """name -> (graph builder output, pregel kwargs, fuse_apply)."""
+    """name -> (graph builder fn(partitioner_kw) -> Graph, pregel kwargs,
+    fuse_apply).  The builder re-partitions the SAME edge set so the
+    partitioner row dimension compares placements, not graphs."""
     IMAX = jnp.int32(2**31 - 1)
 
     # CC: min gather, int32 labels — the fused apply's bit-exact default
     sgd = symmetrize(rmat(7 if quick else 11, 4, seed=4))
-    cg = Graph.from_edges(sgd.src, sgd.dst, num_partitions=P)
-    cg = cg.mapV(lambda vid, v: {"cc": vid})
+
+    def cc_build(pkw):
+        cg = Graph.from_edges(sgd.src, sgd.dst, num_partitions=P, **pkw)
+        return cg.mapV(lambda vid, v: {"cc": vid})
 
     def cc_send(sv, ev, dv):
         return {"m": sv["cc"]}
@@ -116,11 +120,14 @@ def _workloads(quick: bool):
     deg = np.maximum(np.bincount(
         gd.src, minlength=int(max(gd.src.max(), gd.dst.max())) + 1), 1)
     vids = np.arange(len(deg))
-    pg = Graph.from_edges(gd.src, gd.dst, num_partitions=P,
-                          vertex_keys=vids,
-                          vertex_values={"deg": deg.astype(np.float32)},
-                          default_vertex={"deg": np.float32(1)})
-    pg = pg.mapV(lambda vid, v: {"pr": jnp.float32(1.0), "deg": v["deg"]})
+
+    def pr_build(pkw):
+        pg = Graph.from_edges(gd.src, gd.dst, num_partitions=P,
+                              vertex_keys=vids,
+                              vertex_values={"deg": deg.astype(np.float32)},
+                              default_vertex={"deg": np.float32(1)}, **pkw)
+        return pg.mapV(lambda vid, v: {"pr": jnp.float32(1.0),
+                                       "deg": v["deg"]})
 
     def pr_send(sv, ev, dv):
         return {"m": sv["pr"] / sv["deg"]}
@@ -132,16 +139,25 @@ def _workloads(quick: bool):
         return jnp.abs(new["pr"] - old["pr"]).max() > 1e-2
 
     return {
-        "cc": (cg, dict(vprog=cc_vprog, send_msg=cc_send, gather="min",
-                        default_msg={"m": IMAX}, skip_stale="out"),
+        "cc": (cc_build, dict(vprog=cc_vprog, send_msg=cc_send, gather="min",
+                              default_msg={"m": IMAX}, skip_stale="out"),
                "auto"),
-        "pagerank_delta": (pg, dict(vprog=pr_vprog, send_msg=pr_send,
-                                    gather="sum",
-                                    default_msg={"m": jnp.float32(0.0)},
-                                    skip_stale="out",
-                                    changed_fn=pr_changed),
+        "pagerank_delta": (pr_build, dict(vprog=pr_vprog, send_msg=pr_send,
+                                          gather="sum",
+                                          default_msg={"m": jnp.float32(0.0)},
+                                          skip_stale="out",
+                                          changed_fn=pr_changed),
                            "always"),
     }
+
+
+# partitioner row dimension (§4.2/§2.1.3): "2d" is the full historical
+# matrix; the hybrid cut and its broadcast lane ride as extra f32 cells
+_PARTITIONER_KW = {
+    "2d": {},
+    "hybrid": {"partitioner": "hybrid"},
+    "hybrid+bcast": {"partitioner": "hybrid", "bcast_min_repl": 3},
+}
 
 
 def run(quick: bool = True) -> list[dict]:
@@ -150,71 +166,90 @@ def run(quick: bool = True) -> list[dict]:
     rows = []
     auto_tp = TransportPolicy("auto", cap_rounding=8, enter_frac=0.95,
                               exit_frac=0.97)
-    for wname, (g, kw, fuse) in _workloads(quick).items():
-        # the §2.3.2 HBM-materialization evidence, once per workload
+    for wname, (build, kw, fuse) in _workloads(quick).items():
         mat_kw = {k: kw[k] for k in ("vprog", "send_msg", "gather",
                                      "default_msg", "skip_stale")}
-        mats_unfused = count_home_materializations(
-            g, fuse_apply="unfused", **mat_kw)
-        mats_fused = count_home_materializations(
-            g, fuse_apply=fuse, **mat_kw)
-        nl, v_blk = g.s.home_vid.shape
-        dv = sum(int(np.prod(l.shape[2:], dtype=np.int64)) if l.ndim > 2
-                 else 1 for l in jax.tree.leaves(g.vdata))
-        home_bytes = nl * v_blk * dv * 4
+        # the historical matrix stays on the 2D cut; the hybrid cut and its
+        # broadcast lane add f32 cells (the ISSUE-9 partitioner dimension)
+        cells = [("2d", codec, transport, pipeline)
+                 for codec in ("f32", "int8")
+                 for transport in ("dense", "auto")
+                 for pipeline in (False, True)]
+        cells += [("hybrid", "f32", "auto", False),
+                  ("hybrid+bcast", "f32", "dense", False),
+                  ("hybrid+bcast", "f32", "auto", False)]
+        graphs: dict[str, Graph] = {}
+        mats: dict[str, tuple[int, int]] = {}
 
-        for codec in ("f32", "int8"):
+        for partitioner, codec, transport, pipeline in cells:
+            if partitioner not in graphs:
+                g = build(_PARTITIONER_KW[partitioner])
+                graphs[partitioner] = g
+                # the §2.3.2 HBM-materialization evidence, per placement
+                # (the broadcast lane adds exchange ops, not home arrays —
+                # but count what the trace actually holds)
+                mats[partitioner] = (
+                    count_home_materializations(
+                        g, fuse_apply="unfused", **mat_kw),
+                    count_home_materializations(g, fuse_apply=fuse, **mat_kw))
+            g = graphs[partitioner]
+            mats_unfused, mats_fused = mats[partitioner]
+            nl, v_blk = g.s.home_vid.shape
+            dv = sum(int(np.prod(l.shape[2:], dtype=np.int64)) if l.ndim > 2
+                     else 1 for l in jax.tree.leaves(g.vdata))
+            home_bytes = nl * v_blk * dv * 4
+
             gc = g.replace(ex=with_wire(g.ex, codec)) if codec != "f32" else g
-            for transport in ("dense", "auto"):
-                for pipeline in (False, True):
-                    tp = (auto_tp if transport == "auto"
-                          else DENSE).replace(pipeline=pipeline)
-                    call_kw = dict(kw)
-                    vprog = call_kw.pop("vprog")
-                    send_msg = call_kw.pop("send_msg")
-                    gather = call_kw.pop("gather")
-                    call_kw.update(transport=tp, track_metrics=True,
-                                   fuse_apply=fuse, max_supersteps=30)
+            tp = (auto_tp if transport == "auto"
+                  else DENSE).replace(pipeline=pipeline)
+            call_kw = dict(kw)
+            vprog = call_kw.pop("vprog")
+            send_msg = call_kw.pop("send_msg")
+            gather = call_kw.pop("gather")
+            call_kw.update(transport=tp, track_metrics=True,
+                           fuse_apply=fuse, max_supersteps=30)
 
-                    def go():
-                        return pregel_mod.pregel(gc, vprog, send_msg, gather,
-                                                 **call_kw)
+            def go():
+                return pregel_mod.pregel(gc, vprog, send_msg, gather,
+                                         **call_kw)
 
-                    jax.block_until_ready(
-                        jax.tree.leaves(go().graph.vdata))   # compile
-                    t0 = time.perf_counter()
-                    res = go()
-                    jax.block_until_ready(jax.tree.leaves(res.graph.vdata))
-                    sec = time.perf_counter() - t0
-                    n_steps = max(res.supersteps, 1)
-                    shipped = float(sum(m["bytes_shipped"]
-                                        for m in res.metrics))
-                    bytes_per_chip = shipped / P
-                    overlap = (P - 1) / P if pipeline else 0.0
-                    # per-superstep roofline: HBM writes of the home-shaped
-                    # materializations + the unhidden slice of link time
-                    mats = mats_fused
-                    t_hbm = mats * home_bytes / HBM_BW
-                    t_link = (bytes_per_chip / n_steps) / LINK_BW
-                    step_time = t_hbm + (1.0 - overlap) * t_link
-                    rows.append({
-                        "benchmark": "superstep",
-                        "workload": wname,
-                        "transport": transport,
-                        "codec": codec,
-                        "pipeline": pipeline,
-                        "supersteps": res.supersteps,
-                        "apply_plan": res.metrics[0]["apply_plan"],
-                        "plan": res.metrics[0]["plan"],
-                        "recompiles": int(res.metrics[-1]["recompiles"]),
-                        "bytes_per_chip": round(bytes_per_chip),
-                        "overlap_efficiency": overlap,
-                        "materializations_fused": mats_fused,
-                        "materializations_unfused": mats_unfused,
-                        "t_link_s": t_link,
-                        "step_time_modeled_s": step_time,
-                        "seconds_measured": round(sec, 4),
-                    })
+            jax.block_until_ready(
+                jax.tree.leaves(go().graph.vdata))   # compile
+            t0 = time.perf_counter()
+            res = go()
+            jax.block_until_ready(jax.tree.leaves(res.graph.vdata))
+            sec = time.perf_counter() - t0
+            n_steps = max(res.supersteps, 1)
+            shipped = float(sum(m["bytes_shipped"]
+                                for m in res.metrics))
+            bytes_per_chip = shipped / P
+            overlap = (P - 1) / P if pipeline else 0.0
+            # per-superstep roofline: HBM writes of the home-shaped
+            # materializations + the unhidden slice of link time
+            t_hbm = mats_fused * home_bytes / HBM_BW
+            t_link = (bytes_per_chip / n_steps) / LINK_BW
+            step_time = t_hbm + (1.0 - overlap) * t_link
+            rows.append({
+                "benchmark": "superstep",
+                "workload": wname,
+                "partitioner": partitioner,
+                "transport": transport,
+                "codec": codec,
+                "pipeline": pipeline,
+                "supersteps": res.supersteps,
+                "apply_plan": res.metrics[0]["apply_plan"],
+                "plan": res.metrics[0]["plan"],
+                "recompiles": int(res.metrics[-1]["recompiles"]),
+                "replication_factor": round(
+                    g.host.stats.replication_factor, 4),
+                "bytes_per_chip": round(bytes_per_chip),
+                "overlap_efficiency": overlap,
+                "materializations_fused": mats_fused,
+                "materializations_unfused": mats_unfused,
+                "t_link_s": t_link,
+                "step_time_modeled_s": step_time,
+                "seconds_measured": round(sec, 4),
+            })
     return rows
 
 
@@ -227,7 +262,7 @@ GATED_FIELDS = {
     "materializations_fused": ("up", 0.0),
     "overlap_efficiency": ("down", 0.0),
 }
-ROW_KEY = ("workload", "transport", "codec", "pipeline")
+ROW_KEY = ("workload", "partitioner", "transport", "codec", "pipeline")
 
 
 def trajectory(rows: list[dict]) -> dict:

@@ -78,6 +78,14 @@ class Exchange:
         """
         raise NotImplementedError
 
+    def all_gather_rows(self, x: jnp.ndarray) -> jnp.ndarray:
+        """Broadcast-lane collective (DESIGN.md §2.1.3): every partition
+        contributes its local block [nl, B, ...] ONCE and receives all of
+        them — out[l, q, ...] == x_global[q, ...], shape [nl, P, B, ...].
+        One payload per source, delivered everywhere: the all-gather the
+        high-replication mirror exchange lowers to."""
+        raise NotImplementedError
+
     def psum(self, x: jnp.ndarray) -> jnp.ndarray:
         """Mesh-global sum of a per-executor quantity.  LocalExchange holds
         the whole array, so the local value IS global; SpmdExchange psums
@@ -184,6 +192,12 @@ class LocalExchange(Exchange):
             out = out.at[rows, src].set(x[src, rows])
         return out
 
+    def all_gather_rows(self, x: jnp.ndarray) -> jnp.ndarray:
+        # the whole [P, B, ...] array is resident: every local row l simply
+        # observes each source row q — a broadcast of the row axis.
+        assert x.shape[0] == self.p, x.shape
+        return jnp.broadcast_to(x[None], (self.p,) + x.shape)
+
 
 @dataclasses.dataclass(frozen=True)
 class SpmdExchange(Exchange):
@@ -237,6 +251,15 @@ class SpmdExchange(Exchange):
             out = jax.lax.dynamic_update_slice_in_dim(
                 out, blk, (r - d + p) % p, axis=1)
         return out
+
+    def all_gather_rows(self, x: jnp.ndarray) -> jnp.ndarray:
+        # local x: [1, B, ...] (this device's block).  One tiled all-gather
+        # over the partition axis — THE collective the broadcast lane
+        # asserts on in the HLO (vs P point-to-point payloads) — then a
+        # leading unit axis to restore the [nl, P, B, ...] local layout.
+        assert x.shape[0] == 1, x.shape
+        return jax.lax.all_gather(
+            x, self.axis_name, axis=0, tiled=True)[None]
 
     def psum(self, x: jnp.ndarray) -> jnp.ndarray:
         return jax.lax.psum(x, self.axis_name)

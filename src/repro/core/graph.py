@@ -56,6 +56,15 @@ class StructArrays:
     # carries exactly its own local tiling — what lets the fused plan run
     # under the SPMD executor.  None only for shape-spec dry-run structures.
     tiles: dict = None
+    # broadcast lane (DESIGN.md §2.1.3), present only when build_structure
+    # classified a broadcast set: bsend [P, B] home rows of each partition's
+    # broadcast vertices (-1 pad), brecv[need] [P, P, B] receive-side mirror
+    # slots (v_mir = drop), p2p_routes[need] the residual point-to-point
+    # routes with the broadcast set removed.  Pytree children like routes,
+    # so they shard with the graph under shard_map.
+    bsend: jnp.ndarray = None
+    brecv: dict = None
+    p2p_routes: dict = None
     # static metadata
     p: int = dataclasses.field(default=0)
     e_blk: int = 0
@@ -64,13 +73,16 @@ class StructArrays:
     num_vertices: int = 0
     num_edges: int = 0
     max_vid: int = 0        # fused planner's int-staging guard (partition.py)
+    b_width: int = 0        # static B of the broadcast lane (0 = no lane)
 
     def tree_flatten(self):
         children = (self.src_slot, self.dst_slot, self.src_perm,
                     self.edge_mask, self.mirror_vid, self.home_vid,
-                    self.home_mask, self.routes, self.tiles)
+                    self.home_mask, self.routes, self.tiles,
+                    self.bsend, self.brecv, self.p2p_routes)
         aux = (self.p, self.e_blk, self.v_mir, self.v_blk,
-               self.num_vertices, self.num_edges, self.max_vid)
+               self.num_vertices, self.num_edges, self.max_vid,
+               self.b_width)
         return children, aux
 
     @classmethod
@@ -92,9 +104,16 @@ class StructArrays:
             tiles=(None if s.tiles is None else
                    {side: {k: jnp.asarray(v) for k, v in t.items()}
                     for side, t in s.tiles.items()}),
+            bsend=None if s.bsend is None else jnp.asarray(s.bsend),
+            brecv=(None if s.brecv is None else
+                   {k: jnp.asarray(v) for k, v in s.brecv.items()}),
+            p2p_routes=(None if s.p2p_routes is None else
+                        {k: (jnp.asarray(v[0]), jnp.asarray(v[1]))
+                         for k, v in s.p2p_routes.items()}),
             p=s.num_partitions, e_blk=s.e_blk, v_mir=s.v_mir,
             v_blk=s.v_blk, num_vertices=s.num_vertices,
-            num_edges=s.num_edges, max_vid=s.max_vid)
+            num_edges=s.num_edges, max_vid=s.max_vid,
+            b_width=s.b_width)
 
 
 def _degree_msg(sv, ev, dv):
@@ -205,13 +224,23 @@ class Graph:
         merge_v: str = "last",            # paper's mergeV: last|sum|min|max
         num_partitions: int = 4,
         partitioner: str = "2d",
+        hybrid_threshold: int | None = None,
+        bcast_min_repl: int | None = None,
         ex: Exchange | None = None,
     ) -> "Graph":
         """The `Graph` operator (Listing 4): build a consistent property
-        graph from edge and (optional) vertex collections."""
+        graph from edge and (optional) vertex collections.
+
+        partitioner: "2d" | "1d" | "random" | "hybrid" (§4.2 — hybrid
+        places low-out-degree sources 1D and hubs 2D; `hybrid_threshold`
+        pins the degree cut, None sweeps for minimum replication).
+        bcast_min_repl: vertices replicated on >= this many partitions ship
+        through the broadcast lane (DESIGN.md §2.1.3); None disables it."""
         host = part_mod.build_structure(
             src, dst, num_partitions,
-            vertex_ids=vertex_keys, partitioner=partitioner)
+            vertex_ids=vertex_keys, partitioner=partitioner,
+            hybrid_threshold=hybrid_threshold,
+            bcast_min_repl=bcast_min_repl)
         p, v_blk, e_blk = host.num_partitions, host.v_blk, host.e_blk
 
         # ---- place edge properties in slab order
@@ -479,11 +508,20 @@ class Graph:
         with the endpoint roles flipped)."""
         ident = jnp.broadcast_to(
             jnp.arange(self.s.e_blk, dtype=jnp.int32), self.s.src_perm.shape)
+
+        def _swap_dirs(d):
+            """Swap the src/dst roles of a need-keyed table dict (routes,
+            brecv, p2p_routes) — the broadcast lane follows its routes."""
+            if d is None:
+                return None
+            return {"src": d["dst"], "dst": d["src"], "both": d["both"]}
+
         s = dataclasses.replace(
             self.s, src_slot=self.s.dst_slot, dst_slot=self.s.src_slot,
             src_perm=ident,
-            routes={"src": self.s.routes["dst"], "dst": self.s.routes["src"],
-                    "both": self.s.routes["both"]},
+            routes=_swap_dirs(self.s.routes),
+            brecv=_swap_dirs(self.s.brecv),
+            p2p_routes=_swap_dirs(self.s.p2p_routes),
             tiles=_swap_tile_sides(self.s.tiles))
         host = self.host
         if host is not None:
@@ -497,9 +535,9 @@ class Graph:
                     host, src_slot=host.dst_slot, dst_slot=host.src_slot,
                     src_perm=np.tile(np.arange(host.e_blk, dtype=np.int32),
                                      (host.num_partitions, 1)),
-                    routes={"src": host.routes["dst"],
-                            "dst": host.routes["src"],
-                            "both": host.routes["both"]},
+                    routes=_swap_dirs(host.routes),
+                    brecv=_swap_dirs(host.brecv),
+                    p2p_routes=_swap_dirs(host.p2p_routes),
                     tiles=_swap_tile_sides(host.tiles))
                 cached._reversed = host
                 host._reversed = cached

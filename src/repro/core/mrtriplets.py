@@ -118,6 +118,12 @@ class ShipMetrics:
         default_factory=lambda: jnp.float32(0))
     degraded: jnp.ndarray = dataclasses.field(
         default_factory=lambda: jnp.float32(0))
+    # per-DESTINATION occupancy fractions [P] from the routed transport
+    # (TransportInfo.route_active_frac) — the vector the §2.1.3 per-dest
+    # tier planner feeds on.  Scalar 0 when nothing shipped; merge's
+    # elementwise maximum broadcasts it against live ships' vectors.
+    route_active_frac: jnp.ndarray = dataclasses.field(
+        default_factory=lambda: jnp.float32(0))
 
     @property
     def bytes_on_wire(self) -> jnp.ndarray:
@@ -153,19 +159,22 @@ class ShipMetrics:
             route_width=max(self.route_width, other.route_width),
             overflow=self.overflow + other.overflow,
             wire_faults=self.wire_faults + other.wire_faults,
-            degraded=self.degraded + other.degraded)
+            degraded=self.degraded + other.degraded,
+            route_active_frac=jnp.maximum(self.route_active_frac,
+                                          other.route_active_frac))
 
     def tree_flatten(self):
         return ((self.effective_bytes, self.n_shipped, self.bytes_accounted,
                  self.bytes_shipped, self.ragged, self.route_active_max,
-                 self.overflow, self.wire_faults, self.degraded),
+                 self.overflow, self.wire_faults, self.degraded,
+                 self.route_active_frac),
                 (self.wire_bytes, self.route_width))
 
     @classmethod
     def tree_unflatten(cls, aux, children):
         return cls(aux[0], *children[:6], route_width=aux[1],
                    overflow=children[6], wire_faults=children[7],
-                   degraded=children[8])
+                   degraded=children[8], route_active_frac=children[9])
 
 
 def _route_ship(ex: Exchange, sendbuf: Any, flags: jnp.ndarray, *,
@@ -202,6 +211,7 @@ def _route_ship(ex: Exchange, sendbuf: Any, flags: jnp.ndarray, *,
         overflow=jnp.asarray(info.overflow, jnp.float32),
         wire_faults=jnp.asarray(info.wire_faults, jnp.float32),
         degraded=jnp.asarray(info.degraded, jnp.float32),
+        route_active_frac=jnp.asarray(info.route_active_frac, jnp.float32),
     )
     return recvbuf, rflags, metrics
 
@@ -218,13 +228,27 @@ def ship_to_mirrors(
     transport: Any = None,               # dense|ragged|auto plan (§2.1.1)
     prefer_ragged: jnp.ndarray | None = None,
 ) -> tuple[ViewCache, ShipMetrics]:
-    """Materialise the replicated vertex view for one need set."""
-    send_idx, recv_slot = s.routes[need]          # [nl, P, K] each
+    """Materialise the replicated vertex view for one need set.
+
+    When the structure classified a BROADCAST SET (partition.build_structure
+    with bcast_min_repl — DESIGN.md §2.1.3), the forward ship splits into
+    two lanes: high-replication vertices move ONCE per source through the
+    all-gather collective (`transport.allgather_ship`, scattered via the
+    `brecv` tables), and the point-to-point lane runs over the RESIDUAL
+    routes (`p2p_routes`, K shrunk by the hubs).  Both lanes write the same
+    mirror slots the unified route would have — placement changes bytes,
+    never values.  The aggregate RETURN (`ship_aggregates_home`) keeps the
+    full routes: reductions cannot all-gather."""
+    tp = transport_mod.resolve_transport(transport)
+    use_bcast = (getattr(s, "brecv", None) is not None
+                 and getattr(s, "p2p_routes", None) is not None)
+    send_idx, recv_slot = (s.p2p_routes if use_bcast else s.routes)[need]
     # nl = partitions on this device (= P globally, 1 inside shard_map);
     # the middle axis is always the GLOBAL partner count.
     nl, p, k = send_idx.shape
     valid = send_idx >= 0
     safe_idx = jnp.maximum(send_idx, 0)
+    elem_bytes = nbytes_of(jax.tree.map(lambda v: v[0, 0], values))
 
     # sender-side gather;  flags mark entries that must overwrite the view
     flags = valid if active is None else (
@@ -244,10 +268,8 @@ def ship_to_mirrors(
     # are full ships over the new routes).
     structural = (recv_slot < s.v_mir) if active is None else None
     recvbuf, recvflags, metrics = _route_ship(
-        ex, sendbuf, flags, bound=bound,
-        elem_bytes=nbytes_of(jax.tree.map(lambda v: v[0, 0], values)),
-        transport=transport_mod.resolve_transport(transport),
-        prefer_ragged=prefer_ragged, recvflags=structural)
+        ex, sendbuf, flags, bound=bound, elem_bytes=elem_bytes,
+        transport=tp, prefer_ragged=prefer_ragged, recvflags=structural)
 
     # receiver-side INCREMENTAL scatter into mirror slots (slots are unique
     # per partition): only fresh entries write — idx routes stale/padded
@@ -262,8 +284,53 @@ def ship_to_mirrors(
         init, recvbuf)
     shipped = scatter_rows(jnp.zeros((nl, s.v_mir), bool), idx,
                            jnp.ones((nl, p * k), bool))
-    filled = shipped if cache is None else (cache.filled | shipped)
 
+    if use_bcast:
+        # ---- broadcast lane: one payload per SOURCE, delivered mesh-wide.
+        bvalid = s.bsend >= 0                                  # [nl, B]
+        bidx = jnp.maximum(s.bsend, 0)
+        b = bvalid.shape[1]
+        bflags = bvalid if active is None else (
+            bvalid & jax.vmap(lambda a, i: jnp.take(a, i, mode="clip"))(
+                active, bidx))
+        btree = jax.tree.map(
+            lambda v: jax.vmap(
+                lambda vv, ii: jnp.take(vv, ii, axis=0, mode="clip"))(
+                    v, bidx), values)
+        btree = tree_where(bflags, btree,
+                           jax.tree.map(jnp.zeros_like, btree))
+        transport_mod.record_ship("fwd", "bcast", f"B={b}")
+        recvb, rfb, binfo = transport_mod.allgather_ship(
+            ex, btree, bflags, bound=bound, integrity=tp.integrity)
+        # scatter each source's block through its brecv table; v_mir drops
+        # rows this partition does not mirror (or that are stale).
+        brecv = s.brecv[need]                                  # [nl, P, B]
+        bscat = jnp.where(rfb & (brecv < s.v_mir), brecv,
+                          s.v_mir).reshape(nl, -1)
+        mirror = jax.tree.map(
+            lambda m, leaf: scatter_rows(
+                m, bscat, leaf.reshape((nl, p * b) + leaf.shape[3:])),
+            mirror, recvb)
+        bshipped = scatter_rows(jnp.zeros((nl, s.v_mir), bool), bscat,
+                                jnp.ones((nl, p * b), bool))
+        shipped = shipped | bshipped
+        staged = jax.tree.map(lambda x: x[:, None], btree)
+        bmetrics = ShipMetrics(
+            wire_bytes=transport_mod.allgather_wire_bytes(
+                staged, ex.codec, bound, p, flags_shipped=True),
+            effective_bytes=(rfb & (brecv < s.v_mir)).sum() * elem_bytes,
+            n_shipped=bflags.sum(),
+            bytes_accounted=wire_mod.bytes_on_wire(
+                staged, ex.codec, bflags[:, None], bound),
+            bytes_shipped=binfo.bytes_shipped,
+            # occupancy facts stay zero: the broadcast lane has no capacity
+            # to plan, and its B must not distort the p2p tier planner.
+            overflow=jnp.asarray(binfo.overflow, jnp.float32),
+            wire_faults=jnp.asarray(binfo.wire_faults, jnp.float32),
+            degraded=jnp.asarray(binfo.degraded, jnp.float32))
+        metrics = metrics.merge(bmetrics)
+
+    filled = shipped if cache is None else (cache.filled | shipped)
     return ViewCache(mirror=mirror, filled=filled, active=shipped), metrics
 
 
@@ -931,7 +998,8 @@ def mr_triplets(
     # the return route gets its own capacity fraction when the plan set one
     # (the aggregate wire's occupancy decouples from the forward wire's).
     tp_back = (tp if tp.capacity_frac_back is None
-               else tp.replace(capacity_frac=tp.capacity_frac_back))
+               else tp.replace(capacity_frac=tp.capacity_frac_back,
+                               capacity_fracs=tp.capacity_fracs_back))
     values, exists, m_back = ship_aggregates_home(
         s, partial, had_msg, to, reduce, ex, bound=bound, transport=tp_back,
         prefer_ragged=prefer_ragged, combine=return_routed is False)

@@ -65,10 +65,28 @@ class PartitionStats:
     num_edges: int
     num_partitions: int
     total_mirrors: int
+    # hybrid cut (§4.2): the chosen source-degree threshold — edges whose
+    # source degree is < threshold placed 1D by source.  None = non-hybrid.
+    threshold: int | None = None
+    # broadcast-set classification (build_structure(bcast_min_repl=...)):
+    bcast_min_repl: int | None = None
+    n_broadcast: int = 0
+    # per-vertex replication: replication[i] partitions hold a mirror of
+    # vertex_ids[i] (sorted unique ids).  compare=False: numpy members must
+    # stay out of the generated __eq__ (array comparison raises).
+    vertex_ids: np.ndarray | None = dataclasses.field(
+        default=None, compare=False, repr=False)
+    replication: np.ndarray | None = dataclasses.field(
+        default=None, compare=False, repr=False)
 
     @property
     def replication_factor(self) -> float:
         return self.total_mirrors / max(self.num_vertices, 1)
+
+    def replication_of(self, vids: np.ndarray) -> np.ndarray:
+        """Per-vertex mirror counts for the given global ids."""
+        idx = np.searchsorted(self.vertex_ids, np.asarray(vids))
+        return self.replication[idx]
 
 
 @dataclasses.dataclass(eq=False)
@@ -112,6 +130,23 @@ class GraphStructure:
     # placement of the i-th INPUT edge: partition + row within the slab
     edge_part: np.ndarray = None  # [E] int32  # type: ignore[assignment]
     edge_row: np.ndarray = None   # [E] int32  # type: ignore[assignment]
+    # broadcast lane (§2.1.3), present when build_structure classified a
+    # broadcast set (bcast_min_repl): vertices replicated on >= that many
+    # partitions ship ONCE per source via an all-gather-style collective
+    # instead of one payload per (source, dest) route.
+    #   bsend    [P, B] int32  home rows of partition q's broadcast vertices
+    #                          (-1 pad), id-sorted per partition
+    #   bcast_vid[P, B] int32  their global ids (-1 pad)
+    #   brecv[need] [P, P, B]  mirror slot where source q's j-th broadcast
+    #                          vertex lands at partition pe (v_mir = drop:
+    #                          not mirrored there / not in this need set)
+    #   p2p_routes[need]       residual point-to-point routes with the
+    #                          broadcast set removed (same layout as routes)
+    bsend: np.ndarray = None      # type: ignore[assignment]
+    bcast_vid: np.ndarray = None  # type: ignore[assignment]
+    brecv: dict = None            # type: ignore[assignment]
+    p2p_routes: dict = None       # type: ignore[assignment]
+    b_width: int = 0
     # largest global vertex id (static): the fused planner's integer-staging
     # guard — id-valued payloads round-trip f32 exactly iff max_vid < 2^24.
     max_vid: int = 0
@@ -182,10 +217,70 @@ def random_partition(src: np.ndarray, dst: np.ndarray, p: int) -> np.ndarray:
     return hash_mod(src * np.int64(1315423911) + dst, p, salt=0xABCD)
 
 
+def _edge_source_degree(src: np.ndarray) -> np.ndarray:
+    """Per-EDGE out-degree of the edge's source vertex."""
+    if src.size == 0:
+        return np.zeros(0, np.int64)
+    _, inv, cnt = np.unique(src, return_inverse=True, return_counts=True)
+    return cnt[inv]
+
+
+def _mirror_total(src: np.ndarray, dst: np.ndarray, epart: np.ndarray,
+                  p: int) -> int:
+    """Total mirrors (distinct (vertex, partition) pairs) of a placement."""
+    key = (np.concatenate([src, dst]).astype(np.int64) * p
+           + np.tile(np.asarray(epart, np.int64), 2))
+    return int(np.unique(key).size)
+
+
+def choose_hybrid_threshold(src: np.ndarray, dst: np.ndarray,
+                            p: int) -> int:
+    """Pick the hybrid cut's degree threshold by a log-spaced sweep that
+    minimises total mirrors.  Threshold 0 (no edge below it) IS the pure 2D
+    cut and is always a candidate, so the chosen hybrid placement never
+    replicates more than 2D; max_degree+1 (every edge 1D) anchors the other
+    end.  The sweep is O(candidates · E log E) in numpy at build time —
+    graphs are immutable, so it runs once (§4)."""
+    deg = _edge_source_degree(src)
+    max_deg = int(deg.max()) if deg.size else 1
+    cands, t = [0], 1
+    while t <= max_deg:
+        cands.append(t)
+        t *= 2
+    cands.append(max_deg + 1)
+    d1 = edge_partition_1d(src, dst, p)
+    d2 = edge_partition_2d(src, dst, p)
+    best_t, best_m = 0, None
+    for cand in cands:
+        m = _mirror_total(src, dst, np.where(deg < cand, d1, d2), p)
+        if best_m is None or m < best_m:
+            best_t, best_m = int(cand), m
+    return best_t
+
+
+def edge_partition_hybrid(src: np.ndarray, dst: np.ndarray, p: int,
+                          threshold: int | None = None) -> np.ndarray:
+    """Degree-aware hybrid vertex cut (PowerGraph/PowerLyra-style, §4.2).
+
+    Edges whose SOURCE degree is below `threshold` place 1D by source — the
+    long low-degree tail then replicates ≈1 (all of a tail vertex's out-
+    edges land together) — while high-degree sources fall through to the 2D
+    cut, keeping hub replication bounded by the O(sqrt(P)) grid.  The 1D
+    hash reuses the 2D row salt, so a tail source's partition is stable
+    under threshold changes.  None picks the threshold by sweep."""
+    if threshold is None:
+        threshold = choose_hybrid_threshold(src, dst, p)
+    deg = _edge_source_degree(src)
+    return np.where(deg < threshold,
+                    edge_partition_1d(src, dst, p),
+                    edge_partition_2d(src, dst, p))
+
+
 PARTITIONERS = {
     "2d": edge_partition_2d,
     "1d": edge_partition_1d,
     "random": random_partition,
+    "hybrid": edge_partition_hybrid,
 }
 
 
@@ -197,11 +292,22 @@ def build_structure(
     vertex_ids: np.ndarray | None = None,
     partitioner: str = "2d",
     pad_multiple: int = 8,
+    hybrid_threshold: int | None = None,
+    bcast_min_repl: int | None = None,
 ) -> GraphStructure:
     """Partition the edge list and build every structural index.
 
     `vertex_ids` may include isolated vertices (present in the vertex
     collection but with no edges); they get home rows but no mirrors.
+
+    partitioner="hybrid" takes the degree-aware cut (threshold from
+    `hybrid_threshold`, or swept to minimise replication).  `bcast_min_repl`
+    classifies vertices replicated on >= that many partitions into the
+    BROADCAST SET: their mirror routes move to all-gather tables
+    (bsend/brecv) and the point-to-point routes shrink to the remainder
+    (p2p_routes) — the transport's broadcast lane (§2.1.3).  The full
+    `routes` stay as built: the aggregate RETURN direction and the fused
+    apply tables keep using them, so values never depend on the lane split.
     """
     src = np.asarray(src, dtype=np.int64)
     dst = np.asarray(dst, dtype=np.int64)
@@ -230,7 +336,13 @@ def build_structure(
         home_mask[q, : mine.size] = True
 
     # ---- edge partitions + mirror tables ---------------------------------
-    epart = PARTITIONERS[partitioner](src, dst, p)
+    threshold = None
+    if partitioner == "hybrid":
+        threshold = (hybrid_threshold if hybrid_threshold is not None
+                     else choose_hybrid_threshold(src, dst, p))
+        epart = edge_partition_hybrid(src, dst, p, threshold=threshold)
+    else:
+        epart = PARTITIONERS[partitioner](src, dst, p)
     counts = np.bincount(epart, minlength=p)
     e_blk = _round_up(max(int(counts.max()) if n_edges else 1, 1), pad_multiple)
 
@@ -335,11 +447,67 @@ def build_structure(
         tiles["apply_" + side] = build_triplet_tiles(
             np.maximum(send, 0), np.zeros_like(send), send >= 0, v_blk)
 
+    # ---- per-vertex replication + broadcast-set classification (§2.1.3) ---
+    repl = np.zeros(max(n_vertices, 1), np.int32)
+    for q in range(p):
+        if mirrors[q].size:
+            repl[np.searchsorted(all_vids, mirrors[q])] += 1
+
+    bsend = bcast_vid = brecv = p2p_routes = None
+    b_width = 0
+    n_broadcast = 0
+    if bcast_min_repl is not None and n_vertices:
+        bvids = all_vids[repl[:n_vertices] >= int(bcast_min_repl)]
+        n_broadcast = int(bvids.size)
+        if n_broadcast:
+            bhome = hash_mod32(bvids, p)
+            b_width = _round_up(
+                max(int(np.bincount(bhome, minlength=p).max()), 1),
+                pad_multiple)
+            bsend = np.full((p, b_width), -1, np.int32)
+            bcast_vid = np.full((p, b_width), -1, np.int32)
+            bq_of = {}
+            for q in range(p):
+                bq = bvids[bhome == q]            # id-sorted (bvids sorted)
+                bq_of[q] = bq
+                bsend[q, : bq.size] = np.searchsorted(
+                    home_vid[q], bq).astype(np.int32)
+                bcast_vid[q, : bq.size] = bq.astype(np.int32)
+            brecv = {}
+            for need, flags in need_flags.items():
+                tbl = np.full((p, p, b_width), v_mir, np.int32)
+                for pe in range(p):
+                    m = mirrors[pe]
+                    for q in range(p):
+                        bq = bq_of[q]
+                        if not (m.size and bq.size):
+                            continue
+                        pos = np.searchsorted(m, bq)
+                        inb = pos < m.size
+                        pos2 = np.where(inb, pos, 0)
+                        ok = inb & (m[pos2] == bq) & flags[pe][pos2]
+                        row = tbl[pe, q, : bq.size]
+                        row[ok] = pos2[ok].astype(np.int32)
+                brecv[need] = tbl
+            # residual point-to-point routes: broadcast vertices excluded —
+            # the byte win is that they stop appearing once per (src, dest)
+            # route entry, so K shrinks with the hubs.
+            p2p_routes = {
+                need: build_route(
+                    [f & ~np.isin(mirrors[pe], bvids)
+                     for pe, f in enumerate(flags)])
+                for need, flags in need_flags.items()}
+
     stats = PartitionStats(
         num_vertices=n_vertices,
         num_edges=n_edges,
         num_partitions=p,
         total_mirrors=int(sum(m.size for m in mirrors)),
+        threshold=threshold,
+        bcast_min_repl=bcast_min_repl,
+        n_broadcast=n_broadcast,
+        vertex_ids=all_vids,
+        replication=repl[:n_vertices],
     )
     return GraphStructure(
         num_partitions=p,
@@ -361,6 +529,11 @@ def build_structure(
         stats=stats,
         edge_part=edge_part,
         edge_row=edge_row,
+        bsend=bsend,
+        bcast_vid=bcast_vid,
+        brecv=brecv,
+        p2p_routes=p2p_routes,
+        b_width=b_width,
         max_vid=int(all_vids.max()) if n_vertices else 0,
     )
 

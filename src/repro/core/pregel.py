@@ -36,6 +36,7 @@ from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 _log = logging.getLogger(__name__)
 
@@ -266,7 +267,11 @@ def pregel(
                 "static capacity %d time(s); shipped dense this step "
                 "(values exact, bytes worse)", it, int(overflow_fallbacks))
         if track_metrics:
-            host_metrics = jax.tree.map(float, metrics)
+            # scalars -> float; [P] vectors (per-destination occupancy,
+            # §2.1.3) -> plain lists so the dict stays JSON-able.
+            host_metrics = jax.tree.map(
+                lambda x: float(x) if jnp.ndim(x) == 0
+                else np.asarray(x).tolist(), metrics)
             host_metrics.update(static_info)
             host_metrics["transport"] = cur_tp.kind
             host_metrics["transport_cap"] = cur_tp.cap or 0
@@ -285,13 +290,19 @@ def pregel(
         if int(live) == 0:
             break
         if tp.kind == "auto":
+            def _occ(m):
+                # per-DESTINATION occupancy vector when the transport
+                # surfaced one (§2.1.3 tier planning); scalar worst-route
+                # fraction otherwise.
+                v = np.asarray(m.route_active_frac)
+                if v.ndim == 1 and v.size > 1:
+                    return tuple(float(x) for x in v)
+                return int(m.route_active_max) / max(m.route_width, 1)
             cur_tp = transport_mod.adapt_policy(
                 tp, was_ragged=cur_tp.kind == "ragged",
                 active_frac=float(live) / n_visible,
-                fwd_frac=(int(fwd.route_active_max)
-                          / max(fwd.route_width, 1)),
-                back_frac=(int(back.route_active_max)
-                           / max(back.route_width, 1)),
+                fwd_frac=_occ(fwd),
+                back_frac=_occ(back),
                 prev=cur_tp)
             plans_seen.add(cur_tp)
         if store is not None:

@@ -114,6 +114,17 @@ class TransportPolicy:
     # worse, nothing crashes.  Verification needs a layout-independent
     # encoding, so scaled codecs ship unchecked (wire.verifiable).
     integrity: bool = False
+    # per-DESTINATION capacity tiers (DESIGN.md §2.1.3): a length-P tuple of
+    # occupancy fractions, one per destination partition, planned by
+    # adapt_policy from the observed per-route occupancy vector.  None keeps
+    # the single route-wide capacity_frac.  The physical ragged buffer stays
+    # [nl, P, cap] (XLA's all_to_all needs uniform splits; cap derives from
+    # the LARGEST tier via capacity_frac), but validity, per-destination
+    # overflow, and byte accounting all run against the tier vector — quiet
+    # destinations stop paying for the hottest route's padding.  Tuples, not
+    # lists: the policy stays hashable static jit metadata.
+    capacity_fracs: tuple | None = None
+    capacity_fracs_back: tuple | None = None
 
     def replace(self, **kw) -> "TransportPolicy":
         return dataclasses.replace(self, **kw)
@@ -160,7 +171,35 @@ def capacity_for(policy: TransportPolicy, k: int) -> int | None:
            else int(np.ceil(k * policy.capacity_frac)))
     r = max(int(policy.cap_rounding), 1)
     cap = max(-(-int(cap) // r) * r, r)
+    if policy.capacity_fracs:
+        # tiered lane (§2.1.3): the buffer is sized by the TALLEST tier
+        # but each destination's wire only carries its OWN tier, so
+        # break-even is judged on the mean tier — the same quantity
+        # adapt_policy plans with — not on the max that sizes the buffer.
+        # (The max tier may round past K; the buffer never needs to.)
+        eff = float(np.mean([min(float(f), 1.0)
+                             for f in policy.capacity_fracs]))
+        return None if eff >= policy.ragged_max_frac else min(cap, k)
     return None if cap >= k * policy.ragged_max_frac else cap
+
+
+def capacity_vec_for(policy: TransportPolicy, k: int, p: int,
+                     cap: int | None) -> np.ndarray | None:
+    """Static per-DESTINATION capacities [P] for the tiered ragged lane
+    (DESIGN.md §2.1.3), or None when the plan is untiered.  `cap` is
+    capacity_for's route-wide answer (derived from the largest tier): each
+    destination's fraction rounds up to its own cap_rounding multiple and
+    clips to `cap` — the physical buffer stays [nl, P, cap] because the
+    all_to_all needs uniform splits, but validity, overflow, and bytes run
+    against this vector."""
+    if cap is None or policy.capacity_fracs is None:
+        return None
+    if len(policy.capacity_fracs) != p:
+        return None
+    r = max(int(policy.cap_rounding), 1)
+    caps = [min(max(-(-int(np.ceil(k * float(f))) // r) * r, r), cap)
+            for f in policy.capacity_fracs]
+    return np.asarray(caps, dtype=np.int32)
 
 
 def round_capacity(policy: TransportPolicy, count: int) -> int:
@@ -206,7 +245,14 @@ def adapt_policy(policy: TransportPolicy, *, was_ragged: bool,
     clears the lower tier even after `tier_headroom` — an occupancy
     oscillating around a tier boundary (frontier algorithms re-expanding
     into a region) then pins to the upper tier instead of flip-flopping
-    between two compiled programs every superstep."""
+    between two compiled programs every superstep.
+
+    fwd_frac / back_frac accept either a scalar (route-wide max occupancy,
+    the legacy API) or a length-P per-DESTINATION occupancy vector
+    (TransportInfo.route_active_frac): the vector form plans
+    `capacity_fracs` — one 1/8 tier per destination, hysteresis pinned per
+    route — so skewed frontiers stop padding quiet destinations
+    (DESIGN.md §2.1.3)."""
     if policy.kind != "auto":
         return policy
     thresh = policy.exit_frac if was_ragged else policy.enter_frac
@@ -220,16 +266,61 @@ def adapt_policy(policy: TransportPolicy, *, was_ragged: bool,
             return t
         return min(frac_tier(min(frac * policy.tier_headroom, 1.0)), prev_t)
 
-    fwd_t = tier(fwd_frac, prev.capacity_frac if prev_ragged else None)
-    back_t = None if back_frac is None else tier(
-        back_frac, prev.capacity_frac_back if prev_ragged else None)
+    def as_vec(f):
+        """A per-destination occupancy VECTOR, or None for the scalar API."""
+        if f is None or np.ndim(f) == 0:
+            return None
+        return [float(x) for x in np.asarray(f, dtype=np.float64).ravel()]
+
+    def tier_vec(fracs, prev_vec, prev_scalar):
+        """Tier each destination independently, hysteresis pinned PER ROUTE:
+        a destination only steps down when ITS occupancy clears the lower
+        tier with headroom — one hot route no longer pins the quiet ones to
+        its tier, and a quiet route's shrink cannot thrash the hot one."""
+        out = []
+        for i, f in enumerate(fracs):
+            pt = None
+            if prev_ragged:
+                pv = prev_vec if (prev_vec is not None
+                                  and len(prev_vec) == len(fracs)) else None
+                pt = pv[i] if pv is not None else prev_scalar
+            out.append(tier(f, pt))
+        return tuple(out)
+
+    fv, bv = as_vec(fwd_frac), as_vec(back_frac)
+    if fv is None:
+        fwd_vec = None
+        fwd_t = fwd_eff = tier(float(fwd_frac),
+                               prev.capacity_frac if prev_ragged else None)
+    else:
+        fwd_vec = tier_vec(fv, prev.capacity_fracs if prev_ragged else None,
+                           prev.capacity_frac if prev_ragged else None)
+        # capacity_frac carries the LARGEST tier (it sizes the physical
+        # uniform buffer); the break-even decision sees the MEAN — total
+        # tiered bytes are what competes with the dense wire.
+        fwd_t = max(fwd_vec)
+        fwd_eff = sum(fwd_vec) / len(fwd_vec)
+    if back_frac is None:
+        back_vec = back_t = back_eff = None
+    elif bv is None:
+        back_vec = None
+        back_t = back_eff = tier(
+            float(back_frac), prev.capacity_frac_back if prev_ragged else None)
+    else:
+        back_vec = tier_vec(
+            bv, prev.capacity_fracs_back if prev_ragged else None,
+            prev.capacity_frac_back if prev_ragged else None)
+        back_t = max(back_vec)
+        back_eff = sum(back_vec) / len(back_vec)
     # neither ship clears the break-even clamp -> the "ragged" program
     # would execute dense anyway; plan dense and save the compile.
-    if fwd_t >= policy.ragged_max_frac and (
-            back_t is None or back_t >= policy.ragged_max_frac):
+    if fwd_eff >= policy.ragged_max_frac and (
+            back_eff is None or back_eff >= policy.ragged_max_frac):
         return policy.replace(kind="dense")
     return policy.replace(kind="ragged", cap=None, capacity_frac=fwd_t,
-                          capacity_frac_back=back_t)
+                          capacity_frac_back=back_t,
+                          capacity_fracs=fwd_vec,
+                          capacity_fracs_back=back_vec)
 
 
 # ---------------------------------------------------------------------------
@@ -261,6 +352,9 @@ class TransportInfo(NamedTuple):
     route_active_max: jnp.ndarray   # int32 — LOCAL max per-destination count
     wire_faults: jnp.ndarray = 0.0  # f32 — failed integrity checks (§6)
     degraded: jnp.ndarray = 0.0     # f32 0/1 — retry also failed; shipped raw
+    # [P] f32 — per-DESTINATION occupancy fractions (max over local rows of
+    # counts[:, q] / K), the observable the per-dest tier planner feeds on.
+    route_active_frac: jnp.ndarray = 0.0
 
 
 def index_dtype(k: int) -> np.dtype:
@@ -306,18 +400,31 @@ def _dense_wire_bytes(tree, codec, bound, flags_shipped: bool) -> int:
     return total
 
 
-def ragged_wire_bytes(tree, codec, bound, cap: int) -> int:
+def ragged_wire_bytes(tree, codec, bound, cap: int,
+                      capvec: np.ndarray | None = None) -> int:
     """Static bytes the ragged transport's collectives move for one routed
-    ship: compacted payload (+ block scales) + slot-index wire + counts."""
+    ship: compacted payload (+ block scales) + slot-index wire + counts.
+    With a per-destination `capvec` each destination pays its own tier —
+    the modeled unequal-split collective the tier planner optimizes for
+    (the uniform [nl, P, cap] buffer is the XLA-side envelope)."""
     leaves = jax.tree.leaves(tree)
     if not leaves:
         return 0
     nl, p, k = leaves[0].shape[:3]
-    spec = jax.tree.map(
-        lambda x: jax.ShapeDtypeStruct((nl, p, cap) + x.shape[3:], x.dtype),
-        tree)
-    payload = wire_mod.static_wire_bytes(spec, codec, bound)
-    return payload + nl * p * cap * index_dtype(k).itemsize + nl * p * 4
+    isz = index_dtype(k).itemsize
+    if capvec is None:
+        spec = jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct((nl, p, cap) + x.shape[3:],
+                                           x.dtype), tree)
+        payload = wire_mod.static_wire_bytes(spec, codec, bound)
+        return payload + nl * p * cap * isz + nl * p * 4
+    total = nl * p * 4
+    for c in (int(x) for x in capvec):
+        spec = jax.tree.map(
+            lambda x, _c=c: jax.ShapeDtypeStruct((nl, 1, _c) + x.shape[3:],
+                                                 x.dtype), tree)
+        total += wire_mod.static_wire_bytes(spec, codec, bound) + nl * c * isz
+    return total
 
 
 def _ring_tree_ship(ex, tree, *, active=None, bound: int | None = None):
@@ -354,10 +461,15 @@ def _ship_once(ex, tree, flags, *, bound: int | None = None,
     if not leaves:
         zero = jnp.float32(0)
         rf = recvflags if recvflags is not None else xpose(flags)
-        return tree, rf, TransportInfo(zero, zero, zero, jnp.int32(0))
+        return tree, rf, TransportInfo(
+            zero, zero, zero, jnp.int32(0),
+            route_active_frac=jnp.zeros((flags.shape[1],), jnp.float32))
     nl, p, k = flags.shape
     counts = flags.sum(-1, dtype=jnp.int32)
     maxc = counts.max()
+    # per-destination occupancy [P] — computed BEFORE any lax.cond so the
+    # aval is branch-independent; this is the vector adapt_policy tiers on.
+    frac_vec = counts.max(axis=0).astype(jnp.float32) / max(k, 1)
 
     def ship_dense(tf):
         t, f = tf
@@ -372,14 +484,25 @@ def _ship_once(ex, tree, flags, *, bound: int | None = None,
         recv, rf = ship_dense((tree, flags))
         zero = jnp.float32(0)
         return recv, rf, TransportInfo(jnp.float32(dense_bytes), zero, zero,
-                                       maxc)
+                                       maxc, route_active_frac=frac_vec)
 
     idx_dt = jnp.dtype(index_dtype(k))
-    rag_bytes = ragged_wire_bytes(tree, codec, bound, cap)
+    capvec = capacity_vec_for(policy, k, p, cap)
+    rag_bytes = ragged_wire_bytes(tree, codec, bound, cap, capvec=capvec)
+    cv = None if capvec is None else jnp.asarray(capvec, jnp.int32)
 
     def ship_ragged(tf):
         t, f = tf
         comp, sel, valid, cnt = _compact(t, f, cap)
+        if cv is not None:
+            # tiered lane: entries past a destination's tier are NOT on the
+            # wire — validity clamps to the per-dest capacity, so the bytes
+            # accounted are the bytes delivered.  With fallback the per-dest
+            # overflow predicate already routed over-tier ships dense; under
+            # fallback=False the caller certified the tiers.
+            cnt = jnp.minimum(cnt, cv[None, :])
+            valid = jnp.arange(cap, dtype=jnp.int32) < cnt[..., None]
+            comp = tree_where(valid, comp, jax.tree.map(jnp.zeros_like, comp))
         recv_comp = tship(comp, active=valid, bound=bound)
         sel_t = xpose(jnp.where(valid, sel, 0).astype(idx_dt))
         cnt_t = xpose(cnt[..., None])[..., 0]
@@ -389,14 +512,17 @@ def _ship_once(ex, tree, flags, *, bound: int | None = None,
         rf = _scatter_rows(valid_t, idx, k)
         return recv, rf
 
-    overflow = maxc > cap
+    # overflow is per-DESTINATION when tiered: a count exceeding ITS tier
+    # falls back, even when it fits the route-wide cap.
+    overflow = (maxc > cap if cv is None
+                else (counts > cv[None, :]).any())
     if not policy.fallback:
         # capacity certified by the caller (or shape-only analysis): pure
         # ragged program, no dense branch, no overflow collective.
         recv, rf = ship_ragged((tree, flags))
         return recv, rf, TransportInfo(
             jnp.float32(rag_bytes), jnp.float32(1),
-            overflow.astype(jnp.float32), maxc)
+            overflow.astype(jnp.float32), maxc, route_active_frac=frac_vec)
 
     # overflow must flip the branch on EVERY device or the all_to_all
     # shapes disagree across the mesh — hence the psum'd predicate.
@@ -410,7 +536,8 @@ def _ship_once(ex, tree, flags, *, bound: int | None = None,
     bytes_shipped = jnp.where(use_ragged, jnp.float32(rag_bytes),
                               jnp.float32(dense_bytes))
     return recv, rf, TransportInfo(bytes_shipped, ragf,
-                                   over_any.astype(jnp.float32), maxc)
+                                   over_any.astype(jnp.float32), maxc,
+                                   route_active_frac=frac_vec)
 
 
 def ship_transport(ex, tree, flags, *, bound: int | None = None,
@@ -504,5 +631,192 @@ def ship_transport(ex, tree, flags, *, bound: int | None = None,
         overflow=jnp.maximum(info0.overflow, info1.overflow),
         route_active_max=info0.route_active_max,
         wire_faults=retried + degraded,
-        degraded=degraded)
+        degraded=degraded,
+        route_active_frac=info0.route_active_frac)
+    return recv2, rf2, info
+
+
+# ---------------------------------------------------------------------------
+# Broadcast lane (DESIGN.md §2.1.3): high-replication mirrors ship once
+# ---------------------------------------------------------------------------
+def allgather_wire_bytes(staged, codec, bound, p: int,
+                         flags_shipped: bool) -> int:
+    """Static bytes the broadcast lane's all-gather INJECTS.  `staged` is
+    the [nl, 1, B, ...] send tree: each home partition contributes its
+    block ONCE ("one payload per source", §2.1.3) and the fabric-side
+    replication of the collective fans it out — so the origination count
+    matches the routed lane's convention (bytes each chip puts on the
+    wire), where a point-to-point ship of the same vertex to r mirrors
+    injects r copies.  A ring lowering would traverse (P-1) x these bytes
+    in links; DESIGN.md §2.1.3 records that as modeling slack."""
+    total = wire_mod.static_wire_bytes(staged, codec, bound)
+    if flags_shipped:
+        leaves = jax.tree.leaves(staged)
+        if leaves:
+            nl, _one, b = leaves[0].shape[:3]
+            total += nl * b
+    return int(total)
+
+
+def allgather_ship(ex, tree, flags, *, bound: int | None = None,
+                   recvflags: jnp.ndarray | None = None,
+                   integrity: bool = False):
+    """Move one broadcast-set block [nl, B, ...] through the all-gather
+    collective: every home partition contributes its block ONCE and every
+    partition receives all of them — one payload per SOURCE, not one per
+    (source, dest) route.  Returns (recv_tree [nl, P, B, ...], recv_flags
+    [nl, P, B], TransportInfo).
+
+    The contract is the routed ship transposed onto sources:
+    recv_tree[l, q, j] == tree_global[q, j] wherever recv_flags[l, q, j],
+    and recv_flags[l, q] is exactly source q's send pattern — gathered on
+    the wire, or the structural `recvflags` for full ships (which must
+    equal that pattern: rows that exist in source q's block).
+
+    Composes with the wire codec by staging the block as [nl, 1, B, ...],
+    so quantization blocks tile the B axis exactly like a routed buffer,
+    and with the §6 integrity word: one word per SOURCE block, destination
+    salt disabled (a broadcast has every destination; dest=-1 zeroes it),
+    sender salt checked at receive against the block's claimed column, with
+    the same mesh-uniform retry -> degrade-to-raw ladder as routed ships.
+    """
+    codec = ex.codec
+    p = ex.p
+    leaves = jax.tree.leaves(tree)
+    nl, b = flags.shape
+    zero = jnp.float32(0)
+    zfrac = jnp.zeros((p,), jnp.float32)
+    if not leaves or b == 0:
+        rf = (recvflags if recvflags is not None
+              else ex.all_gather_rows(flags))
+        return (jax.tree.map(ex.all_gather_rows, tree), rf,
+                TransportInfo(zero, zero, zero, jnp.int32(0),
+                              route_active_frac=zfrac))
+
+    def _pack(x):
+        """[nl, ...] leaf -> [nl, nbytes] uint8 view (exact bit pattern)."""
+        u8 = (x.astype(jnp.uint8) if x.dtype == jnp.bool_
+              else jax.lax.bitcast_convert_type(x, jnp.uint8))
+        return u8.reshape(nl, -1)
+
+    def ship():
+        # ONE all-gather for the whole broadcast block: every encoded
+        # payload/scale leaf and the send flags bitcast to bytes and packed
+        # into a single buffer — "lowers to one all-gather" is the §2.1.3
+        # HLO contract `launch/dryrun.py --bcast-check` asserts.
+        leaves_l, treedef = jax.tree.flatten(tree)
+        bufs, metas = [], []
+        for x in leaves_l:
+            enc = wire_mod.encode_leaf(x[:, None], codec, bound=bound,
+                                       active=flags[:, None])
+            if enc is None:
+                bufs.append(_pack(x))
+                metas.append((None, x, x, None))
+            else:
+                pl = enc.payload[:, 0]
+                sc = None if enc.scale is None else enc.scale[:, 0]
+                bufs.append(_pack(pl))
+                if sc is not None:
+                    bufs.append(_pack(sc))
+                metas.append((enc.kind, x, pl, sc))
+        ship_flags = recvflags is None
+        if ship_flags:
+            bufs.append(flags.astype(jnp.uint8))
+        g = ex.all_gather_rows(jnp.concatenate(bufs, axis=-1))  # [nl, P, N]
+
+        off = 0
+
+        def take(like):
+            nonlocal off
+            nb = (int(np.prod(like.shape[1:], dtype=np.int64))
+                  * like.dtype.itemsize)
+            seg = jax.lax.slice_in_dim(g, off, off + nb, axis=2)
+            off += nb
+            if like.dtype == jnp.bool_:
+                return seg.reshape((nl, p) + like.shape[1:]).astype(
+                    jnp.bool_)
+            if like.dtype.itemsize > 1:
+                seg = seg.reshape((nl, p) + like.shape[1:]
+                                  + (like.dtype.itemsize,))
+            else:
+                seg = seg.reshape((nl, p) + like.shape[1:])
+            return jax.lax.bitcast_convert_type(seg, like.dtype)
+
+        out_leaves = []
+        for kind, x, pl, sc in metas:
+            if kind is None:
+                out_leaves.append(take(x))
+            else:
+                payload = take(pl)
+                scale = None if sc is None else take(sc)
+                like_g = jax.ShapeDtypeStruct((nl, p) + x.shape[1:],
+                                              x.dtype)
+                out_leaves.append(
+                    wire_mod.decode_leaf(kind, payload, scale, like_g,
+                                         codec))
+        recv = jax.tree.unflatten(treedef, out_leaves)
+        if ship_flags:
+            rf = jax.lax.slice_in_dim(g, off, off + b, axis=2).reshape(
+                nl, p, b).astype(jnp.bool_)
+        else:
+            rf = recvflags
+        return recv, rf
+
+    staged = jax.tree.map(lambda x: x[:, None], tree)
+    ag_bytes = allgather_wire_bytes(staged, codec, bound,
+                                    p, flags_shipped=recvflags is None)
+    maxc = flags.sum(-1, dtype=jnp.int32).max()
+    note = getattr(ex, "note_attempt", lambda _a: None)
+    if not integrity or not wire_mod.verifiable(codec):
+        if integrity:
+            note(0)
+        recv, rf = ship()
+        return recv, rf, TransportInfo(jnp.float32(ag_bytes), zero, zero,
+                                       maxc, route_active_frac=zfrac)
+
+    flags3 = flags[:, None]                              # [nl, 1, B]
+    rt = jax.tree.map(
+        lambda x: wire_mod.roundtrip_leaf(x[:, None], codec, bound=bound,
+                                          active=flags3), tree)
+    rows = ex.home_rows(nl)[:, None].astype(jnp.int32)   # [nl, 1]
+    expect = wire_mod.integrity_word(
+        rt, flags3, dest=jnp.full((nl, 1), -1, jnp.int32), src=rows)
+    cols = jnp.broadcast_to(jnp.arange(p, dtype=jnp.int32), (nl, p))
+    word_bytes = jnp.float32(nl * 4)   # one word per SOURCE block, injected once
+
+    def attempt(a: int):
+        note(a)
+        recv, rf = ship()
+        want = ex.all_gather_rows(expect)[..., 0]        # [nl, P]
+        got = wire_mod.integrity_word(
+            recv, rf, dest=jnp.full((nl, p), -1, jnp.int32), src=cols)
+        ok = ex.psum((got != want).sum(dtype=jnp.int32)) == 0
+        return recv, rf, ok
+
+    recv0, rf0, ok0 = attempt(0)
+    recv1, rf1, ok1 = jax.lax.cond(
+        ok0, lambda _: (recv0, rf0, jnp.bool_(True)),
+        lambda _: attempt(1), None)
+
+    def _degrade(_):
+        note(2)
+        recv = jax.tree.map(
+            lambda x, l: ex.all_gather_rows(x).astype(l.dtype), tree, recv1)
+        rf = (recvflags if recvflags is not None
+              else ex.all_gather_rows(flags))
+        return recv, rf
+
+    recv2, rf2 = jax.lax.cond(ok1, lambda _: (recv1, rf1), _degrade, None)
+    raw_bytes = float(sum(x.size * x.dtype.itemsize for x in leaves))
+    if recvflags is None:
+        raw_bytes += float(nl * b)
+    retried = (~ok0).astype(jnp.float32)
+    degraded = (~ok1).astype(jnp.float32)
+    info = TransportInfo(
+        bytes_shipped=((1.0 + retried) * jnp.float32(ag_bytes)
+                       + degraded * jnp.float32(raw_bytes)
+                       + (1.0 + retried) * word_bytes),
+        ragged=zero, overflow=zero, route_active_max=maxc,
+        wire_faults=retried + degraded, degraded=degraded,
+        route_active_frac=zfrac)
     return recv2, rf2, info

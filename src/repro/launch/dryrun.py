@@ -439,6 +439,129 @@ def lower_graph_cell(mesh, *, n_vertices=41_652_230, n_edges=1_468_365_182,
     return (rec, txt) if return_hlo else rec
 
 
+def _collective_op_count(hlo_text: str, kind: str) -> int:
+    """Occurrences of one collective op kind in the compiled HLO (sync and
+    async-start forms; -done halves are not double counted)."""
+    return sum(line.count(f" {kind}(") + line.count(f" {kind}-start(")
+               for line in hlo_text.splitlines())
+
+
+def lower_graph_cell_partitioned(*, p: int = 4, partitioner: str = "2d",
+                                 bcast_min_repl: int | None = None,
+                                 scale: int = 9, edge_factor: int = 10,
+                                 seed: int = 2, supersteps: int = 1,
+                                 return_hlo: bool = False):
+    """Lower a PageRank superstep from a REAL scaled-down R-MAT graph under
+    the requested partitioner (DESIGN.md §4.2/§2.1.3).
+
+    The SDS stand-in path (`lower_graph_cell`) models the 2D cut's shapes
+    analytically; the hybrid cut's routing tables — the degree threshold,
+    the broadcast-set split — depend on the actual degree distribution, so
+    the partitioner sweep materializes a small graph and lowers the exact
+    program shard_map deploys.  `bcast_min_repl` enables the §2.1.3
+    broadcast lane; the record reports the per-kind collective bytes so
+    callers can assert the lane lowers to a single all-gather."""
+    import dataclasses
+    from ..core import Graph as GraphCls
+    from ..core import algorithms as alg_mod
+    from ..core.exchange import SpmdExchange
+    from ..core.pregel import _superstep
+    from ..data import rmat
+    from ..utils.spmd import make_mesh, shard_map as _shard_map
+
+    mesh = make_mesh((p,), ("parts",))
+    gd = rmat(scale, edge_factor, seed=seed)
+    kw = {} if partitioner == "2d" else {"partitioner": partitioner}
+    if bcast_min_repl:
+        kw["bcast_min_repl"] = bcast_min_repl
+    g = GraphCls.from_edges(gd.src, gd.dst, num_partitions=p, **kw)
+    g = alg_mod.attach_out_degree(g, kernel_mode="ref")
+    g = g.mapV(lambda vid, v: {**v, "pr": jnp.float32(1.0)})
+    stats = g.host.stats
+    g = dataclasses.replace(g, ex=SpmdExchange(p=p, axis_name="parts"),
+                            host=None)
+
+    def send(sv, ev, dv):
+        return {"m": sv["pr"] / sv["deg"] * ev["w"]}
+
+    def vprog(vid, v, msg):
+        return {**v, "pr": 0.15 + 0.85 * msg["m"]}
+
+    def step(gg):
+        out = gg
+        for _ in range(supersteps):
+            out, live, _ = _superstep(
+                out, vprog=vprog, send_msg=send, gather="sum",
+                default_msg={"m": jnp.float32(0.0)}, skip_stale=None,
+                changed_fn=None, kernel_mode="ref", use_cache=True)
+        return out.replace(view=None), live
+
+    fn = jax.jit(_shard_map(step, mesh, (P("parts"),), (P("parts"), P())))
+    t0 = time.time()
+    compiled = fn.lower(g).compile()
+    compile_s = time.time() - t0
+    txt = compiled.as_text()
+    coll = hlo_utils.collective_bytes(txt)
+    tag = f"rmat{scale}x{edge_factor}_{partitioner}"
+    if bcast_min_repl:
+        tag += f"_bcast{bcast_min_repl}"
+    rec = {
+        "arch": "graphx-pagerank", "shape": tag, "status": "ok",
+        "mesh": f"{p}", "mesh_axes": ["parts"], "n_chips": p,
+        "strategy": f"vertex-cut-{partitioner}", "kind": "graph",
+        "compile_seconds": round(compile_s, 1),
+        "collective_bytes_per_chip": int(coll.get("total_bytes", 0)),
+        "collectives": {k: v for k, v in coll.items() if k != "total_bytes"},
+        "all_gather_ops": _collective_op_count(txt, "all-gather"),
+        "all_to_all_ops": _collective_op_count(txt, "all-to-all"),
+        "graph": {"vertices": g.s.num_vertices, "edges": g.s.num_edges,
+                  "partitioner": partitioner,
+                  "bcast_min_repl": bcast_min_repl,
+                  "replication_factor": round(stats.replication_factor, 4),
+                  "hybrid_threshold": stats.threshold,
+                  "n_broadcast": stats.n_broadcast,
+                  "supersteps": supersteps},
+    }
+    return (rec, txt) if return_hlo else rec
+
+
+def check_bcast_single_allgather(*, p: int = 4,
+                                 bcast_min_repl: int = 3) -> dict:
+    """`--bcast-check` (DESIGN.md §2.1.3): the broadcast lane must lower to
+    EXACTLY ONE all-gather per superstep — one collective shipping each
+    broadcast-set payload once per source — while the p2p all_to_all
+    shrinks because those routes left the point-to-point tables.  Asserted
+    on the compiled HLO of the same real-graph cell with and without the
+    lane (a 2D cell has no broadcast set, hence zero all-gathers)."""
+    cells = {}
+    for name, kw in (("2d-dense", {"partitioner": "2d"}),
+                     ("hybrid", {"partitioner": "hybrid"}),
+                     ("hybrid+bcast", {"partitioner": "hybrid",
+                                       "bcast_min_repl": bcast_min_repl})):
+        rec = lower_graph_cell_partitioned(p=p, supersteps=1, **kw)
+        cells[name] = {
+            "all_gather_ops": rec["all_gather_ops"],
+            "all_gather_bytes": int(rec["collectives"].get("all-gather", 0)),
+            "all_to_all_bytes": int(rec["collectives"].get("all-to-all", 0)),
+            "n_broadcast": rec["graph"]["n_broadcast"],
+        }
+        print(f"  {name:13s} ag_ops={cells[name]['all_gather_ops']} "
+              f"ag_bytes={cells[name]['all_gather_bytes']} "
+              f"a2a_bytes={cells[name]['all_to_all_bytes']} "
+              f"n_bcast={cells[name]['n_broadcast']}", flush=True)
+    for name in ("2d-dense", "hybrid"):
+        assert cells[name]["all_gather_ops"] == 0, (name, cells)
+    bc = cells["hybrid+bcast"]
+    assert bc["n_broadcast"] > 0, cells
+    assert bc["all_gather_ops"] == 1, cells
+    assert bc["all_gather_bytes"] > 0, cells
+    # the broadcast vertices' routes LEFT the p2p tables, so the point-to-
+    # point collective must carry strictly fewer bytes than the dense 2D cell
+    assert bc["all_to_all_bytes"] < cells["2d-dense"]["all_to_all_bytes"], \
+        cells
+    return cells
+
+
 def check_ragged_tracks_active(mesh, *, mirror_factor: float = 2.0,
                                fracs=(0.25, 0.5)) -> dict:
     """Dry-run HLO check (DESIGN.md §2.1.1): the ragged PageRank cell's
@@ -596,6 +719,16 @@ def main() -> None:
     ap.add_argument("--integrity", action="store_true",
                     help="graph cell: enable the §6 wire-integrity word + "
                          "retry/degrade ladder in the lowered program")
+    ap.add_argument("--partitioner", default=None,
+                    choices=["2d", "1d", "random", "hybrid"],
+                    help="graph cell: vertex-cut partitioner (§4.2); "
+                         "non-2d lowers a real scaled-down R-MAT cell")
+    ap.add_argument("--bcast-min-repl", type=int, default=None,
+                    help="graph cell: broadcast-lane replication threshold "
+                         "(§2.1.3); implies the real-graph lowering")
+    ap.add_argument("--bcast-check", action="store_true",
+                    help="graph cell: assert in the compiled HLO that the "
+                         "broadcast lane lowers to exactly one all-gather")
     ap.add_argument("--ragged-check", action="store_true",
                     help="graph cell: lower dense + two ragged capacities "
                          "and assert collective bytes track the fraction")
@@ -642,6 +775,22 @@ def main() -> None:
     entries = _load_report()
 
     if args.graph:
+        if args.bcast_check:
+            cells = check_bcast_single_allgather(
+                bcast_min_repl=args.bcast_min_repl or 3)
+            print(json.dumps({"bcast_check": "ok", "cells": cells},
+                             indent=1))
+            return
+        if args.partitioner not in (None, "2d") or args.bcast_min_repl:
+            rec = lower_graph_cell_partitioned(
+                partitioner=args.partitioner or "2d",
+                bcast_min_repl=args.bcast_min_repl)
+            if args.variant:
+                rec["variant"] = args.variant
+            print(json.dumps(rec, indent=1))
+            _upsert(entries, rec)
+            _save_report(entries)
+            return
         if args.profile_ships:
             gmesh = make_graph_mesh(multi_pod=args.multi_pod)
             cells = profile_ships(gmesh, mirror_factor=args.mirror_factor)

@@ -132,11 +132,13 @@ def summarize_superstep(path: str) -> None:
     print(f"=== superstep fusion/overlap trajectory ({path}) ===")
     print(f" model: HBM {doc['model']['HBM_BW']:.0e} B/s, "
           f"link {doc['model']['LINK_BW']:.0e} B/s, P={doc['model']['P']}")
-    hdr = (f"{'workload':<16} {'transport':<9} {'codec':<5} {'pipe':<5} "
+    hdr = (f"{'workload':<16} {'partitioner':<13} {'transport':<9} "
+           f"{'codec':<5} {'pipe':<5} "
            f"{'B/chip':>9} {'overlap':>7} {'t_step':>10} {'mats f/u':>9}")
     print(hdr)
     for r in doc["rows"]:
-        print(f"{r['workload']:<16} {r['transport']:<9} {r['codec']:<5} "
+        print(f"{r['workload']:<16} {r.get('partitioner', '2d'):<13} "
+              f"{r['transport']:<9} {r['codec']:<5} "
               f"{str(r['pipeline']):<5} {r['bytes_per_chip']:>9} "
               f"{r['overlap_efficiency']:>7.2f} "
               f"{r['step_time_modeled_s']:>10.3e} "
@@ -181,6 +183,13 @@ def main():
                          "the compacted collective (DESIGN.md §2.1.1)")
     ap.add_argument("--capacity-frac", type=float, default=0.25,
                     help="graph cell: ragged capacity as a route fraction")
+    ap.add_argument("--partitioner", default=None,
+                    choices=["2d", "1d", "random", "hybrid"],
+                    help="graph cell: vertex-cut partitioner (DESIGN.md "
+                         "§4.2); non-2d profiles a real scaled-down cell")
+    ap.add_argument("--bcast-min-repl", type=int, default=None,
+                    help="graph cell: §2.1.3 broadcast-lane replication "
+                         "threshold (implies the real-graph lowering)")
     ap.add_argument("--mirror-factor", type=float, default=2.0)
     ap.add_argument("--dp-over-model", action="store_true")
     ap.add_argument("--batch-shard", action="store_true",
@@ -202,6 +211,12 @@ def main():
     import jax.numpy as jnp
 
     if args.graph or args.arch.startswith("graphx"):
+        if args.partitioner not in (None, "2d") or args.bcast_min_repl:
+            rec, txt = dryrun.lower_graph_cell_partitioned(
+                partitioner=args.partitioner or "2d",
+                bcast_min_repl=args.bcast_min_repl, return_hlo=True)
+            summarize(rec, txt, args.top)
+            return
         mesh = make_graph_mesh(multi_pod=False)
         rec, txt = dryrun.lower_graph_cell(
             mesh, return_hlo=True,

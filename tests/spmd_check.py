@@ -660,6 +660,94 @@ def main():
                         cc2[m2].tolist()))
         assert got2 == cc_want
 
+    # ---- (n) hybrid cut + broadcast lane (DESIGN.md §2.1.3/§4.2) -----------
+    # On the skewed power-law graph at P=4 the hybrid sweep picks threshold
+    # 0 (the 2D cut already wins), so placement — and therefore every
+    # accumulation order — is IDENTICAL to dense-2D: PageRank and CC must be
+    # bit-exact while the broadcast + per-destination-tier transport ships
+    # strictly fewer psummed bytes than the dense 2D routed baseline.
+    from repro.core import transport as tm
+    ngd = rmat(9, 10, seed=2)
+    n2 = Graph.from_edges(ngd.src, ngd.dst, num_partitions=P)
+    nh = Graph.from_edges(ngd.src, ngd.dst, num_partitions=P,
+                          partitioner="hybrid", bcast_min_repl=3)
+    assert nh.host.stats.threshold == 0 and nh.host.stats.n_broadcast > 0
+    TIERED = tm.TransportPolicy(
+        kind="ragged", capacity_frac=1.0, capacity_frac_back=1.0,
+        capacity_fracs=(0.5,) * P, capacity_fracs_back=(0.5,) * P)
+
+    def nprep(gg):
+        gg = alg.attach_out_degree(gg, kernel_mode="ref")
+        return gg.mapV(lambda vid, v: {**v, "pr": jnp.float32(1.0)})
+
+    def npr_loop(gg, tp):
+        out, tot = gg, jnp.float32(0.0)
+        for _ in range(5):
+            out, _, m = _superstep(
+                out, None, vprog=vprog, send_msg=send, gather="sum",
+                default_msg={"m": jnp.float32(0.0)}, skip_stale=None,
+                changed_fn=None, kernel_mode="auto", use_cache=True,
+                transport=tp)
+            tot = tot + m["fwd"].bytes_shipped + m["back"].bytes_shipped
+        return out.vdata["pr"], jax.lax.psum(tot, "parts")
+
+    nbytes = {}
+    nvals = {}
+    for key, gg, tp in (("2d", n2, tm.DENSE), ("hyb", nh, TIERED)):
+        gs = dataclasses.replace(nprep(gg),
+                                 ex=SpmdExchange(p=P, axis_name="parts"),
+                                 host=None)
+        fnn = jax.jit(shard_map(lambda g_, _tp=tp: npr_loop(g_, _tp),
+                                mesh, (PS("parts"),), (PS("parts"), PS())))
+        prv, byt = fnn(gs)
+        hv, hm = np.asarray(gg.s.home_vid), np.asarray(gg.s.home_mask)
+        nvals[key] = {int(v): x for v, x, m_ in
+                      zip(hv.ravel(), np.asarray(prv).ravel(), hm.ravel())
+                      if m_}
+        nbytes[key] = float(byt)
+    assert nvals["hyb"] == nvals["2d"]
+    assert nbytes["hyb"] < nbytes["2d"], nbytes
+
+    # CC over the broadcast lane: order-independent gather, bit-exact vs the
+    # dense-2D run AND the union-find oracle; the tiered lane must actually
+    # engage (ragged ships > 0) as the label frontier collapses.
+    nsg = symmetrize(ngd)
+    nvids = sorted(np.unique(np.concatenate([nsg.src, nsg.dst])).tolist())
+    ncc_want = alg.connected_components_reference(nsg.src, nsg.dst, nvids)
+
+    def ncc_loop(gg, tp):
+        out, tot, nrag = gg, jnp.float32(0.0), jnp.float32(0.0)
+        for _ in range(8):
+            out, _, m = _superstep(
+                out, None, vprog=cc_vprog, send_msg=cc_send, gather="min",
+                default_msg={"m": IMAX}, skip_stale="out", changed_fn=None,
+                kernel_mode="auto", use_cache=True, transport=tp)
+            tot = tot + m["fwd"].bytes_shipped + m["back"].bytes_shipped
+            nrag = nrag + m["fwd"].ragged
+        return (out.vdata["cc"], jax.lax.psum(tot, "parts"),
+                jax.lax.psum(nrag, "parts"))
+
+    nc_res = {}
+    for key, kw, tp in (("2d", {}, tm.DENSE),
+                        ("hyb", {"partitioner": "hybrid",
+                                 "bcast_min_repl": 3}, TIERED)):
+        gg = Graph.from_edges(nsg.src, nsg.dst, num_partitions=P,
+                              **kw).mapV(lambda vid, v: {"cc": vid})
+        gs = dataclasses.replace(gg, ex=SpmdExchange(p=P, axis_name="parts"),
+                                 host=None)
+        fnn = jax.jit(shard_map(lambda g_, _tp=tp: ncc_loop(g_, _tp), mesh,
+                                (PS("parts"),), (PS("parts"), PS(), PS())))
+        ccv, byt, nrag = fnn(gs)
+        hv, hm = np.asarray(gg.s.home_vid), np.asarray(gg.s.home_mask)
+        nc_res[key] = ({int(v): int(x) for v, x, m_ in
+                        zip(hv.ravel(), np.asarray(ccv).ravel(), hm.ravel())
+                        if m_}, float(byt), float(nrag))
+    assert nc_res["2d"][0] == ncc_want
+    assert nc_res["hyb"][0] == ncc_want
+    assert nc_res["hyb"][1] < nc_res["2d"][1], (nc_res["hyb"][1],
+                                                nc_res["2d"][1])
+    assert nc_res["hyb"][2] > 0
+
     print("OK")
 
 
