@@ -18,7 +18,10 @@ chain-level optimizer ON vs OFF from a warm both-direction view, and the
 WireLog's `bytes_shipped` shows the whole-chain join elimination — the
 dirty leaf's dst coherence routes stop shipping because no remaining
 consumer reads them, on top of the per-call side/leaf elimination both
-variants already perform.
+variants already perform.  Since PR 10's per-direction dirty masks the
+NAIVE chain is lazy too (an unread dirty direction never refreshes), so
+the two plans ship EQUAL bytes — the row pair documents that the
+planner's static elimination is subsumed dynamically, never undercut.
 """
 from __future__ import annotations
 
@@ -103,7 +106,7 @@ def run(quick: bool = True) -> list[dict]:
     cred = chain_bytes[False] / max(chain_bytes[True], 1)
     rows.append({"benchmark": "fig5_join_elim", "variant": "CHAIN_SUMMARY",
                  "chain_comm_reduction_x": round(cred, 2)})
-    assert chain_bytes[True] < chain_bytes[False], chain_bytes
+    assert 0 < chain_bytes[True] <= chain_bytes[False], chain_bytes
     return rows
 
 

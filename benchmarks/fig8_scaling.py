@@ -1,4 +1,5 @@
-"""Fig. 8 — strong scaling of PageRank with partition count.
+"""Fig. 8 — strong scaling of PageRank with partition count, plus the §2.4
+memory-hierarchy scaling matrix.
 
 Paper result: 8 -> 32 machines gives ~3x; 8 -> 64 gives 3.5x — sublinear
 because communication grows with machine count while per-machine compute
@@ -7,21 +8,104 @@ the two quantities that DRIVE that curve, both of which our engine exposes
 exactly: per-partition compute work (edges/partition) and total wire bytes
 (which grows ~sqrt(P) per vertex under the 2D cut).  The projected step time
 uses the v5e roofline constants from the launch package.
+
+The second block is the working-set x codec x transport matrix
+(`benchmarks/run.py --working-set 1.0,0.5,0.25` overrides the sweep): the
+paper scales OUT (more machines); §2.4 scales DOWN the per-device footprint
+instead — narrow-resident mirrors shrink the warm view's HBM bytes, and
+`pregel(working_set_frac=)` spills cold home-vertex cells to host DRAM with
+a double-buffered prefetch ring, so the same graph runs on a fraction of
+the device memory at a modeled stream-time cost the ring mostly hides.
 """
 from __future__ import annotations
 
+import importlib
+
+import numpy as np
+import jax
 import jax.numpy as jnp
 
-from repro.core import Graph, algorithms as alg
+from repro.core import Graph, TransportPolicy, algorithms as alg, with_wire
+from repro.core import wire as wire_mod
 from repro.core.mrtriplets import mr_triplets
+from repro.core.transport import DENSE
 
 from .common import datasets
+
+pregel_mod = importlib.import_module("repro.core.pregel")
 
 PEAK_FLOPS = 197e12
 LINK_BW = 50e9
 
+WORKING_SETS = (1.0, 0.5, 0.25)
 
-def run(quick: bool = True) -> list[dict]:
+
+def _ws_matrix(gd, working_sets) -> list[dict]:
+    """Working-set x codec x transport PageRank cells on a fixed P=4
+    placement — the §2.4 memory-hierarchy axes of the scaling story."""
+    deg = np.maximum(np.bincount(
+        gd.src, minlength=int(max(gd.src.max(), gd.dst.max())) + 1), 1)
+    vids = np.arange(len(deg))
+    g0 = Graph.from_edges(
+        gd.src, gd.dst, num_partitions=4, vertex_keys=vids,
+        vertex_values={"deg": deg.astype(np.float32)},
+        default_vertex={"deg": np.float32(1)})
+    g0 = g0.mapV(lambda vid, v: {"pr": jnp.float32(1.0), "deg": v["deg"]})
+    full_vbytes = sum(int(l.size * l.dtype.itemsize)
+                      for l in jax.tree.leaves(g0.vdata))
+
+    def send(sv, ev, dv):
+        return {"m": sv["pr"] / sv["deg"]}
+
+    def vprog(vid, v, msg):
+        return {"pr": 0.15 + 0.85 * msg["m"], "deg": v["deg"]}
+
+    auto_tp = TransportPolicy("auto", cap_rounding=8, enter_frac=0.95,
+                              exit_frac=0.97)
+    rows = []
+    for ws in working_sets:
+        for codec in ("f32", "int8"):
+            for transport in ("dense", "auto"):
+                g = (g0.replace(ex=with_wire(g0.ex, codec, resident=True))
+                     if codec != "f32" else g0)
+                res = pregel_mod.pregel(
+                    g, vprog, send, "sum",
+                    default_msg={"m": jnp.float32(0.0)},
+                    transport=auto_tp if transport == "auto" else DENSE,
+                    track_metrics=True, max_supersteps=6,
+                    working_set_frac=None if ws >= 1.0 else ws)
+                view = res.graph.view
+                mirror_hbm = (int(wire_mod.resident_hbm_bytes(view.mirror))
+                              if view is not None else 0)
+                shipped = float(sum(m["bytes_shipped"] for m in res.metrics))
+                if ws >= 1.0:
+                    resident = full_vbytes
+                    hidden = 0.0
+                else:
+                    resident = int(min(m["spill_resident_bytes"]
+                                       for m in res.metrics))
+                    t_ser = sum(m["stream_time_serial"]
+                                for m in res.metrics)
+                    t_ovl = sum(m["stream_time_overlap"]
+                                for m in res.metrics)
+                    hidden = 1.0 - t_ovl / t_ser
+                rows.append({
+                    "benchmark": "fig8_scaling",
+                    "matrix": "working_set",
+                    "working_set": ws,
+                    "codec": codec,
+                    "transport": transport,
+                    "supersteps": res.supersteps,
+                    "bytes_shipped": round(shipped),
+                    "mirror_hbm_bytes": mirror_hbm,
+                    "resident_vdata_bytes": resident,
+                    "resident_vdata_frac": round(resident / full_vbytes, 4),
+                    "prefetch_hidden_frac": round(hidden, 4),
+                })
+    return rows
+
+
+def run(quick: bool = True, working_sets=WORKING_SETS) -> list[dict]:
     gd = datasets(quick)["twitter-sim"]
     rows = []
     base = None
@@ -46,6 +130,7 @@ def run(quick: bool = True) -> list[dict]:
                      "total_wire_bytes": wire,
                      "projected_step_us": round(proj * 1e6, 2),
                      "speedup_vs_p2": round(base / proj, 2)})
+    rows.extend(_ws_matrix(gd, working_sets))
     return rows
 
 

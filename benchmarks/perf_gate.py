@@ -12,9 +12,12 @@ tolerance (superstep_bench.GATED_FIELDS, also embedded in the committed
 file); --tol-scale loosens or tightens all of them together.
 
 Exit status 0 = no regressions; 1 = regressions (listed on stdout).  Rows
-are keyed by (workload, transport, codec, pipeline); a key present in the
-committed file but missing from the fresh run is itself a regression — a
-benchmark cell silently dropping out must fail the lane, not shrink it.
+are keyed by the fresh doc's `row_key` (falling back to the committed
+one), with `row_key_defaults` filling fields the committed rows predate —
+so widening the key (e.g. adding working_set) keeps the old trajectory
+comparable.  A key present in the committed file but missing from the
+fresh run is itself a regression — a benchmark cell silently dropping out
+must fail the lane, not shrink it.
 """
 from __future__ import annotations
 
@@ -23,14 +26,21 @@ import json
 import sys
 
 
-def _load_rows(path: str) -> tuple[dict, dict]:
+def _load_doc(path: str) -> dict:
     with open(path) as f:
         doc = json.load(f)
-    rows = doc["rows"] if isinstance(doc, dict) else doc
-    key_fields = (doc.get("row_key") if isinstance(doc, dict) else None) or \
-        ["workload", "transport", "codec", "pipeline"]
-    keyed = {tuple(r[k] for k in key_fields): r for r in rows}
-    return doc if isinstance(doc, dict) else {"rows": rows}, keyed
+    return doc if isinstance(doc, dict) else {"rows": doc}
+
+
+def _key_rows(doc: dict, key_fields, defaults) -> dict:
+    """Key rows by `key_fields`, filling fields a row predates from
+    `defaults` — a committed doc written before a key field existed keys
+    exactly like a fresh row at that field's default (e.g. working_set
+    1.0), so widening the row key never orphans the old trajectory."""
+    keyed = {}
+    for r in doc["rows"]:
+        keyed[tuple(r.get(k, defaults.get(k)) for k in key_fields)] = r
+    return keyed
 
 
 def compare(fresh: dict, committed: dict, gated: dict,
@@ -69,8 +79,15 @@ def main() -> int:
     ap.add_argument("--tol-scale", type=float, default=1.0)
     args = ap.parse_args()
 
-    fresh_doc, fresh = _load_rows(args.fresh)
-    committed_doc, committed = _load_rows(args.committed)
+    fresh_doc = _load_doc(args.fresh)
+    committed_doc = _load_doc(args.committed)
+    # the FRESH doc's (newer) key schema + defaults interpret both files
+    key_fields = (fresh_doc.get("row_key")
+                  or committed_doc.get("row_key")
+                  or ["workload", "transport", "codec", "pipeline"])
+    defaults = fresh_doc.get("row_key_defaults", {})
+    fresh = _key_rows(fresh_doc, key_fields, defaults)
+    committed = _key_rows(committed_doc, key_fields, defaults)
     gated = committed_doc.get("gated_fields")
     if gated is None:
         from benchmarks.superstep_bench import GATED_FIELDS

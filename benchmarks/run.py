@@ -50,6 +50,9 @@ def main() -> None:
                          "write its persisted trajectory (BENCH file)")
     ap.add_argument("--bench-out", default="BENCH_superstep.json",
                     help="trajectory path for --superstep")
+    ap.add_argument("--working-set", default=None,
+                    help="comma-separated working-set fractions for the "
+                         "fig8_scaling §2.4 matrix (e.g. 1.0,0.5,0.25)")
     args = ap.parse_args()
 
     if args.superstep:
@@ -70,8 +73,12 @@ def main() -> None:
     for name in mods:
         mod = importlib.import_module(f"benchmarks.{name}")
         t0 = time.perf_counter()
+        kwargs = {}
+        if name == "fig8_scaling" and args.working_set:
+            kwargs["working_sets"] = tuple(
+                float(x) for x in args.working_set.split(","))
         try:
-            rows = mod.run(quick=not args.full)
+            rows = mod.run(quick=not args.full, **kwargs)
         except Exception as e:  # keep the suite going; report at the end
             failures.append((name, e))
             print(f"[{name}] FAILED: {type(e).__name__}: {e}")

@@ -1,7 +1,6 @@
 """GraphX core: unified data-parallel + graph-parallel engine in JAX."""
 from .collections import Col, shuffle_by_key
-from .exchange import (Exchange, LocalExchange, SpmdExchange, pack_bf16,
-                       with_wire)
+from .exchange import Exchange, LocalExchange, SpmdExchange, with_wire
 from .graph import Graph, StructArrays
 from .mrtriplets import ShipMetrics, ViewCache, mr_triplets, ship_to_mirrors
 from .partition import GraphStructure, build_structure, PARTITIONERS
@@ -21,7 +20,7 @@ from .analysis import (analyze_message_fn, analyze_rewrites, TripletDeps,
 
 __all__ = [
     "Col", "shuffle_by_key", "Exchange", "LocalExchange", "SpmdExchange",
-    "pack_bf16", "with_wire", "WireCodec", "make_codec", "CODEC_NAMES",
+    "with_wire", "WireCodec", "make_codec", "CODEC_NAMES",
     "TransportPolicy", "resolve_transport", "ship_transport",
     "TRANSPORT_NAMES",
     "Graph", "StructArrays", "GraphView", "WireLog", "refresh_view",

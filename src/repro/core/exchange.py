@@ -38,7 +38,6 @@ buffer reaches this layer it is already the minimal routed set.
 from __future__ import annotations
 
 import dataclasses
-import warnings
 
 import jax
 import jax.numpy as jnp
@@ -103,20 +102,14 @@ class Exchange:
         word with these, so a misrouted block cannot verify."""
         return jnp.arange(nl, dtype=jnp.int32)
 
-    # Wire-format hooks (DESIGN.md §2.1).  `wire` is the codec; `wire_dtype`
-    # is the pre-codec LEGACY field — plain float narrowing only, no
-    # quantization/packing/delta; prefer `with_wire(ex, codec)`.
+    # Wire-format hook (DESIGN.md §2.1): the codec every `ship` routes
+    # through.  Set via `with_wire(ex, codec)`.
     wire: WireCodec | None = None
-    wire_dtype: jnp.dtype | None = None
 
     @property
     def codec(self) -> WireCodec | None:
-        """The resolved wire codec (legacy `wire_dtype` included)."""
-        if self.wire is not None:
-            return self.wire
-        if self.wire_dtype is not None:
-            return wire_mod.legacy_codec(self.wire_dtype)
-        return None
+        """The wire codec in effect (None = full-width f32 shipping)."""
+        return self.wire
 
     def ship(self, x: jnp.ndarray, *, active: jnp.ndarray | None = None,
              bound: int | None = None, transport=None) -> jnp.ndarray:
@@ -168,7 +161,6 @@ class LocalExchange(Exchange):
     """Single-device executor: exchange is a transpose of the block matrix."""
 
     p: int
-    wire_dtype: jnp.dtype | None = None
     wire: WireCodec | None = None
 
     def transpose(self, x: jnp.ndarray) -> jnp.ndarray:
@@ -212,7 +204,6 @@ class SpmdExchange(Exchange):
 
     p: int
     axis_name: str = "parts"
-    wire_dtype: jnp.dtype | None = None
     wire: WireCodec | None = None
 
     def transpose(self, x: jnp.ndarray) -> jnp.ndarray:
@@ -271,25 +262,14 @@ class SpmdExchange(Exchange):
 
 def with_wire(ex: Exchange, codec, *, delta: bool | None = None,
               block: int | None = None,
-              pack_ints: bool | None = None) -> Exchange:
+              pack_ints: bool | None = None,
+              resident: bool | None = None) -> Exchange:
     """Return a copy of `ex` shipping through the given wire codec.
 
     codec: a WireCodec, a registry name ("f32" | "bf16" | "int8" |
     "fp8_e4m3" | "fp8_e5m2"), or None to strip the codec.  Keyword overrides
     tweak the resolved codec (delta shipping, scale block size, int
-    packing)."""
+    packing, narrow-RESIDENT mirrors — DESIGN.md §2.4)."""
     resolved = make_codec(codec, delta=delta, block=block,
-                          pack_ints=pack_ints)
+                          pack_ints=pack_ints, resident=resident)
     return dataclasses.replace(ex, wire=resolved)  # type: ignore[arg-type]
-
-
-def pack_bf16(ex: Exchange) -> Exchange:
-    """DEPRECATED shim for `with_wire(ex, "bf16")` — use that instead.
-
-    Both this helper and the raw `wire_dtype=` field predate the codec
-    layer (DESIGN.md §2.1) and only express plain float narrowing; the
-    codec registry (`with_wire`) subsumes them and adds per-block scaled
-    quantization, lossless int packing, and delta shipping."""
-    warnings.warn("pack_bf16(ex) is deprecated; use with_wire(ex, 'bf16')",
-                  DeprecationWarning, stacklevel=2)
-    return with_wire(ex, "bf16")

@@ -46,7 +46,7 @@ from .tree import (bmask, elem_spec, gather_rows, nbytes_of, scatter_rows,
                    tree_where, tree_zeros_like_elem, vmap2)
 from ..kernels import ops as kops
 from ..kernels.triplet import (DEFAULT_EDGE_BLOCK, DEFAULT_VERTEX_BLOCK,
-                               flatten_tiles)
+                               SCALE_GROUP, flatten_tiles)
 
 # Tile geometry of the fused triplet kernel (DESIGN.md §2.3) — shared with
 # the build-time table construction in kernels/triplet.py via partition.py.
@@ -124,6 +124,14 @@ class ShipMetrics:
     # elementwise maximum broadcasts it against live ships' vectors.
     route_active_frac: jnp.ndarray = dataclasses.field(
         default_factory=lambda: jnp.float32(0))
+    # ring-lowered LINK traffic model (§2.1.3, PR-9 follow-up (a)):
+    # `bytes_shipped` counts ORIGINATION bytes — what each chip hands the
+    # collective.  On a ring, an all_to_all block stays on the wire for one
+    # hop but the (P-1)/P of it addressed off-chip is all that leaves, and
+    # an all-gathered block traverses P-1 links.  This field applies those
+    # factors, so BENCH rows state what the interconnect really carries.
+    bytes_link_modeled: jnp.ndarray = dataclasses.field(
+        default_factory=lambda: jnp.float32(0))
 
     @property
     def bytes_on_wire(self) -> jnp.ndarray:
@@ -161,20 +169,23 @@ class ShipMetrics:
             wire_faults=self.wire_faults + other.wire_faults,
             degraded=self.degraded + other.degraded,
             route_active_frac=jnp.maximum(self.route_active_frac,
-                                          other.route_active_frac))
+                                          other.route_active_frac),
+            bytes_link_modeled=(self.bytes_link_modeled
+                                + other.bytes_link_modeled))
 
     def tree_flatten(self):
         return ((self.effective_bytes, self.n_shipped, self.bytes_accounted,
                  self.bytes_shipped, self.ragged, self.route_active_max,
                  self.overflow, self.wire_faults, self.degraded,
-                 self.route_active_frac),
+                 self.route_active_frac, self.bytes_link_modeled),
                 (self.wire_bytes, self.route_width))
 
     @classmethod
     def tree_unflatten(cls, aux, children):
         return cls(aux[0], *children[:6], route_width=aux[1],
                    overflow=children[6], wire_faults=children[7],
-                   degraded=children[8], route_active_frac=children[9])
+                   degraded=children[8], route_active_frac=children[9],
+                   bytes_link_modeled=children[10])
 
 
 def _route_ship(ex: Exchange, sendbuf: Any, flags: jnp.ndarray, *,
@@ -212,6 +223,11 @@ def _route_ship(ex: Exchange, sendbuf: Any, flags: jnp.ndarray, *,
         wire_faults=jnp.asarray(info.wire_faults, jnp.float32),
         degraded=jnp.asarray(info.degraded, jnp.float32),
         route_active_frac=jnp.asarray(info.route_active_frac, jnp.float32),
+        # a2a on a ring: each chip's diagonal block never leaves it, so the
+        # interconnect carries (P-1)/P of the origination bytes.
+        bytes_link_modeled=jnp.asarray(
+            info.bytes_shipped * (flags.shape[1] - 1) / max(flags.shape[1], 1),
+            jnp.float32),
     )
     return recvbuf, rflags, metrics
 
@@ -276,7 +292,13 @@ def ship_to_mirrors(
     # entries out of range, so with a cache the previous superstep's mirror
     # is updated in place rather than rebuilt and re-selected (§4.5.1).
     idx = jnp.where(recvflags, recv_slot, s.v_mir).reshape(nl, -1)
-    init = (cache.mirror if cache is not None else jax.tree.map(
+    # a narrow-RESIDENT cache (§2.4) holds encoded leaves; the incremental
+    # scatter needs full-precision rows, so decode here and re-encode once
+    # after BOTH lanes have written.  Untouched scale blocks round-trip
+    # value-exact (decode can only lower a block's absmax); blocks a fresh
+    # row landed in re-quantize against the new absmax.
+    init = (wire_mod.decode_tree(cache.mirror) if cache is not None
+            else jax.tree.map(
         lambda l: jnp.zeros((nl, s.v_mir) + l.shape[3:], l.dtype), recvbuf))
     mirror = jax.tree.map(
         lambda b, leaf: scatter_rows(
@@ -327,9 +349,21 @@ def ship_to_mirrors(
             # to plan, and its B must not distort the p2p tier planner.
             overflow=jnp.asarray(binfo.overflow, jnp.float32),
             wire_faults=jnp.asarray(binfo.wire_faults, jnp.float32),
-            degraded=jnp.asarray(binfo.degraded, jnp.float32))
+            degraded=jnp.asarray(binfo.degraded, jnp.float32),
+            # ring all-gather: every contributed block traverses P-1 links
+            # (origination accounting understates link traffic by (P-1)x).
+            bytes_link_modeled=jnp.asarray(
+                binfo.bytes_shipped * max(p - 1, 0), jnp.float32))
         metrics = metrics.merge(bmetrics)
 
+    codec = ex.codec
+    if codec is not None and codec.resident:
+        mirror = jax.tree.map(
+            lambda l: (wire_mod.encode_resident(
+                l, codec, wire_mod.resident_kind(l.dtype, codec, bound),
+                bound=bound)
+                if wire_mod.resident_kind(l.dtype, codec, bound) else l),
+            mirror)
     filled = shipped if cache is None else (cache.filled | shipped)
     return ViewCache(mirror=mirror, filled=filled, active=shipped), metrics
 
@@ -398,6 +432,25 @@ def ship_aggregates_home(
         if jnp.issubdtype(leaf.dtype, jnp.floating):
             leaf = leaf.astype(jnp.float32)
         ident = _REDUCE_IDENTITY[reduce](leaf.dtype)
+        if reduce == "sum" and jnp.issubdtype(leaf.dtype, jnp.floating):
+            # FIXED-ORDER f32 sum (§2.4, PR-7 follow-up (b)): one source
+            # partition's route entries target DISTINCT home rows, so each
+            # [nl, pe] slab is a collision-free scatter-add; accumulating
+            # slabs in ascending pe is a deterministic association that the
+            # fused apply kernel reproduces exactly (its apply tiles never
+            # mix source partitions within a chunk, and chunks visit a home
+            # block in ascending pe).  This is what lets sums fuse by
+            # default instead of opt-in.
+            init = jnp.zeros((nl, v_blk) + leaf.shape[3:], leaf.dtype)
+            out = init
+            for pe in range(p):
+                x = jnp.where(bmask(rflags[:, pe], leaf[:, pe]),
+                              leaf[:, pe], 0)
+                idx = jnp.where(rflags[:, pe], send_idx[:, pe], v_blk)
+                out = jax.vmap(
+                    lambda b, ii, xx: b.at[ii].add(xx, mode="drop"))(
+                        out, idx, x)
+            return out
         flat = leaf.reshape((nl, p * k) + leaf.shape[3:])
         flat = jnp.where(bmask(rflags.reshape(nl, -1), flat), flat, ident)
         init = jnp.full((nl, v_blk) + leaf.shape[3:], ident, leaf.dtype)
@@ -662,6 +715,38 @@ def _pack_cols(tree, used, nl: int, n: int) -> jnp.ndarray:
     return jnp.concatenate([c.astype(stage) for c in cols], axis=-1)
 
 
+def _pack_cols_encoded(tree, used, nl: int, n: int):
+    """Column-pack narrow-RESIDENT leaves WITHOUT decoding (§2.4).
+
+    Returns (payload [nl, n, D] in the shared narrow dtype, scale
+    [nl, ceil(n/SCALE_GROUP), D] int8 exponents), or None when the used
+    leaves cannot share one encoded staging matrix — not all resident,
+    mixed payload dtypes, or a scale block that differs from the kernel's
+    SCALE_GROUP — in which case the caller decodes on read.  "int"-kind
+    leaves ride along with zero exponents (exp2(0) == 1, and their payload
+    upcasts to f32 exactly under the plan's round-trip guard)."""
+    if tree is None:
+        return None
+    leaves = jax.tree.leaves(tree, is_leaf=wire_mod.is_resident)
+    sel = [l for l, u in zip(leaves, used) if u]
+    if not sel or not all(wire_mod.is_resident(l) for l in sel):
+        return None
+    pdt = sel[0].payload.dtype
+    if any(l.payload.dtype != pdt or l.block != SCALE_GROUP for l in sel):
+        return None
+    nb = max(-(-n // SCALE_GROUP), 1)
+    pcols, scols = [], []
+    for l in sel:
+        pc = l.payload.reshape(nl, n, -1)
+        pcols.append(pc)
+        if l.scale is None:
+            scols.append(jnp.zeros((nl, nb, pc.shape[-1]), jnp.int8))
+        else:
+            scols.append(l.scale.reshape(nl, nb, -1))
+    return (jnp.concatenate(pcols, axis=-1),
+            jnp.concatenate(scols, axis=-1))
+
+
 def _fused_aggregate(g, mirror_tree, map_fn, live, to, reduce, kernel_mode,
                      plan: _FusedPlan, vex, eex):
     """Steps 4a-4c of the physical plan in one kernel sweep: gather both
@@ -672,14 +757,28 @@ def _fused_aggregate(g, mirror_tree, map_fn, live, to, reduce, kernel_mode,
     LOCAL tiling is mapped onto the stacked flat space by `flatten_tiles`
     with the partition's slot space padded to whole vertex blocks, so the
     SAME code serves LocalExchange (nl == P) and shard_map (nl == 1, every
-    device sweeping its own slice of the tables)."""
+    device sweeping its own slice of the tables).
+
+    `mirror_tree` may hold narrow-RESIDENT leaves (§2.4): when every used
+    leaf shares one encoded layout the kernel streams the NARROW payload
+    plus its scale plane and dequantizes per tile in VMEM; otherwise the
+    tree decodes on read here — ineligible mixes never error."""
     s = g.s
     nl = live.shape[0]
     vb = FUSED_VERTEX_BLOCK
     n_vb = max(-(-s.v_mir // vb), 1)
     v_pad = n_vb * vb            # per-partition slot space, block-aligned
     seg = nl * v_pad
-    x = _pack_cols(mirror_tree, plan.v_used, nl, s.v_mir)
+    xscale = None
+    enc = _pack_cols_encoded(mirror_tree, plan.v_used, nl, s.v_mir)
+    if enc is not None:
+        x, sc = enc
+        n_sc = v_pad // SCALE_GROUP
+        sc = jnp.pad(sc, ((0, 0), (0, n_sc - sc.shape[1]), (0, 0)))
+        xscale = sc.reshape(nl * n_sc, sc.shape[-1])
+    else:
+        mirror_tree = wire_mod.decode_tree(mirror_tree)
+        x = _pack_cols(mirror_tree, plan.v_used, nl, s.v_mir)
     x = jnp.pad(x, ((0, 0), (0, v_pad - s.v_mir), (0, 0)))
     x = x.reshape(seg, x.shape[-1])
     n_eleaves = len(jax.tree.leaves(g.edata))
@@ -698,7 +797,7 @@ def _fused_aggregate(g, mirror_tree, map_fn, live, to, reduce, kernel_mode,
                             plan)
     out, cnt = kops.triplet(
         x, ev, fsrc, fdst, live.reshape(-1), tiles, tile_fn, seg, plan.dm,
-        to=to, reduce=reduce, use_src=any(plan.src_used),
+        xscale=xscale, to=to, reduce=reduce, use_src=any(plan.src_used),
         use_dst=any(plan.dst_used), mode=kernel_mode,
         eb=FUSED_EDGE_BLOCK, vb=FUSED_VERTEX_BLOCK)
     out = out.reshape(nl, v_pad, plan.dm)[:, :s.v_mir]
@@ -917,7 +1016,7 @@ def mr_triplets(
             # refresh slots must not leak into skip_stale (same rule as
             # refresh_view's entries-empty path: warm and cold agree).
             view = (graph_view if graph_view is not None
-                    else view_mod.empty_view(s, g.vdata, nl))
+                    else view_mod.empty_view(s, g.vdata, nl, ex.codec, bound))
             view = view.replace(active=jnp.ones((nl, s.v_mir), bool))
         metrics["fwd"] = ShipMetrics.zero()
 
@@ -967,8 +1066,13 @@ def mr_triplets(
     metrics["plan"] = "fused" if plan is not None else "unfused"
 
     if plan is not None:
+        # hand the fused sweep the view's POSSIBLY-ENCODED mirror (§2.4):
+        # narrow-resident leaves stage without a decode materialisation —
+        # the kernel dequantizes per tile in VMEM.  The decoded mirror_tree
+        # stays the source for epred / the unfused gather above.
+        enc_tree = view.mirror if view is not None else mirror_tree
         partial, had_msg = _fused_aggregate(
-            g, mirror_tree, map_fn, live, to, reduce, kernel_mode, plan,
+            g, enc_tree, map_fn, live, to, reduce, kernel_mode, plan,
             vex, eex)
     else:
         zeros_elem = tree_zeros_like_elem(g.vdata, (nl, s.e_blk))
@@ -1017,10 +1121,19 @@ def mr_triplets(
                                 + m_back.bytes_on_wire)
     metrics["bytes_shipped"] = (metrics["fwd"].bytes_shipped
                                 + m_back.bytes_shipped)
+    # ring-lowered realism (§2.1.1): bytes a P-stage ring actually puts on
+    # physical links — (P-1)/P of an all_to_all payload, (P-1)x a broadcast.
+    metrics["bytes_link_modeled"] = (metrics["fwd"].bytes_link_modeled
+                                     + m_back.bytes_link_modeled)
     # per-route capacities mean EITHER wire may compact (the forward route
     # can stay dense past the break-even clamp while the return route
     # compacts, and vice versa) — "ragged" means any compaction happened.
     metrics["ragged"] = jnp.maximum(metrics["fwd"].ragged, m_back.ragged)
+    # resident footprint of the mirror carry (§2.4): STATIC bytes the view
+    # pytree keeps in HBM between calls — the `mirror_hbm_bytes` BENCH
+    # quantity the narrow-resident codec shrinks.
+    metrics["mirror_hbm_bytes"] = (
+        wire_mod.resident_hbm_bytes(view.mirror) if view is not None else 0)
 
     return values, exists, view, metrics
 
@@ -1105,6 +1218,11 @@ def _plan_apply(g, vprog: Callable, send_msg: Callable, reduce: str,
         return None
     defaults = []
     for d in dleaves:
+        if isinstance(d, jax.core.Tracer):
+            # default_msg built INSIDE a trace has no static value — the
+            # kernel bakes defaults in as compile-time scalars, so decline
+            # (the unfused path handles traced defaults fine).
+            return None
         arr = np.asarray(d)
         if arr.ndim != 0:
             return None
@@ -1249,10 +1367,12 @@ def fused_apply_home(g, recv: Any, rflags: jnp.ndarray, to: str, reduce: str,
              else flatten_tiles(s.tiles["apply_" + to], e_blk=p * k,
                                 n_vb=n_vb))
     apply_fn = _make_apply_fn(vprog, changed_fn, plan)
+    # groups/group_span pin the oracle's f32 sum order to the kernel's
+    # (§2.4): rows lay out [nl, P, K], one source partition per K-span.
     new_mat, changed = kops.superstep_apply(
         pay, slot, live, tiles, x, vid, vmask, apply_fn,
-        nl * v_pad, plan.dm, plan.dv, reduce=reduce, mode=kernel_mode,
-        eb=FUSED_EDGE_BLOCK, vb=FUSED_VERTEX_BLOCK)
+        nl * v_pad, plan.dm, plan.dv, reduce=reduce, groups=p, group_span=k,
+        mode=kernel_mode, eb=FUSED_EDGE_BLOCK, vb=FUSED_VERTEX_BLOCK)
     new_mat = new_mat.reshape(nl, v_pad, plan.dv)[:, :v_blk]
     changed = changed.reshape(nl, v_pad)[:, :v_blk] > 0
 

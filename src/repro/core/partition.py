@@ -432,7 +432,7 @@ def build_structure(
     # the tables must already be pytree children when the graph enters
     # shard_map, so there is no later point at which a lazy host build
     # could still reach every device.
-    from ..kernels.triplet import build_triplet_tiles
+    from ..kernels.triplet import DEFAULT_VERTEX_BLOCK, build_triplet_tiles
     tiles = {
         "dst": build_triplet_tiles(dst_slot, src_slot, edge_mask, v_mir),
         "src": build_triplet_tiles(src_slot, dst_slot, edge_mask, v_mir),
@@ -442,10 +442,22 @@ def build_structure(
     # HOME-vertex block through the same chunk machinery — route entry (pe, j)
     # of partition q plays the "edge", its home row the aggregation slot.
     # Keyed by the aggregation side whose route carries the aggregates back.
+    # The gather-side slot is keyed on the SOURCE partition pe (one fake
+    # vertex block per pe): the kernel never gathers through it, but the
+    # (out_block, in_block) chunk grouping then guarantees no chunk mixes
+    # rows of two source partitions — one source partition's rows target
+    # DISTINCT home rows, so every chunk's scatter-add is collision-free and
+    # the ascending-chunk accumulation is a FIXED order, which is what lets
+    # f32 sums fuse by default (§2.4, PR-7 follow-up (b)).
     for side in ("src", "dst"):
+        k_side = routes[side][0].shape[2]
         send = routes[side][0].reshape(p, -1)
+        pe_block = (np.arange(send.shape[1], dtype=np.int32) // k_side
+                    * DEFAULT_VERTEX_BLOCK)
+        in_slot = np.broadcast_to(pe_block, send.shape)
         tiles["apply_" + side] = build_triplet_tiles(
-            np.maximum(send, 0), np.zeros_like(send), send >= 0, v_blk)
+            np.maximum(send, 0), in_slot, send >= 0,
+            max(v_blk, p * DEFAULT_VERTEX_BLOCK))
 
     # ---- per-vertex replication + broadcast-set classification (§2.1.3) ---
     repl = np.zeros(max(n_vertices, 1), np.int32)

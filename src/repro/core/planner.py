@@ -255,8 +255,8 @@ def _effective_keep(view, keep):
         return None
     if len(keep) != len(view.dirs):
         return None
-    return tuple(d if cl else k
-                 for k, d, cl in zip(keep, view.dirs, view.clean))
+    return tuple(d if not st else k
+                 for k, d, st in zip(keep, view.dirs, view.stale))
 
 
 def _apply_vpred(g, vpred):

@@ -68,17 +68,18 @@ def _superstep(g: Graph, tstate=None, *, vprog, send_msg, gather,
 
     fuse_apply: "auto" runs the §2.3.2 fused superstep kernel (combine +
     vprog + changed mask in one Pallas sweep) whenever the vprog/message
-    shapes are eligible AND the fusion is bit-exact vs this unfused path —
-    true for 'min'/'max' gathers, whose combine is order-independent.  For
-    'sum' the fused combine's accumulation order differs from the unfused
-    scatter-add, so it must be opted into explicitly (True / "always");
-    False / "unfused" pins this reference path."""
+    shapes are eligible — the fusion is bit-exact vs this unfused path for
+    ALL reduces: 'min'/'max' combine order-independently, and 'sum' pins a
+    FIXED accumulation order (ascending source partition; the apply tile
+    tables and the jnp oracle group rows by source partition, each group
+    collision-free) that both the fused kernel and the unfused scatter-add
+    follow, so sums fuse by default too.  False / "unfused" pins this
+    reference path; True / "always" is kept as an explicit pin."""
     gin = g if use_cache else g.replace(view=None)
     aplan = None
     if kernel_mode != "unfused" and fuse_apply not in (False, "unfused"):
-        if fuse_apply in (True, "always") or gather in ("min", "max"):
-            aplan = _plan_apply(g, vprog, send_msg, gather, changed_fn,
-                                default_msg, payload_bound)
+        aplan = _plan_apply(g, vprog, send_msg, gather, changed_fn,
+                            default_msg, payload_bound)
     msgs, exists, view, metrics = mr_triplets(
         gin, send_msg, gather, to="dst", skip_stale=skip_stale,
         kernel_mode=kernel_mode,
@@ -154,8 +155,19 @@ def pregel(
     checkpoint_every: int | None = None,
     guard: Any = None,
     resume: bool = True,
+    working_set_frac: float | None = None,
 ) -> PregelResult:
     """Host-driven BSP loop with a jitted superstep.
+
+    working_set_frac: out-of-core vertex partitions (§2.4 / core/spill.py).
+    A fraction in (0, 1] of the home-vertex cells stays device-resident
+    between supersteps; the coldest cells (by active-set occupancy) spill
+    to host DRAM after each step and stream back through a double-buffered
+    prefetch ring before the next.  Values are bit-exact vs fully-resident
+    (the jitted superstep always computes on the restored arrays); the
+    per-step metrics gain the modeled streaming trajectory
+    (`stream_time_serial` / `stream_time_overlap`, `spill_resident_bytes`).
+    None (default) disables spilling; host-loop driver only.
 
     checkpoint: a directory path or `core.snapshot.SnapshotStore` enabling
     superstep checkpointing (§6): every `checkpoint_every` supersteps — and
@@ -206,8 +218,7 @@ def pregel(
         send_msg, elem_spec(g.vdata), elem_spec(g.edata), elem_spec(g.vdata))
     tp = transport_mod.resolve_transport(transport)
     fuse = (kernel_mode != "unfused"
-            and fuse_apply not in (False, "unfused")
-            and (fuse_apply in (True, "always") or gather in ("min", "max")))
+            and fuse_apply not in (False, "unfused"))
     static_info = {"join_arity": deps.n_way,
                    "need": _derive_need(deps, None) or "none",
                    "wire": (g.ex.codec.name if g.ex.codec is not None
@@ -242,6 +253,15 @@ def pregel(
                 # superstep runs exactly the plan the killed run chose.
                 cur_tp = saved_tp
 
+    # §2.4 out-of-core residency: the ring lives entirely in the host loop
+    # (the jitted step never traces through it) — restore before, spill
+    # after every superstep.
+    ring = None
+    if working_set_frac is not None and working_set_frac < 1.0:
+        from . import spill as spill_mod
+        ring = spill_mod.SpillRing(plan=spill_mod.plan_spill(
+            g, working_set_frac))
+
     n_visible = max(int(jnp.sum(g.vmask)), 1)
     # each DISTINCT static transport plan the jitted step has seen is one
     # XLA compile — the hysteresis in adapt_policy (prev=) exists to keep
@@ -251,8 +271,12 @@ def pregel(
     all_metrics: list[dict] = []
     steps = 0
     for it in range(start, max_supersteps):
+        if ring is not None:
+            g = ring.restore(g)    # prefetch ring drained: fully resident
         g, live, metrics = step(g, transport=cur_tp)
         steps += 1
+        if ring is not None:
+            g = ring.spill(g)      # cold cells to host; carry slims
         fwd, back = metrics["fwd"], metrics["back"]
         # §6 graceful-degradation accounting, surfaced every superstep:
         # overflow = ragged plan fell back to a dense ship (bytes worse,
@@ -286,6 +310,13 @@ def pregel(
             # chain BEFORE it already shipped.
             host_metrics["pipeline_ships"] = float(g.ships)
             host_metrics["pipeline_bytes_shipped"] = float(g.bytes_shipped)
+            if ring is not None:
+                # §2.4 modeled streaming trajectory: the rotation just run
+                # (this step's spill + the restore that preceded it).
+                host_metrics.update(ring.stream_times(g))
+                host_metrics["spill_resident_bytes"] = float(
+                    ring.resident_bytes(g))
+                host_metrics["spill_host_bytes"] = float(ring.host_bytes())
             all_metrics.append(host_metrics)
         if int(live) == 0:
             break
@@ -315,10 +346,15 @@ def pregel(
             due = (checkpoint_every is not None
                    and (it + 1 - start) % checkpoint_every == 0)
             if due or preempt:
-                snapshot_mod.save_pregel(store, it + 1, g, cur_tp,
-                                         live=int(live))
+                # snapshot the FULL graph: peek() merges the host store
+                # without draining the ring (§2.4 snapshot compatibility).
+                snapshot_mod.save_pregel(
+                    store, it + 1, ring.peek(g) if ring is not None else g,
+                    cur_tp, live=int(live))
                 if preempt:
                     break
+    if ring is not None:
+        g = ring.materialize(g)    # exit fully resident, like the carry in
     return PregelResult(graph=g, supersteps=steps, metrics=all_metrics)
 
 

@@ -9,7 +9,7 @@ superstep boundary —
 
   * the warm `Graph`: vdata/edata, visibility + edge masks, the active
     (changed-since-last-ship) set, and the PR-5 `GraphView` — mirrors,
-    per-leaf dirty masks, and the STATIC filled-direction/clean aux, which
+    per-direction dirty masks, and the STATIC filled-direction/stale aux, which
     goes in the manifest because it is pytree aux, not arrays: a restored
     mirror marked cold would cold-reship the world, and one marked filled
     for the wrong directions would serve stale slots as clean;
@@ -44,6 +44,7 @@ import jax
 import jax.numpy as jnp
 
 from . import partition as part_mod
+from . import wire as wire_mod
 from .transport import TransportPolicy
 from .view import GraphView, WireLog
 
@@ -204,7 +205,7 @@ def _plain_names(tree) -> list[str]:
 def graph_arrays(g, *, elastic: bool = True) -> tuple[dict, dict]:
     """(arrays, manifest) capturing one Graph.  The manifest half carries
     everything that is STATIC pytree aux on the live object — the view's
-    filled-direction/clean records and `vmask_full` — because restoring the
+    filled-direction/stale records and `vmask_full` — because restoring the
     arrays under wrong aux silently corrupts the delta-shipping plan."""
     arrays = {
         **_named_leaves("vdata", g.vdata),
@@ -226,13 +227,19 @@ def graph_arrays(g, *, elastic: bool = True) -> tuple[dict, dict]:
         arrays["wire_log/bytes_accounted"] = g.wire_log.bytes_accounted
     if g.view is not None:
         v = g.view
-        arrays.update(_named_leaves("view/mirror", v.mirror))
+        # narrow-resident mirrors (§2.4) snapshot DECODED: the shard set
+        # keys by the vdata leaf paths, and the decoded values are exactly
+        # what every consumer reads — the next ship under a resident codec
+        # re-encodes, and unchanged blocks re-quantize to identical words
+        # (same block grouping, §2.4 exactness contract).
+        arrays.update(_named_leaves("view/mirror",
+                                    wire_mod.decode_tree(v.mirror)))
         arrays.update(_named_leaves("view/dirty", v.dirty))
         arrays.update({"view/vis": v.vis, "view/filled": v.filled,
                        "view/active": v.active, "view/vis_dirty": v.vis_dirty})
         manifest["view"] = {"dirs": list(v.dirs), "vis_dirs": v.vis_dirs,
-                            "clean": list(v.clean),
-                            "vis_clean": bool(v.vis_clean)}
+                            "stale": list(v.stale),
+                            "vis_stale": v.vis_stale}
     if elastic:
         svid, dvid, edata = g.edges_to_numpy()
         arrays["elastic/src"] = svid
@@ -290,15 +297,30 @@ def restore_pregel(store: SnapshotStore, like, step: int | None = None):
     view = None
     if manifest.get("view") is not None:
         va = manifest["view"]
+        dirs = tuple(va["dirs"])
+        if "stale" in va:
+            stale, vis_stale = tuple(va["stale"]), va["vis_stale"]
+        else:
+            # pre-§2.4 snapshot: boolean clean marks, single dirty row.
+            # clean=True -> "" (statically clean); False -> conservatively
+            # every filled direction may be dirty.
+            stale = tuple("" if cl else d
+                          for cl, d in zip(va["clean"], dirs))
+            vis_stale = "" if va.get("vis_clean", True) else va["vis_dirs"]
+        dirty = _unflatten_like(vdata, arrays, "view/dirty")
+        widen = (lambda m: m if m.ndim >= 3 and m.shape[1] == 2
+                 else jnp.broadcast_to(m[:, None], (m.shape[0], 2)
+                                       + m.shape[1:]))
+        vis_dirty = jnp.asarray(arrays["view/vis_dirty"])
         view = GraphView(
             mirror=_unflatten_like(vdata, arrays, "view/mirror"),
             vis=jnp.asarray(arrays["view/vis"]),
             filled=jnp.asarray(arrays["view/filled"]),
             active=jnp.asarray(arrays["view/active"]),
-            dirty=_unflatten_like(vdata, arrays, "view/dirty"),
-            vis_dirty=jnp.asarray(arrays["view/vis_dirty"]),
-            dirs=tuple(va["dirs"]), vis_dirs=va["vis_dirs"],
-            clean=tuple(va["clean"]), vis_clean=bool(va["vis_clean"]))
+            dirty=jax.tree.map(widen, dirty),
+            vis_dirty=widen(vis_dirty),
+            dirs=dirs, vis_dirs=va["vis_dirs"],
+            stale=stale, vis_stale=vis_stale)
     wire_log = like.wire_log
     if manifest.get("wire_log") and "wire_log/ships" in arrays:
         wire_log = WireLog(

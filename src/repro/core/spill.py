@@ -1,0 +1,240 @@
+"""Out-of-core vertex partitions (DESIGN.md §2.4): host-DRAM spill of cold
+home-vertex blocks with a double-buffered prefetch ring.
+
+The device carry BETWEEN supersteps holds only the hot working set:
+`pregel(working_set_frac=f)` splits every partition's home-vertex slot
+space into fixed SPILL_BLOCK-row cells, ranks cells by the active-set
+occupancy the vote-to-halt loop already maintains, and keeps the hottest
+`f` fraction resident.  Cold cells round-trip through host DRAM:
+
+  * `spill(g)`   — after a superstep, the coldest cells copy to host numpy
+    (`jax.device_get`) and their device rows zero, shrinking the resident
+    vdata footprint to ~`f` of the full graph plus the two in-flight
+    prefetch buffers;
+  * `restore(g)` — before the next superstep, spilled cells stream back
+    (`jax.device_put` via `jnp.asarray` row-scatter).  Values round-trip
+    bit-exact (numpy<->device copies are lossless for every dtype the
+    engine admits), so the superstep itself is UNCHANGED — out-of-core is
+    a pure residency strategy, never a semantics change.
+
+Streaming cost is MODELED (same convention as launch/perf.py: the numbers
+are deterministic roofline estimates, not wall clocks).  The ring is
+depth-PREFETCH_DEPTH double-buffered: while superstep `s` computes, the
+cells superstep `s+1` needs stream host->device into the spare buffer, so
+the serialized cost `t_compute + t_stream` collapses to
+`max(t_compute, t_stream)` plus the un-hideable first buffer fill.  Both
+numbers surface per superstep (`stream_time_serial` / `stream_time_overlap`)
+— the BENCH trajectory's prefetch-overlap evidence.
+
+Snapshot compatibility: `materialize(g)` merges the host store back into
+the device arrays (and drops the store), so §6 checkpointing and the
+loop's exit path always see the full graph.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# Same machine model as launch/perf.py (NOT imported: launch.perf sets
+# process-wide XLA flags at import, which core code must never trigger).
+HBM_BW = 819e9
+
+# Spill cell: rows per (partition, cell) residency unit.  Matches the
+# kernel vertex block so a cell never straddles a tile row.
+SPILL_BLOCK = 512
+# Host<->device streaming bandwidth for the MODELED ring (PCIe-class,
+# bytes/s one direction) — an order of magnitude under HBM_BW, which is
+# exactly why the ring must hide it behind compute.
+HOST_LINK_BW = 32e9
+# Double buffering: one buffer computes while one streams.
+PREFETCH_DEPTH = 2
+
+
+def _leaf_bytes(x) -> int:
+    return int(x.size * jnp.dtype(x.dtype).itemsize)
+
+
+def vdata_nbytes(vdata) -> int:
+    return sum(_leaf_bytes(l) for l in jax.tree.leaves(vdata))
+
+
+def modeled_compute_time(g) -> float:
+    """Roofline estimate of one superstep's on-device time: the sweep
+    streams the mirror + home vdata a handful of times and the edge
+    tables once (DESIGN.md §2.3) — memory-bound on every graph the
+    benchmarks run, so HBM traffic / HBM_BW is the model."""
+    vb = vdata_nbytes(g.vdata)
+    eb = sum(_leaf_bytes(l) for l in jax.tree.leaves(g.edata))
+    eb += _leaf_bytes(g.emask)
+    return (3 * vb + eb) / HBM_BW
+
+
+@dataclasses.dataclass(frozen=True)
+class SpillPlan:
+    """Static cell geometry for one graph."""
+
+    nl: int                 # partition rows in the stacked layout
+    v_blk: int              # home slot space per partition
+    block: int              # rows per cell
+    n_cells: int            # cells per partition row
+    n_cold: int             # cells spilled per rotation (global)
+
+    @property
+    def n_total(self) -> int:
+        return self.nl * self.n_cells
+
+
+def plan_spill(g, working_set_frac: float,
+               block: int = SPILL_BLOCK) -> SpillPlan:
+    if not 0.0 < working_set_frac <= 1.0:
+        raise ValueError(
+            f"working_set_frac must be in (0, 1], got {working_set_frac}")
+    nl, v_blk = g.active.shape
+    # granularity guard: on small per-partition slot spaces a 512-row cell
+    # is the WHOLE partition, so "spill the coldest half" could only grab
+    # tail stubs.  Halve the cell until each partition row has at least 4
+    # cells (floor 64 rows) — spill is a host-side residency op, so a cell
+    # smaller than the kernel vertex block is purely an accounting choice.
+    while block > 64 and -(-v_blk // block) < 4:
+        block //= 2
+    n_cells = max(-(-v_blk // block), 1)
+    total = nl * n_cells
+    n_cold = total - max(int(np.ceil(working_set_frac * total)), 1)
+    return SpillPlan(nl=nl, v_blk=v_blk, block=block,
+                     n_cells=n_cells, n_cold=max(n_cold, 0))
+
+
+def choose_cold(plan: SpillPlan, active: np.ndarray) -> list[tuple[int, int]]:
+    """Rank cells by active-set occupancy, coldest first; deterministic
+    tie-break on (partition, cell) index so re-runs pick identical sets."""
+    if plan.n_cold == 0:
+        return []
+    occ = []
+    for l in range(plan.nl):
+        for c in range(plan.n_cells):
+            rows = active[l, c * plan.block:(c + 1) * plan.block]
+            occ.append((float(np.mean(rows)) if rows.size else 0.0, l, c))
+    occ.sort()
+    return [(l, c) for _, l, c in occ[:plan.n_cold]]
+
+
+@dataclasses.dataclass
+class SpillRing:
+    """Host-DRAM store + modeled double-buffered streaming accountant.
+
+    `store` maps (partition, cell) -> per-leaf numpy row blocks.  The ring
+    is a HOST-LOOP device, invisible to jit: the superstep never traces
+    through it, which is what keeps out-of-core bit-exact by construction.
+    """
+
+    plan: SpillPlan
+    store: dict = dataclasses.field(default_factory=dict)
+    # bytes streamed by the LAST restore/spill pair (one rotation)
+    bytes_in: float = 0.0
+    bytes_out: float = 0.0
+
+    # ------------------------------------------------------------- residency
+    def resident_bytes(self, g) -> int:
+        """Device bytes of the vdata carry AFTER spill: full leaves minus
+        the host-held cells — the fixed-footprint BENCH quantity."""
+        full = vdata_nbytes(g.vdata)
+        spilled = sum(
+            sum(int(b.size * b.dtype.itemsize) for b in blocks)
+            for blocks in self.store.values())
+        return full - spilled
+
+    def host_bytes(self) -> int:
+        return sum(
+            sum(int(b.size * b.dtype.itemsize) for b in blocks)
+            for blocks in self.store.values())
+
+    # ------------------------------------------------------------- data plane
+    def _merge(self, g):
+        """Stream every spilled cell back into the device arrays; returns
+        (fully-resident graph, bytes moved).  Values identical to the
+        pre-spill graph — restore round-trips the SAME rows, so the view
+        stays valid and replace() must not invalidate it (Graph.replace)."""
+        leaves, treedef = jax.tree.flatten(g.vdata)
+        n_in = 0
+        for (l, c), blocks in sorted(self.store.items()):
+            r0 = c * self.plan.block
+            for i, b in enumerate(blocks):
+                rows = jnp.asarray(b)          # the device_put of the ring
+                leaves[i] = jax.lax.dynamic_update_slice(
+                    leaves[i], rows[None],
+                    (l, r0) + (0,) * (rows.ndim - 1))
+                n_in += int(b.size * b.dtype.itemsize)
+        return (g.replace(vdata=jax.tree.unflatten(treedef, leaves),
+                          view=g.view), n_in)
+
+    def restore(self, g):
+        """Drain the prefetch ring before a superstep: every spilled cell
+        streams back and the host store empties."""
+        if not self.store:
+            self.bytes_in = 0.0
+            return g
+        g, n_in = self._merge(g)
+        self.store.clear()
+        self.bytes_in = float(n_in)
+        return g
+
+    def peek(self, g):
+        """Non-destructive materialize for the §6 snapshot path: merge the
+        host store into the device arrays WITHOUT draining the ring — the
+        slimmed carry keeps running while the snapshot sees full state."""
+        if not self.store:
+            return g
+        return self._merge(g)[0]
+
+    def spill(self, g):
+        """Copy the coldest cells (by g.active occupancy) to host DRAM and
+        zero their device rows; the device carry now holds only the
+        working set.  Returns the slimmed graph."""
+        if self.plan.n_cold == 0:
+            self.bytes_out = 0.0
+            return g
+        cold = choose_cold(self.plan, np.asarray(g.active))
+        leaves, treedef = jax.tree.flatten(g.vdata)
+        host = [np.asarray(l) for l in leaves]  # one device_get, all cells
+        n_out = 0
+        for (l, c) in cold:
+            r0, r1 = c * self.plan.block, (c + 1) * self.plan.block
+            blocks = [h[l, r0:r1].copy() for h in host]
+            self.store[(l, c)] = blocks
+            n_out += sum(int(b.size * b.dtype.itemsize) for b in blocks)
+            for i in range(len(leaves)):
+                zero = jnp.zeros_like(leaves[i][l, r0:r1])
+                leaves[i] = jax.lax.dynamic_update_slice(
+                    leaves[i], zero[None], (l, r0) + (0,) * (zero.ndim - 1))
+        self.bytes_out = float(n_out)
+        return g.replace(vdata=jax.tree.unflatten(treedef, leaves),
+                         view=g.view)
+
+    def materialize(self, g):
+        """Snapshot/exit seam: merge the host store back (drops it)."""
+        return self.restore(g)
+
+    # ------------------------------------------------------------- time model
+    def stream_times(self, g) -> dict:
+        """Modeled per-superstep timing of the last rotation.
+
+        serial  = compute, THEN stream the rotation's bytes;
+        overlap = steady-state double-buffered ring (depth PREFETCH_DEPTH:
+                  one buffer computes while the other streams), so the
+                  smaller of the two times hides entirely behind the
+                  larger — strictly under the serialized time whenever a
+                  rotation moved bytes at all.
+        """
+        t_c = modeled_compute_time(g)
+        stream_bytes = self.bytes_in + self.bytes_out
+        t_s = stream_bytes / HOST_LINK_BW
+        return {
+            "stream_bytes": stream_bytes,
+            "compute_time_modeled": t_c,
+            "stream_time_serial": t_c + t_s,
+            "stream_time_overlap": max(t_c, t_s),
+        }

@@ -9,9 +9,11 @@ won precisely by NOT paying data movement at operator boundaries, so this
 module promotes the view to a first-class member of `Graph`:
 
   * `GraphView` — the materialized mirror pytree plus, per vdata LEAF, a
-    [nl, V_blk] dirty mask over home rows and a static record of which
-    route directions ("src"/"dst") have been shipped, with the same
-    bookkeeping for the visibility bitmask.  Mutators (`mapV`, the joins,
+    [nl, 2, V_blk] PER-DIRECTION dirty mask over home rows (§2.4) and a
+    static record of which route directions ("src"/"dst") have been
+    shipped, with the same bookkeeping for the visibility bitmask.  Under
+    a `resident=True` codec, eligible mirror leaves stay ENCODED in HBM
+    as `wire.ResidentLeaf` payload+scale pairs (§2.4).  Mutators (`mapV`, the joins,
     `subgraph`) mark dirtiness instead of discarding the view
     (`view_after_rewrite`, driven by `core.analysis.analyze_rewrites`);
     `reverse()` remaps direction labels rather than invalidating.
@@ -57,16 +59,30 @@ import jax
 import jax.numpy as jnp
 
 from . import transport as transport_mod
+from . import wire as wire_mod
 from .mrtriplets import ShipMetrics, ViewCache, ship_to_mirrors
 from .tree import vmap2
 
 # direction bookkeeping: need-set names <-> compact direction strings
 _DIR = {"src": "s", "dst": "d", "both": "sd"}
 _NEED = {"s": "src", "d": "dst", "sd": "both"}
+# dirty-mask row index per direction: masks are [nl, 2, V_blk] (§2.4 —
+# per-DIRECTION dirty tracking; row 0 = "s", row 1 = "d").
+_DIRROW = {"s": 0, "d": 1}
 
 
 def _dirs_union(a: str, b: str) -> str:
     return "".join(c for c in "sd" if c in a or c in b)
+
+
+def _dirs_minus(a: str, b: str) -> str:
+    return "".join(c for c in a if c not in b)
+
+
+def _dir_rows(mask: jnp.ndarray, dirs: str) -> jnp.ndarray:
+    """[nl, 2, V_blk] mask -> [nl, V_blk] union over the named directions."""
+    idx = [_DIRROW[c] for c in dirs]
+    return mask[:, idx].any(axis=1)
 
 
 @jax.tree_util.register_pytree_node_class
@@ -108,28 +124,34 @@ class GraphView:
     """Graph-resident replicated vertex view with per-leaf dirty tracking.
 
     mirror/dirty mirror the vdata pytree structure leaf-for-leaf; `vis` is
-    the visibility bitmask's own mirror (subgraph's ship).  `dirs` /
-    `vis_dirs` record which route directions each leaf has been shipped
-    over ("" | "s" | "d" | "sd"), `clean` / `vis_clean` certify that the
-    corresponding dirty mask is structurally all-False — both are pytree
-    AUX, so the refresh plan stays a trace-time constant."""
+    the visibility bitmask's own mirror (subgraph's ship).  Mirror leaves
+    may be `wire.ResidentLeaf` (narrow-resident HBM encoding, §2.4) — all
+    structural checks and flattening here go through `is_leaf` so the
+    encoded pair counts as one leaf.  Dirty masks are [nl, 2, V_blk] —
+    PER-DIRECTION (row 0 = "s", row 1 = "d"), so a refresh that needs one
+    direction delta-ships only that direction's stale rows and the other
+    direction's mask keeps accumulating (§2.4).  `dirs` / `vis_dirs`
+    record which route directions each leaf has been shipped over
+    ("" | "s" | "d" | "sd"); `stale` / `vis_stale` name the directions
+    whose dirty-mask row may be nonempty ("" = statically clean) — all
+    pytree AUX, so the ship plan stays a trace-time constant."""
 
     mirror: Any               # pytree == vdata, leaves [nl, V_mir, ...]
     vis: jnp.ndarray          # [nl, V_mir] bool — visibility mirror
     filled: jnp.ndarray       # [nl, V_mir] bool — slot ever shipped
     active: jnp.ndarray       # [nl, V_mir] bool — slots of the LATEST refresh
-    dirty: Any                # pytree == vdata, leaves [nl, V_blk] bool
-    vis_dirty: jnp.ndarray    # [nl, V_blk] bool
+    dirty: Any                # pytree == vdata, leaves [nl, 2, V_blk] bool
+    vis_dirty: jnp.ndarray    # [nl, 2, V_blk] bool
     # --- static (pytree aux) ---
     dirs: tuple = ()          # per flat leaf: filled directions
     vis_dirs: str = ""
-    clean: tuple = ()         # per flat leaf: dirty mask structurally empty
-    vis_clean: bool = True
+    stale: tuple = ()         # per flat leaf: maybe-dirty directions ("sd")
+    vis_stale: str = ""
 
     def tree_flatten(self):
         return ((self.mirror, self.vis, self.filled, self.active,
                  self.dirty, self.vis_dirty),
-                (self.dirs, self.vis_dirs, self.clean, self.vis_clean))
+                (self.dirs, self.vis_dirs, self.stale, self.vis_stale))
 
     @classmethod
     def tree_unflatten(cls, aux, children):
@@ -141,64 +163,90 @@ class GraphView:
     # ------------------------------------------------------------- mutators
     def mark_vis(self, rows: jnp.ndarray) -> "GraphView":
         """Visibility changed at `rows` (subgraph/innerJoin restriction)."""
-        return self.replace(vis_dirty=self.vis_dirty | rows,
-                            vis_clean=False)
+        return self.replace(vis_dirty=self.vis_dirty | rows[:, None],
+                            vis_stale=self.vis_dirs)
 
     def remap_reverse(self) -> "GraphView":
         """`reverse()` swaps the src/dst roles of the routing tables; the
         mirror VALUES are untouched, so the view survives with its
-        direction labels swapped — remap, never invalidate (§4.3)."""
+        direction labels swapped — remap, never invalidate (§4.3).  The
+        per-direction dirty rows swap with their labels."""
         swap = {"": "", "s": "d", "d": "s", "sd": "sd"}
+        flip = lambda m: m[:, ::-1]
         return self.replace(dirs=tuple(swap[d] for d in self.dirs),
-                            vis_dirs=swap[self.vis_dirs])
+                            vis_dirs=swap[self.vis_dirs],
+                            stale=tuple(swap[st] for st in self.stale),
+                            vis_stale=swap[self.vis_stale],
+                            dirty=jax.tree.map(flip, self.dirty),
+                            vis_dirty=flip(self.vis_dirty))
 
 
-def empty_view(s, vdata, nl: int) -> GraphView:
+def empty_view(s, vdata, nl: int, codec=None,
+               bound: int | None = None) -> GraphView:
     """A cold view: nothing filled, nothing dirty (cold leaves ship via the
-    direction-missing plan, not the dirty-row plan)."""
+    direction-missing plan, not the dirty-row plan).
+
+    codec/bound: the exchange's wire codec — under a `resident=True` codec
+    eligible mirror leaves allocate already ENCODED (§2.4), so the view's
+    treedef is identical cold and warm (pregel_fused's while carry needs
+    that stability)."""
     v_mir = s.v_mir
     v_blk = s.home_mask.shape[-1]
-    mirror = jax.tree.map(
-        lambda x: jnp.zeros((nl, v_mir) + x.shape[2:], x.dtype), vdata)
-    dirty = jax.tree.map(lambda x: jnp.zeros((nl, v_blk), bool), vdata)
+
+    def cold_leaf(x):
+        z = jnp.zeros((nl, v_mir) + x.shape[2:], x.dtype)
+        kind = wire_mod.resident_kind(x.dtype, codec, bound)
+        return (wire_mod.encode_resident(z, codec, kind, bound=bound)
+                if kind is not None else z)
+
+    mirror = jax.tree.map(cold_leaf, vdata)
+    dirty = jax.tree.map(lambda x: jnp.zeros((nl, 2, v_blk), bool), vdata)
     n = len(jax.tree.leaves(vdata))
     zslot = jnp.zeros((nl, v_mir), bool)
     return GraphView(mirror=mirror, vis=zslot, filled=zslot, active=zslot,
-                     dirty=dirty, vis_dirty=jnp.zeros((nl, v_blk), bool),
+                     dirty=dirty, vis_dirty=jnp.zeros((nl, 2, v_blk), bool),
                      dirs=("",) * n, vis_dirs="",
-                     clean=(True,) * n, vis_clean=True)
+                     stale=("",) * n, vis_stale="")
 
 
 def compatible(view: GraphView | None, vdata, nl: int, v_mir: int) -> bool:
     """Does this view's mirror match vdata's structure and element specs?
-    Mutators maintain this; the check guards hand-rolled graphs."""
+    Mutators maintain this; the check guards hand-rolled graphs.
+    ResidentLeaf mirrors compare through their decoded dtype/shape."""
     if view is None:
         return False
-    if jax.tree.structure(view.mirror) != jax.tree.structure(vdata):
+    isr = wire_mod.is_resident
+    if (jax.tree.structure(view.mirror, is_leaf=isr)
+            != jax.tree.structure(vdata)):
         return False
-    for m, v in zip(jax.tree.leaves(view.mirror), jax.tree.leaves(vdata)):
+    for m, v in zip(jax.tree.leaves(view.mirror, is_leaf=isr),
+                    jax.tree.leaves(vdata)):
         if (m.dtype != v.dtype or m.shape[2:] != v.shape[2:]
                 or m.shape[:2] != (nl, v_mir)):
             return False
     return True
 
 
-def _plan_leaf(dirs: str, clean: bool, need_d: str):
-    """One leaf's refresh resolution: None (cache hit) or
-    (kind, route_dirs, new_dirs)."""
-    missing = "".join(c for c in need_d if c not in dirs)
-    if not missing:
-        # every needed direction is filled: ship dirty rows over ALL filled
-        # directions (keeping every filled mirror coherent is what lets a
-        # single per-leaf dirty mask suffice), or nothing at all.
-        return None if clean else ("delta", dirs, dirs)
-    if clean and dirs:
-        # §4.3 direction-widening reuse: the filled directions are current,
-        # so only the missing routes ship (full — those slots are cold).
-        return ("full", missing, _dirs_union(dirs, need_d))
-    # cold leaf, or dirty AND widening: one full ship over the union.
-    u = _dirs_union(dirs, need_d)
-    return ("full", u, u)
+def _plan_leaf(dirs: str, stale: str, need_d: str):
+    """One leaf's refresh resolution: a list of (kind, route_dirs) entries
+    (empty = cache hit).
+
+    Per-direction dirty tracking (§2.4) splits the old single resolution in
+    two: stale rows of the NEEDED-and-filled directions delta-ship over
+    exactly those routes, and missing directions full-ship over theirs — a
+    dirty leaf widening "s" -> "both" ships a delta on the src routes plus
+    a cold fill of the dst routes, never a full union re-ship.  Filled
+    directions outside the need set are NOT refreshed: their mask rows keep
+    accumulating until a consumer actually reads them, which is the whole
+    byte win over the PR-5 keep-everything-coherent rule."""
+    plans = []
+    dirty_hit = "".join(c for c in need_d if c in dirs and c in stale)
+    if dirty_hit:
+        plans.append(("delta", dirty_hit))
+    missing = _dirs_minus(need_d, dirs)
+    if missing:
+        plans.append(("full", missing))
+    return plans
 
 
 def refresh_view(
@@ -232,33 +280,42 @@ def refresh_view(
     nl = g.vmask.shape[0]
     flat_vals, treedef = jax.tree.flatten(g.vdata)
     n = len(flat_vals)
+    isr = wire_mod.is_resident
 
     view = legacy_cache if legacy_cache is not None else g.view
     if not compatible(view, g.vdata, nl, s.v_mir):
-        view = empty_view(s, g.vdata, nl)
-    mir_l = list(jax.tree.leaves(view.mirror))
+        view = empty_view(s, g.vdata, nl, ex.codec, bound)
+    mir_l = list(jax.tree.leaves(view.mirror, is_leaf=isr))
     dirty_l = list(jax.tree.leaves(view.dirty))
-    dirs_l, clean_l = list(view.dirs), list(view.clean)
+    dirs_l, stale_l = list(view.dirs), list(view.stale)
     vis_mir, vis_dirty = view.vis, view.vis_dirty
-    vis_dirs, vis_clean = view.vis_dirs, view.vis_clean
+    vis_dirs, vis_stale = view.vis_dirs, view.vis_stale
     if legacy_cache is not None:
         rows = legacy_active if legacy_active is not None else g.active
-        dirty_l = [rows] * n
-        clean_l = [False] * n
+        dirty_l = [jnp.broadcast_to(rows[:, None],
+                                    (nl, 2) + rows.shape[1:])] * n
+        stale_l = ["sd"] * n
 
     required = tuple(leaf_mask) if leaf_mask is not None else (True,) * n
     need_d = _DIR[need]
-    entries = []          # (slot, kind, route_dirs, new_dirs)
+
+    def leaf_need(i: int) -> str:
+        # legacy loops predate per-direction tracking: they keep EVERY
+        # filled direction coherent each refresh (g.active is only the
+        # LAST step's change set, so deferring a direction would lose it).
+        if legacy_cache is not None:
+            return _dirs_union(need_d, dirs_l[i])
+        return need_d
+
+    entries = []          # (slot, kind, route_dirs)
     for i in range(n):
         if not required[i]:
             continue
-        plan = _plan_leaf(dirs_l[i], clean_l[i], need_d)
-        if plan is not None:
-            entries.append((i,) + plan)
+        for kind, route_d in _plan_leaf(dirs_l[i], stale_l[i], leaf_need(i)):
+            entries.append((i, kind, route_d))
     if with_vis:
-        plan = _plan_leaf(vis_dirs, vis_clean, "sd")
-        if plan is not None:
-            entries.append(("vis",) + plan)
+        for kind, route_d in _plan_leaf(vis_dirs, vis_stale, "sd"):
+            entries.append(("vis", kind, route_d))
 
     # group leaves by identical resolution: one routed collective per group
     # (this is where subgraph's visibility + epred-property ships fold).
@@ -277,6 +334,7 @@ def refresh_view(
             prev[key] = vis_mir if slot == "vis" else mir_l[slot]
             if kind == "delta":
                 d = vis_dirty if slot == "vis" else dirty_l[slot]
+                d = _dir_rows(d, route_d)
                 act = d if act is None else (act | d)
         cache = ViewCache(mirror=prev, filled=filled, active=filled)
         sub, m = ship_to_mirrors(
@@ -306,37 +364,61 @@ def refresh_view(
         # superstep, so their refreshes always carry real freshness.
         shipped_any = jnp.ones((nl, s.v_mir), bool)
 
-    zrows = jnp.zeros((nl, s.home_mask.shape[-1]), bool)
-    for (slot, _kind, _route, new_dirs) in entries:
-        if slot == "vis":
-            vis_dirs, vis_clean, vis_dirty = new_dirs, True, zrows
-        else:
-            dirs_l[slot], clean_l[slot], dirty_l[slot] = new_dirs, True, zrows
+    # post-ship bookkeeping: shipped directions clear THEIR dirty-mask rows
+    # and leave the view filled over need ∪ dirs; unshipped directions keep
+    # their rows accumulating (§2.4).
+    def clear_rows(mask, dirs):
+        for c in dirs:
+            mask = mask.at[:, _DIRROW[c]].set(False)
+        return mask
+
+    shipped_dirs: dict = {}
+    for (slot, _kind, route_d) in entries:
+        shipped_dirs[slot] = _dirs_union(shipped_dirs.get(slot, ""), route_d)
+    for i in range(n):
+        if not required[i]:
+            continue
+        sd = shipped_dirs.get(i, "")
+        if sd:
+            dirty_l[i] = clear_rows(dirty_l[i], sd)
+        stale_l[i] = _dirs_minus(stale_l[i], sd)
+        dirs_l[i] = _dirs_union(dirs_l[i], leaf_need(i))
+    if with_vis:
+        sd = shipped_dirs.get("vis", "")
+        if sd:
+            vis_dirty = clear_rows(vis_dirty, sd)
+        vis_stale = _dirs_minus(vis_stale, sd)
+        vis_dirs = _dirs_union(vis_dirs, "sd")
 
     view2 = GraphView(
         mirror=jax.tree.unflatten(treedef, mir_l), vis=vis_mir,
         filled=filled, active=shipped_any,
         dirty=jax.tree.unflatten(treedef, dirty_l), vis_dirty=vis_dirty,
         dirs=tuple(dirs_l), vis_dirs=vis_dirs,
-        clean=tuple(clean_l), vis_clean=vis_clean)
-    return (view2, view2.mirror, vis_mir,
+        stale=tuple(stale_l), vis_stale=vis_stale)
+    # consumers read DECODED values; narrow-resident leaves stay encoded in
+    # the view itself and the fused paths read those directly (XLA DCEs
+    # whichever copy a given consumer leaves untouched).
+    return (view2, wire_mod.decode_tree(view2.mirror), vis_mir,
             merged if merged is not None else ShipMetrics.zero(), n_ships)
 
 
 def dirty_rows(view: GraphView | None, leaf_mask=None):
-    """Union of the requested leaves' MAY-BE-DIRTY rows, or None when every
-    requested leaf is statically clean (transport planners branch on this:
-    no delta ship will happen, so no active fraction exists)."""
+    """Union of the requested leaves' MAY-BE-DIRTY rows (over their stale
+    directions only), or None when every requested leaf is statically clean
+    (transport planners branch on this: no delta ship will happen, so no
+    active fraction exists)."""
     if view is None:
         return None
     flat = jax.tree.leaves(view.dirty)
     required = tuple(leaf_mask) if leaf_mask is not None else \
         (True,) * len(flat)
     out = None
-    for d, req, cl in zip(flat, required, view.clean):
-        if not req or cl:
+    for d, req, st in zip(flat, required, view.stale):
+        if not req or not st:
             continue
-        out = d if out is None else (out | d)
+        rows = _dir_rows(d, st)
+        out = rows if out is None else (out | rows)
     return out
 
 
@@ -383,24 +465,28 @@ def prune_view(view: GraphView | None,
     flat_dirty, ddef = jax.tree.flatten(view.dirty)
     if len(keep_dirs) != len(flat_dirty):
         return view
-    dirs, clean, dirty = [], [], []
+    dirs, stale, dirty = [], [], []
     changed = False
-    for d0, cl0, dy0, keep in zip(view.dirs, view.clean, flat_dirty,
+    for d0, st0, dy0, keep in zip(view.dirs, view.stale, flat_dirty,
                                   keep_dirs):
         d = "".join(c for c in d0 if c in keep)
         if d == d0:
-            dirs.append(d0), clean.append(cl0), dirty.append(dy0)
+            dirs.append(d0), stale.append(st0), dirty.append(dy0)
             continue
         changed = True
-        if d:
-            dirs.append(d), clean.append(cl0), dirty.append(dy0)
-        else:   # dropped entirely: cold leaf, dirty rows forgotten
-            dirs.append(""), clean.append(True)
-            dirty.append(jnp.zeros_like(dy0))
+        dirs.append(d)
+        st = "".join(c for c in st0 if c in d)
+        stale.append(st)
+        # dropped directions forget their dirty rows (they will never
+        # delta-ship; a later re-read takes the cold full-ship path).
+        dy = dy0
+        for c in _dirs_minus("sd", d):
+            dy = dy.at[:, _DIRROW[c]].set(False)
+        dirty.append(dy)
     if not changed:
         return view
     return view.replace(dirty=jax.tree.unflatten(ddef, dirty),
-                        dirs=tuple(dirs), clean=tuple(clean))
+                        dirs=tuple(dirs), stale=tuple(stale))
 
 
 def view_after_rewrite(view: GraphView | None, old_vdata, new_vdata,
@@ -427,7 +513,7 @@ def view_after_rewrite(view: GraphView | None, old_vdata, new_vdata,
     old_paths = {p: i for i, (p, _) in enumerate(
         jax.tree_util.tree_flatten_with_path(old_vdata)[0])}
     new_flat, new_def = jax.tree_util.tree_flatten_with_path(new_vdata)
-    old_mir = jax.tree.leaves(view.mirror)
+    old_mir = jax.tree.leaves(view.mirror, is_leaf=wire_mod.is_resident)
     old_dirty = jax.tree.leaves(view.dirty)
     old_vals = jax.tree.leaves(old_vdata)
     nl, v_mir = view.filled.shape
@@ -439,23 +525,23 @@ def view_after_rewrite(view: GraphView | None, old_vdata, new_vdata,
     elif callable(changed):
         rows_all = vmap2(changed)(old_vdata, new_vdata)
 
-    mir, dirty, dirs, clean = [], [], [], []
+    mir, dirty, dirs, stale = [], [], [], []
     for path, leaf in new_flat:
         i = old_paths.get(path)
         keeps = (i is not None and old_mir[i].dtype == leaf.dtype
                  and old_mir[i].shape[2:] == leaf.shape[2:])
         if not keeps:
             mir.append(jnp.zeros((nl, v_mir) + leaf.shape[2:], leaf.dtype))
-            dirty.append(jnp.zeros((nl, v_blk), bool))
+            dirty.append(jnp.zeros((nl, 2, v_blk), bool))
             dirs.append("")
-            clean.append(True)
+            stale.append("")
             continue
         passthrough = rewrites is not None and rewrites.get(path, False)
         mir.append(old_mir[i])
         if passthrough:
             dirty.append(old_dirty[i])
             dirs.append(view.dirs[i])
-            clean.append(view.clean[i])
+            stale.append(view.stale[i])
             continue
         if rows_all is not None:
             rows = rows_all
@@ -465,11 +551,14 @@ def view_after_rewrite(view: GraphView | None, old_vdata, new_vdata,
                     if d.ndim > 2 else d)
         else:
             rows = jnp.ones((nl, v_blk), bool)
-        dirty.append(old_dirty[i] | rows)
+        # the rewrite dirties BOTH direction rows; only filled directions
+        # can actually be incoherent, so stale is capped at dirs — a cold
+        # leaf stays statically clean and re-fills via the full-ship path.
+        dirty.append(old_dirty[i] | rows[:, None])
         dirs.append(view.dirs[i])
-        clean.append(False)
+        stale.append(view.dirs[i] if view.dirs[i] else "")
 
     return view.replace(
         mirror=jax.tree.unflatten(new_def, mir),
         dirty=jax.tree.unflatten(new_def, dirty),
-        dirs=tuple(dirs), clean=tuple(clean))
+        dirs=tuple(dirs), stale=tuple(stale))

@@ -76,6 +76,8 @@ class WireCodec:
     block: int = 32           # elements per scale block (flattened payload)
     pack_ints: bool = True    # signed ints narrow losslessly under the bound
     delta: bool = False       # active-set zero-block compression accounting
+    resident: bool = False    # mirrors STAY encoded in HBM (§2.4) — decode
+    #                           moves from scatter_rows to the consuming tile
 
     def replace(self, **kw) -> "WireCodec":
         return dataclasses.replace(self, **kw)
@@ -100,7 +102,8 @@ CODEC_NAMES = tuple(_registry())
 
 
 def make_codec(spec, *, delta: bool | None = None, block: int | None = None,
-               pack_ints: bool | None = None) -> WireCodec | None:
+               pack_ints: bool | None = None,
+               resident: bool | None = None) -> WireCodec | None:
     """Resolve a codec spec: None | "f32" | "bf16" | "int8" | "fp8_e4m3" |
     "fp8_e5m2" | WireCodec, with optional field overrides."""
     if spec is None or spec == "none":
@@ -120,14 +123,9 @@ def make_codec(spec, *, delta: bool | None = None, block: int | None = None,
         kw["block"] = block
     if pack_ints is not None:
         kw["pack_ints"] = pack_ints
+    if resident is not None:
+        kw["resident"] = resident
     return codec.replace(**kw) if kw else codec
-
-
-def legacy_codec(wire_dtype) -> WireCodec:
-    """The pre-codec `wire_dtype=` field as a codec: plain float narrowing,
-    integers untouched (exactly the old `Exchange.ship` behavior)."""
-    return WireCodec(f"legacy:{jnp.dtype(wire_dtype).name}",
-                     fdtype=wire_dtype, pack_ints=False)
 
 
 # ---------------------------------------------------------------------------
@@ -250,6 +248,180 @@ def _encode_scaled(x: jnp.ndarray, codec: WireCodec):
                       jnp.sign(flat) * jnp.maximum(jnp.round(jnp.abs(q)), 1.0),
                       0.0)
     return q.astype(wdtype), exp
+
+
+# ---------------------------------------------------------------------------
+# Narrow-RESIDENT mirror leaves (DESIGN.md §2.4)
+# ---------------------------------------------------------------------------
+# The wire codec above narrows data in flight and decodes at scatter_rows;
+# a `resident=True` codec keeps eligible mirror leaves ENCODED in HBM:
+# payload in the wire dtype plus per-`block`-ROW shared E8M0 exponents
+# (one int8 exponent per `block` consecutive vertex slots per feature
+# column), both ordinary pytree children.  Decode moves to the consumer —
+# per-tile in VMEM inside the fused kernels (an exact exponent shift, the
+# same contract `_encode_scaled` guarantees), or a whole-leaf `.decode()`
+# for ineligible plans (decode-on-read fallback).  Row-major blocks along
+# the VERTEX axis (not the wire's flattened last axis) so a [Vb, D] kernel
+# tile pairs with a [Vb/block, D] scale tile under the same index map.
+@jax.tree_util.register_pytree_node_class
+class ResidentLeaf:
+    """One mirror leaf kept encoded in HBM.
+
+    payload: [nl, V, ...] in the narrow dtype (int8/fp8 for "scaled" floats,
+    the packed signed width for "int"); scale: [nl, ceil(V/block), d] int8
+    power-of-two exponents ("scaled" only, d = trailing element count).
+    Exposes `.dtype`/`.shape` of the DECODED leaf so structural checks
+    (`view.compatible`, `view_after_rewrite`) treat it as the leaf it
+    stands for."""
+
+    __slots__ = ("payload", "scale", "kind", "_dtype", "block")
+
+    def __init__(self, payload, scale, kind: str, dtype, block: int = 32):
+        self.payload = payload
+        self.scale = scale
+        self.kind = kind              # "scaled" | "int"
+        self._dtype = jnp.dtype(dtype)
+        self.block = block
+
+    @property
+    def dtype(self):
+        return self._dtype
+
+    @property
+    def shape(self):
+        return self.payload.shape
+
+    @property
+    def ndim(self):
+        return self.payload.ndim
+
+    @property
+    def size(self):
+        return self.payload.size
+
+    def hbm_nbytes(self) -> int:
+        """Static resident bytes: payload + scale exponents."""
+        n = self.payload.size * self.payload.dtype.itemsize
+        if self.scale is not None:
+            n += self.scale.size * self.scale.dtype.itemsize
+        return int(n)
+
+    def decode(self) -> jnp.ndarray:
+        """Whole-leaf decode back to the original dtype (the fallback path;
+        fused consumers shift exponents per tile in VMEM instead)."""
+        if self.kind == "int":
+            return self.payload.astype(self._dtype)
+        nl, v = self.payload.shape[:2]
+        flat = self.payload.astype(jnp.float32).reshape(nl, v, -1)
+        e = jnp.repeat(self.scale.astype(jnp.float32), self.block,
+                       axis=1)[:, :v]
+        return (flat * jnp.exp2(e)).reshape(self.payload.shape) \
+            .astype(self._dtype)
+
+    def tree_flatten(self):
+        return ((self.payload, self.scale),
+                (self.kind, str(self._dtype), self.block))
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], children[1], aux[0], aux[1], aux[2])
+
+    def __repr__(self):
+        return (f"ResidentLeaf({self.kind}, {self._dtype.name}, "
+                f"shape={tuple(self.payload.shape)})")
+
+
+def is_resident(x) -> bool:
+    return isinstance(x, ResidentLeaf)
+
+
+def resident_kind(dtype, codec: WireCodec | None,
+                  bound: int | None) -> str | None:
+    """STATIC eligibility: can a mirror leaf of `dtype` stay encoded?
+
+    Floats need a scaled codec (per-block exponents make dequant exact);
+    signed ints need the same lossless-narrowing certificate the wire
+    applies (`int_wire_dtype` under the payload bound).  Anything else —
+    unsigned bitsets, unbounded ints, plain-narrowing float codecs —
+    stays decoded (bf16 mirrors are already narrow in HBM)."""
+    if codec is None or not codec.resident:
+        return None
+    dt = jnp.dtype(dtype)
+    if jnp.issubdtype(dt, jnp.floating):
+        if codec.scaled and codec.fdtype is not None:
+            return "scaled"
+        return None
+    ndt = np.dtype(dt)
+    if ndt.kind == "i" and codec.pack_ints:
+        if int_wire_dtype(ndt, bound).itemsize < ndt.itemsize:
+            return "int"
+    return None
+
+
+def encode_resident(x: jnp.ndarray, codec: WireCodec, kind: str,
+                    *, bound: int | None = None) -> ResidentLeaf:
+    """Encode one [nl, V, ...] mirror leaf for HBM residency.
+
+    "int": the lossless cast (exact both ways under the bound).  "scaled":
+    per-`block`-row absmax quantization with power-of-two exponents — the
+    same snapping rule as `_encode_scaled`, grouped along the vertex axis.
+    Decode -> re-encode of an UNCHANGED block is value-exact (the decoded
+    absmax can only lower the exponent, and scaling an integer payload up
+    by a power of two is exact); blocks a scatter touched re-quantize
+    their stale rows against the new absmax — bounded by one quantization
+    step, the §2.4 drift contract the differential tests pin."""
+    if isinstance(x, ResidentLeaf):
+        return x
+    if kind == "int":
+        wdt = int_wire_dtype(np.dtype(x.dtype), bound)
+        return ResidentLeaf(x.astype(jnp.dtype(wdt)), None, "int", x.dtype,
+                            codec.block)
+    assert kind == "scaled"
+    wdtype = codec.fdtype
+    qmax = min(_qmax(wdtype), float(np.finfo(np.float32).max))
+    nl, v = x.shape[:2]
+    flat = x.astype(jnp.float32).reshape(nl, v, -1)
+    d = flat.shape[-1]
+    nb = max(-(-v // codec.block), 1)
+    padded = jnp.pad(flat, ((0, 0), (0, nb * codec.block - v), (0, 0)))
+    absmax = jnp.max(jnp.abs(padded.reshape(nl, nb, codec.block, d)), axis=2)
+    exp = jnp.ceil(jnp.log2(jnp.maximum(absmax, 1e-30) / qmax))
+    exp = jnp.clip(jnp.where(absmax > 0, exp, 0.0), -126, 126)
+    exp = exp.astype(jnp.int8)
+    e = jnp.repeat(exp.astype(jnp.float32), codec.block, axis=1)[:, :v]
+    q = jnp.clip(flat * jnp.exp2(-e), -qmax, qmax)
+    if jnp.issubdtype(wdtype, jnp.integer):
+        # same nonzero-preservation rule as the wire: never round a live
+        # value to zero (consumers divide by shipped properties).
+        q = jnp.where(flat != 0,
+                      jnp.sign(flat) * jnp.maximum(jnp.round(jnp.abs(q)), 1.0),
+                      0.0)
+    return ResidentLeaf(q.astype(wdtype).reshape(x.shape), exp, "scaled",
+                        x.dtype, codec.block)
+
+
+def decode_resident(x):
+    """Leaf-level decode-on-read: ResidentLeaf -> full-precision array,
+    anything else passes through."""
+    return x.decode() if isinstance(x, ResidentLeaf) else x
+
+
+def decode_tree(tree):
+    """Tree-level decode-on-read fallback for ineligible consumers."""
+    return jax.tree.map(decode_resident, tree, is_leaf=is_resident)
+
+
+def resident_hbm_bytes(tree) -> int:
+    """Static HBM bytes of a mirror pytree: encoded leaves count payload +
+    scales, plain leaves their full width — the `mirror_hbm_bytes` BENCH
+    quantity."""
+    total = 0
+    for x in jax.tree.leaves(tree, is_leaf=is_resident):
+        if isinstance(x, ResidentLeaf):
+            total += x.hbm_nbytes()
+        else:
+            total += x.size * x.dtype.itemsize
+    return int(total)
 
 
 # ---------------------------------------------------------------------------

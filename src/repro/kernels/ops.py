@@ -67,36 +67,46 @@ flatten_tiles = _triplet.flatten_tiles
 
 
 def triplet(x, ev, src_slot, dst_slot, live, tiles, tile_fn,
-            num_segments: int, dm: int, *, to: str = "dst",
+            num_segments: int, dm: int, *, xscale=None, to: str = "dst",
             reduce: str = "sum", use_src: bool = True, use_dst: bool = True,
             mode: Mode = "auto", eb: int = 512, vb: int = 512):
     """General fused mrTriplets sweep: gather(src,dst) + map + segment-reduce
     in one pass.  `tiles` is the flat device-resident table dict
     (build_triplet_tiles -> flatten_tiles); the jnp oracle ignores it (pass
-    None).  Returns (out [S, dm] f32, cnt [S] f32)."""
+    None).  `xscale` is the narrow-resident scale plane (§2.4): per-32-row
+    E8M0 exponents dequantizing an encoded `x` at the staging seam — in-VMEM
+    on the kernel path, up-front on the oracle, bit-identical either way.
+    Returns (out [S, dm] f32, cnt [S] f32)."""
     m = _resolve(mode)
     if m == "ref":
         return ref.fused_triplet(x, ev, src_slot, dst_slot, live, tile_fn,
-                                 num_segments, to=to, reduce=reduce)
+                                 num_segments, xscale=xscale, to=to,
+                                 reduce=reduce)
     return _triplet.fused_triplet(
         x, ev, src_slot, dst_slot, live, tiles, tile_fn, num_segments, dm,
-        to=to, reduce=reduce, use_src=use_src, use_dst=use_dst,
+        xscale=xscale, to=to, reduce=reduce, use_src=use_src, use_dst=use_dst,
         eb=eb, vb=vb, interpret=(m == "interpret"))
 
 
 def superstep_apply(payload, slot, live, tiles, x, vid, vmask, apply_fn,
                     num_slots: int, dm: int, dv: int, *,
-                    reduce: str = "sum", mode: Mode = "auto",
+                    reduce: str = "sum", groups: int | None = None,
+                    group_span: int = 1, mode: Mode = "auto",
                     eb: int = 512, vb: int = 512):
     """Fused superstep apply half (§2.3.2): combine the routed aggregate rows
     into per-home-vertex totals, then run the engine's packed vprog/changed
     closure in the same sweep.  `tiles` is the flat apply-route table dict
     (tiles["apply_*"] -> flatten_tiles); the jnp oracle ignores it (pass
-    None).  Returns (new packed state [S, dv] f32, changed [S] f32 0/1)."""
+    None).  `groups`/`group_span` pin the fixed f32 sum accumulation order
+    on the oracle (ascending source partition, each group collision-free);
+    the kernel path gets the same order from the apply tile tables' pe-keyed
+    in_slot grouping, so both are bit-identical to the unfused combine.
+    Returns (new packed state [S, dv] f32, changed [S] f32 0/1)."""
     m = _resolve(mode)
     if m == "ref":
         return ref.fused_apply(payload, slot, live, x, vid, vmask, apply_fn,
-                               num_slots, reduce=reduce)
+                               num_slots, reduce=reduce, groups=groups,
+                               group_span=group_span)
     from . import superstep as _superstep
     return _superstep.fused_apply(
         payload, slot, live, tiles, x, vid, vmask, apply_fn, num_slots,

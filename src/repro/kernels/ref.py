@@ -44,6 +44,20 @@ def fused_gather_segment_sum(
 # single source of truth so oracle and kernel stay bit-identical on empty
 # segments (triplet.py imports nothing back from this module).
 from .triplet import REDUCE_IDENTITY as _TRIPLET_IDENTITY  # noqa: E402
+from .triplet import SCALE_GROUP as _SCALE_GROUP  # noqa: E402
+
+
+def _dequant_rows(xf: jnp.ndarray, xscale: jnp.ndarray) -> jnp.ndarray:
+    """Apply per-SCALE_GROUP-row pow2 exponents to an (exactly upcast) f32
+    staging matrix — the oracle's counterpart of the kernel's in-VMEM
+    `_spread_scale_tile` dequant.  Same values, same multiply, so the two
+    paths stay bit-identical (§2.4)."""
+    s = xf.shape[0]
+    sc = xscale.astype(jnp.float32).reshape(xscale.shape[0], -1)
+    sp = jnp.repeat(sc, _SCALE_GROUP, axis=0)[:s]
+    if sp.shape[1] != xf.shape[1]:          # width-padded staging column
+        sp = jnp.pad(sp, ((0, 0), (0, xf.shape[1] - sp.shape[1])))
+    return xf * jnp.exp2(sp)
 
 
 def fused_triplet(
@@ -55,6 +69,7 @@ def fused_triplet(
     tile_fn,                 # ([E,Dx],[E,De],[E,Dx]) -> [E,Dm] f32
     num_segments: int,
     *,
+    xscale: jnp.ndarray | None = None,   # [ceil(S/32), Dx] E8M0 exponents
     to: str = "dst",
     reduce: str = "sum",
 ) -> tuple[jnp.ndarray, jnp.ndarray]:
@@ -74,6 +89,8 @@ def fused_triplet(
     xf = x.astype(jnp.float32).reshape(s, -1)
     if xf.shape[1] == 0:
         xf = jnp.zeros((s, 1), jnp.float32)
+    if xscale is not None:
+        xf = _dequant_rows(xf, xscale)
     evf = ev.astype(jnp.float32).reshape(ev.shape[0], -1)
     if evf.shape[1] == 0:
         evf = jnp.zeros((ev.shape[0], 1), jnp.float32)
@@ -110,6 +127,9 @@ def fused_apply(
     num_slots: int,          # = S
     *,
     reduce: str = "sum",
+    groups: int | None = None,   # fixed-order sum: number of source-partition
+                                 # groups; row r belongs to (r//group_span)%groups
+    group_span: int = 1,         # contiguous rows per group per home partition
 ) -> tuple[jnp.ndarray, jnp.ndarray]:
     """Oracle for kernels/superstep.fused_apply — the home half of a fused
     Pregel superstep (DESIGN.md §2.3.2): combine the routed per-partition
@@ -118,12 +138,32 @@ def fused_apply(
     `apply_fn` owns the engine's per-leaf unpack / default-message
     substitution / visibility select / changed derivation, so the oracle and
     kernel share it verbatim and differ only in how the combine lands.
+
+    `groups`/`group_span` pin the FIXED accumulation order for f32 sums
+    (§2.4, PR-7 follow-up (b)): the aggregate-return route lays rows out as
+    [nl, P, K] so rows of one source partition (one group) never collide on
+    a home slot — each group is a collision-free scatter, and accumulating
+    groups in ascending order reproduces the kernel's ascending-chunk adds
+    bit-for-bit.  With groups=None sums fall back to segment_sum (only safe
+    when the caller tolerates reassociation).
+
     Returns (new packed state [S, Dv] f32, changed [S] f32 0/1)."""
     ident = _TRIPLET_IDENTITY[reduce]
     seg = jnp.where(live, slot, num_slots)                       # dead -> OOB
     cnt = jax.ops.segment_sum(live.astype(jnp.float32), seg,
                               num_segments=num_slots + 1)[:num_slots]
-    if reduce == "sum":
+    if reduce == "sum" and groups is not None:
+        r = payload.shape[0]
+        m = jnp.where(live[:, None], payload, 0.0).astype(jnp.float32)
+        gid = (jnp.arange(r) // group_span) % groups
+        acc = jnp.zeros((num_slots + 1, payload.shape[1]), jnp.float32)
+        for g in range(groups):
+            sel = gid == g
+            idx = jnp.where(sel, seg, num_slots)
+            acc = acc.at[idx].add(jnp.where(sel[:, None], m, 0.0),
+                                  mode="drop")
+        acc = acc[:num_slots]
+    elif reduce == "sum":
         m = jnp.where(live[:, None], payload, 0.0).astype(jnp.float32)
         acc = jax.ops.segment_sum(m, seg,
                                   num_segments=num_slots + 1)[:num_slots]

@@ -55,6 +55,12 @@ REDUCE_IDENTITY = {
 DEFAULT_EDGE_BLOCK = 512
 DEFAULT_VERTEX_BLOCK = 512
 
+# Rows covered by one narrow-resident scale exponent (DESIGN.md §2.4).  Must
+# match the wire codec's scale block: the engine only plans encoded staging
+# when `codec.block == SCALE_GROUP`, so one [vb//SCALE_GROUP, D] scale tile
+# dequantizes one [vb, D] payload tile with a static-shape broadcast.
+SCALE_GROUP = 32
+
 
 # ----------------------------------------------------------------------------
 # Build-time tiling metadata (numpy; structure is immutable so this runs once
@@ -224,12 +230,25 @@ def segmented_reduce_mxu(vals, slot, reduce: str, ident, oh_out):
     return jnp.where(present, red, ident)
 
 
-def _make_kernel(tile_fn: Callable, reduce: str, dm: int):
+def _spread_scale_tile(scale_ref, vb: int) -> jnp.ndarray:
+    """[vb//SCALE_GROUP, D] per-block exponent tile -> [vb, D] f32 pow2
+    multipliers, each scale row covering its SCALE_GROUP payload rows.
+    exp2 of an int exponent in [-126, 126] is exact in f32, so multiplying
+    the (exactly upcast) narrow payload by this is the same dequant
+    `wire.decode_resident` performs — bit-identical staging (§2.4)."""
+    sc = scale_ref[...].astype(jnp.float32)
+    d = sc.shape[-1]
+    sc = jnp.broadcast_to(sc[:, None, :],
+                          (sc.shape[0], SCALE_GROUP, d)).reshape(vb, d)
+    return jnp.exp2(sc)
+
+
+def _make_kernel(tile_fn: Callable, reduce: str, dm: int, have_scale: bool):
     ident = REDUCE_IDENTITY[reduce]
 
     def kernel(cout_ref, csrc_ref, cdst_ref, act_ref,
                sloc_ref, dloc_ref, oloc_ref, live_ref, ev_ref,
-               xs_ref, xd_ref, out_ref, cnt_ref):
+               xs_ref, xd_ref, ss_ref, ds_ref, out_ref, cnt_ref):
         i = pl.program_id(0)      # aggregation-side block
         c = pl.program_id(1)      # chunk
 
@@ -249,13 +268,19 @@ def _make_kernel(tile_fn: Callable, reduce: str, dm: int):
             cols = jax.lax.broadcasted_iota(jnp.int32, (eb, vb), 1)
             oh_s = (sloc_ref[...][:, None] == cols).astype(jnp.float32)
             oh_d = (dloc_ref[...][:, None] == cols).astype(jnp.float32)
+            xs = xs_ref[...].astype(jnp.float32)
+            xd = xd_ref[...].astype(jnp.float32)
+            if have_scale:
+                # narrow-RESIDENT mirror tile (§2.4): the payload arrived in
+                # its encoded dtype; dequantize HERE, in VMEM, so the f32
+                # copy never exists in HBM.
+                xs = xs * _spread_scale_tile(ss_ref, vb)
+                xd = xd * _spread_scale_tile(ds_ref, vb)
             sv = jax.lax.dot_general(                            # gather src
-                oh_s, xs_ref[...].astype(jnp.float32),
-                (((1,), (0,)), ((), ())),
+                oh_s, xs, (((1,), (0,)), ((), ())),
                 preferred_element_type=jnp.float32)              # [Eb, Dx]
             dv = jax.lax.dot_general(                            # gather dst
-                oh_d, xd_ref[...].astype(jnp.float32),
-                (((1,), (0,)), ((), ())),
+                oh_d, xd, (((1,), (0,)), ((), ())),
                 preferred_element_type=jnp.float32)
             msgs = tile_fn(sv, ev_ref[...].astype(jnp.float32), dv)  # [Eb, Dm]
             # dead rows (padding / masked / stale) gathered ZERO endpoint
@@ -290,7 +315,8 @@ def _make_kernel(tile_fn: Callable, reduce: str, dm: int):
     static_argnames=("tile_fn", "num_segments", "dm", "to", "reduce",
                      "use_src", "use_dst", "eb", "vb", "interpret"))
 def fused_triplet(
-    x: jnp.ndarray,           # [S, Dx] packed mirror matrix (any float dtype)
+    x: jnp.ndarray,           # [S, Dx] packed mirror matrix (any float dtype,
+                              # or the encoded payload dtype when xscale set)
     ev: jnp.ndarray,          # [E, De] packed edge payload
     src_slot: jnp.ndarray,    # [E] int32 in [0, S)
     dst_slot: jnp.ndarray,    # [E] int32 in [0, S)
@@ -301,6 +327,9 @@ def fused_triplet(
     num_segments: int,        # = S
     dm: int,                  # message width
     *,
+    xscale: jnp.ndarray | None = None,  # [S//SCALE_GROUP, Dx] E8M0 exponents
+                              # (narrow-resident staging, §2.4) — row b scales
+                              # payload rows [b*32, (b+1)*32)
     to: str = "dst",
     reduce: str = "sum",
     use_src: bool = True,
@@ -339,6 +368,28 @@ def fused_triplet(
     dummy = jnp.zeros((v_pad, 1), jnp.float32)
     xs_in, dxs = (xp, dx) if use_src else (dummy, 1)
     xd_in, dxd = (xp, dx) if use_dst else (dummy, 1)
+
+    # narrow-resident scale plane: one exponent row per SCALE_GROUP payload
+    # rows, tiled through the SAME index maps as the payload (vb//32 scale
+    # rows track each vb payload tile).  Zero-exponent padding dequantizes
+    # as identity.  Unscaled calls may run vb < SCALE_GROUP (kernel sweeps
+    # use tiny tiles); the never-read dummy then keeps one row per payload
+    # tile so no block dimension is zero.
+    if xscale is not None and vb % SCALE_GROUP:
+        raise ValueError(
+            f"xscale staging requires vb % {SCALE_GROUP} == 0, got vb={vb}")
+    sb = max(vb // SCALE_GROUP, 1)        # scale rows per payload tile
+    sc_rows = n_vb * sb
+    sc_dummy = jnp.zeros((sc_rows, 1), jnp.int8)
+    if xscale is not None:
+        scp = jnp.pad(xscale.reshape(xscale.shape[0], -1),
+                      ((0, sc_rows - xscale.shape[0]),
+                       (0, max(1 - xscale.shape[1], 0))))
+        ss_in, dss = (scp, dxs) if use_src else (sc_dummy, 1)
+        ds_in, dds = (scp, dxd) if use_dst else (sc_dummy, 1)
+    else:
+        ss_in, dss = sc_dummy, 1
+        ds_in, dds = sc_dummy, 1
     evp = jnp.concatenate(
         [ev.reshape(e, -1), jnp.zeros((1, ev.shape[1]), ev.dtype)])
     if ev.shape[1] == 0:
@@ -373,6 +424,10 @@ def fused_triplet(
             pl.BlockSpec((1, eb, de), lambda i, c, co_, cs_, cd_, a: (c, 0, 0)),
             pl.BlockSpec((vb, dxs), lambda i, c, co_, cs_, cd_, a: (cs_[c], 0)),
             pl.BlockSpec((vb, dxd), lambda i, c, co_, cs_, cd_, a: (cd_[c], 0)),
+            pl.BlockSpec((sb, dss),
+                         lambda i, c, co_, cs_, cd_, a: (cs_[c], 0)),
+            pl.BlockSpec((sb, dds),
+                         lambda i, c, co_, cs_, cd_, a: (cd_[c], 0)),
         ],
         out_specs=[
             pl.BlockSpec((vb, dm), lambda i, c, co_, cs_, cd_, a: (i, 0)),
@@ -380,14 +435,14 @@ def fused_triplet(
         ],
     )
 
-    inner = _make_kernel(tile_fn, reduce, dm)
+    inner = _make_kernel(tile_fn, reduce, dm, xscale is not None)
 
     def kern(co_ref, cs_ref, cd_ref, a_ref,
              sloc_ref, dloc_ref, oloc_ref, live_ref, ev_ref,
-             xs_ref, xd_ref, out_ref, cnt_ref):
+             xs_ref, xd_ref, ss_ref, ds_ref, out_ref, cnt_ref):
         inner(co_ref, cs_ref, cd_ref, a_ref,
               sloc_ref[0], dloc_ref[0], oloc_ref[0], live_ref[0], ev_ref[0],
-              xs_ref, xd_ref, out_ref, cnt_ref)
+              xs_ref, xd_ref, ss_ref, ds_ref, out_ref, cnt_ref)
 
     out, cnt = pl.pallas_call(
         kern,
@@ -396,5 +451,5 @@ def fused_triplet(
                    jax.ShapeDtypeStruct((v_pad, 1), jnp.float32)],
         interpret=interpret,
     )(chunk_out, chunk_src, chunk_dst, act,
-      cs, cd, co, clive_f, cev, xs_in, xd_in)
+      cs, cd, co, clive_f, cev, xs_in, xd_in, ss_in, ds_in)
     return out[:num_segments], cnt[:num_segments, 0]

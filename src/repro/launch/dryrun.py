@@ -299,7 +299,7 @@ def _graph_cell_sds(mesh, *, n_vertices: int, n_edges: int,
 
 def lower_graph_cell(mesh, *, n_vertices=41_652_230, n_edges=1_468_365_182,
                      supersteps: int = 1, return_hlo: bool = False,
-                     wire_dtype=None, wire: str | None = None,
+                     wire: str | None = None,
                      wire_delta: bool = False, mirror_factor: float = 2.0,
                      contrib_form: bool = False,
                      transport: str | None = None,
@@ -311,8 +311,7 @@ def lower_graph_cell(mesh, *, n_vertices=41_652_230, n_edges=1_468_365_182,
 
     wire: codec name ("f32"/"bf16"/"int8"/"fp8_e4m3"/"fp8_e5m2") for the
     mirror exchange (DESIGN.md §2.1); wire_delta enables active-set delta
-    accounting.  wire_dtype is the pre-codec narrowing knob, kept for
-    existing callers.
+    accounting.
 
     integrity (DESIGN.md §6): lower the cell with the per-route integrity
     word + retry/degrade ladder enabled, so the dry-run report prices the
@@ -349,7 +348,7 @@ def lower_graph_cell(mesh, *, n_vertices=41_652_230, n_edges=1_468_365_182,
                 else transport_mod.DENSE).replace(integrity=True)
 
     p = mesh_axis_sizes(mesh)["parts"]
-    ex = SpmdExchange(p=p, axis_name="parts", wire_dtype=wire_dtype)
+    ex = SpmdExchange(p=p, axis_name="parts")
     if wire is not None:
         ex = with_wire(ex, wire, delta=wire_delta or None)
     # contrib_form is PowerGraph-style pre-aggregation: the message reads
@@ -562,6 +561,77 @@ def check_bcast_single_allgather(*, p: int = 4,
     return cells
 
 
+def check_hbm_resident(*, p: int = 4, scale: int = 9, edge_factor: int = 10,
+                       seed: int = 2, threshold: float = 0.35) -> dict:
+    """`--hbm-check` (DESIGN.md §2.4): narrow-RESIDENT mirrors must shrink
+    the view carry's HBM bytes to <= `threshold` of the f32 baseline on the
+    twitter-sim R-MAT PageRank cell.  Checked twice:
+
+      * CONCRETE — run one warm superstep per codec and measure the view
+        mirror's static resident bytes (`wire.resident_hbm_bytes`): int8
+        keeps a 1-byte payload + a 1/32-density scale plane per f32 leaf,
+        so the ratio lands near 26%;
+      * COMPILED — lower the same warm superstep (the view rides the
+        graph's carry, in AND out) and read the argument/output buffer
+        totals from the XLA memory analysis: the encoded mirror must
+        shrink the compiled carry, not just the Python-side accounting.
+    """
+    import dataclasses as _dc
+    from ..core import Graph as GraphCls
+    from ..core import algorithms as alg_mod
+    from ..core import wire as wire_cdc
+    from ..core.exchange import LocalExchange, with_wire
+    from ..core.pregel import _superstep
+    from ..data import rmat
+
+    gd = rmat(scale, edge_factor, seed=seed)
+    base = GraphCls.from_edges(gd.src, gd.dst, num_partitions=p)
+    base = alg_mod.attach_out_degree(base, kernel_mode="ref")
+    base = base.mapV(lambda vid, v: {**v, "pr": jnp.float32(1.0)})
+
+    def send(sv, ev, dv):
+        return {"m": sv["pr"] / sv["deg"] * ev["w"]}
+
+    def vprog(vid, v, msg):
+        return {**v, "pr": 0.15 + 0.85 * msg["m"]}
+
+    def step(gg):
+        g2, live, _ = _superstep(
+            gg, vprog=vprog, send_msg=send, gather="sum",
+            default_msg={"m": jnp.float32(0.0)}, skip_stale=None,
+            changed_fn=None, kernel_mode="ref", use_cache=True)
+        return g2, live
+
+    cells = {}
+    for name in ("f32", "int8"):
+        ex = LocalExchange(p=p)
+        if name == "int8":
+            ex = with_wire(ex, "int8", resident=True)
+        # view=None: the codec owns the mirror's resident format, so each
+        # cell starts cold rather than inheriting the build chain's plain
+        # f32 view (values would be identical; the footprint would lie).
+        g2, _ = step(_dc.replace(base, ex=ex, view=None))  # warm eagerly
+        mem = jax.jit(step).lower(g2).compile().memory_analysis()
+        cells[name] = {
+            "mirror_hbm_bytes": wire_cdc.resident_hbm_bytes(g2.view.mirror),
+            "hlo_argument_bytes": int(mem.argument_size_in_bytes),
+            "hlo_output_bytes": int(mem.output_size_in_bytes),
+        }
+        print(f"  {name:5s} mirror={cells[name]['mirror_hbm_bytes']} "
+              f"args={cells[name]['hlo_argument_bytes']} "
+              f"out={cells[name]['hlo_output_bytes']}", flush=True)
+    ratio = (cells["int8"]["mirror_hbm_bytes"]
+             / max(cells["f32"]["mirror_hbm_bytes"], 1))
+    cells["ratio"] = round(ratio, 4)
+    cells["threshold"] = threshold
+    assert ratio <= threshold, cells
+    assert (cells["int8"]["hlo_argument_bytes"]
+            < cells["f32"]["hlo_argument_bytes"]), cells
+    assert (cells["int8"]["hlo_output_bytes"]
+            < cells["f32"]["hlo_output_bytes"]), cells
+    return cells
+
+
 def check_ragged_tracks_active(mesh, *, mirror_factor: float = 2.0,
                                fracs=(0.25, 0.5)) -> dict:
     """Dry-run HLO check (DESIGN.md §2.1.1): the ragged PageRank cell's
@@ -705,7 +775,6 @@ def main() -> None:
     ap.add_argument("--moe-bf16", action="store_true")
     ap.add_argument("--moe-cap", type=float, default=None)
     ap.add_argument("--moe-groups", action="store_true")
-    ap.add_argument("--wire-bf16", action="store_true")
     ap.add_argument("--wire", default=None,
                     choices=["f32", "bf16", "int8", "fp8_e4m3", "fp8_e5m2"],
                     help="graph cell: wire codec for the mirror exchange")
@@ -729,6 +798,9 @@ def main() -> None:
     ap.add_argument("--bcast-check", action="store_true",
                     help="graph cell: assert in the compiled HLO that the "
                          "broadcast lane lowers to exactly one all-gather")
+    ap.add_argument("--hbm-check", action="store_true",
+                    help="graph cell: assert narrow-resident int8 mirrors "
+                         "shrink the view carry's HBM bytes (§2.4)")
     ap.add_argument("--ragged-check", action="store_true",
                     help="graph cell: lower dense + two ragged capacities "
                          "and assert collective bytes track the fraction")
@@ -791,6 +863,10 @@ def main() -> None:
             _upsert(entries, rec)
             _save_report(entries)
             return
+        if args.hbm_check:
+            cells = check_hbm_resident()
+            print(json.dumps({"hbm_check": "ok", "cells": cells}, indent=1))
+            return
         if args.profile_ships:
             gmesh = make_graph_mesh(multi_pod=args.multi_pod)
             cells = profile_ships(gmesh, mirror_factor=args.mirror_factor)
@@ -807,8 +883,7 @@ def main() -> None:
         for mp in ([False, True] if args.both_meshes else [args.multi_pod]):
             gmesh = make_graph_mesh(multi_pod=mp)
             rec = lower_graph_cell(
-                gmesh, wire_dtype=jnp.bfloat16 if args.wire_bf16 else None,
-                wire=args.wire, wire_delta=args.wire_delta,
+                gmesh, wire=args.wire, wire_delta=args.wire_delta,
                 mirror_factor=args.mirror_factor,
                 contrib_form=args.contrib_form,
                 transport=args.transport,

@@ -169,8 +169,6 @@ def main():
                     help="MoE capacity factor override")
     ap.add_argument("--moe-groups", action="store_true",
                     help="group-local (GShard-style) MoE routing")
-    ap.add_argument("--wire-bf16", action="store_true",
-                    help="graph cell: bf16 on-wire shipping")
     ap.add_argument("--wire", default=None,
                     choices=["f32", "bf16", "int8", "fp8_e4m3", "fp8_e5m2"],
                     help="graph cell: wire codec for the mirror exchange "
@@ -220,7 +218,6 @@ def main():
         mesh = make_graph_mesh(multi_pod=False)
         rec, txt = dryrun.lower_graph_cell(
             mesh, return_hlo=True,
-            wire_dtype=jnp.bfloat16 if args.wire_bf16 else None,
             wire=args.wire, wire_delta=args.wire_delta,
             mirror_factor=args.mirror_factor,
             contrib_form=args.contrib_form,

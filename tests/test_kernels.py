@@ -233,10 +233,10 @@ def test_fused_skip_stale_matches_unfused(skip_stale):
 def test_fused_bf16_wire_within_tolerance():
     """bf16 wire dtype: fused upcasts the packed view to f32 before the map,
     the unfused path computes in bf16 — results agree within bf16 tolerance."""
-    from repro.core import pack_bf16
+    from repro.core import with_wire
     from repro.core.mrtriplets import mr_triplets
     gr, _ = _build_engine_graph()
-    gr16 = gr.replace(ex=pack_bf16(gr.ex))
+    gr16 = gr.replace(ex=with_wire(gr.ex, "bf16"))
     f = _NEED_FNS["both"]
     a, ea, _, _ = mr_triplets(gr16, f, "sum", kernel_mode="unfused")
     b, eb_, _, mb = mr_triplets(gr16, f, "sum", kernel_mode="ref")
@@ -582,3 +582,54 @@ def test_mlstm_kernel_chunk_sizes_agree():
                             chunk=c, interpret=True)) for c in (16, 64, 128)]
     for o in outs[1:]:
         np.testing.assert_allclose(outs[0], o, rtol=1e-3, atol=1e-3)
+
+
+@pytest.mark.parametrize("codec", ["int8", "fp8_e4m3"])
+@pytest.mark.parametrize("mode", ["ref", "interpret"])
+def test_fused_encoded_staging_matches_decode_fallback(mode, codec):
+    """§2.4 narrow-resident staging differential: when every used mirror
+    leaf is a ResidentLeaf the fused sweep streams the NARROW payload plus
+    its scale plane and dequantizes per tile (an exact exponent shift);
+    the unfused path decodes the same mirror on read.  Both consume
+    identical quantized values, so the two plans are bit-for-bit — the
+    dequant itself is part of the differential (a missing scale plane
+    shows up as pow2-scaled garbage, not tolerance noise)."""
+    from repro.core import with_wire
+    from repro.core import wire as wire_mod
+    from repro.core.mrtriplets import mr_triplets
+    gr, _ = _build_engine_graph()
+    g8 = gr.replace(ex=with_wire(gr.ex, codec, resident=True))
+    f = _NEED_FNS["both"]
+    a, ea, va, ma = mr_triplets(g8, f, "sum", kernel_mode="unfused")
+    b, eb_, vb_, mb = mr_triplets(g8, f, "sum", kernel_mode=mode)
+    assert ma["plan"] == "unfused" and mb["plan"] == "fused"
+    # the warm mirror really is encoded (kind "scaled" for the f32 leaf)
+    enc = [l for l in jax.tree.leaves(vb_.mirror,
+                                      is_leaf=wire_mod.is_resident)
+           if wire_mod.is_resident(l)]
+    assert enc and all(l.kind == "scaled" for l in enc)
+    assert bool(jnp.all(ea == eb_))
+    mask = np.asarray(ea)
+    np.testing.assert_array_equal(np.asarray(a["m"])[mask],
+                                  np.asarray(b["m"])[mask])
+
+
+def test_fused_resident_int_kind_rides_with_zero_exponents(    ):
+    """"int"-kind resident leaves (bounded int32 -> int8 cast) share the
+    encoded staging matrix with zero exponents — exp2(0) == 1 and the
+    payload upcasts exactly, so fused == unfused bit-for-bit."""
+    from repro.core import with_wire
+    from repro.core.mrtriplets import mr_triplets
+    gr, _ = _build_engine_graph()
+    g = gr.mapV(lambda vid, v: {"c": (vid % 50).astype(jnp.int32)})
+    g8 = g.replace(ex=with_wire(g.ex, "int8", resident=True))
+    f = lambda sv, ev, dv: {"m": sv["c"]}
+    a, ea, _, _ = mr_triplets(g8, f, "max", kernel_mode="unfused",
+                              payload_bound=50)
+    b, eb_, _, mb = mr_triplets(g8, f, "max", kernel_mode="ref",
+                                payload_bound=50)
+    assert mb["plan"] == "fused"
+    assert bool(jnp.all(ea == eb_))
+    mask = np.asarray(ea)
+    np.testing.assert_array_equal(np.asarray(a["m"])[mask],
+                                  np.asarray(b["m"])[mask])

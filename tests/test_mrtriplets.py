@@ -132,9 +132,9 @@ def test_skip_stale_masks_edges():
 
 
 def test_bf16_wire_shipping():
-    from repro.core import pack_bf16
+    from repro.core import with_wire
     gr, g, vals = build()
-    gr16 = gr.replace(ex=pack_bf16(gr.ex))
+    gr16 = gr.replace(ex=with_wire(gr.ex, "bf16"))
     f = lambda sv, ev, dv: {"m": sv["x"]}
     a, _, _, _ = mr_triplets(gr, f, "sum", kernel_mode="ref")
     b, _, _, _ = mr_triplets(gr16, f, "sum", kernel_mode="ref")

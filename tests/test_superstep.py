@@ -66,10 +66,11 @@ def test_fused_apply_cc_bit_exact_vs_unfused_and_oracle():
     assert got == want
 
 
-def test_fused_apply_sum_is_opt_in():
-    """f32 sum order differs inside the fused sweep, so bit-exactness is
-    not guaranteed: "auto" must stay unfused; "always" opts in and agrees
-    to float tolerance."""
+def test_fused_apply_sum_fuses_by_default():
+    """f32 sums fuse under "auto" (PR-7 follow-up (b) landed): both the
+    fused sweep and the unfused scatter-add accumulate in the SAME fixed
+    order (ascending source partition, collision-free within a partition's
+    apply tiles), so the fusion is bit-exact — not merely close."""
     gd = rmat(7, 6, seed=3)
     g = Graph.from_edges(gd.src, gd.dst, num_partitions=4)
     g = alg.attach_out_degree(g, kernel_mode="ref")
@@ -91,13 +92,13 @@ def test_fused_apply_sum_is_opt_in():
             skip_stale="out", changed_fn=changed, track_metrics=True,
             fuse_apply=fuse, max_supersteps=15)
 
+    r_un = run("unfused")
     r_auto = run("auto")
-    r_fused = run("always")
-    assert r_auto.metrics[0]["apply_plan"] == "unfused"
-    assert r_fused.metrics[0]["apply_plan"] == "fused_apply"
-    np.testing.assert_allclose(np.asarray(r_fused.graph.vdata["pr"]),
-                               np.asarray(r_auto.graph.vdata["pr"]),
-                               rtol=1e-5, atol=1e-6)
+    assert r_un.metrics[0]["apply_plan"] == "unfused"
+    assert r_auto.metrics[0]["apply_plan"] == "fused_apply"
+    np.testing.assert_array_equal(np.asarray(r_auto.graph.vdata["pr"]),
+                                  np.asarray(r_un.graph.vdata["pr"]))
+    assert r_auto.supersteps == r_un.supersteps
 
 
 def test_apply_plan_width_eligibility():

@@ -15,7 +15,7 @@ import numpy as np
 import jax.numpy as jnp
 import pytest
 
-from repro.core import Graph, Col, algorithms as alg, pack_bf16
+from repro.core import Graph, Col, algorithms as alg, with_wire
 from repro.core.mrtriplets import mr_triplets
 from repro.data import rmat, symmetrize
 
@@ -106,7 +106,7 @@ def test_bf16_wire_shipping_close_to_f32():
         return {"m": sv["pr"] / sv["deg"] * ev["w"]}
 
     vals32, exists32, _, _ = mr_triplets(g, send, "sum", kernel_mode="ref")
-    g16 = g.replace(ex=pack_bf16(g.ex))
+    g16 = g.replace(ex=with_wire(g.ex, "bf16"))
     vals16, exists16, _, _ = mr_triplets(g16, send, "sum", kernel_mode="ref")
     np.testing.assert_array_equal(np.asarray(exists32), np.asarray(exists16))
     np.testing.assert_allclose(np.asarray(vals16["m"]),

@@ -453,3 +453,104 @@ def test_ship_metrics_zero_matches_live_dtypes_under_x64():
         assert int(out.n_shipped) == 0
     # and outside x64 the counters stay the default int32
     assert ShipMetrics.zero().n_shipped.dtype == jnp.zeros((), bool).sum().dtype
+
+
+# ---------------------------------------------------------------------------
+# §2.4 narrow-resident mirrors: encoded-in-HBM vs decode-at-materialization
+# ---------------------------------------------------------------------------
+def _with_resident(gr, codec):
+    from repro.core import with_wire
+    return gr.replace(ex=with_wire(gr.ex, codec, resident=True))
+
+
+@pytest.mark.parametrize("kernel_mode", ["ref", "unfused"])
+def test_narrow_resident_int_bit_exact(kernel_mode):
+    """Exact-representable ints under a certified bound: the resident "int"
+    mirror is a lossless cast, so encoded-resident equals the wire-only
+    (decode-at-scatter) int8 path bit for bit — and the warm view's HBM
+    footprint is strictly smaller."""
+    from repro.core import with_wire
+    from repro.core import wire as wire_mod
+
+    gr, _ = build()
+    g = gr.mapV(lambda vid, v: {"c": (vid % 100).astype(jnp.int32)})
+    send = lambda sv, ev, dv: {"m": sv["c"]}
+    want, ew, gw, _ = g.replace(ex=with_wire(g.ex, "int8")).mrTriplets(
+        send, "max", kernel_mode=kernel_mode, payload_bound=100)
+    got, eg, gres, _ = _with_resident(g, "int8").mrTriplets(
+        send, "max", kernel_mode=kernel_mode, payload_bound=100)
+    np.testing.assert_array_equal(np.asarray(ew), np.asarray(eg))
+    np.testing.assert_array_equal(np.asarray(got["m"]), np.asarray(want["m"]))
+    enc = [l for l in jax.tree.leaves(gres.view.mirror,
+                                      is_leaf=wire_mod.is_resident)
+           if wire_mod.is_resident(l)]
+    assert enc and all(l.kind == "int" for l in enc)
+    assert (wire_mod.resident_hbm_bytes(gres.view.mirror)
+            < wire_mod.resident_hbm_bytes(gw.view.mirror))
+
+
+@pytest.mark.parametrize("kernel_mode", ["ref", "unfused"])
+def test_narrow_resident_f32_pagerank_norm_err(kernel_mode):
+    """f32 PageRank under the scaled int8 codec: a SINGLE materialization
+    is bit-exact (the resident mirror holds exactly the wire-quantized
+    values), and each warm refresh may re-quantize a scatter-touched block
+    against its new vertex-axis absmax — at most ONE quantization step
+    (rel 1/(2*qmax) = 1/254) of drift per refresh, the §2.4 contract.  The
+    iterated pin is therefore `iters/254` relative L2 vs the wire-only
+    run; the resident view is ~4x narrower in HBM."""
+    from repro.core import with_wire
+    from repro.core import wire as wire_mod
+
+    def rel_l2(a, b):
+        a, b = np.asarray(a, np.float64), np.asarray(b, np.float64)
+        return np.linalg.norm(a - b) / max(np.linalg.norm(b), 1e-30)
+
+    gr, _ = build()
+    # one materialization: zero drift, bit for bit
+    r_wire1 = alg.pagerank(gr.replace(ex=with_wire(gr.ex, "int8")),
+                           num_iters=1, kernel_mode=kernel_mode)
+    r_res1 = alg.pagerank(_with_resident(gr, "int8"),
+                          num_iters=1, kernel_mode=kernel_mode)
+    np.testing.assert_array_equal(np.asarray(r_res1.graph.vdata["pr"]),
+                                  np.asarray(r_wire1.graph.vdata["pr"]))
+
+    iters = 5
+    r_f32 = alg.pagerank(gr, num_iters=iters, kernel_mode=kernel_mode)
+    r_wire = alg.pagerank(gr.replace(ex=with_wire(gr.ex, "int8")),
+                          num_iters=iters, kernel_mode=kernel_mode)
+    r_res = alg.pagerank(_with_resident(gr, "int8"),
+                         num_iters=iters, kernel_mode=kernel_mode)
+    pr_res = r_res.graph.vdata["pr"]
+    assert rel_l2(pr_res, r_wire.graph.vdata["pr"]) <= iters / 254.0
+    # distance to the f32 truth is quantization noise, not residency drift:
+    # both int8 runs sit at the same (loose) distance from f32
+    assert rel_l2(pr_res, r_f32.graph.vdata["pr"]) <= 5e-2
+    mir_res = wire_mod.resident_hbm_bytes(r_res.graph.view.mirror)
+    mir_wire = wire_mod.resident_hbm_bytes(r_wire.graph.view.mirror)
+    assert mir_res <= 0.35 * mir_wire, (mir_res, mir_wire)
+
+
+def test_resident_mirror_survives_rewrite_and_rewarms():
+    """view_after_rewrite keeps surviving leaves' ResidentLeaf mirrors
+    encoded; a warm->delta chain under the resident codec stays value-equal
+    to the same chain run cold."""
+    from repro.core import wire as wire_mod
+
+    gr, _ = build()
+    g8 = _with_resident(gr, "int8")
+    send = lambda sv, ev, dv: {"m": sv["x"] + sv["y"]}
+    _, _, warm, _ = g8.mrTriplets(send, "sum", kernel_mode="ref")
+    enc = [l for l in jax.tree.leaves(warm.view.mirror,
+                                      is_leaf=wire_mod.is_resident)
+           if wire_mod.is_resident(l)]
+    assert enc, "resident codec should encode the warm mirror"
+    bump = lambda vid, v: {"x": v["x"] + 1.0, "y": v["y"]}
+    got, _, after, _ = warm.mapV(bump).mrTriplets(send, "sum",
+                                                  kernel_mode="ref")
+    want, _, _, _ = warm.mapV(bump).replace(view=None).mrTriplets(
+        send, "sum", kernel_mode="ref")
+    np.testing.assert_array_equal(np.asarray(got["m"]), np.asarray(want["m"]))
+    enc2 = [l for l in jax.tree.leaves(after.view.mirror,
+                                       is_leaf=wire_mod.is_resident)
+            if wire_mod.is_resident(l)]
+    assert enc2, "delta refresh must re-encode, not silently widen"

@@ -10,8 +10,7 @@ import jax
 import jax.numpy as jnp
 import pytest
 
-from repro.core import (Graph, LocalExchange, algorithms as alg, pack_bf16,
-                        with_wire)
+from repro.core import (Graph, LocalExchange, algorithms as alg, with_wire)
 from repro.core.mrtriplets import mr_triplets, plan_of
 from repro.core import wire as W
 from repro.data import rmat, symmetrize
@@ -39,13 +38,15 @@ def test_registry_and_with_wire():
         with_wire(ex, "int4")
 
 
-def test_pack_bf16_shim_matches_with_wire():
-    """The deprecated helper is with_wire(ex, "bf16"): floats narrow, the
-    result STAYS bf16 in the shipped buffer (mirror stores the wire dtype).
-    The shim WARNS — callers migrate to with_wire (repro-internal use is a
-    hard error via the pytest.ini filterwarnings gate)."""
-    with pytest.warns(DeprecationWarning, match="with_wire"):
-        ex = pack_bf16(LocalExchange(4))
+def test_legacy_shims_removed():
+    """The PR-4-deprecated surfaces are GONE: `pack_bf16` no longer exists
+    and `Exchange` takes no `wire_dtype=` — with_wire(ex, "bf16") is the
+    one spelling.  The bf16 wire behavior they shimmed is unchanged."""
+    import repro.core as core
+    assert not hasattr(core, "pack_bf16")
+    with pytest.raises(TypeError):
+        LocalExchange(4, wire_dtype=jnp.bfloat16)
+    ex = with_wire(LocalExchange(4), "bf16")
     assert ex.codec.name == "bf16" and ex.codec.fdtype == jnp.bfloat16
     x = jnp.asarray(np.random.default_rng(0).normal(size=(4, 4, 8))
                     .astype(np.float32))
@@ -55,15 +56,6 @@ def test_pack_bf16_shim_matches_with_wire():
         np.asarray(shipped.astype(jnp.float32)),
         np.asarray(jnp.swapaxes(x, 0, 1).astype(jnp.bfloat16)
                    .astype(jnp.float32)))
-
-
-def test_legacy_wire_dtype_field_still_narrows():
-    ex = LocalExchange(4, wire_dtype=jnp.bfloat16)
-    assert ex.codec is not None and not ex.codec.pack_ints
-    assert ex.ship(jnp.ones((4, 4, 8), jnp.float32)).dtype == jnp.bfloat16
-    # legacy field never touches integers
-    ids = jnp.ones((4, 4, 8), jnp.int32)
-    assert ex.ship(ids, bound=100).dtype == jnp.int32
 
 
 # ---------------------------------------------------------------------------
@@ -368,12 +360,13 @@ def test_narrow_int_dtypes_ignore_default_id_bound():
     assert int(np.asarray(want["m"]).max()) == 300
 
 
-def test_bf16_wire_unchanged_by_codec_layer():
-    """The legacy bf16 path must produce numerically identical results
-    through the codec layer (regression vs the pre-codec Exchange.ship)."""
+def test_bf16_resident_matches_wire_only():
+    """§2.4: bf16 is a plain-narrowing float codec, so it is resident-
+    INELIGIBLE (`resident_kind` -> None: its mirrors are already narrow) —
+    `resident=True` must be a harmless no-op, bit-identical end to end."""
     g, _ = _graph()
-    r_new = alg.pagerank(g.replace(ex=with_wire(g.ex, "bf16")), num_iters=5)
-    r_leg = alg.pagerank(g.replace(
-        ex=LocalExchange(4, wire_dtype=jnp.bfloat16)), num_iters=5)
-    np.testing.assert_array_equal(np.asarray(r_new.graph.vdata["pr"]),
-                                  np.asarray(r_leg.graph.vdata["pr"]))
+    r_wire = alg.pagerank(g.replace(ex=with_wire(g.ex, "bf16")), num_iters=5)
+    r_res = alg.pagerank(g.replace(
+        ex=with_wire(g.ex, "bf16", resident=True)), num_iters=5)
+    np.testing.assert_array_equal(np.asarray(r_wire.graph.vdata["pr"]),
+                                  np.asarray(r_res.graph.vdata["pr"]))
